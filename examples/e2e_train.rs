@@ -1,0 +1,82 @@
+//! End-to-end driver (DESIGN.md / EXPERIMENTS.md §E2E): trains the
+//! ~570k-parameter mini_res model through the FULL three-layer stack —
+//! rust coordinator → PJRT CPU client → AOT HLO containing the Pallas
+//! matmul/SGD kernels — for a few hundred FEEL periods on the synthetic
+//! 10-class image corpus, logging the loss curve to results/e2e/.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example e2e_train [periods]
+
+use feel::config::Experiment;
+use feel::coordinator::{Scheme, Trainer};
+use feel::exp::common::{make_backend, make_data, BackendKind};
+use feel::metrics::Recorder;
+use feel::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let periods: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(300);
+
+    let mut exp = Experiment::default();
+    exp.model = "mini_res".into();
+    exp.k = 6;
+    exp.train_n = 6000;
+    exp.test_n = 1024;
+    exp.trainer.eval_every = 10;
+
+    let mut backend = make_backend(&exp, BackendKind::Pjrt)?;
+    let (train, test) = make_data(&exp);
+    let mut rng = Pcg::seeded(1);
+    let fleet = exp.fleet(&mut rng);
+
+    let t0 = std::time::Instant::now();
+    let mut tr = Trainer::new(
+        { let mut c = exp.trainer.clone(); c.scheme = Scheme::Proposed; c },
+        fleet,
+        &train,
+        &test,
+        exp.partition,
+        backend.as_mut(),
+    )?;
+    println!("e2e: mini_res (570k params) x K=6 CPUs, {periods} FEEL periods via PJRT...");
+    tr.run(periods)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let rec = Recorder::new(std::path::Path::new("results"), "e2e")?;
+    rec.csv("loss_curve", &tr.log.to_csv())?;
+
+    let log = &tr.log;
+    let first = &log.records[0];
+    let last = log.records.last().unwrap();
+    println!(
+        "\nloss {:.4} -> {:.4} over {} periods ({:.0} simulated s, {:.0} host s)",
+        first.train_loss,
+        last.train_loss,
+        log.records.len(),
+        log.total_time(),
+        wall
+    );
+    println!(
+        "final test accuracy: {}",
+        log.final_acc().map(|a| format!("{:.3}", a)).unwrap_or("n/a".into())
+    );
+    println!("loss curve -> {}", rec.dir().join("loss_curve.csv").display());
+
+    // a few milestones for EXPERIMENTS.md
+    for frac in [0.25, 0.5, 0.75, 1.0] {
+        let i = ((log.records.len() - 1) as f64 * frac) as usize;
+        let r = &log.records[i];
+        println!(
+            "  period {:>4}  sim {:>7.1}s  loss {:.4}  B {:>4}  acc {}",
+            r.period,
+            r.sim_time,
+            r.train_loss,
+            r.b_total,
+            r.test_acc.map(|a| format!("{a:.3}")).unwrap_or_default()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,14 @@
+fn main() {
+    use std::time::Instant;
+    use feel::util::linalg::gemm;
+    use feel::util::rng::Pcg;
+    let mut r = Pcg::seeded(1);
+    let (m, k, n) = (128, 768, 256);
+    let a: Vec<f32> = (0..m*k).map(|_| r.normal() as f32).collect();
+    let b: Vec<f32> = (0..k*n).map(|_| r.normal() as f32).collect();
+    let mut c = vec![0f32; m*n];
+    let t = Instant::now();
+    for _ in 0..50 { c.iter_mut().for_each(|x| *x = 0.0); gemm(m, k, n, &a, &b, &mut c); }
+    let dt = t.elapsed().as_secs_f64() / 50.0;
+    println!("gemm {m}x{k}x{n}: {:.3} ms, {:.2} GFLOP/s", dt*1e3, 2.0*(m*k*n) as f64/dt/1e9);
+}

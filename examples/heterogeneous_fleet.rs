@@ -1,0 +1,78 @@
+//! Domain scenario: a heterogeneous fleet (mixed CPU tiers + GPUs, mixed
+//! channel quality) showing how the optimal batchsize adapts per device —
+//! the paper's Remark 2 (batch scales with local training speed, grows with
+//! rate) demonstrated as a table across channel conditions.
+//!
+//! Run: `cargo run --release --example heterogeneous_fleet`
+
+use feel::device::{Compute, CpuModule, Device, GpuModule};
+use feel::opt;
+use feel::opt::types::Instance;
+use feel::util::rng::Pcg;
+use feel::wireless::{CellConfig, DeviceLink};
+
+fn main() -> anyhow::Result<()> {
+    let cell = CellConfig::default();
+    let mut rng = Pcg::seeded(11);
+
+    // 2 slow CPUs, 2 fast CPUs, 2 GPUs, at close/far positions
+    let mk_cpu = |id: usize, ghz: f64, dist: f64, rng: &mut Pcg| Device {
+        id,
+        compute: Compute::Cpu(CpuModule::new(ghz * 1e9, 7e7, 1e8)),
+        link: DeviceLink::at_distance(cell, dist, 0.0, 0.0, rng),
+    };
+    let mk_gpu = |id: usize, dist: f64, rng: &mut Pcg| Device {
+        id,
+        compute: Compute::Gpu(GpuModule::new(0.11, 2.4e-3, 24.0, 2e9, 1e13)),
+        link: DeviceLink::at_distance(cell, dist, 0.0, 0.0, rng),
+    };
+    let mut fleet = vec![
+        mk_cpu(0, 0.7, 60.0, &mut rng),
+        mk_cpu(1, 0.7, 180.0, &mut rng),
+        mk_cpu(2, 2.1, 60.0, &mut rng),
+        mk_cpu(3, 2.1, 180.0, &mut rng),
+        mk_gpu(4, 60.0, &mut rng),
+        mk_gpu(5, 180.0, &mut rng),
+    ];
+
+    println!("heterogeneous fleet — optimal allocation across channel states\n");
+    println!(
+        "{:<28} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}   {:>8} {:>8}",
+        "", "cpu0.7/n", "cpu0.7/f", "cpu2.1/n", "cpu2.1/f", "gpu/near", "gpu/far", "B*", "T (s)"
+    );
+
+    for (label, rate_scale) in
+        [("good channels (x4 rate)", 4.0), ("nominal channels", 1.0), ("poor channels (/4 rate)", 0.25)]
+    {
+        let rates: Vec<_> = fleet
+            .iter_mut()
+            .map(|d| {
+                let mut r = d.link.step(&mut rng);
+                r.ul_bps *= rate_scale;
+                r.dl_bps *= rate_scale;
+                r
+            })
+            .collect();
+        let s_bits = 0.005 * 64.0 * 570_000.0;
+        let inst = Instance::from_fleet(&fleet, &rates, 128.0, s_bits, 0.01, 0.01, 0.05)?;
+        let sol = opt::solve(&inst, 1e-9)?;
+        let b: Vec<String> = sol.solution.batches.iter().map(|x| format!("{x:>8.1}")).collect();
+        println!(
+            "{:<28} {}   {:>8.0} {:>8.2}",
+            label,
+            b.join(" "),
+            sol.solution.b_total,
+            sol.solution.period_latency()
+        );
+    }
+
+    println!(
+        "\nReading the table (paper Remark 2): faster devices get larger batches\n\
+         (GPUs >> 2.1 GHz CPUs >> 0.7 GHz CPUs); GPUs sit above their\n\
+         compute-bound knee (B_th = 24, Lemma 2); as channels degrade, far\n\
+         devices shed batch relative to near ones, and the optimizer grows the\n\
+         global batch B* to amortize the now-costlier fixed communication\n\
+         phase over more loss decay per period (E = xi*sqrt(B)/T)."
+    );
+    Ok(())
+}

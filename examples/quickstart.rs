@@ -1,0 +1,67 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Loads the AOT artifacts (falls back to the pure-rust host model if
+//! `make artifacts` hasn't run), builds the paper's K=6 CPU fleet, and runs
+//! 20 FEEL training periods with the proposed joint batchsize + slot
+//! policy, printing the per-period allocation and loss.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use feel::config::Experiment;
+use feel::coordinator::{Scheme, Trainer};
+use feel::exp::common::{make_backend, make_data, BackendKind};
+use feel::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let mut exp = Experiment::default();
+    exp.k = 6;
+    exp.train_n = 3000;
+    exp.trainer.eval_every = 5;
+
+    // prefer the production PJRT path when artifacts exist
+    let kind = if std::path::Path::new("artifacts/manifest.json").exists() {
+        BackendKind::Pjrt
+    } else {
+        eprintln!("note: no artifacts/ — using the pure-rust host backend");
+        exp.synth.dim = 96; // keep the host model snappy
+        BackendKind::Host
+    };
+
+    let mut backend = make_backend(&exp, kind)?;
+    let (train, test) = make_data(&exp);
+    let mut rng = Pcg::seeded(7);
+    let fleet = exp.fleet(&mut rng);
+    println!("fleet:");
+    for d in &fleet {
+        println!("  device {} at {:.0} m, {:?}", d.id, d.link.dist_m, d.compute.affine());
+    }
+
+    let mut tr = Trainer::new(
+        { let mut c = exp.trainer.clone(); c.scheme = Scheme::Proposed; c },
+        fleet,
+        &train,
+        &test,
+        exp.partition,
+        backend.as_mut(),
+    )?;
+    tr.run(20)?;
+
+    println!("\nperiod  sim_time  T_period  B_total  train_loss  test_acc");
+    for r in &tr.log.records {
+        println!(
+            "{:>6}  {:>8.2}  {:>8.3}  {:>7}  {:>10.4}  {}",
+            r.period,
+            r.sim_time,
+            r.t_period,
+            r.b_total,
+            r.train_loss,
+            r.test_acc.map(|a| format!("{a:.3}")).unwrap_or_default()
+        );
+    }
+    println!(
+        "\n20 periods in {:.1} simulated seconds; final loss {:.4}",
+        tr.log.total_time(),
+        tr.log.final_loss().unwrap()
+    );
+    Ok(())
+}

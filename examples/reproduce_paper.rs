@@ -1,0 +1,48 @@
+//! Regenerate every paper table/figure in one run (moderate scale).
+//!
+//!   cargo run --release --example reproduce_paper [quick|full]
+//!
+//! quick (default): host backend, reduced periods — minutes.
+//! full: paper-scale periods — long; use the CLI (`feel experiment ...`)
+//! to run individual artifacts at custom scales.
+
+use feel::config::Experiment;
+use feel::exp::common::BackendKind;
+use feel::exp::{fig2, fig3, fig45, table2};
+use feel::metrics::Recorder;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().nth(1).as_deref() == Some("full");
+    let kind = BackendKind::Host;
+    let root = std::path::Path::new("results");
+    let (t2_periods, t2_warm, fig3_periods, f45_budget, f45_periods, train_n, dim) = if full {
+        (300, 400, 300, 1200.0, 4000, 6000, 768)
+    } else {
+        (60, 120, 50, 250.0, 500, 1800, 128)
+    };
+    let mut base = Experiment::default();
+    base.train_n = train_n;
+    base.test_n = 512;
+    base.synth.dim = dim;
+
+    println!("=== Fig. 2 ===");
+    fig2::drive(&Recorder::new(root, "fig2")?)?;
+
+    println!("\n=== Table II (K=6) ===");
+    table2::drive(&Recorder::new(root, "table2_k6")?, &base, 6, t2_periods, t2_warm, kind)?;
+
+    println!("\n=== Table II (K=12) ===");
+    table2::drive(&Recorder::new(root, "table2_k12")?, &base, 12, t2_periods, t2_warm, kind)?;
+
+    println!("\n=== Fig. 3 ===");
+    fig3::drive(&Recorder::new(root, "fig3")?, &base, fig3_periods, kind)?;
+
+    println!("\n=== Fig. 4 (IID) ===");
+    fig45::drive(&Recorder::new(root, "fig4")?, &base, 4, f45_budget, f45_periods, kind)?;
+
+    println!("\n=== Fig. 5 (non-IID) ===");
+    fig45::drive(&Recorder::new(root, "fig5")?, &base, 5, f45_budget, f45_periods, kind)?;
+
+    println!("\nall artifacts under results/");
+    Ok(())
+}

@@ -1,0 +1,151 @@
+"""AOT pipeline: lower every (model, batch bucket) entry point to HLO TEXT.
+
+HLO *text* (never ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. Lowered with
+``return_tuple=True``; the rust side unwraps with ``to_tuple()``.
+
+Outputs (artifacts/):
+  train_step_{model}_b{bucket}.hlo.txt   (params, x[b,D], y[b] i32, w[b]) ->
+                                         (grads[P], loss[], correct[])
+  apply_update_{model}.hlo.txt           (params, grads, lr[]) -> (params,)
+  eval_{model}.hlo.txt                   (params, x[E,D], y[E] i32) -> (loss, correct)
+  init_{model}.f32.bin                   raw little-endian f32[P] initial params
+  manifest.json                          registry the rust runtime reads
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
+DEFAULT_EVAL_BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_model(spec: M.ModelSpec, buckets, eval_batch, outdir, verbose=True):
+    """Lower all entry points for one model; return manifest entries."""
+    p_total = spec.params.total
+    d = spec.input_dim
+    entries = []
+
+    def emit(name, lowered, extra):
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(text)
+        ent = {
+            "name": name,
+            "path": path,
+            "model": spec.name,
+            "params": p_total,
+            "input_dim": d,
+            "classes": spec.classes,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            **extra,
+        }
+        entries.append(ent)
+        if verbose:
+            print(f"  {path}  ({len(text)} chars)", flush=True)
+
+    for b in buckets:
+        fn = lambda flat, x, y, w: M.train_step(spec, flat, x, y, w)
+        lowered = jax.jit(fn).lower(
+            _spec((p_total,)), _spec((b, d)), _spec((b,), jnp.int32), _spec((b,))
+        )
+        emit(f"train_step_{spec.name}_b{b}", lowered,
+             {"kind": "train_step", "bucket": b})
+
+    lowered = jax.jit(M.apply_update).lower(
+        _spec((p_total,)), _spec((p_total,)), _spec((), jnp.float32)
+    )
+    emit(f"apply_update_{spec.name}", lowered, {"kind": "apply_update"})
+
+    fn = lambda flat, x, y: M.evaluate(spec, flat, x, y)
+    lowered = jax.jit(fn).lower(
+        _spec((p_total,)), _spec((eval_batch, d)), _spec((eval_batch,), jnp.int32)
+    )
+    emit(f"eval_{spec.name}", lowered, {"kind": "eval", "bucket": eval_batch})
+
+    # Deterministic initial parameters as raw f32 (little-endian) binary.
+    flat = np.asarray(M.init_params(spec, seed=0), dtype="<f4")
+    init_path = f"init_{spec.name}.f32.bin"
+    flat.tofile(os.path.join(outdir, init_path))
+    entries.append({
+        "name": f"init_{spec.name}", "path": init_path, "model": spec.name,
+        "kind": "init", "params": p_total, "input_dim": d,
+        "classes": spec.classes,
+    })
+    if verbose:
+        print(f"  {init_path}  ({flat.size} f32)", flush=True)
+    return entries
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--models", default="mini_dense,mini_res,mini_mobile")
+    ap.add_argument("--buckets", default=",".join(map(str, DEFAULT_BUCKETS)))
+    ap.add_argument("--input-dim", type=int, default=768)
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--eval-batch", type=int, default=DEFAULT_EVAL_BATCH)
+    args = ap.parse_args(argv)
+
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    models = args.models.split(",")
+
+    manifest = {
+        "version": 1,
+        "input_dim": args.input_dim,
+        "classes": args.classes,
+        "eval_batch": args.eval_batch,
+        "buckets": list(buckets),
+        "models": {},
+        "artifacts": [],
+    }
+    for name in models:
+        spec = M.get_model(name, input_dim=args.input_dim, classes=args.classes)
+        print(f"lowering {name} (P={spec.params.total}) ...", flush=True)
+        entries = lower_model(spec, buckets, args.eval_batch, outdir)
+        manifest["models"][name] = {
+            "params": spec.params.total,
+            "layout": [[n, list(s)] for n, s in spec.params.entries],
+        }
+        manifest["artifacts"].extend(entries)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json "
+          f"to {outdir}", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

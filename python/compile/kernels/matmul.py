@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: tiled matmul — the dense-layer compute hot-spot.
+
+TPU mapping (DESIGN.md §8): the grid walks (M/bm, N/bn, K/bk); each step
+stages an (bm, bk) tile of A and a (bk, bn) tile of B from HBM into VMEM
+via BlockSpec and accumulates the partial product into the (bm, bn) output
+tile, which Pallas keeps resident in VMEM across the K-loop (the innermost
+grid axis revisits the same output block). Block sizes default to the
+MXU-native 128 and shrink to the largest power of two dividing the padded
+dimension for small models.
+
+Runs under interpret=True everywhere in this repo: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and correctness is the build-time
+contract (pytest vs ref.py). Real-TPU efficiency is *estimated* in
+DESIGN.md from the VMEM footprint and tile alignment, never from
+interpret-mode wallclock.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, target: int = 128) -> int:
+    """Largest power of two <= target that keeps the grid sane for `dim`.
+
+    For dims >= target return target (MXU-native). For smaller dims return
+    the next power of two >= dim so the whole dim fits in one block.
+    """
+    if dim >= target:
+        return target
+    b = 1
+    while b < dim:
+        b *= 2
+    return b
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One grid step: o += A_tile @ B_tile.
+
+    The output BlockSpec's index map ignores the K grid axis, so Pallas
+    keeps the same (bm, bn) output tile resident in VMEM across the whole
+    K loop — the accumulator lives in the output block itself.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+) -> jnp.ndarray:
+    """C[M, N] = A[M, K] @ B[K, N] with f32 accumulation.
+
+    Shapes need not be multiples of the block sizes: inputs are
+    zero-padded up to the block grid (zero rows/cols contribute nothing
+    to the product) and the result is sliced back.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"matmul shape mismatch: {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    bm = bm or _pick_block(m)
+    bn = bn or _pick_block(n)
+    bk = bk or _pick_block(k)
+
+    mp = pl.cdiv(m, bm) * bm
+    np_ = pl.cdiv(n, bn) * bn
+    kp = pl.cdiv(k, bk) * bk
+    a_p = jnp.pad(a.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def matmul_bias_act(
+    a: jnp.ndarray, b: jnp.ndarray, bias: jnp.ndarray, act: str = "relu"
+) -> jnp.ndarray:
+    """Fused dense layer act(A @ B + bias) built on the Pallas matmul.
+
+    The bias-add + activation epilogue stays in XLA (it fuses into the
+    matmul output in the lowered HLO); the MXU-shaped contraction is the
+    Pallas kernel.
+    """
+    c = matmul(a, b) + bias[None, :].astype(jnp.float32)
+    if act == "relu":
+        return jnp.maximum(c, 0.0)
+    if act == "none":
+        return c
+    raise ValueError(f"unknown act {act!r}")

@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every kernel in this package has a counterpart here with identical
+signature and semantics. pytest (python/tests/test_kernel.py) sweeps
+shapes/dtypes with hypothesis and asserts allclose between kernel and
+oracle; the kernels are only trusted through that gate.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B in f32 accumulation regardless of input dtype."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def matmul_bias_act_ref(
+    a: jnp.ndarray, b: jnp.ndarray, bias: jnp.ndarray, act: str = "relu"
+) -> jnp.ndarray:
+    """Fused dense layer: act(A @ B + bias)."""
+    c = matmul_ref(a, b) + bias[None, :]
+    if act == "relu":
+        return jnp.maximum(c, 0.0)
+    if act == "none":
+        return c
+    raise ValueError(f"unknown act {act!r}")
+
+
+def sgd_ref(p: jnp.ndarray, g: jnp.ndarray, lr: jnp.ndarray) -> jnp.ndarray:
+    """Plain SGD step p - lr * g (lr is a scalar array)."""
+    return p - lr * g
+
+
+def sgd_momentum_ref(
+    p: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray, lr: jnp.ndarray, beta: float
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Momentum SGD: m' = beta*m + g; p' = p - lr*m'."""
+    m_new = beta * m + g
+    return p - lr * m_new, m_new
+
+
+def masked_softmax_xent_ref(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean masked softmax cross-entropy and correct-count.
+
+    logits: f32[B, C]; labels: i32[B]; mask: f32[B] of 0/1.
+    Returns (scalar mean loss over mask, scalar correct count over mask).
+    Rows with mask 0 contribute nothing; the mean divides by sum(mask)
+    clamped to >= 1 (callers guarantee at least one live row).
+    """
+    logits = logits.astype(jnp.float32)
+    zmax = jnp.max(logits, axis=-1, keepdims=True)
+    z = logits - zmax
+    logsumexp = jnp.log(jnp.sum(jnp.exp(z), axis=-1))
+    ll = jnp.take_along_axis(z, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    per_row = logsumexp - ll
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(per_row * mask) / denom
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct = jnp.sum((pred == labels.astype(jnp.int32)).astype(jnp.float32) * mask)
+    return loss, correct

@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: fused SGD parameter update over the flat f32[P] vector.
+
+The update `p <- p - lr * g` is memory-bound; on TPU the win is streaming
+both vectors through VMEM once in VPU-aligned 1-D blocks (multiples of
+8*128 lanes) instead of materializing `lr * g`. Block size 65536 f32 =
+256 KiB/operand keeps three operands (< 1 MiB) comfortably in VMEM with
+double-buffering headroom.
+
+Interpret=True for CPU-PJRT execution, as everywhere in this repo.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 65536  # f32 elems per grid step; 8*128-lane aligned (65536 = 64*1024)
+
+
+def _sgd_kernel(lr_ref, p_ref, g_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+@jax.jit
+def sgd_update(p: jnp.ndarray, g: jnp.ndarray, lr: jnp.ndarray) -> jnp.ndarray:
+    """p - lr * g over 1-D f32 vectors of any length (zero-padded to BLOCK)."""
+    if p.shape != g.shape or p.ndim != 1:
+        raise ValueError(f"sgd_update wants matching 1-D shapes, got {p.shape} {g.shape}")
+    n = p.shape[0]
+    block = min(BLOCK, max(256, 1 << (n - 1).bit_length())) if n > 0 else 256
+    npad = pl.cdiv(n, block) * block
+    p_p = jnp.pad(p.astype(jnp.float32), (0, npad - n))
+    g_p = jnp.pad(g.astype(jnp.float32), (0, npad - n))
+    lr_arr = jnp.asarray(lr, dtype=jnp.float32).reshape((1,))
+
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(npad // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # lr broadcast to every block
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=True,
+    )(lr_arr, p_p, g_p)
+    return out[:n]
+
+
+def _sgd_momentum_kernel(lrb_ref, p_ref, g_ref, m_ref, po_ref, mo_ref):
+    lr = lrb_ref[0]
+    beta = lrb_ref[1]
+    m_new = beta * m_ref[...] + g_ref[...]
+    mo_ref[...] = m_new
+    po_ref[...] = p_ref[...] - lr * m_new
+
+
+@functools.partial(jax.jit, static_argnames=("beta",))
+def sgd_momentum_update(
+    p: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray, lr: jnp.ndarray, beta: float
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Momentum SGD: returns (p', m') with m' = beta*m + g, p' = p - lr*m'."""
+    if not (p.shape == g.shape == m.shape) or p.ndim != 1:
+        raise ValueError("sgd_momentum_update wants matching 1-D shapes")
+    n = p.shape[0]
+    block = min(BLOCK, max(256, 1 << (n - 1).bit_length())) if n > 0 else 256
+    npad = pl.cdiv(n, block) * block
+    pad = lambda x: jnp.pad(x.astype(jnp.float32), (0, npad - n))
+    lrb = jnp.stack(
+        [jnp.asarray(lr, jnp.float32), jnp.asarray(beta, jnp.float32)]
+    ).reshape((2,))
+
+    p_o, m_o = pl.pallas_call(
+        _sgd_momentum_kernel,
+        grid=(npad // block,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad,), jnp.float32),
+            jax.ShapeDtypeStruct((npad,), jnp.float32),
+        ],
+        interpret=True,
+    )(lrb, pad(p), pad(g), pad(m))
+    return p_o[:n], m_o[:n]

@@ -1,0 +1,252 @@
+"""L2: JAX model zoo for the FEEL reproduction (build-time only).
+
+The paper trains DenseNet121 / ResNet18 / MobileNetV2 on CIFAR-10. We build
+three stand-ins of the same architectural *families* (DESIGN.md §3), sized
+so CPU-PJRT sustains hundreds of federated training periods:
+
+  mini_dense  — DenseNet-style: each block consumes the concatenation of
+                all previous feature maps (dense connectivity).
+  mini_res    — ResNet-style: identity-skip two-layer residual blocks.
+  mini_mobile — MobileNet-style: depthwise (per-feature scale) followed by
+                pointwise dense, i.e. a separable linear layer.
+
+Interchange contract with the rust runtime (DESIGN.md §2):
+  * parameters are ONE flat f32[P] vector (ParamSpec defines the layout);
+  * train_step(params, x[b,D], y[b] i32, w[b]) -> (grads[P], loss, correct)
+    where w is a 0/1 mask enabling padded pow-2 batch buckets;
+  * apply_update(params, grads, lr) -> (params,) via the L1 sgd kernel;
+  * evaluate(params, x[E,D], y[E]) -> (loss, correct).
+
+All dense contractions route through the L1 Pallas matmul kernel wrapped in
+a custom_vjp so the backward pass also runs on the kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul
+from .kernels.ref import masked_softmax_xent_ref
+from .kernels.sgd import sgd_update
+
+# ---------------------------------------------------------------------------
+# Pallas-backed dense primitive with a custom VJP (grad through pallas_call
+# is undefined; fwd AND bwd both execute on the L1 kernel).
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def pdot(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return matmul(x, w)
+
+
+def _pdot_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _pdot_bwd(res, dy):
+    x, w = res
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    return dx, dw
+
+
+pdot.defvjp(_pdot_fwd, _pdot_bwd)
+
+# ---------------------------------------------------------------------------
+# Flat-parameter plumbing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Layout of the flat f32[P] parameter vector: ordered (name, shape)."""
+
+    entries: tuple[tuple[str, tuple[int, ...]], ...]
+
+    @property
+    def total(self) -> int:
+        n = 0
+        for _, shape in self.entries:
+            size = 1
+            for d in shape:
+                size *= d
+            n += size
+        return n
+
+    def unflatten(self, flat: jnp.ndarray) -> dict[str, jnp.ndarray]:
+        out = {}
+        off = 0
+        for name, shape in self.entries:
+            size = 1
+            for d in shape:
+                size *= d
+            out[name] = flat[off : off + size].reshape(shape)
+            off += size
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A model variant: its parameter layout and its forward function."""
+
+    name: str
+    input_dim: int
+    classes: int
+    params: ParamSpec
+    forward: Callable[[dict[str, jnp.ndarray], jnp.ndarray], jnp.ndarray]
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def init_params(spec: ModelSpec, seed: int) -> jnp.ndarray:
+    """Deterministic flat initialization (glorot weights, zero biases,
+    unit depthwise scales)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in spec.params.entries:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            chunks.append(jnp.zeros(shape, jnp.float32).ravel())
+        elif name.endswith("_dw"):
+            chunks.append(jnp.ones(shape, jnp.float32).ravel())
+        else:
+            chunks.append(_glorot(sub, shape).ravel())
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Model family definitions
+# ---------------------------------------------------------------------------
+
+
+def _dense_layer(p, name, x, act="relu"):
+    h = pdot(x, p[f"{name}_w"]) + p[f"{name}_b"][None, :]
+    return jnp.maximum(h, 0.0) if act == "relu" else h
+
+
+def mini_dense(input_dim: int = 768, classes: int = 10, growth: int = 192,
+               blocks: int = 3) -> ModelSpec:
+    """DenseNet-style: block i maps concat(x, h_1..h_{i-1}) -> growth feats."""
+    entries = []
+    width = input_dim
+    for i in range(blocks):
+        entries.append((f"blk{i}_w", (width, growth)))
+        entries.append((f"blk{i}_b", (growth,)))
+        width += growth
+    entries.append(("head_w", (width, classes)))
+    entries.append(("head_b", (classes,)))
+    spec = ParamSpec(tuple(entries))
+
+    def forward(p, x):
+        feats = [x]
+        for i in range(blocks):
+            h = _dense_layer(p, f"blk{i}", jnp.concatenate(feats, axis=1))
+            feats.append(h)
+        return _dense_layer(p, "head", jnp.concatenate(feats, axis=1), act="none")
+
+    return ModelSpec("mini_dense", input_dim, classes, spec, forward)
+
+
+def mini_res(input_dim: int = 768, classes: int = 10, width: int = 256,
+             blocks: int = 3) -> ModelSpec:
+    """ResNet-style: stem then identity-skip two-layer residual blocks."""
+    entries = [("stem_w", (input_dim, width)), ("stem_b", (width,))]
+    for i in range(blocks):
+        entries.append((f"res{i}a_w", (width, width)))
+        entries.append((f"res{i}a_b", (width,)))
+        entries.append((f"res{i}b_w", (width, width)))
+        entries.append((f"res{i}b_b", (width,)))
+    entries.append(("head_w", (width, classes)))
+    entries.append(("head_b", (classes,)))
+    spec = ParamSpec(tuple(entries))
+
+    def forward(p, x):
+        h = _dense_layer(p, "stem", x)
+        for i in range(blocks):
+            inner = _dense_layer(p, f"res{i}a", h)
+            inner = _dense_layer(p, f"res{i}b", inner, act="none")
+            h = jnp.maximum(h + inner, 0.0)
+        return _dense_layer(p, "head", h, act="none")
+
+    return ModelSpec("mini_res", input_dim, classes, spec, forward)
+
+
+def mini_mobile(input_dim: int = 768, classes: int = 10, width: int = 384,
+                blocks: int = 3) -> ModelSpec:
+    """MobileNet-style: separable layers = depthwise scale + pointwise dense."""
+    entries = [("stem_w", (input_dim, width)), ("stem_b", (width,))]
+    for i in range(blocks):
+        entries.append((f"sep{i}_dw", (width,)))  # depthwise per-feature scale
+        entries.append((f"sep{i}_w", (width, width)))  # pointwise
+        entries.append((f"sep{i}_b", (width,)))
+    entries.append(("head_w", (width, classes)))
+    entries.append(("head_b", (classes,)))
+    spec = ParamSpec(tuple(entries))
+
+    def forward(p, x):
+        h = _dense_layer(p, "stem", x)
+        for i in range(blocks):
+            dw = jnp.maximum(h * p[f"sep{i}_dw"][None, :], 0.0)
+            h = _dense_layer(p, f"sep{i}", dw)
+        return _dense_layer(p, "head", h, act="none")
+
+    return ModelSpec("mini_mobile", input_dim, classes, spec, forward)
+
+
+MODELS: dict[str, Callable[..., ModelSpec]] = {
+    "mini_dense": mini_dense,
+    "mini_res": mini_res,
+    "mini_mobile": mini_mobile,
+}
+
+
+def get_model(name: str, input_dim: int = 768, classes: int = 10) -> ModelSpec:
+    if name not in MODELS:
+        raise KeyError(f"unknown model {name!r}; have {sorted(MODELS)}")
+    return MODELS[name](input_dim=input_dim, classes=classes)
+
+
+# ---------------------------------------------------------------------------
+# The three AOT entry points (lowered per model / batch bucket by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(spec: ModelSpec, flat: jnp.ndarray, x: jnp.ndarray,
+            y: jnp.ndarray, w: jnp.ndarray):
+    """Masked mean CE loss + correct count over one (padded) batch."""
+    p = spec.params.unflatten(flat)
+    logits = spec.forward(p, x)
+    return masked_softmax_xent_ref(logits, y, w)
+
+
+def train_step(spec: ModelSpec, flat: jnp.ndarray, x: jnp.ndarray,
+               y: jnp.ndarray, w: jnp.ndarray):
+    """(grads[P], loss[], correct[]) for one masked mini-batch."""
+
+    def scalar_loss(f):
+        loss, correct = loss_fn(spec, f, x, y, w)
+        return loss, correct
+
+    (loss, correct), grads = jax.value_and_grad(scalar_loss, has_aux=True)(flat)
+    return grads, loss, correct
+
+
+def apply_update(flat: jnp.ndarray, grads: jnp.ndarray, lr: jnp.ndarray):
+    """One SGD step on the flat parameter vector, via the L1 sgd kernel."""
+    return (sgd_update(flat, grads, lr),)
+
+
+def evaluate(spec: ModelSpec, flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray):
+    """(mean loss, correct count) over a fixed eval batch (no mask)."""
+    w = jnp.ones((x.shape[0],), jnp.float32)
+    loss, correct = loss_fn(spec, flat, x, y, w)
+    return loss, correct

@@ -1,0 +1,18 @@
+// probe table2 ordering at different warm levels
+fn main() {
+    use feel::exp::table2::run_cell;
+    use feel::exp::common::BackendKind;
+    use feel::data::Partition;
+    use feel::config::Experiment;
+    let mut base = Experiment::default();
+    base.synth.dim = 24;
+    base.train_n = 800;
+    base.test_n = 200;
+    for warm in [30usize, 150, 400] {
+        let rows = run_cell(&base, 4, Partition::Iid, 25, warm, BackendKind::Host).unwrap();
+        println!("warm={warm}:");
+        for r in &rows {
+            println!("  {:<12} acc {:.3} spd {:.2} reached={} t={:.0}", r.scheme, r.test_acc, r.speedup, r.reached_target, r.sim_time);
+        }
+    }
+}

@@ -1,0 +1,157 @@
+"""L1 correctness gate: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is the
+only thing that makes the kernels trustworthy (interpret=True means no
+hardware compiler checked them either).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import matmul, matmul_bias_act
+from compile.kernels.sgd import sgd_momentum_update, sgd_update
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+dims = st.integers(min_value=1, max_value=200)
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_random_shapes(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a, b = rand(rng, m, k), rand(rng, k, n)
+        np.testing.assert_allclose(
+            matmul(a, b), ref.matmul_ref(a, b), rtol=2e-5, atol=2e-5
+        )
+
+    @pytest.mark.parametrize(
+        "m,k,n",
+        [(1, 1, 1), (128, 128, 128), (1, 768, 10), (129, 257, 3), (128, 1, 128)],
+    )
+    def test_edge_shapes(self, m, k, n):
+        rng = np.random.default_rng(0)
+        a, b = rand(rng, m, k), rand(rng, k, n)
+        np.testing.assert_allclose(
+            matmul(a, b), ref.matmul_ref(a, b), rtol=2e-5, atol=2e-5
+        )
+
+    def test_bfloat16_inputs_accumulate_f32(self):
+        rng = np.random.default_rng(1)
+        a = jnp.asarray(rng.standard_normal((32, 64)), jnp.bfloat16)
+        b = jnp.asarray(rng.standard_normal((64, 16)), jnp.bfloat16)
+        got = matmul(a, b)
+        assert got.dtype == jnp.float32
+        np.testing.assert_allclose(
+            got, ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_explicit_blocks(self):
+        rng = np.random.default_rng(2)
+        a, b = rand(rng, 100, 70), rand(rng, 70, 40)
+        got = matmul(a, b, bm=32, bn=16, bk=8)
+        np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=2e-5, atol=2e-5)
+
+    def test_rejects_mismatch(self):
+        rng = np.random.default_rng(3)
+        with pytest.raises(ValueError):
+            matmul(rand(rng, 3, 4), rand(rng, 5, 6))
+
+    def test_zero_blocks_contribute_nothing(self):
+        # padded region must not leak into the result
+        a = jnp.ones((3, 3), jnp.float32)
+        b = jnp.ones((3, 3), jnp.float32)
+        np.testing.assert_allclose(matmul(a, b), 3.0 * jnp.ones((3, 3)))
+
+
+class TestFusedDense:
+    @settings(max_examples=15, deadline=None)
+    @given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1),
+           act=st.sampled_from(["relu", "none"]))
+    def test_matches_ref(self, m, k, n, seed, act):
+        rng = np.random.default_rng(seed)
+        a, b, bias = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+        np.testing.assert_allclose(
+            matmul_bias_act(a, b, bias, act),
+            ref.matmul_bias_act_ref(a, b, bias, act),
+            rtol=2e-5,
+            atol=2e-5,
+        )
+
+    def test_relu_clamps(self):
+        a = -jnp.ones((4, 4), jnp.float32)
+        b = jnp.ones((4, 2), jnp.float32)
+        bias = jnp.zeros((2,), jnp.float32)
+        assert float(jnp.max(matmul_bias_act(a, b, bias, "relu"))) == 0.0
+
+
+class TestSgd:
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(1, 300_000), seed=st.integers(0, 2**31 - 1),
+           lr=st.floats(1e-5, 1.0))
+    def test_matches_ref(self, n, seed, lr):
+        rng = np.random.default_rng(seed)
+        p, g = rand(rng, n), rand(rng, n)
+        np.testing.assert_allclose(
+            sgd_update(p, g, lr),
+            ref.sgd_ref(p, g, jnp.float32(lr)),
+            rtol=1e-6,
+            atol=1e-6,
+        )
+
+    def test_zero_lr_identity(self):
+        rng = np.random.default_rng(5)
+        p, g = rand(rng, 1000), rand(rng, 1000)
+        np.testing.assert_allclose(sgd_update(p, g, 0.0), p)
+
+    def test_rejects_mismatched(self):
+        rng = np.random.default_rng(6)
+        with pytest.raises(ValueError):
+            sgd_update(rand(rng, 3), rand(rng, 4), 0.1)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(1, 100_000), seed=st.integers(0, 2**31 - 1),
+           beta=st.floats(0.0, 0.999))
+    def test_momentum_matches_ref(self, n, seed, beta):
+        rng = np.random.default_rng(seed)
+        p, g, m = rand(rng, n), rand(rng, n), rand(rng, n)
+        po, mo = sgd_momentum_update(p, g, m, 0.01, beta)
+        pr, mr = ref.sgd_momentum_ref(p, g, m, jnp.float32(0.01), beta)
+        np.testing.assert_allclose(po, pr, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(mo, mr, rtol=1e-6, atol=1e-6)
+
+
+class TestMaskedLoss:
+    @settings(max_examples=20, deadline=None)
+    @given(b=st.integers(1, 64), c=st.integers(2, 20),
+           seed=st.integers(0, 2**31 - 1))
+    def test_mask_invariance(self, b, c, seed):
+        """Zero-mask rows must not change loss regardless of their content."""
+        rng = np.random.default_rng(seed)
+        logits = rand(rng, b, c)
+        y = jnp.asarray(rng.integers(0, c, b), jnp.int32)
+        mask = jnp.asarray(rng.integers(0, 2, b), jnp.float32)
+        mask = mask.at[0].set(1.0)  # keep >= 1 live row
+        l1, c1 = ref.masked_softmax_xent_ref(logits, y, mask)
+        corrupted = logits + 1000.0 * (1.0 - mask)[:, None]
+        l2, c2 = ref.masked_softmax_xent_ref(corrupted, y, mask)
+        np.testing.assert_allclose(l1, l2, rtol=1e-5)
+        np.testing.assert_allclose(c1, c2)
+
+    def test_uniform_logits_loss_is_log_c(self):
+        c = 10
+        logits = jnp.zeros((8, c), jnp.float32)
+        y = jnp.zeros((8,), jnp.int32)
+        w = jnp.ones((8,), jnp.float32)
+        loss, _ = ref.masked_softmax_xent_ref(logits, y, w)
+        np.testing.assert_allclose(loss, np.log(c), rtol=1e-6)

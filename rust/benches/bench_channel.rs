@@ -1,0 +1,53 @@
+//! Wireless-substrate benches: closed-form ergodic rate (E1) vs Monte
+//! Carlo, link stepping, GPU latency fitting — the per-period planning
+//! costs that precede every optimizer call (Fig. 2 + eq. 5/6 machinery).
+
+use feel::benchkit::Bench;
+use feel::device::paper_profiles;
+use feel::util::rng::Pcg;
+use feel::util::stats::fit_piecewise;
+use feel::wireless::rate::{ergodic_rate, monte_carlo_rate};
+use feel::wireless::{CellConfig, DeviceLink};
+
+fn main() {
+    let mut b = Bench::new("channel");
+    b.header();
+
+    b.bench("ergodic_rate_closed_form", || {
+        for gamma in [0.3, 3.0, 30.0, 300.0] {
+            std::hint::black_box(ergodic_rate(10e6, gamma));
+        }
+    });
+
+    let mut rng = Pcg::seeded(1);
+    b.bench("ergodic_rate_monte_carlo_10k", || {
+        std::hint::black_box(monte_carlo_rate(10e6, 30.0, 10_000, &mut rng));
+    });
+
+    let mut rng2 = Pcg::seeded(2);
+    let mut links: Vec<DeviceLink> = (0..12)
+        .map(|_| DeviceLink::sample(CellConfig::default(), 8.0, 0.7, &mut rng2))
+        .collect();
+    b.bench("link_step_k12", || {
+        for l in links.iter_mut() {
+            std::hint::black_box(l.step(&mut rng2));
+        }
+    });
+
+    // Fig. 2's fit on 128-point sweeps
+    let (_, gpu) = paper_profiles().remove(0);
+    let bs: Vec<f64> = (1..=128).map(|x| x as f64).collect();
+    let mut rng3 = Pcg::seeded(3);
+    let ts: Vec<f64> = bs.iter().map(|&x| gpu.measure(x, 0.02, &mut rng3)).collect();
+    b.bench("gpu_piecewise_fit_128pts", || {
+        std::hint::black_box(fit_piecewise(&bs, &ts));
+    });
+
+    // accuracy cross-check printed for the record
+    let cf = ergodic_rate(10e6, 30.0);
+    let mc = monte_carlo_rate(10e6, 30.0, 1_000_000, &mut rng);
+    println!(
+        "\n  closed form {cf:.1} bit/s vs MC(1e6) {mc:.1} bit/s (diff {:.4}%)",
+        100.0 * (cf - mc).abs() / cf
+    );
+}

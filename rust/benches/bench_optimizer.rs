@@ -1,0 +1,61 @@
+//! Optimizer benches: Algorithm 1's cost vs K (the paper claims
+//! O((K log 1/eps)^2)-ish practicality), closed form vs grid search, and
+//! the downlink/global solvers.
+
+use feel::benchkit::Bench;
+use feel::opt::types::{DeviceInst, Instance};
+use feel::opt::{grid, solve, solve_downlink, solve_uplink};
+use feel::util::rng::Pcg;
+
+fn instance(k: usize, seed: u64) -> Instance {
+    let mut rng = Pcg::seeded(seed);
+    let devices = (0..k)
+        .map(|_| DeviceInst {
+            speed: rng.range_f64(10.0, 80.0),
+            offset: 0.0,
+            b_min: 1.0,
+            b_max: 128.0,
+            rate_ul: rng.range_f64(2e6, 40e6),
+            rate_dl: rng.range_f64(4e6, 80e6),
+            update_lat: rng.range_f64(0.005, 0.05),
+        })
+        .collect();
+    Instance { devices, s_bits: 182_400.0, frame_ul: 0.01, frame_dl: 0.01, xi: 0.05 }
+}
+
+fn main() {
+    let mut b = Bench::new("optimizer");
+    b.header();
+
+    for k in [2usize, 6, 12, 24, 48, 96] {
+        let inst = instance(k, k as u64);
+        b.bench(&format!("algorithm1_full_solve_k{k}"), || {
+            std::hint::black_box(solve(&inst, 1e-6).unwrap());
+        });
+    }
+
+    let inst = instance(12, 1);
+    b.bench("uplink_subproblem_k12", || {
+        std::hint::black_box(solve_uplink(&inst, 400.0, 1e-6).unwrap());
+    });
+    b.bench("downlink_subproblem_k12", || {
+        std::hint::black_box(solve_downlink(&inst, 1e-6).unwrap());
+    });
+
+    // ablation: closed-form vs brute force (paper's optimality claim)
+    let small = instance(3, 2);
+    b.bench("grid_search_k3_17pts", || {
+        std::hint::black_box(grid::grid_search(&small, 17, 1e-6).unwrap());
+    });
+    b.bench("algorithm1_k3", || {
+        std::hint::black_box(solve(&small, 1e-6).unwrap());
+    });
+    let g = grid::grid_search(&small, 17, 1e-6).unwrap();
+    let a = solve(&small, 1e-6).unwrap();
+    println!(
+        "\n  optimality: algorithm1 E={:.6} vs grid(17^3) E={:.6} (gap {:+.3}%)",
+        a.efficiency,
+        g.efficiency,
+        100.0 * (a.efficiency - g.efficiency) / g.efficiency
+    );
+}

@@ -1,0 +1,69 @@
+//! End-to-end training-period benches (host backend): the L3 hot path a
+//! coordination-bound deployment cares about — one full period under each
+//! scheme — plus the aggregation/compression inner loops at real gradient
+//! sizes. The table rows these throughputs feed are Table II (schemes) and
+//! Fig. 4/5 (policies).
+
+use feel::benchkit::Bench;
+use feel::compress::Sbc;
+use feel::config::Experiment;
+use feel::coordinator::{HostBackend, Scheme, Trainer};
+use feel::data::{generate, Partition};
+use feel::grad::Aggregator;
+use feel::opt::BatchPolicy;
+use feel::util::rng::Pcg;
+
+fn main() {
+    let mut b = Bench::new("period");
+    b.header();
+
+    // full periods under each scheme (small model = coordination visible)
+    let mut exp = Experiment::default();
+    exp.synth.dim = 48;
+    exp.train_n = 1200;
+    exp.test_n = 256;
+    exp.k = 6;
+    let train = generate(&exp.synth, exp.train_n, 1);
+    let test = generate(&exp.synth, exp.test_n, 1);
+    for (scheme, name) in [
+        (Scheme::Proposed, "proposed"),
+        (Scheme::Fixed { policy: BatchPolicy::Online, optimal_slots: true }, "online"),
+        (Scheme::Fixed { policy: BatchPolicy::Full, optimal_slots: true }, "full_batch"),
+    ] {
+        let mut be = HostBackend::for_model("mini_res", 48, 10, 1).unwrap();
+        let mut cfg = exp.trainer.clone();
+        cfg.scheme = scheme;
+        cfg.eval_every = 0;
+        let mut rng = Pcg::seeded(3);
+        let fleet = exp.fleet(&mut rng);
+        let mut tr = Trainer::new(cfg, fleet, &train, &test, Partition::Iid, &mut be).unwrap();
+        b.bench(&format!("one_period_{name}_k6"), || {
+            tr.step_period().unwrap();
+        });
+    }
+
+    // aggregation at the real mini_res size (570k params, K=12)
+    let p = 570_000;
+    let mut rng = Pcg::seeded(5);
+    let grads: Vec<Vec<f32>> = (0..12)
+        .map(|_| (0..p).map(|_| rng.normal() as f32).collect())
+        .collect();
+    b.bench("aggregate_12x570k", || {
+        let mut agg = Aggregator::new(p);
+        for g in &grads {
+            agg.add(g, 64.0).unwrap();
+        }
+        std::hint::black_box(agg.finish().unwrap());
+    });
+
+    // SBC encode at paper ratio on the real gradient size
+    let mut sbc = Sbc::new(0.005, p);
+    let g = &grads[0];
+    b.bench("sbc_encode_570k_r0.005", || {
+        std::hint::black_box(sbc.encode(g));
+    });
+    let msg = sbc.encode(g);
+    b.bench("sbc_decode_570k", || {
+        std::hint::black_box(Sbc::decode(&msg));
+    });
+}

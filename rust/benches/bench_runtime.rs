@@ -1,0 +1,67 @@
+//! PJRT runtime benches: the production L1/L2 execution path — train_step
+//! per batch bucket, apply_update (the Pallas SGD kernel), evaluate, and
+//! host-model equivalents for comparison. Skips (with a notice) when
+//! artifacts are absent.
+
+use std::path::PathBuf;
+
+use feel::benchkit::Bench;
+use feel::coordinator::backend::{Backend, HostBackend, PjrtBackend};
+use feel::runtime::Runtime;
+use feel::util::rng::Pcg;
+
+fn batch(n: usize, d: usize, c: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut r = Pcg::seeded(seed);
+    (
+        (0..n * d).map(|_| r.normal() as f32).collect(),
+        (0..n).map(|_| r.below(c as u64) as i32).collect(),
+    )
+}
+
+fn main() {
+    let mut b = Bench::new("runtime");
+    b.header();
+
+    let dir = PathBuf::from(
+        std::env::var("FEEL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !dir.join("manifest.json").exists() {
+        println!("no artifacts at {} — run `make artifacts`; skipping PJRT benches", dir.display());
+    } else {
+        let rt = Runtime::load(&dir).unwrap();
+        let model = "mini_res".to_string();
+        let d = rt.manifest.input_dim;
+        let c = rt.manifest.classes;
+        let mut be = PjrtBackend::new(rt, &model).unwrap();
+        let params = be.init_params().unwrap();
+
+        for n in [1usize, 16, 64, 128] {
+            let (x, y) = batch(n, d, c, n as u64);
+            // warm the executable cache outside the timed region
+            be.train_step(&params, &x, &y).unwrap();
+            b.bench(&format!("pjrt_train_step_b{n}"), || {
+                std::hint::black_box(be.train_step(&params, &x, &y).unwrap());
+            });
+        }
+
+        let grads: Vec<f32> = params.iter().map(|p| p * 0.01).collect();
+        be.apply_update(&params, &grads, 0.01).unwrap();
+        b.bench("pjrt_apply_update_570k", || {
+            std::hint::black_box(be.apply_update(&params, &grads, 0.01).unwrap());
+        });
+
+        let (ex, ey) = batch(256, d, c, 9);
+        be.evaluate(&params, &ex, &ey).unwrap();
+        b.bench("pjrt_evaluate_256", || {
+            std::hint::black_box(be.evaluate(&params, &ex, &ey).unwrap());
+        });
+
+        // host-model comparison at the same geometry
+        let mut host = HostBackend::for_model(&model, d, c, 0).unwrap();
+        let hp = host.init_params().unwrap();
+        let (x, y) = batch(64, d, c, 64);
+        b.bench("host_train_step_b64", || {
+            std::hint::black_box(host.train_step(&hp, &x, &y).unwrap());
+        });
+    }
+}

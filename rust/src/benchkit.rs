@@ -1,0 +1,148 @@
+//! Criterion-lite bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs `[[bench]] harness = false` binaries; each calls
+//! `Bench::new(...)` and registers closures with `bench()`. We do warmup,
+//! adaptive iteration counts targeting a fixed measurement window, and
+//! report mean / p50 / p95 / throughput — enough to drive the §Perf loop
+//! and regenerate the paper-table harnesses.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::quantile;
+
+/// One benchmark's measurements.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Bench runner.
+pub struct Bench {
+    pub suite: String,
+    /// target measurement window per bench
+    pub window: Duration,
+    pub warmup: Duration,
+    pub results: Vec<Measurement>,
+    filter: Option<String>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // honor `cargo bench -- <filter>`
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        let quick = std::env::var("FEEL_BENCH_QUICK").is_ok();
+        Bench {
+            suite: suite.to_string(),
+            window: if quick { Duration::from_millis(150) } else { Duration::from_millis(800) },
+            warmup: if quick { Duration::from_millis(30) } else { Duration::from_millis(150) },
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    /// Run one benchmark; `f` is a single iteration returning a value to
+    /// keep the optimizer honest (use `std::hint::black_box` inside too).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return;
+            }
+        }
+        // warmup + calibrate
+        let t0 = Instant::now();
+        let mut calib_iters = 0usize;
+        while t0.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        let samples = ((self.window.as_secs_f64() / per_iter) as usize).clamp(5, 10_000);
+
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t = Instant::now();
+            f();
+            times.push(t.elapsed().as_nanos() as f64);
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples,
+            mean_ns: mean,
+            p50_ns: quantile(&times, 0.5),
+            p95_ns: quantile(&times, 0.95),
+            min_ns: times.iter().copied().fold(f64::INFINITY, f64::min),
+        };
+        println!(
+            "{:<48} {:>12} {:>12} {:>12} {:>10}",
+            format!("{}::{}", self.suite, m.name),
+            fmt_ns(m.mean_ns),
+            fmt_ns(m.p50_ns),
+            fmt_ns(m.p95_ns),
+            format!("n={}", m.iters),
+        );
+        self.results.push(m);
+    }
+
+    /// Print the suite header (call once before benches).
+    pub fn header(&self) {
+        println!(
+            "\n== {} ==\n{:<48} {:>12} {:>12} {:>12} {:>10}",
+            self.suite, "benchmark", "mean", "p50", "p95", "samples"
+        );
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("FEEL_BENCH_QUICK", "1");
+        let mut b = Bench::new("test");
+        b.window = Duration::from_millis(20);
+        b.warmup = Duration::from_millis(5);
+        b.filter = None;
+        let mut acc = 0u64;
+        b.bench("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].mean_ns > 0.0);
+        assert!(b.results[0].p95_ns >= b.results[0].p50_ns);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5e4).ends_with("µs"));
+        assert!(fmt_ns(5e7).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

@@ -1,0 +1,361 @@
+//! `feel` command-line interface (hand-rolled; clap is unavailable offline).
+//!
+//! Subcommands:
+//!   train        — run a training experiment from a config file / flags
+//!   optimize     — solve one period's allocation problem and print it
+//!   channel      — dump channel-rate statistics for a sampled fleet
+//!   fit-gpu      — profile + fit the GPU training function
+//!   experiment   — regenerate a paper table/figure: fig2 fig3 table2 fig4 fig5
+//!
+//! Common flags: --config <path>, --out <dir>, --backend host|pjrt,
+//! --periods N, --k N, --scheme NAME, --partition iid|noniid, --seed N.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{parse_scheme, Config, Experiment};
+use crate::coordinator::Trainer;
+use crate::device::paper_profiles;
+use crate::exp::common::{make_backend, make_data, BackendKind};
+use crate::exp::{fig2, fig3, fig45, table2};
+use crate::metrics::Recorder;
+use crate::opt;
+use crate::opt::types::Instance;
+use crate::util::rng::Pcg;
+use crate::util::stats::fit_piecewise;
+use crate::wireless::PeriodRates;
+
+/// Parsed command line: subcommand + flags + positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        out.cmd = it.next().cloned().unwrap_or_else(|| "help".into());
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                out.flags.insert(name.to_string(), val);
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} wants an integer")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} wants a number")),
+            None => Ok(default),
+        }
+    }
+}
+
+const HELP: &str = "feel — wireless federated edge learning accelerator (paper reproduction)
+
+USAGE: feel <command> [flags]
+
+COMMANDS:
+  train       run a FEEL training experiment
+              --config <file>  --backend host|pjrt  --periods N  --scheme S
+              --k N  --partition iid|noniid  --seed N  --out results/
+  optimize    solve one period's joint batchsize + slot allocation
+              --k N  --batch B  --gpu  --seed N
+  channel     print sampled per-device average rates
+              --k N  --seed N
+  fit-gpu     profile the GPU training function and fit eq. 26
+              --noise F  --seed N
+  experiment  regenerate a paper table/figure: fig2 | fig3 | table2 | fig4 | fig5
+              --k N  --periods N  --warm N  --backend host|pjrt
+              --time-budget SECONDS  --train-n N  --out results/
+  help        this text
+";
+
+/// CLI entry (called from main.rs).
+pub fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    run(args)
+}
+
+pub fn run(args: Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "train" => cmd_train(&args),
+        "optimize" => cmd_optimize(&args),
+        "channel" => cmd_channel(&args),
+        "fit-gpu" => cmd_fit_gpu(&args),
+        "experiment" => cmd_experiment(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+fn experiment_from_args(args: &Args) -> Result<Experiment> {
+    let mut exp = match args.get("config") {
+        Some(path) => Experiment::from_config(&Config::load(Path::new(path))?)?,
+        None => Experiment::default(),
+    };
+    if let Some(k) = args.get("k") {
+        exp.k = k.parse().context("--k")?;
+    }
+    if let Some(p) = args.get("partition") {
+        exp.partition = crate::data::Partition::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("bad --partition {p:?}"))?;
+    }
+    if let Some(s) = args.get("seed") {
+        exp.trainer.seed = s.parse().context("--seed")?;
+    }
+    if let Some(s) = args.get("scheme") {
+        exp.trainer.scheme = parse_scheme(s, exp.trainer.b_max)?;
+    }
+    if args.get("gpu") == Some("true") {
+        exp.gpu = true;
+    }
+    if let Some(m) = args.get("model") {
+        exp.model = m.to_string();
+    }
+    Ok(exp)
+}
+
+fn backend_kind(args: &Args) -> Result<BackendKind> {
+    let name = args.get("backend").unwrap_or("host");
+    BackendKind::parse(name).ok_or_else(|| anyhow::anyhow!("bad --backend {name:?}"))
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("out").unwrap_or("results"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let exp = experiment_from_args(args)?;
+    let periods = args.usize_or("periods", exp.periods)?;
+    let kind = backend_kind(args)?;
+    let rec = Recorder::new(&out_dir(args), &format!("train_{}", exp.name))?;
+
+    let mut backend = make_backend(&exp, kind)?;
+    let (train, test) = make_data(&exp);
+    let mut rng = Pcg::seeded(exp.trainer.seed ^ 0xf1ee7);
+    let fleet = exp.fleet(&mut rng);
+    println!(
+        "training {} on {:?} backend: K={}, scheme={}, {:?}, {} periods",
+        exp.model,
+        kind,
+        exp.k,
+        exp.trainer.scheme.name(),
+        exp.partition,
+        periods
+    );
+    let mut tr = Trainer::new(
+        exp.trainer.clone(),
+        fleet,
+        &train,
+        &test,
+        exp.partition,
+        backend.as_mut(),
+    )?;
+    let warm = args.usize_or("warm", 0)?;
+    if warm > 0 {
+        tr.warm_start(warm, 64, 0.05)?;
+    }
+    tr.run(periods)?;
+    let log = &tr.log;
+    rec.csv("train_log", &log.to_csv())?;
+    println!(
+        "done: {} periods, sim time {:.1}s, final loss {:.4}, final acc {} -> {}",
+        log.records.len(),
+        log.total_time(),
+        log.final_loss().unwrap_or(f64::NAN),
+        log.final_acc().map(|a| format!("{:.3}", a)).unwrap_or("n/a".into()),
+        rec.dir().display()
+    );
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let exp = experiment_from_args(args)?;
+    let mut rng = Pcg::seeded(exp.trainer.seed);
+    let mut fleet = exp.fleet(&mut rng);
+    let rates: Vec<PeriodRates> = fleet.iter_mut().map(|d| d.link.step(&mut rng)).collect();
+    let s_bits = exp.trainer.wire_ratio * exp.trainer.quant_bits as f64 * 570_000.0;
+    let inst = Instance::from_fleet(
+        &fleet,
+        &rates,
+        exp.trainer.b_max as f64,
+        s_bits,
+        exp.trainer.frame_ul,
+        exp.trainer.frame_dl,
+        exp.trainer.xi_init,
+    )?;
+    let sol = match args.get("batch") {
+        Some(b) => opt::solve_fixed_batch(&inst, b.parse().context("--batch")?, 1e-9)?,
+        None => opt::solve(&inst, 1e-9)?,
+    };
+    println!(
+        "optimal allocation (K={}, B*={:.1}, efficiency {:.5}, T={:.3}s = up {:.3} + down {:.3}):",
+        exp.k,
+        sol.solution.b_total,
+        sol.efficiency,
+        sol.solution.period_latency(),
+        sol.solution.t_up,
+        sol.solution.t_down
+    );
+    println!(
+        "{:>4} {:>10} {:>10} {:>12} {:>12} {:>12}",
+        "dev", "B_k", "V_k", "R_ul (Mbps)", "tau_ul (ms)", "tau_dl (ms)"
+    );
+    for (k, d) in inst.devices.iter().enumerate() {
+        println!(
+            "{k:>4} {:>10.1} {:>10.1} {:>12.2} {:>12.3} {:>12.3}",
+            sol.solution.batches[k],
+            d.speed,
+            d.rate_ul / 1e6,
+            sol.solution.tau_ul[k] * 1e3,
+            sol.solution.tau_dl[k] * 1e3,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_channel(args: &Args) -> Result<()> {
+    let exp = experiment_from_args(args)?;
+    let mut rng = Pcg::seeded(exp.trainer.seed);
+    let mut fleet = exp.fleet(&mut rng);
+    println!("{:>4} {:>10} {:>14} {:>14}", "dev", "dist (m)", "R_ul (Mbps)", "R_dl (Mbps)");
+    for d in fleet.iter_mut() {
+        let r = d.link.step(&mut rng);
+        println!(
+            "{:>4} {:>10.1} {:>14.2} {:>14.2}",
+            d.id,
+            d.link.dist_m,
+            r.ul_bps / 1e6,
+            r.dl_bps / 1e6
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fit_gpu(args: &Args) -> Result<()> {
+    let noise = args.f64_or("noise", 0.02)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let mut rng = Pcg::seeded(seed);
+    println!("GPU training-function fits (eq. 26), measurement noise {noise}:");
+    for (name, gpu) in paper_profiles() {
+        let bs: Vec<f64> = (1..=128).map(|b| b as f64).collect();
+        let ts: Vec<f64> = bs.iter().map(|&b| gpu.measure(b, noise, &mut rng)).collect();
+        let fit = fit_piecewise(&bs, &ts);
+        println!(
+            "  {name:<10} true(t_l={:.4}, c={:.5}, B_th={:>3.0})  fit(t_l={:.4}, c={:.5}, B_th={:>3.0})",
+            gpu.t_flat, gpu.slope, gpu.b_th, fit.t_l, fit.c, fit.b_th
+        );
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("experiment wants: fig2|fig3|table2|fig4|fig5"))?;
+    let kind = backend_kind(args)?;
+    let rec = Recorder::new(&out_dir(args), which)?;
+    let mut base = Experiment::default();
+    base.train_n = args.usize_or("train-n", 3000)?;
+    base.synth.dim = args.usize_or("dim", if kind == BackendKind::Pjrt { 768 } else { 192 })?;
+    match which {
+        "fig2" => fig2::drive(&rec),
+        "fig3" => {
+            let periods = args.usize_or("periods", 200)?;
+            fig3::drive(&rec, &base, periods, kind)
+        }
+        "table2" => {
+            let k = args.usize_or("k", 6)?;
+            let periods = args.usize_or("periods", 150)?;
+            let warm = args.usize_or("warm", 100)?;
+            table2::drive(&rec, &base, k, periods, warm, kind)
+        }
+        "fig4" | "fig5" => {
+            let fig = if which == "fig4" { 4 } else { 5 };
+            let budget = args.f64_or("time-budget", 600.0)?;
+            let periods = args.usize_or("periods", 2000)?;
+            fig45::drive(&rec, &base, fig, budget, periods, kind)
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_positionals() {
+        let a = Args::parse(&argv("experiment fig2 --k 12 --gpu --out /tmp/r")).unwrap();
+        assert_eq!(a.cmd, "experiment");
+        assert_eq!(a.positional, vec!["fig2"]);
+        assert_eq!(a.get("k"), Some("12"));
+        assert_eq!(a.get("gpu"), Some("true"));
+        assert_eq!(a.get("out"), Some("/tmp/r"));
+    }
+
+    #[test]
+    fn usize_parsing_errors() {
+        let a = Args::parse(&argv("train --periods abc")).unwrap();
+        assert!(a.usize_or("periods", 1).is_err());
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        let a = Args::parse(&argv("frobnicate")).unwrap();
+        assert!(run(a).is_err());
+    }
+
+    #[test]
+    fn help_runs() {
+        let a = Args::parse(&argv("help")).unwrap();
+        run(a).unwrap();
+    }
+
+    #[test]
+    fn fit_gpu_runs() {
+        let a = Args::parse(&argv("fit-gpu --noise 0.01 --seed 3")).unwrap();
+        run(a).unwrap();
+    }
+
+    #[test]
+    fn channel_and_optimize_run() {
+        run(Args::parse(&argv("channel --k 4 --seed 1")).unwrap()).unwrap();
+        run(Args::parse(&argv("optimize --k 4 --seed 1")).unwrap()).unwrap();
+        run(Args::parse(&argv("optimize --k 4 --batch 128 --gpu")).unwrap()).unwrap();
+    }
+}

@@ -1,0 +1,10 @@
+//! Gradient compression substrate (DESIGN.md S9): d-bit quantization and
+//! sparse binary compression with error feedback. Determines the wire size
+//! `s = r * d * p` the latency model uses, and injects the real compression
+//! error into the learning loop.
+
+pub mod quantize;
+pub mod sbc;
+
+pub use quantize::{Quantized, Quantizer};
+pub use sbc::{Sbc, SbcMessage};

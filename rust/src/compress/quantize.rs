@@ -1,0 +1,135 @@
+//! Uniform gradient quantization (paper: d-bit quantization of every
+//! gradient term before transmission; d = 64 in the experiments, i.e.
+//! effectively lossless — smaller d trades accuracy for bits, which the
+//! ablation bench sweeps).
+
+/// d-bit symmetric uniform quantizer over the tensor's own dynamic range.
+#[derive(Clone, Copy, Debug)]
+pub struct Quantizer {
+    pub bits: u32,
+}
+
+/// A quantized gradient: scale + integer codes (the wire format's
+/// information content; we keep codes as i64 for simulation).
+#[derive(Clone, Debug)]
+pub struct Quantized {
+    pub scale: f32,
+    pub codes: Vec<i64>,
+    pub bits: u32,
+}
+
+impl Quantizer {
+    pub fn new(bits: u32) -> Self {
+        assert!((1..=64).contains(&bits), "bits in 1..=64");
+        Quantizer { bits }
+    }
+
+    /// Quantize; d >= 32 is treated as lossless passthrough (codes hold the
+    /// f32 bit patterns) matching the paper's d = 64 setting.
+    pub fn encode(&self, g: &[f32]) -> Quantized {
+        if self.bits >= 32 {
+            return Quantized {
+                scale: 1.0,
+                codes: g.iter().map(|&v| v.to_bits() as i64).collect(),
+                bits: self.bits,
+            };
+        }
+        let max = g.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let levels = (1i64 << (self.bits - 1)) - 1; // symmetric
+        let scale = if max > 0.0 { max / levels as f32 } else { 1.0 };
+        let codes = g
+            .iter()
+            .map(|&v| ((v / scale).round() as i64).clamp(-levels, levels))
+            .collect();
+        Quantized { scale, codes, bits: self.bits }
+    }
+
+    pub fn decode(&self, q: &Quantized) -> Vec<f32> {
+        if q.bits >= 32 {
+            return q.codes.iter().map(|&c| f32::from_bits(c as u32)).collect();
+        }
+        q.codes.iter().map(|&c| c as f32 * q.scale).collect()
+    }
+
+    /// Wire size in bits of a quantized vector (codes only; scale is O(1)).
+    pub fn wire_bits(&self, n: usize) -> u64 {
+        self.bits as u64 * n as u64
+    }
+
+    /// Worst-case absolute error of one round trip.
+    pub fn max_error(&self, g: &[f32]) -> f32 {
+        if self.bits >= 32 {
+            return 0.0;
+        }
+        let max = g.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let levels = (1i64 << (self.bits - 1)) - 1;
+        0.5 * max / levels as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn grads(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg::seeded(seed);
+        (0..n).map(|_| r.normal() as f32 * 0.1).collect()
+    }
+
+    #[test]
+    fn lossless_at_32_plus_bits() {
+        let g = grads(1000, 1);
+        for bits in [32, 64] {
+            let q = Quantizer::new(bits);
+            let out = q.decode(&q.encode(&g));
+            assert_eq!(out, g);
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let g = grads(5000, 2);
+        for bits in [4, 8, 12, 16] {
+            let q = Quantizer::new(bits);
+            let enc = q.encode(&g);
+            let out = q.decode(&enc);
+            // half-step bound plus a small slack for f32 scale rounding
+            let bound = q.max_error(&g) * (1.0 + 1e-2) + f32::EPSILON;
+            for (a, b) in g.iter().zip(&out) {
+                assert!((a - b).abs() <= bound, "{bits} bits: |{a}-{b}| > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let g = grads(5000, 3);
+        let mut prev = f32::INFINITY;
+        for bits in [4, 6, 8, 10, 12] {
+            let q = Quantizer::new(bits);
+            let out = q.decode(&q.encode(&g));
+            let mse: f32 = g
+                .iter()
+                .zip(&out)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                / g.len() as f32;
+            assert!(mse <= prev, "{bits} bits mse {mse} > prev {prev}");
+            prev = mse;
+        }
+    }
+
+    #[test]
+    fn zero_vector_roundtrip() {
+        let q = Quantizer::new(8);
+        let g = vec![0f32; 100];
+        assert_eq!(q.decode(&q.encode(&g)), g);
+    }
+
+    #[test]
+    fn wire_bits_counts() {
+        assert_eq!(Quantizer::new(8).wire_bits(1000), 8000);
+        assert_eq!(Quantizer::new(64).wire_bits(10), 640);
+    }
+}

@@ -1,0 +1,7 @@
+//! Configuration system: TOML-subset parser + experiment schema.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{parse_scheme, Experiment};
+pub use toml::{Config, Value};

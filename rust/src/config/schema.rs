@@ -1,0 +1,197 @@
+//! Experiment configuration schema: maps a parsed TOML-subset `Config`
+//! onto the concrete simulation objects (fleet, data, trainer settings).
+
+use anyhow::{bail, Result};
+
+use super::toml::Config;
+use crate::coordinator::{Scheme, TrainerConfig};
+use crate::data::{Partition, SynthConfig};
+use crate::device::{paper_cpu_fleet, paper_gpu_fleet, Device, GpuModule};
+use crate::opt::BatchPolicy;
+use crate::util::rng::Pcg;
+use crate::wireless::CellConfig;
+
+/// Fully-resolved experiment description.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub name: String,
+    pub model: String,
+    pub k: usize,
+    pub partition: Partition,
+    pub gpu: bool,
+    pub periods: usize,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub synth: SynthConfig,
+    pub cell: CellConfig,
+    pub shadow_sigma_db: f64,
+    pub shadow_rho: f64,
+    pub cycles_per_sample: f64,
+    pub cycles_per_update: f64,
+    pub gpu_module: GpuModule,
+    pub trainer: TrainerConfig,
+}
+
+impl Default for Experiment {
+    fn default() -> Self {
+        Experiment {
+            name: "default".into(),
+            model: "mini_res".into(),
+            k: 6,
+            partition: Partition::Iid,
+            gpu: false,
+            periods: 200,
+            train_n: 6000,
+            test_n: 1024,
+            synth: SynthConfig::default(),
+            cell: CellConfig::default(),
+            shadow_sigma_db: 4.0,
+            shadow_rho: 0.7,
+            cycles_per_sample: 7e7,
+            cycles_per_update: 1e8,
+            gpu_module: GpuModule::new(0.110, 2.4e-3, 24.0, 2.0e9, 1.0e13),
+            trainer: TrainerConfig::default(),
+        }
+    }
+}
+
+impl Experiment {
+    /// Resolve from a parsed config file (missing keys keep defaults).
+    pub fn from_config(c: &Config) -> Result<Experiment> {
+        let mut e = Experiment::default();
+        e.name = c.str_or("name", &e.name).to_string();
+        e.model = c.str_or("model", &e.model).to_string();
+        e.k = c.usize_or("fleet.k", e.k);
+        if e.k == 0 {
+            bail!("fleet.k must be >= 1");
+        }
+        e.partition = match c.str_or("data.partition", "iid") {
+            s => Partition::parse(s).ok_or_else(|| anyhow::anyhow!("bad data.partition {s:?}"))?,
+        };
+        e.gpu = c.bool_or("fleet.gpu", e.gpu);
+        e.periods = c.usize_or("train.periods", e.periods);
+        e.train_n = c.usize_or("data.train_n", e.train_n);
+        e.test_n = c.usize_or("data.test_n", e.test_n);
+        e.synth.dim = c.usize_or("data.dim", e.synth.dim);
+        e.synth.classes = c.usize_or("data.classes", e.synth.classes);
+        e.shadow_sigma_db = c.f64_or("channel.shadow_sigma_db", e.shadow_sigma_db);
+        e.shadow_rho = c.f64_or("channel.shadow_rho", e.shadow_rho);
+        e.cell.radius_m = c.f64_or("channel.radius_m", e.cell.radius_m);
+        e.cell.bandwidth_hz = c.f64_or("channel.bandwidth_hz", e.cell.bandwidth_hz);
+        e.cycles_per_sample = c.f64_or("fleet.cycles_per_sample", e.cycles_per_sample);
+        e.cycles_per_update = c.f64_or("fleet.cycles_per_update", e.cycles_per_update);
+
+        let t = &mut e.trainer;
+        t.b_max = c.usize_or("train.b_max", t.b_max);
+        t.base_lr = c.f64_or("train.lr", t.base_lr);
+        t.eval_every = c.usize_or("train.eval_every", t.eval_every);
+        t.seed = c.usize_or("train.seed", t.seed as usize) as u64;
+        t.wire_ratio = c.f64_or("compress.wire_ratio", t.wire_ratio);
+        t.quant_bits = c.usize_or("compress.quant_bits", t.quant_bits as usize) as u32;
+        if c.bool_or("compress.sbc", true) {
+            t.sbc_keep = Some(c.f64_or("compress.keep_frac", 0.005));
+        } else {
+            t.sbc_keep = None;
+        }
+        t.scheme = parse_scheme(c.str_or("train.scheme", "proposed"), t.b_max)?;
+        Ok(e)
+    }
+
+    /// Build the device fleet this experiment describes.
+    pub fn fleet(&self, rng: &mut Pcg) -> Vec<Device> {
+        if self.gpu {
+            paper_gpu_fleet(
+                self.k,
+                self.gpu_module,
+                self.cell,
+                self.shadow_sigma_db,
+                self.shadow_rho,
+                rng,
+            )
+        } else {
+            paper_cpu_fleet(
+                self.k,
+                self.cycles_per_sample,
+                self.cycles_per_update,
+                self.cell,
+                self.shadow_sigma_db,
+                self.shadow_rho,
+                rng,
+            )
+        }
+    }
+}
+
+/// Parse a scheme name as used in configs and on the CLI.
+pub fn parse_scheme(s: &str, b_max: usize) -> Result<Scheme> {
+    Ok(match s {
+        "proposed" => Scheme::Proposed,
+        "gradient_fl" | "gradient" => Scheme::GradientFl,
+        "model_fl" | "fedavg" => Scheme::ModelFl { local_batch: 32 },
+        "individual" => Scheme::Individual { local_batch: b_max },
+        "online" => Scheme::Fixed { policy: BatchPolicy::Online, optimal_slots: true },
+        "full_batch" | "full" => Scheme::Fixed { policy: BatchPolicy::Full, optimal_slots: true },
+        "random_batch" | "random" => {
+            Scheme::Fixed { policy: BatchPolicy::Random, optimal_slots: true }
+        }
+        other => bail!("unknown scheme {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip() {
+        let c = Config::parse("").unwrap();
+        let e = Experiment::from_config(&c).unwrap();
+        assert_eq!(e.k, 6);
+        assert_eq!(e.model, "mini_res");
+        assert_eq!(e.partition, Partition::Iid);
+    }
+
+    #[test]
+    fn full_config() {
+        let src = r#"
+name = "gpu_run"
+model = "mini_dense"
+[fleet]
+k = 12
+gpu = true
+[data]
+partition = "non-iid"
+train_n = 2400
+[train]
+scheme = "online"
+lr = 0.2
+periods = 50
+[compress]
+sbc = false
+"#;
+        let e = Experiment::from_config(&Config::parse(src).unwrap()).unwrap();
+        assert_eq!(e.k, 12);
+        assert!(e.gpu);
+        assert_eq!(e.partition, Partition::NonIid);
+        assert_eq!(e.trainer.base_lr, 0.2);
+        assert!(e.trainer.sbc_keep.is_none());
+        assert!(matches!(e.trainer.scheme, Scheme::Fixed { .. }));
+    }
+
+    #[test]
+    fn rejects_bad_scheme_and_partition() {
+        let c = Config::parse("[train]\nscheme = \"sgd\"").unwrap();
+        assert!(Experiment::from_config(&c).is_err());
+        let c = Config::parse("[data]\npartition = \"skewed\"").unwrap();
+        assert!(Experiment::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn fleet_construction_both_kinds() {
+        let mut e = Experiment::default();
+        let mut rng = Pcg::seeded(1);
+        assert_eq!(e.fleet(&mut rng).len(), 6);
+        e.gpu = true;
+        assert_eq!(e.fleet(&mut rng).len(), 6);
+    }
+}

@@ -1,0 +1,247 @@
+//! TOML-subset parser (serde/toml are unavailable offline).
+//!
+//! Supported grammar — everything the experiment configs need:
+//!   * `[section]` and `[section.sub]` headers
+//!   * `key = "string" | 123 | 4.5 | true | false | [scalar, ...]`
+//!   * `#` comments, blank lines
+//!
+//! Values land in a flat `section.key -> Value` map with typed accessors.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parsed config: flat dotted-key map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config, TomlError> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: ln + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unclosed ["))?;
+                if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.') {
+                    return Err(err("bad section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
+            let key = key.trim();
+            if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                return Err(err("bad key"));
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let value = parse_value(val.trim()).map_err(|m| err(&m))?;
+            if map.insert(full.clone(), value).is_some() {
+                return Err(err(&format!("duplicate key {full}")));
+            }
+        }
+        Ok(Config { map })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Config::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        return inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>, _>>()
+            .map(Value::Arr);
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "table2"            # inline comment
+[fleet]
+k = 12
+tiers = [0.7, 1.4, 2.1]
+gpu = false
+[train]
+lr = 0.35
+periods = 500
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", ""), "table2");
+        assert_eq!(c.usize_or("fleet.k", 0), 12);
+        assert!(!c.bool_or("fleet.gpu", true));
+        assert_eq!(c.f64_or("train.lr", 0.0), 0.35);
+        let tiers = c.get("fleet.tiers").unwrap();
+        match tiers {
+            Value::Arr(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("missing", 7), 7);
+        assert_eq!(c.str_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(Config::parse("a = 1\na = 2").is_err());
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue =").is_err());
+        assert!(Config::parse("= 3").is_err());
+        assert!(Config::parse("a = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let c = Config::parse("a = 3\nb = 3.5").unwrap();
+        assert_eq!(c.get("a").unwrap().as_i64(), Some(3));
+        assert_eq!(c.get("a").unwrap().as_f64(), Some(3.0));
+        assert_eq!(c.get("b").unwrap().as_i64(), None);
+        assert_eq!(c.get("b").unwrap().as_f64(), Some(3.5));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let c = Config::parse("a = \"x#y\"").unwrap();
+        assert_eq!(c.str_or("a", ""), "x#y");
+    }
+}

@@ -1,0 +1,255 @@
+//! Compute backend abstraction: where a device's forward/backward actually
+//! executes.
+//!
+//! * `PjrtBackend` — the production path: AOT HLO artifacts on the PJRT CPU
+//!   client (python never runs here).
+//! * `HostBackend` — the pure-rust oracle, used by tests and by the large
+//!   Table-II sweeps where PJRT per-call overhead would dominate the
+//!   hundreds of thousands of tiny train steps.
+//!
+//! Both receive *exact* batch semantics: PJRT pads into pow-2 buckets with
+//! a mask (runtime::client), the host model runs the exact batch.
+
+use anyhow::Result;
+
+use crate::runtime::hostmodel::HostModel;
+use crate::runtime::Runtime;
+
+/// One train-step result.
+#[derive(Clone, Debug)]
+pub struct Step {
+    pub grads: Vec<f32>,
+    pub loss: f32,
+    pub correct: f32,
+}
+
+/// Where device compute runs.
+pub trait Backend {
+    /// Number of flat parameters.
+    fn params(&self) -> usize;
+    /// Deterministic initial parameter vector.
+    fn init_params(&mut self) -> Result<Vec<f32>>;
+    /// Forward/backward on an exact batch.
+    fn train_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<Step>;
+    /// SGD update.
+    fn apply_update(&mut self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>>;
+    /// Mean loss + accuracy over a dataset.
+    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)>;
+}
+
+/// PJRT-backed production path.
+pub struct PjrtBackend {
+    pub rt: Runtime,
+    pub model: String,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: Runtime, model: &str) -> Result<Self> {
+        rt.manifest.model(model)?; // validate
+        Ok(PjrtBackend { rt, model: model.to_string() })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn params(&self) -> usize {
+        self.rt.manifest.models[&self.model].params
+    }
+
+    fn init_params(&mut self) -> Result<Vec<f32>> {
+        self.rt.init_params(&self.model)
+    }
+
+    fn train_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<Step> {
+        // batches larger than the biggest bucket are chunked and aggregated
+        // (weighted by chunk size) — exact full-batch semantics
+        let max_b = self.rt.manifest.max_bucket();
+        let d = self.rt.manifest.input_dim;
+        let n = y.len();
+        if n <= max_b {
+            let out = self.rt.train_step_padded(&self.model, params, x, y)?;
+            return Ok(Step { grads: out.grads, loss: out.loss, correct: out.correct });
+        }
+        let p = params.len();
+        let mut agg = crate::grad::Aggregator::new(p);
+        let mut loss = 0f64;
+        let mut correct = 0f64;
+        let mut i = 0;
+        while i < n {
+            let end = (i + max_b).min(n);
+            let out = self.rt.train_step_padded(
+                &self.model,
+                params,
+                &x[i * d..end * d],
+                &y[i..end],
+            )?;
+            let w = (end - i) as f64;
+            agg.add(&out.grads, w)?;
+            loss += out.loss as f64 * w;
+            correct += out.correct as f64;
+            i = end;
+        }
+        Ok(Step {
+            grads: agg.finish()?,
+            loss: (loss / n as f64) as f32,
+            correct: correct as f32,
+        })
+    }
+
+    fn apply_update(&mut self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>> {
+        self.rt.apply_update(&self.model, params, grads, lr)
+    }
+
+    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        self.rt.evaluate_dataset(&self.model, params, x, y)
+    }
+}
+
+/// Pure-rust oracle path.
+pub struct HostBackend {
+    pub model: HostModel,
+    layout: Vec<(String, Vec<usize>)>,
+    seed: u64,
+}
+
+impl HostBackend {
+    pub fn new(model: HostModel, layout: Vec<(String, Vec<usize>)>, seed: u64) -> Self {
+        HostBackend { model, layout, seed }
+    }
+
+    /// Convenience: build a host backend for a named model family with the
+    /// same default geometry as the python side.
+    pub fn for_model(name: &str, input_dim: usize, classes: usize, seed: u64) -> Result<Self> {
+        let layout = default_layout(name, input_dim, classes)?;
+        let model = HostModel::from_layout(name, &layout, input_dim, classes)?;
+        Ok(HostBackend::new(model, layout, seed))
+    }
+}
+
+/// Mirror of python/compile/model.py's default layouts (growth 192 /
+/// width 256 / width 384, 3 blocks).
+pub fn default_layout(
+    name: &str,
+    input_dim: usize,
+    classes: usize,
+) -> Result<Vec<(String, Vec<usize>)>> {
+    let mut l: Vec<(String, Vec<usize>)> = Vec::new();
+    match name {
+        "mini_dense" => {
+            let growth = 192;
+            let mut width = input_dim;
+            for i in 0..3 {
+                l.push((format!("blk{i}_w"), vec![width, growth]));
+                l.push((format!("blk{i}_b"), vec![growth]));
+                width += growth;
+            }
+            l.push(("head_w".into(), vec![width, classes]));
+            l.push(("head_b".into(), vec![classes]));
+        }
+        "mini_res" => {
+            let width = 256;
+            l.push(("stem_w".into(), vec![input_dim, width]));
+            l.push(("stem_b".into(), vec![width]));
+            for i in 0..3 {
+                l.push((format!("res{i}a_w"), vec![width, width]));
+                l.push((format!("res{i}a_b"), vec![width]));
+                l.push((format!("res{i}b_w"), vec![width, width]));
+                l.push((format!("res{i}b_b"), vec![width]));
+            }
+            l.push(("head_w".into(), vec![width, classes]));
+            l.push(("head_b".into(), vec![classes]));
+        }
+        "mini_mobile" => {
+            let width = 384;
+            l.push(("stem_w".into(), vec![input_dim, width]));
+            l.push(("stem_b".into(), vec![width]));
+            for i in 0..3 {
+                l.push((format!("sep{i}_dw"), vec![width]));
+                l.push((format!("sep{i}_w"), vec![width, width]));
+                l.push((format!("sep{i}_b"), vec![width]));
+            }
+            l.push(("head_w".into(), vec![width, classes]));
+            l.push(("head_b".into(), vec![classes]));
+        }
+        other => anyhow::bail!("unknown model {other:?}"),
+    }
+    Ok(l)
+}
+
+impl Backend for HostBackend {
+    fn params(&self) -> usize {
+        self.model.params
+    }
+
+    fn init_params(&mut self) -> Result<Vec<f32>> {
+        Ok(self.model.init_params_host(&self.layout, self.seed))
+    }
+
+    fn train_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<Step> {
+        let w = vec![1f32; y.len()];
+        let (grads, loss, correct) = self.model.train_step(params, x, y, &w);
+        Ok(Step { grads, loss, correct })
+    }
+
+    fn apply_update(&mut self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>> {
+        Ok(params
+            .iter()
+            .zip(grads)
+            .map(|(p, g)| p - lr * g)
+            .collect())
+    }
+
+    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        let n = y.len();
+        let w = vec![1f32; n];
+        let (loss, correct) = self.model.loss(params, x, y, &w);
+        Ok((loss as f64, correct as f64 / n as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn batch(n: usize, d: usize, c: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut r = Pcg::seeded(seed);
+        (
+            (0..n * d).map(|_| r.normal() as f32).collect(),
+            (0..n).map(|_| r.below(c as u64) as i32).collect(),
+        )
+    }
+
+    #[test]
+    fn host_backend_trains() {
+        let mut be = HostBackend::for_model("mini_res", 32, 5, 1).unwrap();
+        let mut params = be.init_params().unwrap();
+        let (x, y) = batch(16, 32, 5, 2);
+        let s0 = be.train_step(&params, &x, &y).unwrap();
+        for _ in 0..30 {
+            let s = be.train_step(&params, &x, &y).unwrap();
+            params = be.apply_update(&params, &s.grads, 0.2).unwrap();
+        }
+        let s1 = be.train_step(&params, &x, &y).unwrap();
+        assert!(s1.loss < s0.loss * 0.6, "{} -> {}", s0.loss, s1.loss);
+    }
+
+    #[test]
+    fn default_layouts_all_models() {
+        for m in ["mini_dense", "mini_res", "mini_mobile"] {
+            let be = HostBackend::for_model(m, 768, 10, 0).unwrap();
+            assert!(be.params() > 100_000, "{m}: {}", be.params());
+        }
+        assert!(HostBackend::for_model("nope", 8, 2, 0).is_err());
+    }
+
+    #[test]
+    fn host_eval_consistent_with_train_loss() {
+        let mut be = HostBackend::for_model("mini_mobile", 16, 4, 3).unwrap();
+        let params = be.init_params().unwrap();
+        let (x, y) = batch(24, 16, 4, 4);
+        let s = be.train_step(&params, &x, &y).unwrap();
+        let (loss, acc) = be.evaluate(&params, &x, &y).unwrap();
+        assert!((loss - s.loss as f64).abs() < 1e-5);
+        assert!((acc - s.correct as f64 / 24.0).abs() < 1e-9);
+    }
+}

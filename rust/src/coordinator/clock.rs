@@ -1,0 +1,51 @@
+//! Simulated wall clock. The wireless/compute latencies are analytic
+//! (DESIGN.md §3 substitution), so training time advances by the computed
+//! per-period latency T (eq. 14) rather than host time.
+
+/// Simulated clock, in seconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SimClock {
+    now: f64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { now: 0.0 }
+    }
+
+    /// Advance by `dt` seconds (panics on negative or non-finite dt — a
+    /// negative latency is always an upstream bug).
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt.is_finite() && dt >= 0.0, "bad clock advance {dt}");
+        self.now += dt;
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances() {
+        let mut c = SimClock::new();
+        c.advance(1.5);
+        c.advance(0.5);
+        assert_eq!(c.now(), 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_negative() {
+        SimClock::new().advance(-1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nan() {
+        SimClock::new().advance(f64::NAN);
+    }
+}

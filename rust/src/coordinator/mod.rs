@@ -1,0 +1,16 @@
+//! Layer-3 coordination (DESIGN.md S5–S7, S11, S13): the FEEL training
+//! loop, its schemes, device/server state, the simulated clock, and online
+//! xi estimation.
+
+pub mod backend;
+pub mod clock;
+pub mod scheme;
+pub mod server;
+pub mod trainer;
+pub mod worker;
+pub mod xi;
+
+pub use backend::{Backend, HostBackend, PjrtBackend};
+pub use scheme::{plan_period, Plan, Scheme};
+pub use trainer::{PeriodRecord, TrainLog, Trainer, TrainerConfig};
+pub use xi::XiEstimator;

@@ -1,0 +1,275 @@
+//! Training schemes (paper §VI-C/D): the proposed joint policy and every
+//! baseline it is compared against. A scheme's job each period is to
+//! *plan*: pick per-device batchsizes and price the period's end-to-end
+//! latency under the wireless/compute models. The trainer then executes
+//! the learning side of the plan.
+
+use anyhow::Result;
+
+use crate::opt;
+use crate::opt::baselines::{batches_for, solve_equal_slots, solve_fixed_batches, BatchPolicy};
+use crate::opt::types::{quantize, Instance};
+use crate::util::rng::Pcg;
+
+/// Which scheme drives the training loop.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Scheme {
+    /// The paper's contribution: joint batchsize + slot optimization.
+    Proposed,
+    /// Gradient-based FL [40]: one-step SGD on the full local dataset each
+    /// period, equal slots (no joint optimization).
+    GradientFl,
+    /// Model-based FL (FedAvg [19]): one local epoch, then parameter
+    /// averaging; parameters travel uncompressed.
+    ModelFl { local_batch: usize },
+    /// Individual learning: local training only; one final averaging.
+    Individual { local_batch: usize },
+    /// GPU-scenario fixed-batch baselines (Fig. 4/5): online/full/random,
+    /// optionally with optimal slots for their fixed batches.
+    Fixed { policy: BatchPolicy, optimal_slots: bool },
+}
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Proposed => "proposed",
+            Scheme::GradientFl => "gradient_fl",
+            Scheme::ModelFl { .. } => "model_fl",
+            Scheme::Individual { .. } => "individual",
+            Scheme::Fixed { policy, .. } => match policy {
+                BatchPolicy::Online => "online",
+                BatchPolicy::Full => "full_batch",
+                BatchPolicy::Random => "random_batch",
+                BatchPolicy::Equal(_) => "equal_batch",
+            },
+        }
+    }
+
+    /// Does this scheme exchange gradients (vs parameters / nothing)?
+    pub fn exchanges_gradients(&self) -> bool {
+        matches!(self, Scheme::Proposed | Scheme::GradientFl | Scheme::Fixed { .. })
+    }
+}
+
+/// One period's plan: what each device trains on and what it costs.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// per-device batchsizes to actually execute
+    pub batches: Vec<usize>,
+    /// end-to-end simulated latency of the period (eq. 14 / eq. 28)
+    pub t_period: f64,
+    /// subperiod breakdown for telemetry
+    pub t_up: f64,
+    pub t_down: f64,
+    /// the optimizer's predicted learning efficiency (if it ran)
+    pub predicted_efficiency: Option<f64>,
+}
+
+/// Plan one period for `scheme` given this period's `Instance` (rates
+/// already embedded) and the per-device shard sizes.
+pub fn plan_period(
+    scheme: Scheme,
+    inst: &Instance,
+    shard_sizes: &[usize],
+    param_bits: f64,
+    eps: f64,
+    rng: &mut Pcg,
+) -> Result<Plan> {
+    match scheme {
+        Scheme::Proposed => {
+            let g = opt::solve(inst, eps)?;
+            let batches = g.solution.quantized_batches(inst);
+            Ok(Plan {
+                batches,
+                t_period: g.solution.period_latency(),
+                t_up: g.solution.t_up,
+                t_down: g.solution.t_down,
+                predicted_efficiency: Some(g.efficiency),
+            })
+        }
+        Scheme::GradientFl => {
+            // full local dataset; equal slots on both links
+            let batches: Vec<f64> = shard_sizes.iter().map(|&n| n as f64).collect();
+            let sol = solve_equal_slots(inst, &batches);
+            Ok(Plan {
+                batches: shard_sizes.to_vec(),
+                t_period: sol.period_latency(),
+                t_up: sol.t_up,
+                t_down: sol.t_down,
+                predicted_efficiency: None,
+            })
+        }
+        Scheme::ModelFl { local_batch: _ } => {
+            // one local epoch of compute (processes N_k samples), then an
+            // uncompressed parameter exchange on equal slots.
+            let k = inst.k();
+            let t_compute = inst
+                .devices
+                .iter()
+                .zip(shard_sizes)
+                .map(|(d, &n)| d.offset + n as f64 / d.speed)
+                .fold(0.0f64, f64::max);
+            let tau_ul = inst.frame_ul / k as f64;
+            let tau_dl = inst.frame_dl / k as f64;
+            let t_ul = inst
+                .devices
+                .iter()
+                .map(|d| param_bits * inst.frame_ul / (tau_ul * d.rate_ul))
+                .fold(0.0f64, f64::max);
+            let t_dl = inst
+                .devices
+                .iter()
+                .map(|d| param_bits * inst.frame_dl / (tau_dl * d.rate_dl) + d.update_lat)
+                .fold(0.0f64, f64::max);
+            Ok(Plan {
+                batches: shard_sizes.to_vec(), // one epoch touches the shard
+                t_period: t_compute + t_ul + t_dl,
+                t_up: t_compute + t_ul,
+                t_down: t_dl,
+                predicted_efficiency: None,
+            })
+        }
+        Scheme::Individual { local_batch } => {
+            // no communication at all; period = one local mini-batch step
+            let batches: Vec<usize> = shard_sizes
+                .iter()
+                .map(|&n| local_batch.min(n).max(1))
+                .collect();
+            let t = inst
+                .devices
+                .iter()
+                .zip(&batches)
+                .map(|(d, &b)| d.offset + b as f64 / d.speed + d.update_lat)
+                .fold(0.0f64, f64::max);
+            Ok(Plan {
+                batches,
+                t_period: t,
+                t_up: t,
+                t_down: 0.0,
+                predicted_efficiency: None,
+            })
+        }
+        Scheme::Fixed { policy, optimal_slots } => {
+            let batches_f = batches_for(policy, inst, rng);
+            let sol = if optimal_slots {
+                solve_fixed_batches(inst, &batches_f, eps)?
+            } else {
+                solve_equal_slots(inst, &batches_f)
+            };
+            let batches = quantize(&batches_f, inst);
+            Ok(Plan {
+                batches,
+                t_period: sol.period_latency(),
+                t_up: sol.t_up,
+                t_down: sol.t_down,
+                predicted_efficiency: None,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::types::test_instance;
+
+    const EPS: f64 = 1e-9;
+
+    fn shards(k: usize) -> Vec<usize> {
+        vec![500; k]
+    }
+
+    #[test]
+    fn proposed_fastest_per_unit_loss_decay() {
+        let inst = test_instance(6);
+        let mut rng = Pcg::seeded(1);
+        let prop = plan_period(Scheme::Proposed, &inst, &shards(6), 32.0 * 570_000.0, EPS, &mut rng)
+            .unwrap();
+        // efficiency of proposed >= efficiency of the fixed policies
+        let e_prop = inst.loss_decay(prop.batches.iter().sum::<usize>() as f64)
+            / prop.t_period;
+        for policy in [BatchPolicy::Online, BatchPolicy::Full, BatchPolicy::Random] {
+            let p = plan_period(
+                Scheme::Fixed { policy, optimal_slots: true },
+                &inst,
+                &shards(6),
+                0.0,
+                EPS,
+                &mut rng,
+            )
+            .unwrap();
+            let e = inst.loss_decay(p.batches.iter().sum::<usize>() as f64) / p.t_period;
+            assert!(e_prop >= e * (1.0 - 0.02), "{policy:?}: {e} vs {e_prop}");
+        }
+    }
+
+    #[test]
+    fn gradient_fl_slower_than_proposed() {
+        // full-dataset gradients cost far more compute per period
+        let inst = test_instance(6);
+        let mut rng = Pcg::seeded(2);
+        let prop =
+            plan_period(Scheme::Proposed, &inst, &shards(6), 0.0, EPS, &mut rng).unwrap();
+        let gfl =
+            plan_period(Scheme::GradientFl, &inst, &shards(6), 0.0, EPS, &mut rng).unwrap();
+        assert!(gfl.t_period > prop.t_period);
+    }
+
+    #[test]
+    fn model_fl_upload_dominated_by_params() {
+        // uncompressed parameters (32 bits * p) vs compressed gradients
+        // (r*d*p = 0.32 * p bits): period latency much larger
+        let inst = test_instance(6);
+        let mut rng = Pcg::seeded(3);
+        let param_bits = 32.0 * 570_000.0;
+        let mfl = plan_period(
+            Scheme::ModelFl { local_batch: 32 },
+            &inst,
+            &shards(6),
+            param_bits,
+            EPS,
+            &mut rng,
+        )
+        .unwrap();
+        let gfl =
+            plan_period(Scheme::GradientFl, &inst, &shards(6), 0.0, EPS, &mut rng).unwrap();
+        assert!(mfl.t_period > gfl.t_period, "{} vs {}", mfl.t_period, gfl.t_period);
+    }
+
+    #[test]
+    fn individual_no_downlink() {
+        let inst = test_instance(4);
+        let mut rng = Pcg::seeded(4);
+        let p = plan_period(
+            Scheme::Individual { local_batch: 128 },
+            &inst,
+            &shards(4),
+            0.0,
+            EPS,
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(p.t_down, 0.0);
+        assert!(p.batches.iter().all(|&b| b == 128));
+    }
+
+    #[test]
+    fn plans_respect_batch_bounds_for_fixed() {
+        let inst = test_instance(5);
+        let mut rng = Pcg::seeded(5);
+        for policy in [BatchPolicy::Online, BatchPolicy::Full, BatchPolicy::Random] {
+            let p = plan_period(
+                Scheme::Fixed { policy, optimal_slots: false },
+                &inst,
+                &shards(5),
+                0.0,
+                EPS,
+                &mut rng,
+            )
+            .unwrap();
+            for (&b, d) in p.batches.iter().zip(&inst.devices) {
+                assert!(b as f64 >= d.b_min && b as f64 <= d.b_max);
+            }
+        }
+    }
+}

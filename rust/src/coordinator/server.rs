@@ -1,0 +1,64 @@
+//! Edge-server state: global parameters and per-period aggregation
+//! (paper steps 3–5 of the training period).
+
+use anyhow::Result;
+
+use crate::grad::Aggregator;
+
+/// The edge server.
+pub struct Server {
+    pub params: Vec<f32>,
+    /// running count of completed training periods
+    pub period: usize,
+}
+
+impl Server {
+    pub fn new(params: Vec<f32>) -> Self {
+        Server { params, period: 0 }
+    }
+
+    pub fn p(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Aggregate per-device gradients weighted by their batch sizes
+    /// (eq. 1) and return the global gradient.
+    pub fn aggregate(&self, grads: &[(Vec<f32>, f64)]) -> Result<Vec<f32>> {
+        let mut agg = Aggregator::new(self.p());
+        for (g, w) in grads {
+            agg.add(g, *w)?;
+        }
+        agg.finish()
+    }
+
+    /// FedAvg-style parameter averaging weighted by shard size.
+    pub fn average_params(&mut self, params: &[(Vec<f32>, f64)]) -> Result<()> {
+        let mut agg = Aggregator::new(self.p());
+        for (p, w) in params {
+            agg.add(p, *w)?;
+        }
+        self.params = agg.finish()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_weighted() {
+        let s = Server::new(vec![0.0; 2]);
+        let g = s
+            .aggregate(&[(vec![1.0, 0.0], 1.0), (vec![3.0, 2.0], 3.0)])
+            .unwrap();
+        assert_eq!(g, vec![2.5, 1.5]);
+    }
+
+    #[test]
+    fn average_params_fedavg() {
+        let mut s = Server::new(vec![0.0; 1]);
+        s.average_params(&[(vec![1.0], 100.0), (vec![5.0], 300.0)]).unwrap();
+        assert_eq!(s.params, vec![4.0]);
+    }
+}

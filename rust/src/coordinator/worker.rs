@@ -1,0 +1,75 @@
+//! Device-side state for the FEEL loop: the local shard/sampler, the SBC
+//! compressor (with its error-feedback residual), and — for schemes that
+//! train locally (individual learning, model-based FL) — local parameters.
+
+use crate::compress::Sbc;
+use crate::data::DeviceData;
+
+/// One device's training-loop state.
+pub struct Worker {
+    pub id: usize,
+    pub data: DeviceData,
+    /// gradient compressor (None = transmit dense)
+    pub sbc: Option<Sbc>,
+    /// local parameters for local-training schemes (None = uses global)
+    pub local_params: Option<Vec<f32>>,
+}
+
+impl Worker {
+    pub fn new(id: usize, data: DeviceData, sbc: Option<Sbc>) -> Self {
+        Worker { id, data, sbc, local_params: None }
+    }
+
+    /// Pass a gradient through the device's compressor (identity if none).
+    /// Returns (gradient as the server will see it, wire bits).
+    pub fn compress(&mut self, grads: Vec<f32>) -> (Vec<f32>, u64) {
+        match &mut self.sbc {
+            Some(sbc) => {
+                let msg = sbc.encode(&grads);
+                let bits = Sbc::wire_bits(&msg);
+                (Sbc::decode(&msg), bits)
+            }
+            None => {
+                let bits = 32 * grads.len() as u64;
+                (grads, bits)
+            }
+        }
+    }
+
+    pub fn shard_len(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SynthConfig};
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn compress_identity_when_disabled() {
+        let ds = generate(&SynthConfig { dim: 4, ..Default::default() }, 50, 1);
+        let _ = &ds;
+        let mut w = Worker::new(0, DeviceData::new(vec![0, 1, 2], Pcg::seeded(1)), None);
+        let g = vec![1.0f32, -2.0, 3.0];
+        let (out, bits) = w.compress(g.clone());
+        assert_eq!(out, g);
+        assert_eq!(bits, 96);
+    }
+
+    #[test]
+    fn compress_sbc_sparsifies() {
+        let mut w = Worker::new(
+            0,
+            DeviceData::new(vec![0], Pcg::seeded(2)),
+            Some(Sbc::new(0.01, 1000)),
+        );
+        let mut rng = Pcg::seeded(3);
+        let g: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        let (out, bits) = w.compress(g);
+        let nz = out.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nz, 10);
+        assert!(bits < 32 * 1000);
+    }
+}

@@ -1,0 +1,76 @@
+//! Online estimation of the loss-decay coefficient xi (eq. 8: dL = xi*sqrt(B)).
+//!
+//! The paper treats xi as a known model constant; in a running system it
+//! must be estimated. Each period contributes the observation
+//! `xi_obs = dL / sqrt(B)`; an EWMA with clamping to positive values keeps
+//! the optimizer's instance well-posed even through noisy/negative loss
+//! deltas (late training).
+
+/// EWMA estimator of xi.
+#[derive(Clone, Copy, Debug)]
+pub struct XiEstimator {
+    value: f64,
+    alpha: f64,
+    floor: f64,
+    observations: usize,
+}
+
+impl XiEstimator {
+    /// `initial` seeds the estimate before any observation; `alpha` is the
+    /// EWMA weight of a new observation.
+    pub fn new(initial: f64, alpha: f64) -> Self {
+        assert!(initial > 0.0 && (0.0..=1.0).contains(&alpha));
+        XiEstimator { value: initial, alpha, floor: initial * 1e-3, observations: 0 }
+    }
+
+    /// Record one period: observed global-loss decay `dl` at batch `b`.
+    /// Negative decays (loss went up) are clamped to the floor observation
+    /// instead of poisoning the estimate.
+    pub fn observe(&mut self, dl: f64, b: f64) {
+        assert!(b > 0.0);
+        let obs = (dl / b.sqrt()).max(self.floor);
+        self.value = (1.0 - self.alpha) * self.value + self.alpha * obs;
+        self.observations += 1;
+    }
+
+    pub fn value(&self) -> f64 {
+        self.value.max(self.floor)
+    }
+
+    pub fn observations(&self) -> usize {
+        self.observations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_to_constant_signal() {
+        let mut e = XiEstimator::new(1.0, 0.2);
+        for _ in 0..100 {
+            e.observe(0.05 * 100f64.sqrt(), 100.0); // xi_obs = 0.05
+        }
+        assert!((e.value() - 0.05).abs() < 1e-3, "{}", e.value());
+    }
+
+    #[test]
+    fn survives_negative_decays() {
+        let mut e = XiEstimator::new(0.1, 0.3);
+        for _ in 0..50 {
+            e.observe(-1.0, 64.0);
+        }
+        assert!(e.value() > 0.0);
+        assert!(e.value().is_finite());
+    }
+
+    #[test]
+    fn tracks_changing_signal() {
+        let mut e = XiEstimator::new(0.5, 0.3);
+        for _ in 0..60 {
+            e.observe(0.01 * 49f64.sqrt(), 49.0);
+        }
+        assert!((e.value() - 0.01).abs() < 2e-3);
+    }
+}

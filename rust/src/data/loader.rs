@@ -1,0 +1,87 @@
+//! Per-device batch sampling (paper step 1: "each device randomly selects a
+//! subset of data B_k from the local dataset").
+
+use crate::data::synthetic::Dataset;
+use crate::util::rng::Pcg;
+
+/// A device's local shard + sampler state.
+#[derive(Clone, Debug)]
+pub struct DeviceData {
+    /// indices into the global dataset owned by this device
+    pub indices: Vec<usize>,
+    rng: Pcg,
+}
+
+impl DeviceData {
+    pub fn new(indices: Vec<usize>, rng: Pcg) -> Self {
+        assert!(!indices.is_empty(), "device with empty shard");
+        DeviceData { indices, rng }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Sample a batch of `b` rows without replacement (with replacement if
+    /// `b` exceeds the shard, which the paper's B^max <= N_k precludes but
+    /// tiny test shards may hit).
+    pub fn sample(&mut self, ds: &Dataset, b: usize) -> (Vec<f32>, Vec<i32>) {
+        assert!(b >= 1);
+        let picks: Vec<usize> = if b <= self.indices.len() {
+            self.rng
+                .sample_indices(self.indices.len(), b)
+                .into_iter()
+                .map(|j| self.indices[j])
+                .collect()
+        } else {
+            (0..b)
+                .map(|_| self.indices[self.rng.below(self.indices.len() as u64) as usize])
+                .collect()
+        };
+        ds.gather(&picks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SynthConfig};
+
+    #[test]
+    fn samples_only_own_shard() {
+        let ds = generate(&SynthConfig { dim: 4, ..Default::default() }, 100, 1);
+        let own: Vec<usize> = (40..60).collect();
+        let own_rows: Vec<Vec<f32>> = own.iter().map(|&i| ds.row(i).to_vec()).collect();
+        let mut dd = DeviceData::new(own.clone(), Pcg::seeded(2));
+        for _ in 0..20 {
+            let (x, _) = dd.sample(&ds, 5);
+            for r in x.chunks(4) {
+                assert!(own_rows.iter().any(|o| o == r));
+            }
+        }
+    }
+
+    #[test]
+    fn without_replacement_distinct() {
+        let ds = generate(&SynthConfig { dim: 4, ..Default::default() }, 100, 1);
+        let mut dd = DeviceData::new((0..50).collect(), Pcg::seeded(3));
+        let (x, _) = dd.sample(&ds, 50);
+        let mut rows: Vec<&[f32]> = x.chunks(4).collect();
+        rows.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rows.dedup();
+        assert_eq!(rows.len(), 50);
+    }
+
+    #[test]
+    fn oversample_with_replacement() {
+        let ds = generate(&SynthConfig { dim: 4, ..Default::default() }, 100, 1);
+        let mut dd = DeviceData::new((0..10).collect(), Pcg::seeded(4));
+        let (x, y) = dd.sample(&ds, 32);
+        assert_eq!(x.len(), 32 * 4);
+        assert_eq!(y.len(), 32);
+    }
+}

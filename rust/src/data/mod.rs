@@ -1,0 +1,10 @@
+//! Data substrate (DESIGN.md S12): synthetic CIFAR-10 stand-in, IID /
+//! pathological non-IID partitioning, per-device batch sampling.
+
+pub mod loader;
+pub mod partition;
+pub mod synthetic;
+
+pub use loader::DeviceData;
+pub use partition::{label_diversity, partition, Partition};
+pub use synthetic::{generate, Dataset, SynthConfig};

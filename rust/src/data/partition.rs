@@ -1,0 +1,153 @@
+//! Dataset partitioning across devices (paper §VI-A):
+//!
+//! * IID — shuffle all samples, split into K equal parts;
+//! * non-IID (pathological) — sort by label, split into 2K shards of size
+//!   N/(2K), give each device two shards (most devices see only two digits).
+
+use crate::data::synthetic::Dataset;
+use crate::util::rng::Pcg;
+
+/// Partition kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partition {
+    Iid,
+    NonIid,
+}
+
+impl Partition {
+    pub fn parse(s: &str) -> Option<Partition> {
+        match s {
+            "iid" => Some(Partition::Iid),
+            "noniid" | "non-iid" | "non_iid" => Some(Partition::NonIid),
+            _ => None,
+        }
+    }
+}
+
+/// Per-device sample indices into the global dataset.
+pub fn partition(ds: &Dataset, k: usize, kind: Partition, rng: &mut Pcg) -> Vec<Vec<usize>> {
+    assert!(k >= 1 && ds.len() >= 2 * k, "dataset too small for K={k}");
+    match kind {
+        Partition::Iid => {
+            let mut idx: Vec<usize> = (0..ds.len()).collect();
+            rng.shuffle(&mut idx);
+            chunk_even(&idx, k)
+        }
+        Partition::NonIid => {
+            // sort by label (stable on index for determinism)
+            let mut idx: Vec<usize> = (0..ds.len()).collect();
+            idx.sort_by_key(|&i| (ds.y[i], i));
+            // 2K shards, each device gets two (randomly paired)
+            let shards = chunk_even(&idx, 2 * k);
+            let mut order: Vec<usize> = (0..2 * k).collect();
+            rng.shuffle(&mut order);
+            (0..k)
+                .map(|d| {
+                    let mut s = shards[order[2 * d]].clone();
+                    s.extend_from_slice(&shards[order[2 * d + 1]]);
+                    s
+                })
+                .collect()
+        }
+    }
+}
+
+fn chunk_even(idx: &[usize], parts: usize) -> Vec<Vec<usize>> {
+    let n = idx.len();
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut off = 0;
+    for p in 0..parts {
+        let sz = base + usize::from(p < rem);
+        out.push(idx[off..off + sz].to_vec());
+        off += sz;
+    }
+    out
+}
+
+/// Number of distinct labels a device sees (non-IID diagnostics).
+pub fn label_diversity(ds: &Dataset, part: &[usize]) -> usize {
+    let mut seen = vec![false; ds.classes];
+    for &i in part {
+        seen[ds.y[i] as usize] = true;
+    }
+    seen.iter().filter(|&&s| s).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SynthConfig};
+
+    fn ds() -> Dataset {
+        generate(&SynthConfig { dim: 8, ..Default::default() }, 1200, 5)
+    }
+
+    #[test]
+    fn covers_all_samples_disjointly() {
+        let ds = ds();
+        let mut rng = Pcg::seeded(1);
+        for kind in [Partition::Iid, Partition::NonIid] {
+            let parts = partition(&ds, 12, kind, &mut rng);
+            let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..ds.len()).collect::<Vec<_>>(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn sizes_even() {
+        let ds = ds();
+        let mut rng = Pcg::seeded(2);
+        let parts = partition(&ds, 6, Partition::NonIid, &mut rng);
+        for p in &parts {
+            assert_eq!(p.len(), 200);
+        }
+    }
+
+    #[test]
+    fn iid_has_full_label_diversity() {
+        let ds = ds();
+        let mut rng = Pcg::seeded(3);
+        let parts = partition(&ds, 12, Partition::Iid, &mut rng);
+        for p in &parts {
+            assert_eq!(label_diversity(&ds, p), 10);
+        }
+    }
+
+    #[test]
+    fn noniid_is_pathological() {
+        let ds = ds();
+        let mut rng = Pcg::seeded(4);
+        let parts = partition(&ds, 12, Partition::NonIid, &mut rng);
+        // every device sees at most ~3 labels (2 shards, shard boundaries
+        // can straddle one label change each)
+        for p in &parts {
+            let div = label_diversity(&ds, p);
+            assert!(div <= 4, "device sees {div} labels");
+        }
+        // and collectively the distribution is skewed vs IID
+        let avg: f64 = parts
+            .iter()
+            .map(|p| label_diversity(&ds, p) as f64)
+            .sum::<f64>()
+            / 12.0;
+        assert!(avg < 4.0, "avg diversity {avg}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = ds();
+        let a = partition(&ds, 6, Partition::NonIid, &mut Pcg::seeded(9));
+        let b = partition(&ds, 6, Partition::NonIid, &mut Pcg::seeded(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parse_kind() {
+        assert_eq!(Partition::parse("iid"), Some(Partition::Iid));
+        assert_eq!(Partition::parse("non-iid"), Some(Partition::NonIid));
+        assert_eq!(Partition::parse("x"), None);
+    }
+}

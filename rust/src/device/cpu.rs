@@ -1,0 +1,69 @@
+//! CPU compute model (paper eq. 9 and 12).
+//!
+//! A CPU device trains serially: the local gradient calculation latency is
+//! `t^L = B * C^L / f` where `f` is the CPU frequency (cycles/s) and `C^L`
+//! the cycles per sample for one forward-backward pass; the model update
+//! costs `t^M = M^C / f` cycles.
+
+/// A CPU training module.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CpuModule {
+    /// CPU frequency, cycles/s (paper: 0.7 / 1.4 / 2.1 GHz tiers)
+    pub freq_hz: f64,
+    /// cycles per sample for forward-backward (C^L)
+    pub cycles_per_sample: f64,
+    /// cycles for one local model update (M^C)
+    pub cycles_per_update: f64,
+}
+
+impl CpuModule {
+    pub fn new(freq_hz: f64, cycles_per_sample: f64, cycles_per_update: f64) -> Self {
+        assert!(freq_hz > 0.0 && cycles_per_sample > 0.0 && cycles_per_update >= 0.0);
+        CpuModule { freq_hz, cycles_per_sample, cycles_per_update }
+    }
+
+    /// Local gradient calculation latency for batchsize `b` (eq. 9).
+    pub fn grad_latency(&self, b: f64) -> f64 {
+        b * self.cycles_per_sample / self.freq_hz
+    }
+
+    /// Local model update latency (eq. 12).
+    pub fn update_latency(&self) -> f64 {
+        self.cycles_per_update / self.freq_hz
+    }
+
+    /// Local training speed `V_k = f / C^L` (samples/s) — Theorem 1's V_k.
+    pub fn training_speed(&self) -> f64 {
+        self.freq_hz / self.cycles_per_sample
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_linear_in_batch() {
+        let c = CpuModule::new(1.4e9, 7e7, 1e8);
+        let t1 = c.grad_latency(1.0);
+        let t64 = c.grad_latency(64.0);
+        assert!((t64 / t1 - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn faster_cpu_lower_latency() {
+        let slow = CpuModule::new(0.7e9, 7e7, 1e8);
+        let fast = CpuModule::new(2.1e9, 7e7, 1e8);
+        assert!(fast.grad_latency(32.0) < slow.grad_latency(32.0));
+        assert!(fast.update_latency() < slow.update_latency());
+        assert!((fast.training_speed() / slow.training_speed() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_scale_sanity() {
+        // 1.4 GHz, 7e7 cycles/sample -> 20 samples/s; B=128 -> 6.4 s
+        let c = CpuModule::new(1.4e9, 7e7, 1e8);
+        assert!((c.training_speed() - 20.0).abs() < 1e-9);
+        assert!((c.grad_latency(128.0) - 6.4).abs() < 1e-9);
+    }
+}

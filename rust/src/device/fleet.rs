@@ -1,0 +1,154 @@
+//! Device fleet: the per-device combination of a compute module (CPU or
+//! GPU) and a wireless link, plus the paper's standard fleet constructors.
+
+use crate::device::cpu::CpuModule;
+use crate::device::gpu::GpuModule;
+use crate::util::rng::Pcg;
+use crate::wireless::{CellConfig, DeviceLink};
+
+/// Compute module of one device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Compute {
+    Cpu(CpuModule),
+    Gpu(GpuModule),
+}
+
+impl Compute {
+    /// Gradient-calculation latency at batchsize `b` (eq. 9 / eq. 26).
+    pub fn grad_latency(&self, b: f64) -> f64 {
+        match self {
+            Compute::Cpu(c) => c.grad_latency(b),
+            Compute::Gpu(g) => g.grad_latency(b),
+        }
+    }
+
+    /// Model-update latency (eq. 12 / eq. 27).
+    pub fn update_latency(&self) -> f64 {
+        match self {
+            Compute::Cpu(c) => c.update_latency(),
+            Compute::Gpu(g) => g.update_latency(),
+        }
+    }
+
+    /// Affine view of the latency on the feasible batch region:
+    /// `t(B) ≈ B / speed + offset`. For CPUs offset = 0 and the form is
+    /// exact; for GPUs this is the compute-bound branch (Lemma 2 restricts
+    /// the optimum there).
+    pub fn affine(&self) -> (f64, f64) {
+        match self {
+            Compute::Cpu(c) => (c.training_speed(), 0.0),
+            Compute::Gpu(g) => (g.compute_bound_speed(), g.affine_offset()),
+        }
+    }
+
+    /// Lower bound of the batch region the optimizer may use
+    /// (1 for CPU; B_th for GPU per Lemma 2).
+    pub fn batch_floor(&self) -> f64 {
+        match self {
+            Compute::Cpu(_) => 1.0,
+            Compute::Gpu(g) => g.b_th,
+        }
+    }
+}
+
+/// One device: compute + link.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub id: usize,
+    pub compute: Compute,
+    pub link: DeviceLink,
+}
+
+/// The paper's CPU fleet (§VI-B): K devices in equal thirds of
+/// 0.7 / 1.4 / 2.1 GHz, uniform positions. `cycles_per_sample` and
+/// `cycles_per_update` are shared (same DNN on every device).
+pub fn paper_cpu_fleet(
+    k: usize,
+    cycles_per_sample: f64,
+    cycles_per_update: f64,
+    cell: CellConfig,
+    shadow_sigma_db: f64,
+    shadow_rho: f64,
+    rng: &mut Pcg,
+) -> Vec<Device> {
+    let tiers = [0.7e9, 1.4e9, 2.1e9];
+    (0..k)
+        .map(|id| Device {
+            id,
+            compute: Compute::Cpu(CpuModule::new(
+                tiers[id % tiers.len()],
+                cycles_per_sample,
+                cycles_per_update,
+            )),
+            link: DeviceLink::sample(cell, shadow_sigma_db, shadow_rho, rng),
+        })
+        .collect()
+}
+
+/// The paper's GPU fleet (§VI-D): K identical GTX-1080-Ti-like devices.
+pub fn paper_gpu_fleet(
+    k: usize,
+    gpu: GpuModule,
+    cell: CellConfig,
+    shadow_sigma_db: f64,
+    shadow_rho: f64,
+    rng: &mut Pcg,
+) -> Vec<Device> {
+    (0..k)
+        .map(|id| Device {
+            id,
+            compute: Compute::Gpu(gpu),
+            link: DeviceLink::sample(cell, shadow_sigma_db, shadow_rho, rng),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_fleet_tiers() {
+        let mut rng = Pcg::seeded(1);
+        let fleet = paper_cpu_fleet(12, 7e7, 1e8, CellConfig::default(), 0.0, 0.0, &mut rng);
+        assert_eq!(fleet.len(), 12);
+        let count_07 = fleet
+            .iter()
+            .filter(|d| matches!(d.compute, Compute::Cpu(c) if (c.freq_hz - 0.7e9).abs() < 1.0))
+            .count();
+        assert_eq!(count_07, 4);
+    }
+
+    #[test]
+    fn affine_cpu_exact() {
+        let c = Compute::Cpu(CpuModule::new(1.4e9, 7e7, 1e8));
+        let (v, off) = c.affine();
+        for b in [1.0, 17.0, 128.0] {
+            assert!((c.grad_latency(b) - (b / v + off)).abs() < 1e-12);
+        }
+        assert_eq!(c.batch_floor(), 1.0);
+    }
+
+    #[test]
+    fn affine_gpu_compute_bound() {
+        let g = Compute::Gpu(GpuModule::new(0.1, 0.002, 32.0, 1e9, 1e13));
+        let (v, off) = g.affine();
+        for b in [32.0, 64.0, 128.0] {
+            assert!((g.grad_latency(b) - (b / v + off)).abs() < 1e-12, "b={b}");
+        }
+        assert_eq!(g.batch_floor(), 32.0);
+    }
+
+    #[test]
+    fn gpu_fleet_identical_modules() {
+        let mut rng = Pcg::seeded(2);
+        let gpu = GpuModule::new(0.1, 0.002, 32.0, 1e9, 1e13);
+        let fleet = paper_gpu_fleet(6, gpu, CellConfig::default(), 0.0, 0.0, &mut rng);
+        for d in &fleet {
+            assert_eq!(d.compute, Compute::Gpu(gpu));
+        }
+        // positions should differ
+        let d0 = fleet[0].link.dist_m;
+        assert!(fleet.iter().any(|d| (d.link.dist_m - d0).abs() > 1e-6));
+    }
+}

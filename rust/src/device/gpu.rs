@@ -1,0 +1,156 @@
+//! GPU training function (paper Assumption 1, eq. 26, Fig. 2).
+//!
+//! GPUs execute in parallel: below a threshold batchsize `B_th` the gradient
+//! latency is flat (`data bound` — the GPU is under-filled); above it the
+//! latency grows linearly (`compute bound`):
+//!
+//! ```text
+//! t^L(B) = t_l                     , 1 <= B <= B_th
+//!        = c (B - B_th) + t_l      , B_th < B <= B_max
+//! ```
+//!
+//! The paper validates this on three DNNs on a GTX 1080 Ti (Fig. 2b). We
+//! ship (a) the analytic module used by the optimizer/simulator, (b) a
+//! *measurement simulator* that produces noisy latency samples like the
+//! paper's testbed, and (c) recovery of `(t_l, c, B_th)` from measurements
+//! via `util::stats::fit_piecewise` — regenerating Fig. 2's model-vs-data
+//! agreement is bench/experiment `fig2`.
+
+use crate::util::rng::Pcg;
+use crate::util::stats::{fit_piecewise, PiecewiseFit};
+
+/// A GPU training module (eq. 26 coefficients + update cost eq. 27).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpuModule {
+    /// flat-region latency `t_l` (s)
+    pub t_flat: f64,
+    /// compute-bound slope `c` (s per sample)
+    pub slope: f64,
+    /// data/compute boundary `B_th`
+    pub b_th: f64,
+    /// FLOPs for one local model update (M^G)
+    pub flops_per_update: f64,
+    /// GPU throughput (FLOP/s), f^G
+    pub flops_per_sec: f64,
+}
+
+impl GpuModule {
+    pub fn new(t_flat: f64, slope: f64, b_th: f64, flops_per_update: f64, flops_per_sec: f64) -> Self {
+        assert!(t_flat > 0.0 && slope >= 0.0 && b_th >= 1.0);
+        assert!(flops_per_update >= 0.0 && flops_per_sec > 0.0);
+        GpuModule { t_flat, slope, b_th, flops_per_update, flops_per_sec }
+    }
+
+    /// Local gradient calculation latency (eq. 26).
+    pub fn grad_latency(&self, b: f64) -> f64 {
+        if b <= self.b_th {
+            self.t_flat
+        } else {
+            self.slope * (b - self.b_th) + self.t_flat
+        }
+    }
+
+    /// Local model update latency (eq. 27).
+    pub fn update_latency(&self) -> f64 {
+        self.flops_per_update / self.flops_per_sec
+    }
+
+    /// Effective training speed in the compute-bound region: 1/slope
+    /// (samples/s) — the GPU analogue of the CPU's `V_k` (Lemma 2 reduces
+    /// the GPU problem to the CPU structure with this speed and constant
+    /// offset `t_l - c*B_th`).
+    pub fn compute_bound_speed(&self) -> f64 {
+        if self.slope > 0.0 {
+            1.0 / self.slope
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Affine form of the compute-bound branch: `t(B) = B/speed + offset`.
+    pub fn affine_offset(&self) -> f64 {
+        self.t_flat - self.slope * self.b_th
+    }
+
+    /// Simulate a latency measurement at batchsize `b` with multiplicative
+    /// noise (models the paper's Fig. 2(b) measurement scatter).
+    pub fn measure(&self, b: f64, noise_frac: f64, rng: &mut Pcg) -> f64 {
+        self.grad_latency(b) * (1.0 + noise_frac * rng.normal()).max(0.05)
+    }
+
+    /// Sweep batchsizes, produce measurements, and fit eq. 26 back.
+    pub fn profile(&self, bs: &[f64], noise_frac: f64, rng: &mut Pcg) -> PiecewiseFit {
+        let ts: Vec<f64> = bs.iter().map(|&b| self.measure(b, noise_frac, rng)).collect();
+        fit_piecewise(bs, &ts)
+    }
+}
+
+/// The three Fig. 2(b) profile shapes (DenseNet / GoogleNet / PNASNet on a
+/// GTX 1080 Ti), rescaled to our mini models: same flat-then-linear shape,
+/// knee, and relative ordering.
+pub fn paper_profiles() -> Vec<(&'static str, GpuModule)> {
+    vec![
+        ("densenet", GpuModule::new(0.110, 2.4e-3, 24.0, 2.0e9, 1.0e13)),
+        ("googlenet", GpuModule::new(0.075, 1.5e-3, 32.0, 1.3e9, 1.0e13)),
+        ("pnasnet", GpuModule::new(0.210, 4.6e-3, 16.0, 3.2e9, 1.0e13)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_then_linear() {
+        let g = GpuModule::new(0.1, 0.002, 32.0, 1e9, 1e13);
+        assert_eq!(g.grad_latency(1.0), 0.1);
+        assert_eq!(g.grad_latency(32.0), 0.1);
+        assert!((g.grad_latency(64.0) - (0.1 + 0.002 * 32.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn continuity_at_knee() {
+        let g = GpuModule::new(0.1, 0.002, 32.0, 1e9, 1e13);
+        let eps = 1e-9;
+        assert!((g.grad_latency(32.0 - eps) - g.grad_latency(32.0 + eps)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let g = GpuModule::new(0.08, 0.0015, 24.0, 1e9, 1e13);
+        let mut prev = 0.0;
+        for b in 1..=128 {
+            let t = g.grad_latency(b as f64);
+            assert!(t >= prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn profile_recovers_coefficients() {
+        let mut rng = Pcg::seeded(5);
+        for (name, g) in paper_profiles() {
+            let bs: Vec<f64> = (1..=128).map(|b| b as f64).collect();
+            let fit = g.profile(&bs, 0.02, &mut rng);
+            assert!((fit.t_l - g.t_flat).abs() / g.t_flat < 0.1, "{name}: {fit:?}");
+            assert!((fit.b_th - g.b_th).abs() <= 8.0, "{name}: {fit:?}");
+            assert!((fit.c - g.slope).abs() / g.slope < 0.15, "{name}: {fit:?}");
+        }
+    }
+
+    #[test]
+    fn affine_reduction_consistent() {
+        // compute-bound branch must equal B/speed + offset
+        let g = GpuModule::new(0.1, 0.002, 32.0, 1e9, 1e13);
+        for b in [33.0, 64.0, 128.0] {
+            let affine = b / g.compute_bound_speed() + g.affine_offset();
+            assert!((g.grad_latency(b) - affine).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn update_latency() {
+        let g = GpuModule::new(0.1, 0.002, 32.0, 2e9, 1e13);
+        assert!((g.update_latency() - 2e-4).abs() < 1e-15);
+    }
+}

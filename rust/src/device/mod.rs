@@ -1,0 +1,10 @@
+//! Device compute substrate (DESIGN.md S3–S4): CPU and GPU latency models
+//! and fleet construction.
+
+pub mod cpu;
+pub mod fleet;
+pub mod gpu;
+
+pub use cpu::CpuModule;
+pub use fleet::{paper_cpu_fleet, paper_gpu_fleet, Compute, Device};
+pub use gpu::{paper_profiles, GpuModule};

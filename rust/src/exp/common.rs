@@ -1,0 +1,89 @@
+//! Shared wiring for the paper-experiment drivers: build the world
+//! (dataset + fleet + backend) from an `Experiment` and run one scheme.
+
+use anyhow::Result;
+
+use crate::config::Experiment;
+use crate::coordinator::{Backend, HostBackend, PjrtBackend, Scheme, TrainLog, Trainer};
+use crate::data::{generate, Dataset};
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg;
+
+/// Which compute backend the experiment uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// pure-rust oracle — fast, used for the big scheme sweeps
+    Host,
+    /// AOT XLA via PJRT — the production path (requires `make artifacts`)
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "host" => Some(BackendKind::Host),
+            "pjrt" | "xla" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+/// Build the backend for an experiment.
+pub fn make_backend(exp: &Experiment, kind: BackendKind) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Host => Ok(Box::new(HostBackend::for_model(
+            &exp.model,
+            exp.synth.dim,
+            exp.synth.classes,
+            exp.trainer.seed,
+        )?)),
+        BackendKind::Pjrt => {
+            let dir = std::env::var("FEEL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+            let rt = Runtime::load(std::path::Path::new(&dir))?;
+            anyhow::ensure!(
+                rt.manifest.input_dim == exp.synth.dim,
+                "artifacts input_dim {} != experiment dim {} (re-run aot.py or set data.dim)",
+                rt.manifest.input_dim,
+                exp.synth.dim
+            );
+            Ok(Box::new(PjrtBackend::new(rt, &exp.model)?))
+        }
+    }
+}
+
+/// Generate this experiment's train/test datasets. The same seed is used
+/// for both so they share class prototypes (train/test from one
+/// distribution); `generate` itself splits determinism by sample index.
+pub fn make_data(exp: &Experiment) -> (Dataset, Dataset) {
+    let seed = exp.trainer.seed ^ 0x7e57_da7a;
+    let train = generate(&exp.synth, exp.train_n, seed);
+    let test = generate(&exp.synth, exp.test_n, seed);
+    (train, test)
+}
+
+/// Run one scheme to completion (warm start optional) and return its log.
+#[allow(clippy::too_many_arguments)]
+pub fn run_scheme(
+    exp: &Experiment,
+    scheme: Scheme,
+    kind: BackendKind,
+    periods: usize,
+    warm_steps: usize,
+    time_limit: Option<f64>,
+) -> Result<TrainLog> {
+    let mut backend = make_backend(exp, kind)?;
+    let (train, test) = make_data(exp);
+    let mut rng = Pcg::seeded(exp.trainer.seed ^ 0xf1ee7);
+    let fleet = exp.fleet(&mut rng);
+    let mut cfg = exp.trainer.clone();
+    cfg.scheme = scheme;
+    let mut tr = Trainer::new(cfg, fleet, &train, &test, exp.partition, backend.as_mut())?;
+    if warm_steps > 0 {
+        tr.warm_start(warm_steps, 64, 0.05)?;
+    }
+    match time_limit {
+        Some(t) => tr.run_for_time(t, periods)?,
+        None => tr.run(periods)?,
+    };
+    Ok(tr.log.clone())
+}

@@ -1,0 +1,83 @@
+//! Fig. 2 reproduction: GPU local-gradient-calculation latency vs training
+//! batchsize — (a) the theoretical piecewise model, (b) simulated
+//! measurements on the three DNN profiles + the recovered fit, validating
+//! Assumption 1 exactly the way the paper does (model vs measured curves).
+
+use anyhow::Result;
+
+use crate::device::paper_profiles;
+use crate::metrics::Recorder;
+use crate::util::rng::Pcg;
+use crate::util::stats::fit_piecewise;
+
+/// One profile's sweep output.
+#[derive(Clone, Debug)]
+pub struct Fig2Row {
+    pub model: &'static str,
+    pub b: f64,
+    pub t_model: f64,
+    pub t_measured: f64,
+}
+
+/// Run the sweep; returns rows + per-model fit summary lines.
+pub fn run(noise_frac: f64, seed: u64) -> (Vec<Fig2Row>, Vec<String>) {
+    let mut rng = Pcg::seeded(seed);
+    let mut rows = Vec::new();
+    let mut fits = Vec::new();
+    for (name, gpu) in paper_profiles() {
+        let bs: Vec<f64> = (1..=128).map(|b| b as f64).collect();
+        let ts: Vec<f64> = bs.iter().map(|&b| gpu.measure(b, noise_frac, &mut rng)).collect();
+        for (&b, &t) in bs.iter().zip(&ts) {
+            rows.push(Fig2Row { model: name, b, t_model: gpu.grad_latency(b), t_measured: t });
+        }
+        let fit = fit_piecewise(&bs, &ts);
+        fits.push(format!(
+            "{name}: true (t_l={:.4}, c={:.5}, B_th={:.0}) fitted (t_l={:.4}, c={:.5}, B_th={:.0}) rss={:.3e}",
+            gpu.t_flat, gpu.slope, gpu.b_th, fit.t_l, fit.c, fit.b_th, fit.rss
+        ));
+    }
+    (rows, fits)
+}
+
+/// Driver: print + record CSV.
+pub fn drive(rec: &Recorder) -> Result<()> {
+    let (rows, fits) = run(0.02, 42);
+    let mut csv = String::from("model,batchsize,t_model,t_measured\n");
+    for r in &rows {
+        csv.push_str(&format!("{},{},{:.6},{:.6}\n", r.model, r.b, r.t_model, r.t_measured));
+    }
+    rec.csv("fig2_latency", &csv)?;
+    println!("Fig. 2 — GPU training function (flat then linear in B):");
+    for f in &fits {
+        println!("  {f}");
+        rec.log(f)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_is_flat_then_linear() {
+        let (rows, _) = run(0.0, 1);
+        for model in ["densenet", "googlenet", "pnasnet"] {
+            let m: Vec<&Fig2Row> = rows.iter().filter(|r| r.model == model).collect();
+            assert_eq!(m.len(), 128);
+            // flat region: identical latencies at B=1 and B=8
+            assert_eq!(m[0].t_model, m[7].t_model);
+            // strictly increasing at the tail
+            assert!(m[127].t_model > m[100].t_model);
+        }
+    }
+
+    #[test]
+    fn fits_recover_knees() {
+        let (_, fits) = run(0.02, 7);
+        assert_eq!(fits.len(), 3);
+        for f in fits {
+            assert!(f.contains("fitted"));
+        }
+    }
+}

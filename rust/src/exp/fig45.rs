@@ -1,0 +1,142 @@
+//! Fig. 4 / Fig. 5 reproduction: GPU scenario, K = 6 identical GPUs —
+//! global training loss and test accuracy vs *simulated training time* for
+//! the proposed scheme vs the online (B=1), full-batch (B=128) and random-
+//! batch baselines; Fig. 4 = IID, Fig. 5 = non-IID (paper §VI-D).
+
+use anyhow::Result;
+
+use super::common::{run_scheme, BackendKind};
+use crate::config::Experiment;
+use crate::coordinator::Scheme;
+use crate::data::Partition;
+use crate::metrics::Recorder;
+use crate::opt::BatchPolicy;
+
+/// One policy's time series.
+#[derive(Clone, Debug)]
+pub struct Fig45Series {
+    pub policy: &'static str,
+    pub csv: String,
+    pub final_loss: f64,
+    pub final_acc: Option<f64>,
+    pub total_time: f64,
+    pub periods: usize,
+    pub log: crate::coordinator::TrainLog,
+}
+
+fn policies() -> Vec<(Scheme, &'static str)> {
+    vec![
+        (Scheme::Proposed, "proposed"),
+        (Scheme::Fixed { policy: BatchPolicy::Online, optimal_slots: true }, "online"),
+        (Scheme::Fixed { policy: BatchPolicy::Full, optimal_slots: true }, "full_batch"),
+        (Scheme::Fixed { policy: BatchPolicy::Random, optimal_slots: true }, "random"),
+    ]
+}
+
+/// Run one figure (IID for Fig. 4, non-IID for Fig. 5): every policy gets
+/// the same simulated-time budget.
+pub fn run(
+    base: &Experiment,
+    partition: Partition,
+    time_budget: f64,
+    max_periods: usize,
+    kind: BackendKind,
+) -> Result<Vec<Fig45Series>> {
+    let mut out = Vec::new();
+    for (scheme, name) in policies() {
+        let mut exp = base.clone();
+        exp.k = 6;
+        exp.gpu = true;
+        exp.partition = partition;
+        exp.trainer.eval_every = 5;
+        let log = run_scheme(&exp, scheme, kind, max_periods, 0, Some(time_budget))?;
+        out.push(Fig45Series {
+            policy: name,
+            csv: log.to_csv(),
+            final_loss: log.final_loss().unwrap_or(f64::NAN),
+            final_acc: log.final_acc(),
+            total_time: log.total_time(),
+            periods: log.records.len(),
+            log,
+        });
+    }
+    Ok(out)
+}
+
+pub fn drive(
+    rec: &Recorder,
+    base: &Experiment,
+    fig: u8,
+    time_budget: f64,
+    max_periods: usize,
+    kind: BackendKind,
+) -> Result<()> {
+    let partition = if fig == 4 { Partition::Iid } else { Partition::NonIid };
+    println!(
+        "Fig. {fig} — GPU scenario ({:?}), loss/accuracy vs training time (budget {time_budget} s)",
+        partition
+    );
+    let series = run(base, partition, time_budget, max_periods, kind)?;
+    for s in &series {
+        rec.csv(&format!("fig{fig}_{}", s.policy), &s.csv)?;
+        let line = format!(
+            "  {:<12} periods={:<5} time={:>8.1}s final loss {:.4} acc {}",
+            s.policy,
+            s.periods,
+            s.total_time,
+            s.final_loss,
+            s.final_acc.map(|a| format!("{:.3}", a)).unwrap_or("n/a".into())
+        );
+        println!("{line}");
+        rec.log(&line)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_base() -> Experiment {
+        let mut base = Experiment::default();
+        base.synth.dim = 24;
+        base.train_n = 800;
+        base.test_n = 200;
+        base
+    }
+
+    #[test]
+    fn proposed_fastest_to_loss_target() {
+        // headline of Fig. 4/5: the proposed scheme reaches a given loss
+        // level in the least simulated training time.
+        let series = run(&small_base(), Partition::Iid, 150.0, 30, BackendKind::Host).unwrap();
+        let target = 1.5; // between init (~ln 10) and converged
+        let prop = series.iter().find(|s| s.policy == "proposed").unwrap();
+        let t_prop = prop.log.time_to_loss(target).expect("proposed reaches target");
+        for s in &series {
+            if s.policy == "proposed" {
+                continue;
+            }
+            let t = s.log.time_to_loss(target).unwrap_or(f64::INFINITY);
+            assert!(
+                t_prop <= t * 1.05,
+                "proposed {t_prop}s vs {} {t}s to loss {target}",
+                s.policy
+            );
+        }
+    }
+
+    #[test]
+    fn online_runs_many_cheap_periods() {
+        let series = run(&small_base(), Partition::NonIid, 60.0, 100, BackendKind::Host).unwrap();
+        let online = series.iter().find(|s| s.policy == "online").unwrap();
+        let full = series.iter().find(|s| s.policy == "full_batch").unwrap();
+        // online periods are cheaper -> more of them fit in the budget
+        assert!(
+            online.periods >= full.periods,
+            "online {} vs full {}",
+            online.periods,
+            full.periods
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! Paper-experiment drivers — one module per table/figure (DESIGN.md §4).
+
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig45;
+pub mod table2;
+
+pub use common::BackendKind;

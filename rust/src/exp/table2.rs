@@ -1,0 +1,160 @@
+//! Table II reproduction: test accuracy + training speedup of the four
+//! schemes (individual learning, model-based FL, gradient-based FL,
+//! proposed) in the IID and non-IID cases, K ∈ {6, 12} (paper §VI-C).
+//!
+//! Speedup is measured as the paper does: the ratio of "training speeds",
+//! i.e. (time for individual learning to reach the common loss target) /
+//! (time for the scheme to reach it). The common target is the loosest of
+//! the schemes' final train losses so every scheme reaches it; schemes that
+//! plateau above it are assigned their total time (a *lower bound* on their
+//! slowdown, noted in the output).
+
+use anyhow::Result;
+
+use super::common::{run_scheme, BackendKind};
+use crate::config::Experiment;
+use crate::coordinator::{Scheme, TrainLog};
+use crate::data::Partition;
+use crate::metrics::{speedup, Recorder};
+
+/// One scheme's Table-II cell.
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub scheme: &'static str,
+    pub test_acc: f64,
+    pub speedup: f64,
+    pub reached_target: bool,
+    pub sim_time: f64,
+}
+
+fn schemes() -> Vec<(Scheme, &'static str)> {
+    vec![
+        (Scheme::Individual { local_batch: 128 }, "individual"),
+        (Scheme::ModelFl { local_batch: 32 }, "model_fl"),
+        (Scheme::GradientFl, "gradient_fl"),
+        (Scheme::Proposed, "proposed"),
+    ]
+}
+
+/// Run one (K, partition) cell of Table II.
+pub fn run_cell(
+    base: &Experiment,
+    k: usize,
+    partition: Partition,
+    periods: usize,
+    warm_steps: usize,
+    kind: BackendKind,
+) -> Result<Vec<Table2Row>> {
+    let mut logs: Vec<(&'static str, TrainLog)> = Vec::new();
+    for (scheme, name) in schemes() {
+        let mut exp = base.clone();
+        exp.k = k;
+        exp.partition = partition;
+        exp.trainer.eval_every = (periods / 10).max(1);
+        // model-FL / gradient-FL process whole shards per period: give all
+        // schemes the same period budget but cap wall time by periods only.
+        let log = run_scheme(&exp, scheme, kind, periods, warm_steps, None)?;
+        logs.push((name, log));
+    }
+    // common loss target: the loosest final loss across schemes (everyone
+    // can reach it), padded 2%
+    let target = logs
+        .iter()
+        .map(|(_, l)| l.final_loss().unwrap_or(f64::INFINITY))
+        .fold(f64::NEG_INFINITY, f64::max)
+        * 1.02;
+    let time_of = |log: &TrainLog| -> (f64, bool) {
+        match log.time_to_loss(target) {
+            Some(t) => (t.max(1e-9), true),
+            None => (log.total_time(), false),
+        }
+    };
+    let (t_ind, _) = time_of(&logs[0].1);
+    Ok(logs
+        .iter()
+        .map(|(name, log)| {
+            let (t, reached) = time_of(log);
+            Table2Row {
+                scheme: name,
+                test_acc: log.final_acc().unwrap_or(f64::NAN),
+                speedup: speedup(t_ind, t),
+                reached_target: reached,
+                sim_time: log.total_time(),
+            }
+        })
+        .collect())
+}
+
+/// Full Table II: both partitions for one K.
+pub fn drive(
+    rec: &Recorder,
+    base: &Experiment,
+    k: usize,
+    periods: usize,
+    warm_steps: usize,
+    kind: BackendKind,
+) -> Result<()> {
+    println!("Table II (K={k}) — test accuracy / training speedup vs individual learning");
+    println!(
+        "{:<14} {:>10} {:>10} {:>12} {:>10} {:>10} {:>12}",
+        "scheme", "acc(IID)", "spd(IID)", "", "acc(nIID)", "spd(nIID)", ""
+    );
+    let iid = run_cell(base, k, Partition::Iid, periods, warm_steps, kind)?;
+    let noniid = run_cell(base, k, Partition::NonIid, periods, warm_steps, kind)?;
+    let mut csv = String::from("scheme,partition,test_acc,speedup,reached_target,sim_time\n");
+    for (a, b) in iid.iter().zip(&noniid) {
+        println!(
+            "{:<14} {:>9.2}% {:>9.2}x {:>12} {:>9.2}% {:>9.2}x {:>12}",
+            a.scheme,
+            a.test_acc * 100.0,
+            a.speedup,
+            if a.reached_target { "" } else { "(plateau)" },
+            b.test_acc * 100.0,
+            b.speedup,
+            if b.reached_target { "" } else { "(plateau)" },
+        );
+        for (r, part) in [(a, "iid"), (b, "noniid")] {
+            csv.push_str(&format!(
+                "{},{},{:.4},{:.4},{},{:.2}\n",
+                r.scheme, part, r.test_acc, r.speedup, r.reached_target, r.sim_time
+            ));
+        }
+    }
+    rec.csv(&format!("table2_k{k}"), &csv)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_smoke_ordering() {
+        // tiny-scale run; the structural claims that must hold even at
+        // smoke scale: proposed has the highest speedup among FL schemes,
+        // model-FL is the slowest FL scheme.
+        let mut base = Experiment::default();
+        base.synth.dim = 24;
+        base.train_n = 800;
+        base.test_n = 200;
+        let rows = run_cell(&base, 4, Partition::Iid, 25, 30, BackendKind::Host).unwrap();
+        assert_eq!(rows.len(), 4);
+        let get = |n: &str| rows.iter().find(|r| r.scheme == n).unwrap();
+        // the invariant that must hold even at toy scale: the proposed
+        // scheme is strictly the fastest (the gradient_fl > model_fl gap
+        // needs realistic payload sizes and is asserted by the full-scale
+        // experiment run, EXPERIMENTS.md)
+        let prop = get("proposed");
+        for r in &rows {
+            assert!(
+                prop.speedup >= r.speedup,
+                "proposed {} slower than {} {}",
+                prop.speedup,
+                r.scheme,
+                r.speedup
+            );
+            assert!((0.0..=1.0).contains(&r.test_acc), "{:?}", r);
+            assert!(r.sim_time > 0.0);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Global gradient aggregation (paper eq. 1):
+//! `g = (1/|U B_k|) * sum_k |B_k| g_k` — batch-weighted averaging at the
+//! edge server.
+
+use anyhow::{bail, Result};
+
+/// Streaming weighted aggregator: server-side state for one period.
+#[derive(Clone, Debug)]
+pub struct Aggregator {
+    acc: Vec<f64>,
+    total_weight: f64,
+    contributions: usize,
+}
+
+impl Aggregator {
+    pub fn new(p: usize) -> Self {
+        Aggregator { acc: vec![0f64; p], total_weight: 0.0, contributions: 0 }
+    }
+
+    /// Add one device's gradient with weight |B_k|.
+    pub fn add(&mut self, grad: &[f32], weight: f64) -> Result<()> {
+        if grad.len() != self.acc.len() {
+            bail!("gradient length {} != {}", grad.len(), self.acc.len());
+        }
+        if !(weight > 0.0 && weight.is_finite()) {
+            bail!("non-positive weight {weight}");
+        }
+        for (a, &g) in self.acc.iter_mut().zip(grad) {
+            *a += weight * g as f64;
+        }
+        self.total_weight += weight;
+        self.contributions += 1;
+        Ok(())
+    }
+
+    pub fn contributions(&self) -> usize {
+        self.contributions
+    }
+
+    /// Finish: the batch-weighted average (eq. 1).
+    pub fn finish(self) -> Result<Vec<f32>> {
+        if self.contributions == 0 {
+            bail!("no gradients aggregated");
+        }
+        let w = self.total_weight;
+        Ok(self.acc.into_iter().map(|a| (a / w) as f32).collect())
+    }
+}
+
+/// One-shot convenience: aggregate a slice of (grad, weight) pairs.
+pub fn aggregate(grads: &[(&[f32], f64)]) -> Result<Vec<f32>> {
+    let p = grads
+        .first()
+        .map(|(g, _)| g.len())
+        .ok_or_else(|| anyhow::anyhow!("empty aggregation"))?;
+    let mut agg = Aggregator::new(p);
+    for (g, w) in grads {
+        agg.add(g, *w)?;
+    }
+    agg.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_average_eq1() {
+        let g1 = vec![1.0f32, 2.0];
+        let g2 = vec![3.0f32, 4.0];
+        // B1 = 1, B2 = 3 -> g = (1*g1 + 3*g2)/4 = [2.5, 3.5]
+        let out = aggregate(&[(&g1, 1.0), (&g2, 3.0)]).unwrap();
+        assert_eq!(out, vec![2.5, 3.5]);
+    }
+
+    #[test]
+    fn equal_weights_plain_mean() {
+        let g1 = vec![2.0f32];
+        let g2 = vec![4.0f32];
+        let g3 = vec![6.0f32];
+        let out = aggregate(&[(&g1, 5.0), (&g2, 5.0), (&g3, 5.0)]).unwrap();
+        assert_eq!(out, vec![4.0]);
+    }
+
+    #[test]
+    fn rejects_mismatched_length() {
+        let mut a = Aggregator::new(3);
+        assert!(a.add(&[1.0, 2.0], 1.0).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_weight() {
+        let mut a = Aggregator::new(1);
+        assert!(a.add(&[1.0], 0.0).is_err());
+        assert!(a.add(&[1.0], -2.0).is_err());
+        assert!(a.add(&[1.0], f64::NAN).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_finish() {
+        assert!(Aggregator::new(2).finish().is_err());
+    }
+
+    #[test]
+    fn numerically_stable_many_contributions() {
+        // f64 accumulation: a million tiny contributions keep precision
+        let mut a = Aggregator::new(1);
+        for _ in 0..1_000_000 {
+            a.add(&[1e-3], 1.0).unwrap();
+        }
+        let out = a.finish().unwrap();
+        assert!((out[0] - 1e-3).abs() < 1e-9, "{}", out[0]);
+    }
+}

@@ -1,0 +1,5 @@
+//! Gradient plumbing at the edge server (DESIGN.md S8).
+
+pub mod aggregate;
+
+pub use aggregate::{aggregate, Aggregator};

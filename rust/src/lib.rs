@@ -1,0 +1,27 @@
+//! `feel` — Federated Edge Learning acceleration library.
+//!
+//! Rust+JAX+Pallas reproduction of *"Accelerating DNN Training in Wireless
+//! Federated Edge Learning Systems"* (Ren, Yu, Ding; 2019): joint training
+//! batchsize selection and TDMA communication resource allocation that
+//! maximizes the paper's learning-efficiency criterion `E = ΔL / T`.
+//!
+//! Architecture (DESIGN.md): this crate is layer 3 — the coordinator, the
+//! wireless/device simulators, the paper's optimizer, and the PJRT runtime
+//! that executes the AOT-compiled JAX/Pallas computations in `artifacts/`.
+//! Python only runs at build time (`make artifacts`).
+
+pub mod benchkit;
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod exp;
+pub mod grad;
+pub mod metrics;
+pub mod opt;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+pub mod wireless;

@@ -1,0 +1,5 @@
+//! `feel` CLI — leader entrypoint (see cli.rs for the subcommands).
+
+fn main() -> anyhow::Result<()> {
+    feel::cli::main()
+}

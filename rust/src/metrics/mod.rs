@@ -1,0 +1,21 @@
+//! Metrics: learning-efficiency accounting and results recording.
+
+pub mod recorder;
+
+pub use recorder::Recorder;
+
+/// Training speedup of `scheme_time` relative to `baseline_time` for
+/// reaching the same loss target (Table II's metric): higher is faster.
+pub fn speedup(baseline_time: f64, scheme_time: f64) -> f64 {
+    assert!(baseline_time > 0.0 && scheme_time > 0.0);
+    baseline_time / scheme_time
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn speedup_ratio() {
+        assert_eq!(super::speedup(10.0, 5.0), 2.0);
+        assert_eq!(super::speedup(5.0, 10.0), 0.5);
+    }
+}

@@ -1,0 +1,72 @@
+//! Results recorder: writes experiment outputs (CSV series + a JSON
+//! summary) under a results directory so every table/figure regeneration
+//! leaves an auditable artifact.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Writes experiment outputs under `<root>/<experiment>/`.
+pub struct Recorder {
+    dir: PathBuf,
+}
+
+impl Recorder {
+    pub fn new(root: &Path, experiment: &str) -> Result<Recorder> {
+        let dir = root.join(experiment);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        Ok(Recorder { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Write a CSV file (caller supplies full text including header).
+    pub fn csv(&self, name: &str, content: &str) -> Result<PathBuf> {
+        let path = self.dir.join(format!("{name}.csv"));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(content.as_bytes())?;
+        Ok(path)
+    }
+
+    /// Write a JSON summary.
+    pub fn json(&self, name: &str, value: &Json) -> Result<PathBuf> {
+        let path = self.dir.join(format!("{name}.json"));
+        std::fs::write(&path, value.to_string())?;
+        Ok(path)
+    }
+
+    /// Append a line to the experiment's log.
+    pub fn log(&self, line: &str) -> Result<()> {
+        let path = self.dir.join("run.log");
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        writeln!(f, "{line}")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj};
+
+    #[test]
+    fn writes_all_kinds() {
+        let tmp = std::env::temp_dir().join(format!("feel_rec_{}", std::process::id()));
+        let r = Recorder::new(&tmp, "unit").unwrap();
+        let p = r.csv("series", "a,b\n1,2\n").unwrap();
+        assert!(p.exists());
+        let j = r.json("summary", &obj(vec![("x", num(1.0))])).unwrap();
+        assert!(std::fs::read_to_string(j).unwrap().contains("\"x\""));
+        r.log("hello").unwrap();
+        r.log("world").unwrap();
+        let log = std::fs::read_to_string(r.dir().join("run.log")).unwrap();
+        assert_eq!(log, "hello\nworld\n");
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

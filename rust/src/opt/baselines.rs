@@ -1,0 +1,148 @@
+//! Baseline allocation policies the paper compares against (§VI-C/D):
+//! online learning (B_k = 1), full batch (B_k = B_max), random batch, and
+//! the decoupled ablations (equal slots and/or equal batches).
+//!
+//! All baselines receive *optimal slots for their fixed batches* by default
+//! (fair comparison: the paper's gain is attributed to joint selection, not
+//! to starving the baselines of scheduling); the `equal_slots` variants
+//! quantify the slot-allocation half of the win for the ablation bench.
+
+use anyhow::Result;
+
+use super::downlink::{makespan_fixed_slots_dl, solve_downlink};
+use super::types::{Instance, Solution};
+use super::uplink::{makespan_fixed_slots, makespan_for_batches};
+use crate::util::rng::Pcg;
+
+/// Batch policies for the GPU-scenario comparison (Fig. 4/5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// B_k = b_min (paper: 1 in the CPU scenario)
+    Online,
+    /// B_k = B^max = 128
+    Full,
+    /// B_k ~ U[b_min, b_max] each period
+    Random,
+    /// equal share of a given global batch
+    Equal(usize),
+}
+
+/// Produce the baseline batch vector for this period.
+pub fn batches_for(policy: BatchPolicy, inst: &Instance, rng: &mut Pcg) -> Vec<f64> {
+    match policy {
+        BatchPolicy::Online => inst.devices.iter().map(|d| d.b_min).collect(),
+        BatchPolicy::Full => inst.devices.iter().map(|d| d.b_max).collect(),
+        BatchPolicy::Random => inst
+            .devices
+            .iter()
+            .map(|d| rng.range_f64(d.b_min, d.b_max + 1.0).floor().min(d.b_max))
+            .collect(),
+        BatchPolicy::Equal(b) => {
+            let share = b as f64 / inst.k() as f64;
+            inst.devices
+                .iter()
+                .map(|d| share.clamp(d.b_min, d.b_max))
+                .collect()
+        }
+    }
+}
+
+/// Evaluate fixed batches with optimal slot allocation on both links.
+pub fn solve_fixed_batches(inst: &Instance, batches: &[f64], eps: f64) -> Result<Solution> {
+    let (t_up, tau_ul) = makespan_for_batches(inst, batches)?;
+    let dl = solve_downlink(inst, eps)?;
+    Ok(Solution {
+        batches: batches.to_vec(),
+        tau_ul,
+        tau_dl: dl.tau,
+        t_up,
+        t_down: dl.t_down,
+        b_total: batches.iter().sum(),
+    })
+}
+
+/// Evaluate fixed batches with EQUAL slots on both links (ablation).
+pub fn solve_equal_slots(inst: &Instance, batches: &[f64]) -> Solution {
+    let k = inst.k();
+    let tau_ul = vec![inst.frame_ul / k as f64; k];
+    let tau_dl = vec![inst.frame_dl / k as f64; k];
+    let t_up = makespan_fixed_slots(inst, batches, &tau_ul);
+    let t_down = makespan_fixed_slots_dl(inst, &tau_dl);
+    Solution {
+        batches: batches.to_vec(),
+        tau_ul,
+        tau_dl,
+        t_up,
+        t_down,
+        b_total: batches.iter().sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::global::solve;
+    use crate::opt::types::test_instance;
+
+    const EPS: f64 = 1e-9;
+
+    #[test]
+    fn proposed_dominates_all_baselines() {
+        // The headline property behind Table II / Fig. 4-5.
+        let inst = test_instance(6);
+        let opt = solve(&inst, EPS).unwrap();
+        let mut rng = Pcg::seeded(10);
+        for policy in [
+            BatchPolicy::Online,
+            BatchPolicy::Full,
+            BatchPolicy::Random,
+            BatchPolicy::Equal(300),
+        ] {
+            let batches = batches_for(policy, &inst, &mut rng);
+            let sol = solve_fixed_batches(&inst, &batches, EPS).unwrap();
+            let eff = sol.efficiency(inst.xi);
+            assert!(
+                opt.efficiency >= eff * (1.0 - 1e-6),
+                "{policy:?}: baseline {eff} beats proposed {}",
+                opt.efficiency
+            );
+        }
+    }
+
+    #[test]
+    fn equal_slots_never_better() {
+        let inst = test_instance(6);
+        let mut rng = Pcg::seeded(11);
+        for policy in [BatchPolicy::Online, BatchPolicy::Full, BatchPolicy::Random] {
+            let batches = batches_for(policy, &inst, &mut rng);
+            let opt_slots = solve_fixed_batches(&inst, &batches, EPS).unwrap();
+            let eq_slots = solve_equal_slots(&inst, &batches);
+            assert!(
+                opt_slots.period_latency() <= eq_slots.period_latency() * (1.0 + 1e-9),
+                "{policy:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn random_batches_within_bounds() {
+        let inst = test_instance(8);
+        let mut rng = Pcg::seeded(12);
+        for _ in 0..100 {
+            let bs = batches_for(BatchPolicy::Random, &inst, &mut rng);
+            for (b, d) in bs.iter().zip(&inst.devices) {
+                assert!(*b >= d.b_min && *b <= d.b_max);
+            }
+        }
+    }
+
+    #[test]
+    fn online_and_full_are_extremes() {
+        let inst = test_instance(4);
+        let mut rng = Pcg::seeded(13);
+        let online = batches_for(BatchPolicy::Online, &inst, &mut rng);
+        let full = batches_for(BatchPolicy::Full, &inst, &mut rng);
+        assert!(online.iter().all(|&b| b == 1.0));
+        assert!(full.iter().all(|&b| b == 128.0));
+    }
+}

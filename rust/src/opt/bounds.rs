@@ -1,0 +1,118 @@
+//! Corollary 1 and 2 (paper Appendix B): search bounds for E^U* and mu*.
+//!
+//! Stated in the time domain (`T = dL * E^U`), zero-offset (CPU) form —
+//! exactly the setting of the paper's corollaries. These initialize/verify
+//! Algorithm 1's bisection brackets; the production solver additionally
+//! copes with offsets by bracket doubling (opt::uplink).
+
+use super::types::Instance;
+
+/// Corollary 1 (time domain): bounds on the subperiod-1 makespan
+/// `T* = dL*E^U*` for global batch `b`. Returns (lower, upper).
+pub fn makespan_bounds(inst: &Instance, b: f64) -> (f64, f64) {
+    let k = inst.k() as f64;
+    let total_speed: f64 = inst.devices.iter().map(|d| d.speed).sum();
+    let rho = inst.rho();
+    // lower (infinite-memory relaxation): B/(sum V) + s (sum sqrt(rho/R))^2
+    let comm: f64 = inst
+        .devices
+        .iter()
+        .zip(&rho)
+        .map(|(d, &r)| (r / (d.rate_ul * inst.frame_ul / inst.frame_ul)).sqrt())
+        .sum();
+    let lower = b / total_speed + inst.s_bits * comm * comm;
+    // upper (equal split): max_k B/(K V_k) + K s / R_k
+    let upper = inst
+        .devices
+        .iter()
+        .map(|d| d.offset + b / (k * d.speed) + k * inst.s_bits / d.rate_ul)
+        .fold(0.0f64, f64::max);
+    (lower, upper)
+}
+
+/// Corollary 2 (time domain, mu rescaled by dL as in opt::uplink): given a
+/// candidate makespan `t`, the inner multiplier bracket [mu_lo, mu_hi]
+/// outside which every device clamps to b_max / b_min respectively.
+pub fn mu_bounds(inst: &Instance, t: f64) -> (f64, f64) {
+    let rho = inst.rho();
+    let mut lo = f64::INFINITY;
+    let mut hi: f64 = 0.0;
+    for (d, &r) in inst.devices.iter().zip(&rho) {
+        let c = r * d.rate_ul / (inst.s_bits * inst.frame_ul);
+        // B_k = V (t - off - sqrt(mu / (c))) = b  =>  mu = c (t - off - b/V)^2
+        let at = |bk: f64| {
+            let x = t - d.offset - bk / d.speed;
+            if x <= 0.0 {
+                0.0
+            } else {
+                c * x * x
+            }
+        };
+        lo = lo.min(at(d.b_max));
+        hi = hi.max(at(d.b_min));
+    }
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::types::test_instance;
+    use crate::opt::uplink::{batch_policy, solve_uplink};
+
+    #[test]
+    fn corollary1_brackets_optimum() {
+        let inst = test_instance(6); // CPU-form: offsets 0
+        for b in [50.0, 200.0, 500.0] {
+            let sol = solve_uplink(&inst, b, 1e-10).unwrap();
+            let (lo, hi) = makespan_bounds(&inst, b);
+            assert!(
+                sol.t_up >= lo * (1.0 - 1e-6),
+                "B={b}: t_up {} below lower bound {lo}",
+                sol.t_up
+            );
+            assert!(
+                sol.t_up <= hi * (1.0 + 1e-6),
+                "B={b}: t_up {} above upper bound {hi}",
+                sol.t_up
+            );
+        }
+    }
+
+    #[test]
+    fn corollary2_brackets_mu() {
+        let inst = test_instance(6);
+        let b = 300.0;
+        let sol = solve_uplink(&inst, b, 1e-10).unwrap();
+        // interior case required by the corollary: at least one device
+        // strictly inside (b_min, b_max)
+        let interior = sol
+            .batches
+            .iter()
+            .any(|&bk| bk > 1.0 + 1e-6 && bk < 128.0 - 1e-6);
+        assert!(interior, "test setup: want an interior device");
+        let (lo, hi) = mu_bounds(&inst, sol.t_up);
+        assert!(sol.mu >= lo - 1e-12, "mu {} < lo {lo}", sol.mu);
+        assert!(sol.mu <= hi + 1e-12, "mu {} > hi {hi}", sol.mu);
+    }
+
+    #[test]
+    fn mu_bounds_select_clamping() {
+        // at mu > hi all batches clamp to b_min; at mu < lo all clamp to b_max
+        let inst = test_instance(5);
+        let t = 8.0;
+        let (lo, hi) = mu_bounds(&inst, t);
+        let rho = inst.rho();
+        let bs_hi = batch_policy(&inst, &rho, t, hi * (1.0 + 1e-9) + 1e-15);
+        for (bk, d) in bs_hi.iter().zip(&inst.devices) {
+            assert!((*bk - d.b_min).abs() < 1e-6, "{bk}");
+        }
+        if lo > 0.0 {
+            let bs_lo = batch_policy(&inst, &rho, t, lo * (1.0 - 1e-9));
+            assert!(bs_lo
+                .iter()
+                .zip(&inst.devices)
+                .any(|(bk, d)| (*bk - d.b_max).abs() < 1e-6));
+        }
+    }
+}

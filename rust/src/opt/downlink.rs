@@ -1,0 +1,139 @@
+//! Subproblem P3 (paper §IV-C, Theorem 2): downlink slot allocation.
+//!
+//! Time domain: find the minimal subperiod-2 makespan `T` with
+//!   tau_k(T) = s T_f^D / (R_k^D (T - u_k))   (u_k = update latency)
+//! packing the frame: `sum tau_k = T_f^D`. The paper's E^D* = T / dL.
+//! `sum tau(T)` is strictly decreasing in T on (max u_k, inf), so a single
+//! bisection suffices (Theorem 2's one-dimensional condition).
+
+use anyhow::{bail, Result};
+
+use super::types::Instance;
+
+/// Downlink solution: slot allocation + subperiod-2 makespan.
+#[derive(Clone, Debug)]
+pub struct DownlinkSol {
+    pub tau: Vec<f64>,
+    pub t_down: f64,
+}
+
+/// Theorem 2 slot policy at makespan T; None if T <= some u_k.
+pub fn tau_policy_dl(inst: &Instance, t: f64) -> Option<Vec<f64>> {
+    let mut tau = Vec::with_capacity(inst.k());
+    for d in &inst.devices {
+        let headroom = t - d.update_lat;
+        if headroom <= 0.0 {
+            return None;
+        }
+        tau.push(inst.s_bits * inst.frame_dl / (d.rate_dl * headroom));
+    }
+    Some(tau)
+}
+
+/// Solve P3: minimal t_down with the Theorem-2 structure.
+pub fn solve_downlink(inst: &Instance, eps: f64) -> Result<DownlinkSol> {
+    let u_max = inst
+        .devices
+        .iter()
+        .map(|d| d.update_lat)
+        .fold(0.0f64, f64::max);
+    let mut t_lo = u_max;
+    let mut t_hi = u_max + 1.0;
+    for _ in 0..200 {
+        match tau_policy_dl(inst, t_hi) {
+            Some(tau) if tau.iter().sum::<f64>() <= inst.frame_dl => break,
+            _ => t_hi *= 2.0,
+        }
+        if t_hi > 1e12 {
+            bail!("downlink infeasible");
+        }
+    }
+    for _ in 0..300 {
+        let mid = 0.5 * (t_lo + t_hi);
+        match tau_policy_dl(inst, mid) {
+            Some(tau) if tau.iter().sum::<f64>() <= inst.frame_dl => t_hi = mid,
+            _ => t_lo = mid,
+        }
+        if (t_hi - t_lo) < eps * t_hi.max(1e-12) {
+            break;
+        }
+    }
+    let tau = tau_policy_dl(inst, t_hi)
+        .ok_or_else(|| anyhow::anyhow!("downlink bisection failed"))?;
+    Ok(DownlinkSol { tau, t_down: t_hi })
+}
+
+/// Makespan under *fixed* downlink slots: max_k (t^D_k + u_k).
+pub fn makespan_fixed_slots_dl(inst: &Instance, tau: &[f64]) -> f64 {
+    inst.devices
+        .iter()
+        .zip(tau)
+        .map(|(d, &tk)| {
+            let t_comm = if tk > 0.0 {
+                inst.s_bits * inst.frame_dl / (tk * d.rate_dl)
+            } else {
+                f64::INFINITY
+            };
+            t_comm + d.update_lat
+        })
+        .fold(0.0f64, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::types::test_instance;
+
+    #[test]
+    fn packs_frame_exactly() {
+        let inst = test_instance(6);
+        let sol = solve_downlink(&inst, 1e-10).unwrap();
+        let total: f64 = sol.tau.iter().sum();
+        assert!((total - inst.frame_dl).abs() < 1e-6 * inst.frame_dl, "{total}");
+    }
+
+    #[test]
+    fn synchronous_completion() {
+        // Remark 5: every device finishes subperiod 2 at the same time.
+        let inst = test_instance(6);
+        let sol = solve_downlink(&inst, 1e-10).unwrap();
+        for (d, &tk) in inst.devices.iter().zip(&sol.tau) {
+            let t = inst.s_bits * inst.frame_dl / (tk * d.rate_dl) + d.update_lat;
+            assert!((t - sol.t_down).abs() < 1e-6 * sol.t_down);
+        }
+    }
+
+    #[test]
+    fn better_rate_less_slot() {
+        // Remark 5: slot decreases with the downlink rate (equal u_k).
+        let mut inst = test_instance(6);
+        for d in &mut inst.devices {
+            d.update_lat = 0.02;
+        }
+        let sol = solve_downlink(&inst, 1e-10).unwrap();
+        for i in 0..inst.k() {
+            for j in 0..inst.k() {
+                if inst.devices[i].rate_dl > inst.devices[j].rate_dl {
+                    assert!(sol.tau[i] < sol.tau[j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn beats_equal_slots() {
+        let inst = test_instance(6);
+        let sol = solve_downlink(&inst, 1e-10).unwrap();
+        let equal = vec![inst.frame_dl / 6.0; 6];
+        let t_eq = makespan_fixed_slots_dl(&inst, &equal);
+        assert!(sol.t_down <= t_eq * (1.0 + 1e-9), "{} vs {t_eq}", sol.t_down);
+    }
+
+    #[test]
+    fn makespan_exceeds_slowest_update() {
+        let mut inst = test_instance(4);
+        inst.devices[2].update_lat = 0.5;
+        let sol = solve_downlink(&inst, 1e-10).unwrap();
+        assert!(sol.t_down > 0.5);
+    }
+}

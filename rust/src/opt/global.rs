@@ -1,0 +1,184 @@
+//! The outer problem P1: choose the global batch B maximizing learning
+//! efficiency `E(B) = xi*sqrt(B) / (t_up(B) + t_down)` (paper §IV-C: after
+//! substituting the subproblem solutions, P1 degrades to a univariate
+//! problem in B).
+//!
+//! `t_down` is independent of B; `t_up(B)` comes from Algorithm 1. The
+//! paper suggests Newton's method; we use golden-section search (derivative
+//! free, robust to the kinks the box constraints introduce), plus an
+//! optional verification scan used by the ablation bench.
+
+use anyhow::Result;
+
+use super::downlink::solve_downlink;
+use super::types::{Instance, Solution};
+use super::uplink::{assemble, solve_uplink};
+
+/// Full period solution with the optimized global batch.
+#[derive(Clone, Debug)]
+pub struct GlobalSol {
+    pub solution: Solution,
+    /// the achieved learning efficiency E = dL/T
+    pub efficiency: f64,
+    /// number of uplink solves performed (complexity telemetry)
+    pub evals: usize,
+}
+
+/// Learning efficiency at a given global batch (negative if infeasible).
+fn efficiency_at(inst: &Instance, b: f64, t_down: f64, eps: f64) -> Option<(f64, Solution)> {
+    let ul = solve_uplink(inst, b, eps).ok()?;
+    let t_total = ul.t_up + t_down;
+    let eff = inst.loss_decay(b) / t_total;
+    let sol = assemble(ul, Vec::new(), t_down);
+    Some((eff, sol))
+}
+
+/// Solve P1 end to end: downlink once, golden-section over B, reattach the
+/// downlink slots.
+pub fn solve(inst: &Instance, eps: f64) -> Result<GlobalSol> {
+    let dl = solve_downlink(inst, eps)?;
+    let (b_lo, b_hi) = inst.batch_range();
+    let mut evals = 0usize;
+    let mut eval = |b: f64| -> Option<(f64, Solution)> {
+        evals += 1;
+        efficiency_at(inst, b, dl.t_down, eps)
+    };
+
+    // golden-section maximize over [b_lo, b_hi]
+    const PHI: f64 = 0.618_033_988_749_894_8;
+    let mut a = b_lo;
+    let mut b = b_hi;
+    let mut x1 = b - PHI * (b - a);
+    let mut x2 = a + PHI * (b - a);
+    let mut f1 = eval(x1).map(|(e, _)| e).unwrap_or(f64::NEG_INFINITY);
+    let mut f2 = eval(x2).map(|(e, _)| e).unwrap_or(f64::NEG_INFINITY);
+    for _ in 0..200 {
+        if (b - a) < 0.5 {
+            break; // half-sample resolution is below batch quantization
+        }
+        if f1 < f2 {
+            a = x1;
+            x1 = x2;
+            f1 = f2;
+            x2 = a + PHI * (b - a);
+            f2 = eval(x2).map(|(e, _)| e).unwrap_or(f64::NEG_INFINITY);
+        } else {
+            b = x2;
+            x2 = x1;
+            f2 = f1;
+            x1 = b - PHI * (b - a);
+            f1 = eval(x1).map(|(e, _)| e).unwrap_or(f64::NEG_INFINITY);
+        }
+    }
+    let b_star = 0.5 * (a + b);
+    let (eff, mut sol) =
+        eval(b_star).ok_or_else(|| anyhow::anyhow!("global solve infeasible at B={b_star}"))?;
+    sol.tau_dl = dl.tau;
+    Ok(GlobalSol { solution: sol, efficiency: eff, evals })
+}
+
+/// Solve the allocation for a *fixed* global batch (used by schemes that
+/// pin B, and by Fig. 3's per-period driver once B* is known).
+pub fn solve_fixed_batch(inst: &Instance, b: f64, eps: f64) -> Result<GlobalSol> {
+    let dl = solve_downlink(inst, eps)?;
+    let ul = solve_uplink(inst, b, eps)?;
+    let t_total = ul.t_up + dl.t_down;
+    let eff = inst.loss_decay(b) / t_total;
+    let mut sol = assemble(ul, Vec::new(), dl.t_down);
+    sol.tau_dl = dl.tau;
+    Ok(GlobalSol { solution: sol, efficiency: eff, evals: 1 })
+}
+
+/// Dense scan of E(B) (ablation/verification; `n` samples).
+pub fn efficiency_scan(inst: &Instance, n: usize, eps: f64) -> Result<Vec<(f64, f64)>> {
+    let dl = solve_downlink(inst, eps)?;
+    let (b_lo, b_hi) = inst.batch_range();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let b = b_lo + (b_hi - b_lo) * i as f64 / (n - 1) as f64;
+        if let Some((e, _)) = efficiency_at(inst, b, dl.t_down, eps) {
+            out.push((b, e));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::types::test_instance;
+
+    const EPS: f64 = 1e-9;
+
+    #[test]
+    fn global_beats_endpoints() {
+        let inst = test_instance(6);
+        let g = solve(&inst, EPS).unwrap();
+        let (b_lo, b_hi) = inst.batch_range();
+        let e_lo = solve_fixed_batch(&inst, b_lo, EPS).unwrap().efficiency;
+        let e_hi = solve_fixed_batch(&inst, b_hi, EPS).unwrap().efficiency;
+        assert!(g.efficiency >= e_lo - 1e-9, "{} vs lo {e_lo}", g.efficiency);
+        assert!(g.efficiency >= e_hi - 1e-9, "{} vs hi {e_hi}", g.efficiency);
+    }
+
+    #[test]
+    fn global_matches_dense_scan() {
+        let inst = test_instance(6);
+        let g = solve(&inst, EPS).unwrap();
+        let scan = efficiency_scan(&inst, 200, EPS).unwrap();
+        let best_scan = scan.iter().map(|&(_, e)| e).fold(f64::NEG_INFINITY, f64::max);
+        assert!(
+            g.efficiency >= best_scan * (1.0 - 1e-3),
+            "golden {} vs scan {best_scan}",
+            g.efficiency
+        );
+    }
+
+    #[test]
+    fn solution_fully_feasible() {
+        let inst = test_instance(8);
+        let g = solve(&inst, EPS).unwrap();
+        let s = &g.solution;
+        assert!(s.tau_ul.iter().sum::<f64>() <= inst.frame_ul * (1.0 + 1e-6));
+        assert!(s.tau_dl.iter().sum::<f64>() <= inst.frame_dl * (1.0 + 1e-6));
+        for (b, d) in s.batches.iter().zip(&inst.devices) {
+            assert!(*b >= d.b_min - 1e-9 && *b <= d.b_max + 1e-9);
+        }
+        assert!(s.t_up > 0.0 && s.t_down > 0.0);
+        assert!((s.efficiency(inst.xi) - g.efficiency).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_positive_and_finite() {
+        for k in [2, 6, 12, 24] {
+            let inst = test_instance(k);
+            let g = solve(&inst, EPS).unwrap();
+            assert!(g.efficiency.is_finite() && g.efficiency > 0.0, "k={k}");
+        }
+    }
+
+    #[test]
+    fn better_channel_higher_efficiency() {
+        let inst = test_instance(6);
+        let mut better = inst.clone();
+        for d in &mut better.devices {
+            d.rate_ul *= 4.0;
+            d.rate_dl *= 4.0;
+        }
+        let e1 = solve(&inst, EPS).unwrap().efficiency;
+        let e2 = solve(&better, EPS).unwrap().efficiency;
+        assert!(e2 > e1);
+    }
+
+    #[test]
+    fn faster_compute_higher_efficiency() {
+        let inst = test_instance(6);
+        let mut faster = inst.clone();
+        for d in &mut faster.devices {
+            d.speed *= 3.0;
+        }
+        let e1 = solve(&inst, EPS).unwrap().efficiency;
+        let e2 = solve(&faster, EPS).unwrap().efficiency;
+        assert!(e2 > e1);
+    }
+}

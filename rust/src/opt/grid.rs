@@ -1,0 +1,123 @@
+//! Brute-force reference optimizer: exhaustive grid over per-device batch
+//! vectors with exact optimal slot allocation per vector (bisection). Used
+//! to validate Algorithm-1 optimality (tests) and to cost the paper's
+//! complexity claim (bench_ablation). Exponential in K — keep K and the
+//! grid resolution small.
+
+use anyhow::Result;
+
+use super::downlink::solve_downlink;
+use super::types::{Instance, Solution};
+use super::uplink::makespan_for_batches;
+
+/// Result of a grid search.
+#[derive(Clone, Debug)]
+pub struct GridSol {
+    pub solution: Solution,
+    pub efficiency: f64,
+    pub evals: usize,
+}
+
+/// Exhaustively search batch vectors with each B_k on an `n_steps`-point
+/// grid over [b_min, b_max], maximizing the learning efficiency.
+pub fn grid_search(inst: &Instance, n_steps: usize, eps: f64) -> Result<GridSol> {
+    assert!(n_steps >= 2);
+    let dl = solve_downlink(inst, eps)?;
+    let k = inst.k();
+    let grids: Vec<Vec<f64>> = inst
+        .devices
+        .iter()
+        .map(|d| {
+            (0..n_steps)
+                .map(|i| d.b_min + (d.b_max - d.b_min) * i as f64 / (n_steps - 1) as f64)
+                .collect()
+        })
+        .collect();
+    let mut idx = vec![0usize; k];
+    let mut best: Option<(f64, Vec<f64>, f64, Vec<f64>)> = None;
+    let mut evals = 0usize;
+    loop {
+        let batches: Vec<f64> = idx.iter().zip(&grids).map(|(&i, g)| g[i]).collect();
+        evals += 1;
+        if let Ok((t_up, tau)) = makespan_for_batches(inst, &batches) {
+            let b_total: f64 = batches.iter().sum();
+            let eff = inst.loss_decay(b_total) / (t_up + dl.t_down);
+            if best.as_ref().map_or(true, |(e, ..)| eff > *e) {
+                best = Some((eff, batches, t_up, tau));
+            }
+        }
+        // odometer increment
+        let mut pos = 0;
+        loop {
+            if pos == k {
+                let (eff, batches, t_up, tau) = best.expect("grid found nothing");
+                let b_total = batches.iter().sum();
+                return Ok(GridSol {
+                    solution: Solution {
+                        batches,
+                        tau_ul: tau,
+                        tau_dl: dl.tau,
+                        t_up,
+                        t_down: dl.t_down,
+                        b_total,
+                    },
+                    efficiency: eff,
+                    evals,
+                });
+            }
+            idx[pos] += 1;
+            if idx[pos] < n_steps {
+                break;
+            }
+            idx[pos] = 0;
+            pos += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::global::solve;
+    use crate::opt::types::test_instance;
+
+    #[test]
+    fn algorithm1_at_least_as_good_as_grid() {
+        // closed form + bisection should match (or beat) a coarse grid
+        let inst = test_instance(3);
+        let grid = grid_search(&inst, 17, 1e-9).unwrap();
+        let alg = solve(&inst, 1e-9).unwrap();
+        assert!(
+            alg.efficiency >= grid.efficiency * (1.0 - 5e-3),
+            "alg {} vs grid {}",
+            alg.efficiency,
+            grid.efficiency
+        );
+    }
+
+    #[test]
+    fn grid_feasible() {
+        let inst = test_instance(3);
+        let g = grid_search(&inst, 9, 1e-9).unwrap();
+        assert!(g.solution.tau_ul.iter().sum::<f64>() <= inst.frame_ul * (1.0 + 1e-6));
+        assert!(g.evals == 9usize.pow(3));
+    }
+
+    #[test]
+    fn grid_on_gpu_instance() {
+        let mut inst = test_instance(3);
+        for d in &mut inst.devices {
+            d.offset = 0.05;
+            d.b_min = 16.0;
+            d.speed = 300.0;
+        }
+        let grid = grid_search(&inst, 17, 1e-9).unwrap();
+        let alg = solve(&inst, 1e-9).unwrap();
+        assert!(
+            alg.efficiency >= grid.efficiency * (1.0 - 5e-3),
+            "alg {} vs grid {}",
+            alg.efficiency,
+            grid.efficiency
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! The paper's optimization contribution (DESIGN.md S6): learning-efficiency
+//! maximization P1 via problem decomposition —
+//!
+//! * `uplink` — subproblem P2: Theorem 1 closed forms + Algorithm 1's
+//!   two-dimensional bisection (joint batchsize + uplink slots);
+//! * `downlink` — subproblem P3: Theorem 2 (downlink slots);
+//! * `global` — the outer univariate optimization of the global batch B;
+//! * `bounds` — Corollary 1/2 search brackets;
+//! * `grid` — brute-force reference optimizer (tests/ablation);
+//! * `baselines` — online/full/random/equal policies (Table II, Fig. 4-5);
+//! * `types` — shared problem-instance plumbing (CPU/GPU unified per
+//!   Lemma 2's affine reduction).
+
+pub mod baselines;
+pub mod bounds;
+pub mod downlink;
+pub mod global;
+pub mod grid;
+pub mod types;
+pub mod uplink;
+
+pub use baselines::BatchPolicy;
+pub use downlink::{solve_downlink, DownlinkSol};
+pub use global::{solve, solve_fixed_batch, GlobalSol};
+pub use types::{DeviceInst, Instance, Solution};
+pub use uplink::{solve_uplink, UplinkSol};

@@ -1,0 +1,291 @@
+//! Problem instance types for the paper's training-acceleration problem P1.
+//!
+//! The CPU and GPU scenarios share one structure (the paper's §V reduction,
+//! Lemma 2): gradient-calculation latency is affine on the feasible batch
+//! region, `t^L_k(B) = B / speed_k + offset_k` with `B in [b_min_k, b_max]`
+//! — CPU: speed = f/C^L, offset = 0, b_min = 1; GPU: speed = 1/c,
+//! offset = t_l - c*B_th, b_min = B_th.
+
+use anyhow::{bail, Result};
+
+use crate::device::Device;
+use crate::wireless::PeriodRates;
+
+/// Per-device optimizer view for one training period.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceInst {
+    /// affine training speed V_k (samples/s)
+    pub speed: f64,
+    /// affine latency offset (s); 0 for CPU
+    pub offset: f64,
+    /// feasible batch floor (1 for CPU, B_th for GPU per Lemma 2)
+    pub b_min: f64,
+    /// batch ceiling B^max
+    pub b_max: f64,
+    /// average uplink rate R^U_k (bit/s)
+    pub rate_ul: f64,
+    /// average downlink rate R^D_k (bit/s)
+    pub rate_dl: f64,
+    /// local model update latency t^M_k (s)
+    pub update_lat: f64,
+}
+
+/// One period's full problem instance.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub devices: Vec<DeviceInst>,
+    /// compressed gradient size s = r*d*p (bits)
+    pub s_bits: f64,
+    /// uplink frame length T_f^U (s)
+    pub frame_ul: f64,
+    /// downlink frame length T_f^D (s)
+    pub frame_dl: f64,
+    /// loss-decay coefficient xi in dL = xi*sqrt(B)
+    pub xi: f64,
+}
+
+impl Instance {
+    /// Build from a device fleet and this period's rates.
+    pub fn from_fleet(
+        fleet: &[Device],
+        rates: &[PeriodRates],
+        b_max: f64,
+        s_bits: f64,
+        frame_ul: f64,
+        frame_dl: f64,
+        xi: f64,
+    ) -> Result<Instance> {
+        if fleet.is_empty() || fleet.len() != rates.len() {
+            bail!("fleet/rates mismatch: {} vs {}", fleet.len(), rates.len());
+        }
+        let devices = fleet
+            .iter()
+            .zip(rates)
+            .map(|(d, r)| {
+                let (speed, offset) = d.compute.affine();
+                DeviceInst {
+                    speed,
+                    offset,
+                    b_min: d.compute.batch_floor(),
+                    b_max,
+                    rate_ul: r.ul_bps,
+                    rate_dl: r.dl_bps,
+                    update_lat: d.compute.update_latency(),
+                }
+            })
+            .collect();
+        let inst = Instance { devices, s_bits, frame_ul, frame_dl, xi };
+        inst.validate()?;
+        Ok(inst)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.devices.is_empty() {
+            bail!("no devices");
+        }
+        if !(self.s_bits > 0.0 && self.frame_ul > 0.0 && self.frame_dl > 0.0 && self.xi > 0.0) {
+            bail!("non-positive instance globals");
+        }
+        for (k, d) in self.devices.iter().enumerate() {
+            if !(d.speed > 0.0 && d.rate_ul > 0.0 && d.rate_dl > 0.0) {
+                bail!("device {k}: non-positive speed/rate");
+            }
+            if !(d.b_min >= 1.0 && d.b_max >= d.b_min) {
+                bail!("device {k}: bad batch bounds [{}, {}]", d.b_min, d.b_max);
+            }
+            if d.offset < 0.0 || d.update_lat < 0.0 {
+                bail!("device {k}: negative latency term");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn k(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Global-batch feasible interval [sum b_min, sum b_max].
+    pub fn batch_range(&self) -> (f64, f64) {
+        (
+            self.devices.iter().map(|d| d.b_min).sum(),
+            self.devices.iter().map(|d| d.b_max).sum(),
+        )
+    }
+
+    /// Training-priority weights rho_k = V_k / sum V (paper's rho via
+    /// f_k/C^L; identical when C^L is shared, generalized for GPU speeds).
+    pub fn rho(&self) -> Vec<f64> {
+        let total: f64 = self.devices.iter().map(|d| d.speed).sum();
+        self.devices.iter().map(|d| d.speed / total).collect()
+    }
+
+    /// Loss decay dL = xi*sqrt(B) (eq. 8).
+    pub fn loss_decay(&self, b: f64) -> f64 {
+        self.xi * b.sqrt()
+    }
+
+    /// Gradient-calculation latency of device k at batch b (affine view).
+    pub fn grad_latency(&self, k: usize, b: f64) -> f64 {
+        let d = &self.devices[k];
+        b / d.speed + d.offset
+    }
+}
+
+/// Joint solution of one period's allocation problem.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    /// per-device batchsizes (continuous; quantize for execution)
+    pub batches: Vec<f64>,
+    /// uplink slot durations (s), sum <= frame_ul
+    pub tau_ul: Vec<f64>,
+    /// downlink slot durations (s), sum <= frame_dl
+    pub tau_dl: Vec<f64>,
+    /// makespan of subperiod 1 (local grad + upload), seconds
+    pub t_up: f64,
+    /// makespan of subperiod 2 (download + update), seconds
+    pub t_down: f64,
+    /// global batch B = sum batches
+    pub b_total: f64,
+}
+
+impl Solution {
+    /// End-to-end period latency T (eq. 14).
+    pub fn period_latency(&self) -> f64 {
+        self.t_up + self.t_down
+    }
+
+    /// Learning efficiency E = dL / T (eq. 15) for coefficient `xi`.
+    pub fn efficiency(&self, xi: f64) -> f64 {
+        xi * self.b_total.sqrt() / self.period_latency()
+    }
+
+    /// Round continuous batches to integers preserving the total
+    /// (largest-remainder method) and respecting per-device bounds.
+    pub fn quantized_batches(&self, inst: &Instance) -> Vec<usize> {
+        quantize(&self.batches, inst)
+    }
+}
+
+/// Largest-remainder rounding of a batch vector under box constraints.
+pub fn quantize(batches: &[f64], inst: &Instance) -> Vec<usize> {
+    // integer box: [ceil(b_min), floor(b_max)] per device (GPU B_th can be
+    // fractional; rounding down would leave the data-bound region)
+    let mut out: Vec<usize> = batches
+        .iter()
+        .zip(&inst.devices)
+        .map(|(&b, d)| (b.floor().max(d.b_min.ceil()) as usize).min(d.b_max.floor() as usize))
+        .collect();
+    let target: usize = batches.iter().sum::<f64>().round() as usize;
+    let mut have: usize = out.iter().sum();
+    // distribute the remainder to the largest fractional parts first
+    let mut order: Vec<usize> = (0..batches.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = batches[a] - batches[a].floor();
+        let fb = batches[b] - batches[b].floor();
+        fb.partial_cmp(&fa).unwrap()
+    });
+    let mut i = 0;
+    while have < target && i < 10 * out.len() {
+        let k = order[i % order.len()];
+        if ((out[k] + 1) as f64) <= inst.devices[k].b_max {
+            out[k] += 1;
+            have += 1;
+        }
+        i += 1;
+    }
+    let mut i = 0;
+    while have > target && i < 10 * out.len() {
+        let k = order[order.len() - 1 - (i % order.len())];
+        if ((out[k] - 1) as f64) >= inst.devices[k].b_min {
+            out[k] -= 1;
+            have -= 1;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// A convenient homogeneous test instance.
+#[cfg(test)]
+pub fn test_instance(k: usize) -> Instance {
+    let devices = (0..k)
+        .map(|i| DeviceInst {
+            speed: 20.0 * (1.0 + (i % 3) as f64), // 20/40/60 samples/s
+            offset: 0.0,
+            b_min: 1.0,
+            b_max: 128.0,
+            rate_ul: 5e6 * (1.0 + (i % 4) as f64 * 0.5),
+            rate_dl: 8e6 * (1.0 + (i % 2) as f64),
+            update_lat: 0.02,
+        })
+        .collect();
+    Instance {
+        devices,
+        s_bits: 0.005 * 64.0 * 570_000.0, // r*d*p
+        frame_ul: 0.01,
+        frame_dl: 0.01,
+        xi: 0.05,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_range_and_rho() {
+        let inst = test_instance(6);
+        let (lo, hi) = inst.batch_range();
+        assert_eq!(lo, 6.0);
+        assert_eq!(hi, 6.0 * 128.0);
+        let rho = inst.rho();
+        assert!((rho.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(rho.iter().all(|&r| r > 0.0));
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        let mut inst = test_instance(3);
+        inst.devices[1].speed = 0.0;
+        assert!(inst.validate().is_err());
+        let mut inst = test_instance(3);
+        inst.devices[0].b_min = 0.5;
+        assert!(inst.validate().is_err());
+        let mut inst = test_instance(3);
+        inst.xi = -1.0;
+        assert!(inst.validate().is_err());
+    }
+
+    #[test]
+    fn quantize_preserves_total() {
+        let inst = test_instance(5);
+        let batches = vec![10.3, 20.7, 5.5, 64.25, 27.25];
+        let q = quantize(&batches, &inst);
+        let total: usize = q.iter().sum();
+        assert_eq!(total, 128);
+        for (qi, d) in q.iter().zip(&inst.devices) {
+            assert!(*qi as f64 >= d.b_min && *qi as f64 <= d.b_max);
+        }
+    }
+
+    #[test]
+    fn quantize_respects_bounds() {
+        let inst = test_instance(3);
+        let q = quantize(&[0.2, 0.9, 1.9], &inst);
+        assert!(q.iter().all(|&b| b >= 1));
+    }
+
+    #[test]
+    fn efficiency_formula() {
+        let sol = Solution {
+            batches: vec![50.0, 50.0],
+            tau_ul: vec![0.005, 0.005],
+            tau_dl: vec![0.005, 0.005],
+            t_up: 2.0,
+            t_down: 0.5,
+            b_total: 100.0,
+        };
+        assert!((sol.period_latency() - 2.5).abs() < 1e-12);
+        assert!((sol.efficiency(0.05) - 0.05 * 10.0 / 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,310 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU client. This is the only place python-produced bits are touched —
+//! python itself never runs on the training path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+//! Executables are compiled lazily and cached per artifact name (a model ×
+//! bucket grid is 30+ modules; most runs touch a handful).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Kind, Manifest};
+
+/// Outcome of one train-step execution.
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    pub grads: Vec<f32>,
+    pub loss: f32,
+    /// number of correctly-classified live (mask=1) samples
+    pub correct: f32,
+}
+
+/// Outcome of one eval execution.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOut {
+    pub loss: f32,
+    pub correct: f32,
+}
+
+/// Counters for the §Perf pass (compile vs execute time).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executes: usize,
+    pub execute_secs: f64,
+}
+
+/// The PJRT-backed runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: RuntimeStats,
+}
+
+impl Runtime {
+    /// Load the manifest in `dir` and create the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, cache: HashMap::new(), stats: RuntimeStats::default() })
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats
+    }
+
+    /// Read the deterministic initial parameter vector for `model`.
+    pub fn init_params(&self, model: &str) -> Result<Vec<f32>> {
+        let art = self
+            .manifest
+            .find(model, Kind::Init, 0)
+            .with_context(|| format!("no init artifact for {model}"))?;
+        let bytes = std::fs::read(&art.path)
+            .with_context(|| format!("reading {}", art.path.display()))?;
+        if bytes.len() != art.params * 4 {
+            bail!(
+                "init {}: {} bytes, want {} f32",
+                art.path.display(),
+                bytes.len(),
+                art.params
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn executable(&mut self, model: &str, kind: Kind, bucket: usize) -> Result<&xla::PjRtLoadedExecutable> {
+        let art = self
+            .manifest
+            .find(model, kind, bucket)
+            .with_context(|| format!("no artifact: model={model} kind={kind:?} bucket={bucket}"))?
+            .clone();
+        if !self.cache.contains_key(&art.name) {
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&art.path)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", art.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", art.name))?;
+            self.stats.compiles += 1;
+            self.stats.compile_secs += t0.elapsed().as_secs_f64();
+            self.cache.insert(art.name.clone(), exe);
+        }
+        Ok(self.cache.get(&art.name).unwrap())
+    }
+
+    /// Pre-compile every artifact a training run will need (optional warmup
+    /// so the first period's latency is not dominated by XLA compilation).
+    pub fn warmup(&mut self, model: &str, buckets: &[usize]) -> Result<()> {
+        for &b in buckets {
+            self.executable(model, Kind::TrainStep, b)?;
+        }
+        self.executable(model, Kind::ApplyUpdate, 0)?;
+        let eb = self.manifest.eval_batch;
+        self.executable(model, Kind::Eval, eb)?;
+        Ok(())
+    }
+
+    fn run(
+        &mut self,
+        model: &str,
+        kind: Kind,
+        bucket: usize,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        // compile (cached) first so execute timing is pure execution
+        self.executable(model, kind, bucket)?;
+        let t0 = Instant::now();
+        let exe = self.cache.get(&artifact_key(&self.manifest, model, kind, bucket)?).unwrap();
+        let bufs = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing {model}/{kind:?}/b{bucket}: {e:?}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result: {e:?}"))?;
+        self.stats.executes += 1;
+        self.stats.execute_secs += t0.elapsed().as_secs_f64();
+        Ok(parts)
+    }
+
+    /// One forward-backward pass over an exact-`bucket` batch.
+    /// `x` is row-major `[bucket, input_dim]`, `y` labels, `w` the 0/1 mask.
+    pub fn train_step(
+        &mut self,
+        model: &str,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        w: &[f32],
+        bucket: usize,
+    ) -> Result<StepOut> {
+        let d = self.manifest.input_dim;
+        let p = self.manifest.model(model)?.params;
+        if params.len() != p || x.len() != bucket * d || y.len() != bucket || w.len() != bucket {
+            bail!(
+                "train_step shape mismatch: params {}/{p}, x {}/{}, y {}/{bucket}, w {}/{bucket}",
+                params.len(), x.len(), bucket * d, y.len(), w.len()
+            );
+        }
+        let args = [
+            xla::Literal::vec1(params),
+            xla::Literal::vec1(x)
+                .reshape(&[bucket as i64, d as i64])
+                .map_err(|e| anyhow::anyhow!("reshape x: {e:?}"))?,
+            xla::Literal::vec1(y),
+            xla::Literal::vec1(w),
+        ];
+        let parts = self.run(model, Kind::TrainStep, bucket, &args)?;
+        if parts.len() != 3 {
+            bail!("train_step returned {}-tuple, want 3", parts.len());
+        }
+        let grads = parts[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("grads: {e:?}"))?;
+        let loss = scalar_f32(&parts[1])?;
+        let correct = scalar_f32(&parts[2])?;
+        Ok(StepOut { grads, loss, correct })
+    }
+
+    /// Pad a true batch of `n <= bucket_for(n)` samples into the smallest
+    /// bucket and run it; the mask keeps semantics exact.
+    pub fn train_step_padded(
+        &mut self,
+        model: &str,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<StepOut> {
+        let d = self.manifest.input_dim;
+        let n = y.len();
+        if n == 0 || x.len() != n * d {
+            bail!("train_step_padded: bad batch (n={n}, x={})", x.len());
+        }
+        let bucket = self
+            .manifest
+            .bucket_for(n)
+            .with_context(|| format!("batch {n} exceeds max bucket {}", self.manifest.max_bucket()))?;
+        let mut xp = vec![0f32; bucket * d];
+        xp[..n * d].copy_from_slice(x);
+        let mut yp = vec![0i32; bucket];
+        yp[..n].copy_from_slice(y);
+        let mut wp = vec![0f32; bucket];
+        wp[..n].fill(1.0);
+        self.train_step(model, params, &xp, &yp, &wp, bucket)
+    }
+
+    /// One SGD step on the flat parameter vector (L1 sgd kernel inside).
+    pub fn apply_update(
+        &mut self,
+        model: &str,
+        params: &[f32],
+        grads: &[f32],
+        lr: f32,
+    ) -> Result<Vec<f32>> {
+        let p = self.manifest.model(model)?.params;
+        if params.len() != p || grads.len() != p {
+            bail!("apply_update shape mismatch: {} / {} vs P={p}", params.len(), grads.len());
+        }
+        let args = [
+            xla::Literal::vec1(params),
+            xla::Literal::vec1(grads),
+            xla::Literal::scalar(lr),
+        ];
+        let parts = self.run(model, Kind::ApplyUpdate, 0, &args)?;
+        if parts.len() != 1 {
+            bail!("apply_update returned {}-tuple, want 1", parts.len());
+        }
+        parts[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("params out: {e:?}"))
+    }
+
+    /// Evaluate on one fixed-size eval batch (manifest.eval_batch rows).
+    pub fn evaluate(&mut self, model: &str, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOut> {
+        let d = self.manifest.input_dim;
+        let eb = self.manifest.eval_batch;
+        if x.len() != eb * d || y.len() != eb {
+            bail!("evaluate wants exactly eval_batch={eb} rows");
+        }
+        let args = [
+            xla::Literal::vec1(params),
+            xla::Literal::vec1(x)
+                .reshape(&[eb as i64, d as i64])
+                .map_err(|e| anyhow::anyhow!("reshape x: {e:?}"))?,
+            xla::Literal::vec1(y),
+        ];
+        let parts = self.run(model, Kind::Eval, eb, &args)?;
+        if parts.len() != 2 {
+            bail!("eval returned {}-tuple, want 2", parts.len());
+        }
+        Ok(EvalOut { loss: scalar_f32(&parts[0])?, correct: scalar_f32(&parts[1])? })
+    }
+
+    /// Evaluate a whole dataset by chunking into eval batches (last chunk
+    /// wraps around; caller passes full arrays). Returns (mean loss, accuracy).
+    pub fn evaluate_dataset(
+        &mut self,
+        model: &str,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+    ) -> Result<(f64, f64)> {
+        let d = self.manifest.input_dim;
+        let eb = self.manifest.eval_batch;
+        let n = ys.len();
+        if n < eb {
+            bail!("evaluate_dataset needs >= eval_batch={eb} rows, got {n}");
+        }
+        let mut total_loss = 0.0;
+        let mut total_correct = 0.0;
+        let mut rows = 0usize;
+        let mut i = 0;
+        while i < n {
+            let start = if i + eb <= n { i } else { n - eb }; // wrap the tail
+            let got = self.evaluate(
+                model,
+                params,
+                &xs[start * d..(start + eb) * d],
+                &ys[start..start + eb],
+            )?;
+            // tail overlap double-counts up to eb-1 rows; acceptable for
+            // monitoring, and exact when n % eb == 0 (the default configs).
+            total_loss += got.loss as f64 * eb as f64;
+            total_correct += got.correct as f64;
+            rows += eb;
+            i += eb;
+        }
+        Ok((total_loss / rows as f64, total_correct / rows as f64))
+    }
+}
+
+fn artifact_key(man: &Manifest, model: &str, kind: Kind, bucket: usize) -> Result<String> {
+    Ok(man
+        .find(model, kind, bucket)
+        .with_context(|| format!("no artifact {model}/{kind:?}/b{bucket}"))?
+        .name
+        .clone())
+}
+
+fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("scalar: {e:?}"))?
+        .first()
+        .copied()
+        .context("empty scalar literal")
+}

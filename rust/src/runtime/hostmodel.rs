@@ -1,0 +1,718 @@
+//! Pure-rust oracle of the L2 model zoo (mini_dense / mini_res / mini_mobile).
+//!
+//! Three jobs:
+//!  1. integration-test oracle: identical params + batch must give the same
+//!     loss/grads as the AOT XLA path (rust/tests/integration_runtime.rs);
+//!  2. fast backend for the large Table-II sweeps (hundreds of federated
+//!     periods × many schemes), where PJRT per-call overhead dominates;
+//!  3. lets `cargo test` run without artifacts present.
+//!
+//! The architecture is reconstructed from the manifest's flat-param layout
+//! (tensor names are the contract, see python/compile/model.py), so host and
+//! XLA views can never drift silently: any layout change breaks parsing.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::linalg::{gemm, gemm_at, gemm_bt};
+use crate::util::rng::Pcg;
+
+/// One layer as reconstructed from the layout.
+#[derive(Clone, Debug, PartialEq)]
+enum Layer {
+    /// y = relu?(x W + b); offsets of W [in,out] and b [out].
+    Dense { name: String, w: usize, b: usize, din: usize, dout: usize, relu: bool },
+    /// DenseNet concat marker: input of the next layer is concat of all
+    /// previous activations (handled by the family enum below).
+    /// (mini_dense is recognized structurally, not with a marker.)
+    /// mini_mobile separable: dw scale [w] then pointwise dense.
+    Sep { dw: usize, w: usize, b: usize, width: usize },
+    /// mini_res residual pair: h = relu(h + relu(h A + a) B + b).
+    Res { aw: usize, ab: usize, bw: usize, bb: usize, width: usize },
+}
+
+/// Model family tag — drives the forward/backward composition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Dense,
+    Res,
+    Mobile,
+}
+
+/// Pure-rust model instance.
+#[derive(Clone, Debug)]
+pub struct HostModel {
+    pub name: String,
+    pub family: Family,
+    pub input_dim: usize,
+    pub classes: usize,
+    pub params: usize,
+    layers: Vec<Layer>,
+    head: (usize, usize, usize), // (w offset, b offset, head input width)
+}
+
+/// Flat-layout cursor: resolves (name, shape) -> offset.
+struct Cursor<'a> {
+    entries: &'a [(String, Vec<usize>)],
+    offsets: Vec<usize>,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(entries: &'a [(String, Vec<usize>)]) -> Self {
+        let mut offsets = Vec::with_capacity(entries.len());
+        let mut off = 0;
+        for (_, shape) in entries {
+            offsets.push(off);
+            off += shape.iter().product::<usize>();
+        }
+        Cursor { entries, offsets }
+    }
+
+    fn find(&self, name: &str) -> Option<(usize, &'a [usize])> {
+        self.entries
+            .iter()
+            .position(|(n, _)| n == name)
+            .map(|i| (self.offsets[i], self.entries[i].1.as_slice()))
+    }
+}
+
+impl HostModel {
+    /// Reconstruct the model from its manifest layout.
+    pub fn from_layout(
+        model: &str,
+        layout: &[(String, Vec<usize>)],
+        input_dim: usize,
+        classes: usize,
+    ) -> Result<HostModel> {
+        let cur = Cursor::new(layout);
+        let total: usize = layout.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        let family = match model {
+            "mini_dense" => Family::Dense,
+            "mini_res" => Family::Res,
+            "mini_mobile" => Family::Mobile,
+            other => bail!("host model: unknown family {other:?}"),
+        };
+        let mut layers = Vec::new();
+        match family {
+            Family::Dense => {
+                for i in 0.. {
+                    let Some((w, ws)) = cur.find(&format!("blk{i}_w")) else { break };
+                    let (b, _) = cur
+                        .find(&format!("blk{i}_b"))
+                        .context("dense block missing bias")?;
+                    layers.push(Layer::Dense {
+                        name: format!("blk{i}"),
+                        w,
+                        b,
+                        din: ws[0],
+                        dout: ws[1],
+                        relu: true,
+                    });
+                }
+            }
+            Family::Res => {
+                let (w, ws) = cur.find("stem_w").context("missing stem_w")?;
+                let (b, _) = cur.find("stem_b").context("missing stem_b")?;
+                layers.push(Layer::Dense {
+                    name: "stem".into(),
+                    w,
+                    b,
+                    din: ws[0],
+                    dout: ws[1],
+                    relu: true,
+                });
+                for i in 0.. {
+                    let Some((aw, aws)) = cur.find(&format!("res{i}a_w")) else { break };
+                    let (ab, _) = cur.find(&format!("res{i}a_b")).context("res a_b")?;
+                    let (bw, _) = cur.find(&format!("res{i}b_w")).context("res b_w")?;
+                    let (bb, _) = cur.find(&format!("res{i}b_b")).context("res b_b")?;
+                    layers.push(Layer::Res { aw, ab, bw, bb, width: aws[0] });
+                }
+            }
+            Family::Mobile => {
+                let (w, ws) = cur.find("stem_w").context("missing stem_w")?;
+                let (b, _) = cur.find("stem_b").context("missing stem_b")?;
+                layers.push(Layer::Dense {
+                    name: "stem".into(),
+                    w,
+                    b,
+                    din: ws[0],
+                    dout: ws[1],
+                    relu: true,
+                });
+                for i in 0.. {
+                    let Some((dw, dws)) = cur.find(&format!("sep{i}_dw")) else { break };
+                    let (w, _) = cur.find(&format!("sep{i}_w")).context("sep w")?;
+                    let (b, _) = cur.find(&format!("sep{i}_b")).context("sep b")?;
+                    layers.push(Layer::Sep { dw, w, b, width: dws[0] });
+                }
+            }
+        }
+        let (hw, hws) = cur.find("head_w").context("missing head_w")?;
+        let (hb, _) = cur.find("head_b").context("missing head_b")?;
+        if hws[1] != classes {
+            bail!("head width {} != classes {classes}", hws[1]);
+        }
+        Ok(HostModel {
+            name: model.to_string(),
+            family,
+            input_dim,
+            classes,
+            params: total,
+            layers,
+            head: (hw, hb, hws[0]),
+        })
+    }
+
+    /// Forward pass; returns logits [n, classes] and the activation tape.
+    fn forward_tape(&self, flat: &[f32], x: &[f32], n: usize) -> (Vec<f32>, Vec<Vec<f32>>) {
+        let d = self.input_dim;
+        debug_assert_eq!(x.len(), n * d);
+        let mut tape: Vec<Vec<f32>> = vec![x.to_vec()];
+        match self.family {
+            Family::Dense => {
+                // activation i+1 = relu(concat(tape...) W + b)
+                for l in &self.layers {
+                    let Layer::Dense { w, b, din, dout, .. } = l else { unreachable!() };
+                    let cat = concat_rows(&tape, n);
+                    debug_assert_eq!(cat.len(), n * din);
+                    let mut h = bias_rows(&flat[*b..*b + *dout], n);
+                    gemm(n, *din, *dout, &cat, &flat[*w..*w + din * dout], &mut h);
+                    relu_inplace(&mut h);
+                    tape.push(h);
+                }
+            }
+            Family::Res => {
+                for l in &self.layers {
+                    match l {
+                        Layer::Dense { w, b, din, dout, .. } => {
+                            let x0 = tape.last().unwrap().clone();
+                            let mut h = bias_rows(&flat[*b..*b + *dout], n);
+                            gemm(n, *din, *dout, &x0, &flat[*w..*w + din * dout], &mut h);
+                            relu_inplace(&mut h);
+                            tape.push(h);
+                        }
+                        Layer::Res { aw, ab, bw, bb, width } => {
+                            let wd = *width;
+                            let h = tape.last().unwrap().clone();
+                            let mut inner = bias_rows(&flat[*ab..*ab + wd], n);
+                            gemm(n, wd, wd, &h, &flat[*aw..*aw + wd * wd], &mut inner);
+                            relu_inplace(&mut inner);
+                            tape.push(inner.clone()); // a-activation
+                            let mut out = bias_rows(&flat[*bb..*bb + wd], n);
+                            gemm(n, wd, wd, &inner, &flat[*bw..*bw + wd * wd], &mut out);
+                            for (o, &hh) in out.iter_mut().zip(&h) {
+                                *o += hh; // skip connection (pre-relu sum)
+                            }
+                            relu_inplace(&mut out);
+                            tape.push(out);
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+            }
+            Family::Mobile => {
+                for l in &self.layers {
+                    match l {
+                        Layer::Dense { w, b, din, dout, .. } => {
+                            let x0 = tape.last().unwrap().clone();
+                            let mut h = bias_rows(&flat[*b..*b + *dout], n);
+                            gemm(n, *din, *dout, &x0, &flat[*w..*w + din * dout], &mut h);
+                            relu_inplace(&mut h);
+                            tape.push(h);
+                        }
+                        Layer::Sep { dw, w, b, width } => {
+                            let wd = *width;
+                            let h = tape.last().unwrap().clone();
+                            let scale = &flat[*dw..*dw + wd];
+                            let mut dwo = vec![0f32; n * wd];
+                            for i in 0..n {
+                                for j in 0..wd {
+                                    dwo[i * wd + j] = (h[i * wd + j] * scale[j]).max(0.0);
+                                }
+                            }
+                            tape.push(dwo.clone()); // depthwise activation
+                            let mut out = bias_rows(&flat[*b..*b + wd], n);
+                            gemm(n, wd, wd, &dwo, &flat[*w..*w + wd * wd], &mut out);
+                            relu_inplace(&mut out);
+                            tape.push(out);
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        }
+        // head
+        let (hw, hb, hin) = self.head;
+        let head_in = match self.family {
+            Family::Dense => concat_rows(&tape, n),
+            _ => tape.last().unwrap().clone(),
+        };
+        debug_assert_eq!(head_in.len(), n * hin);
+        let mut logits = bias_rows(&flat[hb..hb + self.classes], n);
+        gemm(n, hin, self.classes, &head_in, &flat[hw..hw + hin * self.classes], &mut logits);
+        tape.push(head_in); // stash head input for backward
+        (logits, tape)
+    }
+
+    /// Forward only: logits [n, classes].
+    pub fn forward(&self, flat: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+        self.forward_tape(flat, x, n).0
+    }
+
+    /// Masked mean CE loss + correct count (mirrors masked_softmax_xent_ref).
+    pub fn loss(&self, flat: &[f32], x: &[f32], y: &[i32], w: &[f32]) -> (f32, f32) {
+        let n = y.len();
+        let logits = self.forward(flat, x, n);
+        let (loss, correct, _) = softmax_xent(&logits, y, w, self.classes);
+        (loss, correct)
+    }
+
+    /// Full train step: (grads, loss, correct) — mirrors the AOT train_step.
+    pub fn train_step(&self, flat: &[f32], x: &[f32], y: &[i32], w: &[f32]) -> (Vec<f32>, f32, f32) {
+        let n = y.len();
+        let c = self.classes;
+        let (logits, tape) = self.forward_tape(flat, x, n);
+        let (loss, correct, mut dlogits) = softmax_xent(&logits, y, w, c);
+        let mut grads = vec![0f32; self.params];
+
+        // head backward
+        let (hw, hb, hin) = self.head;
+        let head_in = tape.last().unwrap();
+        gemm_at(n, hin, c, head_in, &dlogits, &mut grads[hw..hw + hin * c]);
+        col_sums(&dlogits, n, c, &mut grads[hb..hb + c]);
+        let mut dhead_in = vec![0f32; n * hin];
+        gemm_bt(n, hin, c, &dlogits, &flat[hw..hw + hin * c], &mut dhead_in);
+        dlogits.clear();
+
+        match self.family {
+            Family::Dense => self.backward_dense(flat, &tape, dhead_in, n, &mut grads),
+            Family::Res => self.backward_res(flat, &tape, dhead_in, n, &mut grads),
+            Family::Mobile => self.backward_mobile(flat, &tape, dhead_in, n, &mut grads),
+        }
+        (grads, loss, correct)
+    }
+
+    fn backward_dense(
+        &self,
+        flat: &[f32],
+        tape: &[Vec<f32>],
+        dhead_in: Vec<f32>,
+        n: usize,
+        grads: &mut [f32],
+    ) {
+        // tape: [x, h1, .., hL, head_in]; head_in = concat(x, h1..hL).
+        let acts = &tape[..tape.len() - 1];
+        let widths: Vec<usize> = acts.iter().map(|a| a.len() / n).collect();
+        // d(activation) accumulators, seeded by splitting dhead_in.
+        let mut dacts: Vec<Vec<f32>> = acts.iter().map(|a| vec![0f32; a.len()]).collect();
+        split_rows(&dhead_in, n, &widths, &mut dacts, true);
+        // walk blocks backward; block i consumed concat(acts[..=i]).
+        for (bi, l) in self.layers.iter().enumerate().rev() {
+            let Layer::Dense { w, b, din, dout, .. } = l else { unreachable!() };
+            let out_idx = bi + 1;
+            // relu gate
+            let mut dh = dacts[out_idx].clone();
+            relu_gate(&mut dh, &acts[out_idx]);
+            let cat = concat_rows(&acts[..=bi].to_vec(), n);
+            gemm_at(n, *din, *dout, &cat, &dh, &mut grads[*w..*w + din * dout]);
+            col_sums(&dh, n, *dout, &mut grads[*b..*b + *dout]);
+            let mut dcat = vec![0f32; n * din];
+            gemm_bt(n, *din, *dout, &dh, &flat[*w..*w + din * dout], &mut dcat);
+            split_rows(&dcat, n, &widths[..=bi], &mut dacts, true);
+        }
+    }
+
+    fn backward_res(
+        &self,
+        flat: &[f32],
+        tape: &[Vec<f32>],
+        dhead_in: Vec<f32>,
+        n: usize,
+        grads: &mut [f32],
+    ) {
+        // tape: [x, stem, (a0, o0), (a1, o1), ..., head_in(copy of last o)]
+        let mut dout = dhead_in; // gradient wrt current output activation
+        let mut ti = tape.len() - 2; // index of last real activation
+        for l in self.layers.iter().rev() {
+            match l {
+                Layer::Res { aw, ab, bw, bb, width } => {
+                    let wd = *width;
+                    let out = &tape[ti]; // relu(h + inner B + b)
+                    let a_act = &tape[ti - 1]; // relu(h A + a)
+                    let h = &tape[ti - 2]; // block input
+                    let mut dsum = dout.clone();
+                    relu_gate(&mut dsum, out);
+                    // dsum flows to both skip (dh) and the B-branch
+                    let mut db_in = vec![0f32; n * wd]; // d(a_act)
+                    gemm_at(n, wd, wd, a_act, &dsum, &mut grads[*bw..*bw + wd * wd]);
+                    col_sums(&dsum, n, wd, &mut grads[*bb..*bb + wd]);
+                    gemm_bt(n, wd, wd, &dsum, &flat[*bw..*bw + wd * wd], &mut db_in);
+                    relu_gate(&mut db_in, a_act);
+                    gemm_at(n, wd, wd, h, &db_in, &mut grads[*aw..*aw + wd * wd]);
+                    col_sums(&db_in, n, wd, &mut grads[*ab..*ab + wd]);
+                    let mut dh = dsum; // skip path
+                    gemm_bt(n, wd, wd, &db_in, &flat[*aw..*aw + wd * wd], &mut dh);
+                    dout = dh;
+                    ti -= 2;
+                }
+                Layer::Dense { w, b, din, dout: dd, .. } => {
+                    let out = &tape[ti];
+                    let x0 = &tape[ti - 1];
+                    let mut dh = dout.clone();
+                    relu_gate(&mut dh, out);
+                    gemm_at(n, *din, *dd, x0, &dh, &mut grads[*w..*w + din * dd]);
+                    col_sums(&dh, n, *dd, &mut grads[*b..*b + *dd]);
+                    let mut dx = vec![0f32; n * din];
+                    gemm_bt(n, *din, *dd, &dh, &flat[*w..*w + din * dd], &mut dx);
+                    dout = dx;
+                    ti -= 1;
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    fn backward_mobile(
+        &self,
+        flat: &[f32],
+        tape: &[Vec<f32>],
+        dhead_in: Vec<f32>,
+        n: usize,
+        grads: &mut [f32],
+    ) {
+        let mut dout = dhead_in;
+        let mut ti = tape.len() - 2;
+        for l in self.layers.iter().rev() {
+            match l {
+                Layer::Sep { dw, w, b, width } => {
+                    let wd = *width;
+                    let out = &tape[ti]; // relu(dwo W + b)
+                    let dwo = &tape[ti - 1]; // relu(h * scale)
+                    let h = &tape[ti - 2];
+                    let mut dh_out = dout.clone();
+                    relu_gate(&mut dh_out, out);
+                    gemm_at(n, wd, wd, dwo, &dh_out, &mut grads[*w..*w + wd * wd]);
+                    col_sums(&dh_out, n, wd, &mut grads[*b..*b + wd]);
+                    let mut ddwo = vec![0f32; n * wd];
+                    gemm_bt(n, wd, wd, &dh_out, &flat[*w..*w + wd * wd], &mut ddwo);
+                    relu_gate(&mut ddwo, dwo);
+                    // d scale_j = sum_i h_ij * ddwo_ij ; dh_ij = scale_j * ddwo_ij
+                    let scale = &flat[*dw..*dw + wd];
+                    let gscale = &mut grads[*dw..*dw + wd];
+                    let mut dh = vec![0f32; n * wd];
+                    for i in 0..n {
+                        for j in 0..wd {
+                            let g = ddwo[i * wd + j];
+                            gscale[j] += h[i * wd + j] * g;
+                            dh[i * wd + j] = scale[j] * g;
+                        }
+                    }
+                    dout = dh;
+                    ti -= 2;
+                }
+                Layer::Dense { w, b, din, dout: dd, .. } => {
+                    let out = &tape[ti];
+                    let x0 = &tape[ti - 1];
+                    let mut dh = dout.clone();
+                    relu_gate(&mut dh, out);
+                    gemm_at(n, *din, *dd, x0, &dh, &mut grads[*w..*w + din * dd]);
+                    col_sums(&dh, n, *dd, &mut grads[*b..*b + *dd]);
+                    let mut dx = vec![0f32; n * din];
+                    gemm_bt(n, *din, *dd, &dh, &flat[*w..*w + din * dd], &mut dx);
+                    dout = dx;
+                    ti -= 1;
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    /// Host-side parameter init (used when running without artifacts; NOT
+    /// bit-identical to the jax init — tests that compare against XLA pass
+    /// explicit params instead).
+    pub fn init_params_host(&self, layout: &[(String, Vec<usize>)], seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::seeded(seed);
+        let mut out = Vec::with_capacity(self.params);
+        for (name, shape) in layout {
+            let sz: usize = shape.iter().product();
+            if name.ends_with("_b") {
+                out.extend(std::iter::repeat(0f32).take(sz));
+            } else if name.ends_with("_dw") {
+                out.extend(std::iter::repeat(1f32).take(sz));
+            } else {
+                let fan_in = shape[0] as f64;
+                let fan_out = *shape.last().unwrap() as f64;
+                let s = (2.0 / (fan_in + fan_out)).sqrt();
+                out.extend((0..sz).map(|_| (rng.normal() * s) as f32));
+            }
+        }
+        out
+    }
+}
+
+// -- shared numeric helpers --------------------------------------------------
+
+fn relu_inplace(h: &mut [f32]) {
+    for v in h {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Gate dh by relu'(out): out > 0 passes (out is the post-relu activation).
+fn relu_gate(dh: &mut [f32], out: &[f32]) {
+    for (d, &o) in dh.iter_mut().zip(out) {
+        if o <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Replicate bias to n rows.
+fn bias_rows(bias: &[f32], n: usize) -> Vec<f32> {
+    let d = bias.len();
+    let mut out = vec![0f32; n * d];
+    for i in 0..n {
+        out[i * d..(i + 1) * d].copy_from_slice(bias);
+    }
+    out
+}
+
+/// Row-wise concat of per-activation matrices (all n rows).
+fn concat_rows(parts: &[Vec<f32>], n: usize) -> Vec<f32> {
+    let widths: Vec<usize> = parts.iter().map(|p| p.len() / n).collect();
+    let total: usize = widths.iter().sum();
+    let mut out = vec![0f32; n * total];
+    for i in 0..n {
+        let mut off = 0;
+        for (p, &w) in parts.iter().zip(&widths) {
+            out[i * total + off..i * total + off + w].copy_from_slice(&p[i * w..(i + 1) * w]);
+            off += w;
+        }
+    }
+    out
+}
+
+/// Split row-concatenated gradient back into per-activation pieces,
+/// accumulating (+=) into dacts[0..widths.len()].
+fn split_rows(cat: &[f32], n: usize, widths: &[usize], dacts: &mut [Vec<f32>], accumulate: bool) {
+    let total: usize = widths.iter().sum();
+    debug_assert_eq!(cat.len(), n * total);
+    for i in 0..n {
+        let mut off = 0;
+        for (k, &w) in widths.iter().enumerate() {
+            let src = &cat[i * total + off..i * total + off + w];
+            let dst = &mut dacts[k][i * w..(i + 1) * w];
+            if accumulate {
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d += s;
+                }
+            } else {
+                dst.copy_from_slice(src);
+            }
+            off += w;
+        }
+    }
+}
+
+/// Column sums of d [n, c] accumulated into out [c].
+fn col_sums(d: &[f32], n: usize, c: usize, out: &mut [f32]) {
+    for i in 0..n {
+        for j in 0..c {
+            out[j] += d[i * c + j];
+        }
+    }
+}
+
+/// Masked softmax CE: returns (mean loss, correct count, dlogits [n,c]).
+fn softmax_xent(logits: &[f32], y: &[i32], w: &[f32], c: usize) -> (f32, f32, Vec<f32>) {
+    let n = y.len();
+    debug_assert_eq!(logits.len(), n * c);
+    let denom = w.iter().sum::<f32>().max(1.0);
+    let mut loss = 0f32;
+    let mut correct = 0f32;
+    let mut dlogits = vec![0f32; n * c];
+    for i in 0..n {
+        let row = &logits[i * c..(i + 1) * c];
+        let zmax = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for &v in row {
+            sum += (v - zmax).exp();
+        }
+        let lse = sum.ln();
+        let yi = y[i] as usize;
+        loss += w[i] * (lse - (row[yi] - zmax));
+        // NaN-safe argmax: total_cmp orders NaN consistently instead of
+        // panicking mid-experiment when a run diverges.
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        if argmax == yi {
+            correct += w[i];
+        }
+        let coef = w[i] / denom;
+        for j in 0..c {
+            let p = (row[j] - zmax).exp() / sum;
+            dlogits[i * c + j] = coef * (p - if j == yi { 1.0 } else { 0.0 });
+        }
+    }
+    (loss / denom, correct, dlogits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout_dense() -> Vec<(String, Vec<usize>)> {
+        // tiny mini_dense: D=6, growth=4, blocks=2, classes=3
+        vec![
+            ("blk0_w".into(), vec![6, 4]),
+            ("blk0_b".into(), vec![4]),
+            ("blk1_w".into(), vec![10, 4]),
+            ("blk1_b".into(), vec![4]),
+            ("head_w".into(), vec![14, 3]),
+            ("head_b".into(), vec![3]),
+        ]
+    }
+
+    fn layout_res() -> Vec<(String, Vec<usize>)> {
+        vec![
+            ("stem_w".into(), vec![6, 5]),
+            ("stem_b".into(), vec![5]),
+            ("res0a_w".into(), vec![5, 5]),
+            ("res0a_b".into(), vec![5]),
+            ("res0b_w".into(), vec![5, 5]),
+            ("res0b_b".into(), vec![5]),
+            ("head_w".into(), vec![5, 3]),
+            ("head_b".into(), vec![3]),
+        ]
+    }
+
+    fn layout_mobile() -> Vec<(String, Vec<usize>)> {
+        vec![
+            ("stem_w".into(), vec![6, 5]),
+            ("stem_b".into(), vec![5]),
+            ("sep0_dw".into(), vec![5]),
+            ("sep0_w".into(), vec![5, 5]),
+            ("sep0_b".into(), vec![5]),
+            ("head_w".into(), vec![5, 3]),
+            ("head_b".into(), vec![3]),
+        ]
+    }
+
+    fn rand_params(m: &HostModel, layout: &[(String, Vec<usize>)], seed: u64) -> Vec<f32> {
+        // random (not glorot-zero) so grads flow everywhere incl. biases
+        let mut r = Pcg::seeded(seed);
+        let mut p = m.init_params_host(layout, seed);
+        for v in &mut p {
+            *v += 0.1 * r.normal() as f32;
+        }
+        p
+    }
+
+    fn batch(n: usize, d: usize, c: usize, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+        let mut r = Pcg::seeded(seed);
+        let x: Vec<f32> = (0..n * d).map(|_| r.normal() as f32).collect();
+        let y: Vec<i32> = (0..n).map(|_| r.below(c as u64) as i32).collect();
+        let mut w = vec![1f32; n];
+        if n > 2 {
+            w[n - 1] = 0.0; // exercise masking
+        }
+        (x, y, w)
+    }
+
+    /// Central-difference gradient check on a random subset of parameters.
+    fn grad_check(model: &str, layout: Vec<(String, Vec<usize>)>) {
+        let (d, c) = (6, 3);
+        let m = HostModel::from_layout(model, &layout, d, c).unwrap();
+        let p = rand_params(&m, &layout, 1);
+        let (x, y, w) = batch(5, d, c, 2);
+        let (g, _, _) = m.train_step(&p, &x, &y, &w);
+        let mut rng = Pcg::seeded(3);
+        let eps = 1e-3f32;
+        let mut checked = 0;
+        for _ in 0..40 {
+            let i = rng.below(m.params as u64) as usize;
+            let mut pp = p.clone();
+            pp[i] += eps;
+            let (lp, _) = m.loss(&pp, &x, &y, &w);
+            pp[i] -= 2.0 * eps;
+            let (lm, _) = m.loss(&pp, &x, &y, &w);
+            let num = (lp - lm) / (2.0 * eps);
+            assert!(
+                (num - g[i]).abs() < 2e-3 + 0.05 * num.abs().max(g[i].abs()),
+                "{model} param {i}: numeric {num} vs analytic {}",
+                g[i]
+            );
+            checked += 1;
+        }
+        assert_eq!(checked, 40);
+    }
+
+    #[test]
+    fn grad_check_dense() {
+        grad_check("mini_dense", layout_dense());
+    }
+
+    #[test]
+    fn grad_check_res() {
+        grad_check("mini_res", layout_res());
+    }
+
+    #[test]
+    fn grad_check_mobile() {
+        grad_check("mini_mobile", layout_mobile());
+    }
+
+    #[test]
+    fn mask_zero_rows_have_no_effect() {
+        let layout = layout_res();
+        let m = HostModel::from_layout("mini_res", &layout, 6, 3).unwrap();
+        let p = rand_params(&m, &layout, 7);
+        let (x, y, _) = batch(4, 6, 3, 8);
+        let w_all = vec![1f32, 1.0, 1.0, 0.0];
+        let (g1, l1, _) = m.train_step(&p, &x, &y, &w_all);
+        // change the masked row's data: nothing may move
+        let mut x2 = x.clone();
+        for v in &mut x2[3 * 6..4 * 6] {
+            *v = 99.0;
+        }
+        let (g2, l2, _) = m.train_step(&p, &x2, &y, &w_all);
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn loss_decreases_under_sgd() {
+        let layout = layout_dense();
+        let m = HostModel::from_layout("mini_dense", &layout, 6, 3).unwrap();
+        let mut p = rand_params(&m, &layout, 11);
+        let (x, y, w) = batch(16, 6, 3, 12);
+        let (_, l0, _) = m.train_step(&p, &x, &y, &w);
+        for _ in 0..50 {
+            let (g, _, _) = m.train_step(&p, &x, &y, &w);
+            for (pv, gv) in p.iter_mut().zip(&g) {
+                *pv -= 0.5 * gv;
+            }
+        }
+        let (_, l1, _) = m.train_step(&p, &x, &y, &w);
+        assert!(l1 < l0 * 0.5, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn rejects_unknown_family() {
+        assert!(HostModel::from_layout("resnet50", &layout_res(), 6, 3).is_err());
+    }
+
+    #[test]
+    fn param_count_matches_layout() {
+        let layout = layout_mobile();
+        let m = HostModel::from_layout("mini_mobile", &layout, 6, 3).unwrap();
+        let want: usize = layout.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        assert_eq!(m.params, want);
+    }
+}

@@ -1,0 +1,265 @@
+//! Artifact manifest: the contract file `artifacts/manifest.json` written by
+//! `python/compile/aot.py` and consumed here (DESIGN.md §2).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Kind of AOT artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// `(params, x[b,D], y[b], w[b]) -> (grads, loss, correct)`
+    TrainStep,
+    /// `(params, grads, lr) -> (params,)`
+    ApplyUpdate,
+    /// `(params, x[E,D], y[E]) -> (loss, correct)`
+    Eval,
+    /// raw f32 initial parameter vector (binary, not HLO)
+    Init,
+}
+
+impl Kind {
+    fn parse(s: &str) -> Result<Kind> {
+        Ok(match s {
+            "train_step" => Kind::TrainStep,
+            "apply_update" => Kind::ApplyUpdate,
+            "eval" => Kind::Eval,
+            "init" => Kind::Init,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub path: PathBuf,
+    pub model: String,
+    pub kind: Kind,
+    /// batch bucket for TrainStep, eval batch for Eval, 0 otherwise.
+    pub bucket: usize,
+    pub params: usize,
+}
+
+/// Per-model metadata.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub params: usize,
+    /// flat layout [(tensor name, shape)] — used by compression/telemetry.
+    pub layout: Vec<(String, Vec<usize>)>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub input_dim: usize,
+    pub classes: usize,
+    pub eval_batch: usize,
+    /// ascending train-step batch buckets (e.g. 1,2,4,...,128)
+    pub buckets: Vec<usize>,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Json::parse(text).context("parsing manifest.json")?;
+        let input_dim = req_usize(&v, "input_dim")?;
+        let classes = req_usize(&v, "classes")?;
+        let eval_batch = req_usize(&v, "eval_batch")?;
+        let mut buckets: Vec<usize> = v
+            .req("buckets")?
+            .as_arr()
+            .context("buckets not an array")?
+            .iter()
+            .map(|b| b.as_usize().context("bucket not an int"))
+            .collect::<Result<_>>()?;
+        buckets.sort_unstable();
+        if buckets.is_empty() {
+            bail!("manifest has no batch buckets");
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in v.req("models")?.as_obj().context("models not an object")? {
+            let params = req_usize(m, "params")?;
+            let mut layout = Vec::new();
+            for e in m.req("layout")?.as_arr().context("layout not an array")? {
+                let pair = e.as_arr().context("layout entry")?;
+                let tname = pair[0].as_str().context("layout name")?.to_string();
+                let shape = pair[1]
+                    .as_arr()
+                    .context("layout shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("layout dim"))
+                    .collect::<Result<Vec<_>>>()?;
+                layout.push((tname, shape));
+            }
+            // sanity: layout sizes must add up to the flat param count
+            let sum: usize = layout
+                .iter()
+                .map(|(_, s)| s.iter().product::<usize>())
+                .sum();
+            if sum != params {
+                bail!("model {name}: layout sums to {sum}, params = {params}");
+            }
+            models.insert(
+                name.clone(),
+                ModelMeta { name: name.clone(), params, layout },
+            );
+        }
+
+        let mut artifacts = Vec::new();
+        for a in v.req("artifacts")?.as_arr().context("artifacts")? {
+            let kind = Kind::parse(a.req("kind")?.as_str().context("kind")?)?;
+            artifacts.push(Artifact {
+                name: a.req("name")?.as_str().context("name")?.to_string(),
+                path: dir.join(a.req("path")?.as_str().context("path")?),
+                model: a.req("model")?.as_str().context("model")?.to_string(),
+                kind,
+                bucket: a.get("bucket").and_then(|b| b.as_usize()).unwrap_or(0),
+                params: req_usize(a, "params")?,
+            });
+        }
+        let man = Manifest {
+            dir: dir.to_path_buf(),
+            input_dim,
+            classes,
+            eval_batch,
+            buckets,
+            models,
+            artifacts,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for model in self.models.keys() {
+            for &b in &self.buckets {
+                if self.find(model, Kind::TrainStep, b).is_none() {
+                    bail!("model {model}: missing train_step bucket {b}");
+                }
+            }
+            for kind in [Kind::ApplyUpdate, Kind::Eval, Kind::Init] {
+                if !self
+                    .artifacts
+                    .iter()
+                    .any(|a| a.model == *model && a.kind == kind)
+                {
+                    bail!("model {model}: missing {kind:?} artifact");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Find the artifact for (model, kind, bucket); bucket ignored unless
+    /// TrainStep.
+    pub fn find(&self, model: &str, kind: Kind, bucket: usize) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| {
+            a.model == model
+                && a.kind == kind
+                && (kind != Kind::TrainStep || a.bucket == bucket)
+        })
+    }
+
+    /// Smallest bucket >= n (batch padding target). None if n exceeds max.
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Largest configured bucket (the runtime's B_max).
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest"))
+    }
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.req(key)?
+        .as_usize()
+        .with_context(|| format!("{key} not a non-negative integer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest() -> String {
+        r#"{
+          "version": 1, "input_dim": 4, "classes": 2, "eval_batch": 8,
+          "buckets": [1, 2],
+          "models": {"m": {"params": 10, "layout": [["w", [4, 2]], ["b", [2]]]}},
+          "artifacts": [
+            {"name": "train_step_m_b1", "path": "t1.hlo.txt", "model": "m",
+             "kind": "train_step", "bucket": 1, "params": 10},
+            {"name": "train_step_m_b2", "path": "t2.hlo.txt", "model": "m",
+             "kind": "train_step", "bucket": 2, "params": 10},
+            {"name": "apply_update_m", "path": "u.hlo.txt", "model": "m",
+             "kind": "apply_update", "params": 10},
+            {"name": "eval_m", "path": "e.hlo.txt", "model": "m",
+             "kind": "eval", "bucket": 8, "params": 10},
+            {"name": "init_m", "path": "i.bin", "model": "m",
+             "kind": "init", "params": 10}
+          ]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::parse(&mini_manifest(), Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.input_dim, 4);
+        assert_eq!(m.buckets, vec![1, 2]);
+        assert_eq!(m.model("m").unwrap().params, 10);
+        assert!(m.find("m", Kind::TrainStep, 2).is_some());
+        assert!(m.find("m", Kind::TrainStep, 4).is_none());
+        assert_eq!(m.bucket_for(2), Some(2));
+        assert_eq!(m.bucket_for(3), None);
+        assert_eq!(m.max_bucket(), 2);
+    }
+
+    #[test]
+    fn rejects_missing_bucket() {
+        let text = mini_manifest().replace(
+            r#"{"name": "train_step_m_b2", "path": "t2.hlo.txt", "model": "m",
+             "kind": "train_step", "bucket": 2, "params": 10},"#,
+            "",
+        );
+        assert!(Manifest::parse(&text, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_layout_sum() {
+        let text = mini_manifest().replace("\"params\": 10, \"layout\"", "\"params\": 11, \"layout\"");
+        assert!(Manifest::parse(&text, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn paths_joined_to_dir() {
+        let m = Manifest::parse(&mini_manifest(), Path::new("/x/y")).unwrap();
+        assert_eq!(
+            m.find("m", Kind::Eval, 0).unwrap().path,
+            PathBuf::from("/x/y/e.hlo.txt")
+        );
+    }
+}

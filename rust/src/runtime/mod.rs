@@ -1,0 +1,13 @@
+//! Runtime layer: the bridge from the rust coordinator to the AOT-compiled
+//! XLA computations (PJRT CPU client via the `xla` crate).
+//!
+//! `manifest` parses the artifact registry written by `python/compile/aot.py`;
+//! `client` compiles + executes the HLO; `hostmodel` is a pure-rust oracle of
+//! the same models used by tests and by runs without artifacts.
+
+pub mod client;
+pub mod hostmodel;
+pub mod manifest;
+
+pub use client::{EvalOut, Runtime, RuntimeStats, StepOut};
+pub use manifest::{Artifact, Kind, Manifest, ModelMeta};

@@ -1,0 +1,166 @@
+//! Property-testing micro-framework (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs; on failure it performs greedy shrinking through the generator's
+//! `shrink` candidates and reports the minimal failing case with the seed
+//! needed to replay it. Deliberately tiny — generators are closures over
+//! our `Pcg`, shrinking is by-value.
+
+use crate::util::rng::Pcg;
+
+/// A generator: produce a value from randomness, and propose smaller
+/// variants of a failing value.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Pcg) -> Self::Value;
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Run the property over `cases` random inputs. Panics (with replay info
+/// and a shrunk counterexample) if the property fails.
+pub fn forall<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Pcg::seeded(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            // greedy shrink
+            let mut cur = v.clone();
+            let mut improved = true;
+            let mut steps = 0;
+            while improved && steps < 1000 {
+                improved = false;
+                for cand in gen.shrink(&cur) {
+                    if !prop(&cand) {
+                        cur = cand;
+                        improved = true;
+                        steps += 1;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed {seed}, case {case});\n  original: {v:?}\n  shrunk:   {cur:?}"
+            );
+        }
+    }
+}
+
+/// Uniform f64 in a range.
+pub struct F64Range(pub f64, pub f64);
+
+impl Gen for F64Range {
+    type Value = f64;
+    fn generate(&self, rng: &mut Pcg) -> f64 {
+        rng.range_f64(self.0, self.1)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *v != self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2.0);
+        }
+        out
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Value = usize;
+    fn generate(&self, rng: &mut Pcg) -> usize {
+        rng.range_u64(self.0 as u64, self.1 as u64) as usize
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Fixed-length vector of another generator.
+pub struct VecOf<G: Gen>(pub usize, pub G);
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Pcg) -> Self::Value {
+        (0..self.0).map(|_| self.1.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        // shrink one element at a time (keep the length — fixed-size vec)
+        let mut out = Vec::new();
+        for (i, elem) in v.iter().enumerate() {
+            for cand in self.1.shrink(elem) {
+                let mut c = v.clone();
+                c[i] = cand;
+                out.push(c);
+                if out.len() > 16 {
+                    return out;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Pair of two generators.
+pub struct PairOf<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Pcg) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, 200, &F64Range(0.0, 10.0), |&x| (0.0..=10.0).contains(&x));
+        forall(2, 200, &UsizeRange(1, 64), |&n| n >= 1 && n <= 64);
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let res = std::panic::catch_unwind(|| {
+            forall(3, 500, &F64Range(0.0, 100.0), |&x| x < 50.0);
+        });
+        let msg = format!("{:?}", res.unwrap_err().downcast_ref::<String>());
+        // the shrunk counterexample should be near the boundary (<= 75)
+        assert!(msg.contains("shrunk"), "{msg}");
+    }
+
+    #[test]
+    fn vec_generator_shapes() {
+        forall(4, 50, &VecOf(5, UsizeRange(0, 9)), |v| {
+            v.len() == 5 && v.iter().all(|&x| x <= 9)
+        });
+    }
+
+    #[test]
+    fn pair_generator() {
+        forall(5, 50, &PairOf(F64Range(1.0, 2.0), UsizeRange(3, 4)), |(a, b)| {
+            *a >= 1.0 && *a <= 2.0 && (3..=4).contains(b)
+        });
+    }
+}

@@ -1,0 +1,147 @@
+//! Dense linear algebra substrate for the host model: row-major f32 GEMM
+//! with the three orientations backprop needs, written cache-consciously
+//! (ikj loop order, 64-wide j blocking). Good enough that the pure-rust
+//! oracle can drive the large Table-II sweeps; the AOT/XLA path remains the
+//! production hot path.
+
+/// c[m,n] += a[m,k] * b[k,n] (row-major).
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// c[k,n] += a[m,k]^T * d[m,n]  (weight gradient: x^T dy).
+pub fn gemm_at(m: usize, k: usize, n: usize, a: &[f32], d: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(d.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let drow = &d[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * drow[j];
+            }
+        }
+    }
+}
+
+/// c[m,k] += d[m,n] * b[k,n]^T  (input gradient: dy W^T).
+pub fn gemm_bt(m: usize, k: usize, n: usize, d: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(d.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
+    for i in 0..m {
+        let drow = &d[i * n..(i + 1) * n];
+        let crow = &mut c[i * k..(i + 1) * k];
+        for kk in 0..k {
+            let brow = &b[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                acc += drow[j] * brow[j];
+            }
+            crow[kk] += acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn filled(len: usize, seed: u64) -> Vec<f32> {
+        let mut r = crate::util::rng::Pcg::seeded(seed);
+        (0..len).map(|_| r.normal() as f32).collect()
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let (m, k, n) = (7, 11, 5);
+        let a = filled(m * k, 1);
+        let b = filled(k * n, 2);
+        let mut c = vec![0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut c);
+        let want = naive(m, k, n, &a, &b);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemm_at_is_transpose_product() {
+        let (m, k, n) = (6, 4, 3);
+        let a = filled(m * k, 3);
+        let d = filled(m * n, 4);
+        let mut c = vec![0f32; k * n];
+        gemm_at(m, k, n, &a, &d, &mut c);
+        // naive a^T d
+        let mut want = vec![0f32; k * n];
+        for kk in 0..k {
+            for j in 0..n {
+                for i in 0..m {
+                    want[kk * n + j] += a[i * k + kk] * d[i * n + j];
+                }
+            }
+        }
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemm_bt_is_product_transpose() {
+        let (m, k, n) = (5, 6, 4);
+        let d = filled(m * n, 5);
+        let b = filled(k * n, 6);
+        let mut c = vec![0f32; m * k];
+        gemm_bt(m, k, n, &d, &b, &mut c);
+        let mut want = vec![0f32; m * k];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    want[i * k + kk] += d[i * n + j] * b[kk * n + j];
+                }
+            }
+        }
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates() {
+        let mut c = vec![1.0f32; 1];
+        gemm(1, 1, 1, &[2.0], &[3.0], &mut c);
+        assert_eq!(c[0], 7.0);
+    }
+}

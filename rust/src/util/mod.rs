@@ -1,0 +1,8 @@
+//! Substrate utilities built in-repo (the offline environment provides no
+//! crates beyond `xla`/`anyhow`): PRNG, JSON, statistics, special functions.
+
+pub mod json;
+pub mod linalg;
+pub mod rng;
+pub mod special;
+pub mod stats;

@@ -1,0 +1,158 @@
+//! Special functions: exponential integral E1 and the closed-form ergodic
+//! Rayleigh-fading rate built on it.
+//!
+//! For |h|^2 ~ Exp(1) and mean SNR gamma, the ergodic spectral efficiency is
+//!   E[log2(1 + gamma*X)] = e^(1/gamma) * E1(1/gamma) / ln 2
+//! which the wireless substrate uses as the analytic counterpart of the
+//! Monte-Carlo average in eq. (5)-(6); a unit test pins them together.
+
+/// Exponential integral E1(x) = ∫_x^∞ e^{-t}/t dt, x > 0.
+///
+/// Series for x <= 1 (Abramowitz & Stegun 5.1.11), continued fraction
+/// (modified Lentz) for x > 1. Relative error < 1e-12 over (0, 700].
+pub fn e1(x: f64) -> f64 {
+    assert!(x > 0.0, "e1 domain x > 0, got {x}");
+    const EULER: f64 = 0.5772156649015328606;
+    if x <= 1.0 {
+        // E1(x) = -gamma - ln x + sum_{k>=1} (-1)^{k+1} x^k / (k * k!)
+        let mut sum = 0.0;
+        let mut term = 1.0;
+        for k in 1..200 {
+            term *= -x / k as f64;
+            let add = -term / k as f64;
+            sum += add;
+            if add.abs() < 1e-17 * (1.0 + sum.abs()) {
+                break;
+            }
+        }
+        -EULER - x.ln() + sum
+    } else {
+        // E1(x) = e^{-x} * CF, CF = 1/(x+1- 1/(x+3- 4/(x+5- 9/(x+7- ...))))
+        // via modified Lentz on the standard continued fraction.
+        let tiny = 1e-300;
+        let mut b = x + 1.0;
+        let mut c = 1.0 / tiny;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..200 {
+            let a = -(i as f64) * (i as f64);
+            b += 2.0;
+            d = 1.0 / (a * d + b);
+            c = b + a / c;
+            let del = c * d;
+            h *= del;
+            if (del - 1.0).abs() < 1e-15 {
+                break;
+            }
+        }
+        (-x).exp() * h
+    }
+}
+
+/// Ergodic rate factor E[log2(1 + gamma * X)], X ~ Exp(1) (unit-power
+/// Rayleigh), in bit/s/Hz. `gamma` is the mean SNR (linear).
+pub fn ergodic_log2_rayleigh(gamma: f64) -> f64 {
+    assert!(gamma > 0.0);
+    let inv = 1.0 / gamma;
+    // e^{1/g} E1(1/g) overflows for tiny gamma if computed naively; for
+    // inv > 700 use the asymptotic e^x E1(x) ~ 1/x (1 - 1/x + 2/x^2 ...).
+    let ex_e1 = if inv > 700.0 {
+        (1.0 / inv) * (1.0 - 1.0 / inv + 2.0 / (inv * inv))
+    } else {
+        inv.exp() * e1(inv)
+    };
+    ex_e1 / std::f64::consts::LN_2
+}
+
+/// dB -> linear power ratio.
+pub fn db_to_lin(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// linear power ratio -> dB.
+pub fn lin_to_db(lin: f64) -> f64 {
+    assert!(lin > 0.0);
+    10.0 * lin.log10()
+}
+
+/// dBm -> watts.
+pub fn dbm_to_watt(dbm: f64) -> f64 {
+    db_to_lin(dbm - 30.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e1_known_values() {
+        // Reference values (A&S tables / mpmath).
+        let cases = [
+            (0.1, 1.822_923_958_4),
+            (0.5, 0.559_773_594_8),
+            (1.0, 0.219_383_934_4),
+            (2.0, 0.048_900_510_7),
+            (5.0, 0.001_148_295_6),
+            (10.0, 4.156_968_93e-6),
+        ];
+        for (x, want) in cases {
+            let got = e1(x);
+            assert!(
+                (got - want).abs() < 1e-9 * (1.0 + want),
+                "E1({x}) = {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn e1_continuity_at_switch() {
+        // series vs continued fraction must agree near x = 1.
+        let lo = e1(1.0 - 1e-9);
+        let hi = e1(1.0 + 1e-9);
+        assert!((lo - hi).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ergodic_rate_matches_monte_carlo() {
+        let mut rng = crate::util::rng::Pcg::seeded(7);
+        for &gamma in &[0.1, 1.0, 10.0, 100.0] {
+            let n = 400_000;
+            let mut s = 0.0;
+            for _ in 0..n {
+                let x = rng.exponential();
+                s += (1.0 + gamma * x).log2();
+            }
+            let mc = s / n as f64;
+            let cf = ergodic_log2_rayleigh(gamma);
+            assert!(
+                (mc - cf).abs() / cf < 0.01,
+                "gamma={gamma}: mc={mc} cf={cf}"
+            );
+        }
+    }
+
+    #[test]
+    fn ergodic_rate_monotone_in_snr() {
+        let mut prev = 0.0;
+        for i in 1..50 {
+            let g = 10f64.powf(-3.0 + i as f64 * 0.2);
+            let r = ergodic_log2_rayleigh(g);
+            assert!(r > prev);
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn ergodic_rate_tiny_snr_no_overflow() {
+        let r = ergodic_log2_rayleigh(1e-6);
+        assert!(r > 0.0 && r < 1e-5);
+    }
+
+    #[test]
+    fn db_conversions() {
+        assert!((db_to_lin(3.0) - 1.995).abs() < 1e-2);
+        assert!((lin_to_db(100.0) - 20.0).abs() < 1e-12);
+        assert!((dbm_to_watt(30.0) - 1.0).abs() < 1e-12);
+        assert!((dbm_to_watt(28.0) - 0.631).abs() < 1e-3);
+    }
+}

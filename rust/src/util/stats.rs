@@ -1,0 +1,226 @@
+//! Statistics substrate: summaries, quantiles, least squares, and the
+//! piecewise-linear (breakpoint) fitter used to recover the paper's GPU
+//! training-function coefficients from measured (batchsize, latency) data.
+
+/// Running summary with Welford variance.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Collect from an iterator.
+pub fn summarize<I: IntoIterator<Item = f64>>(xs: I) -> Summary {
+    let mut s = Summary::new();
+    for x in xs {
+        s.push(x);
+    }
+    s
+}
+
+/// Quantile with linear interpolation (q in [0,1]); sorts a copy.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q));
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Ordinary least squares y = a + b*x. Returns (a, b, r2).
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "linfit needs >= 2 points");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    let b = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    let a = my - b * mx;
+    let r2 = if syy > 0.0 { (sxy * sxy) / (sxx * syy) } else { 1.0 };
+    (a, b, r2)
+}
+
+/// Fit of the paper's GPU training function (eq. 26):
+/// `t(B) = t_l` for `B <= b_th`, `t(B) = c*(B - b_th) + t_l` beyond.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PiecewiseFit {
+    /// Flat-region latency `t_l` (seconds).
+    pub t_l: f64,
+    /// Linear-region slope `c` (seconds per sample).
+    pub c: f64,
+    /// Breakpoint `B_th`.
+    pub b_th: f64,
+    /// Residual sum of squares of the fit.
+    pub rss: f64,
+}
+
+impl PiecewiseFit {
+    pub fn eval(&self, b: f64) -> f64 {
+        if b <= self.b_th {
+            self.t_l
+        } else {
+            self.c * (b - self.b_th) + self.t_l
+        }
+    }
+}
+
+/// Least-squares breakpoint search: try each candidate split index, fit the
+/// flat region by its mean and the tail by constrained OLS anchored at
+/// (b_th, t_l); keep the split minimizing RSS. O(n^2) — n is tens of points.
+pub fn fit_piecewise(bs: &[f64], ts: &[f64]) -> PiecewiseFit {
+    assert_eq!(bs.len(), ts.len());
+    assert!(bs.len() >= 4, "fit_piecewise needs >= 4 points");
+    let mut best: Option<PiecewiseFit> = None;
+    // split index k: points [0..=k] flat, [k..] linear (breakpoint at bs[k]).
+    for k in 1..bs.len() - 1 {
+        let t_l = ts[..=k].iter().sum::<f64>() / (k + 1) as f64;
+        let b_th = bs[k];
+        // constrained slope through (b_th, t_l): c = sum((b-b_th)(t-t_l)) / sum((b-b_th)^2)
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in k..bs.len() {
+            let db = bs[i] - b_th;
+            num += db * (ts[i] - t_l);
+            den += db * db;
+        }
+        let c = if den > 0.0 { (num / den).max(0.0) } else { 0.0 };
+        let fit = PiecewiseFit { t_l, c, b_th, rss: 0.0 };
+        let rss: f64 = bs
+            .iter()
+            .zip(ts)
+            .map(|(&b, &t)| {
+                let e = t - fit.eval(b);
+                e * e
+            })
+            .sum();
+        let fit = PiecewiseFit { rss, ..fit };
+        if best.as_ref().map_or(true, |b| rss < b.rss) {
+            best = Some(fit);
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize([1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_exact_line() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 + 3.0 * x).collect();
+        let (a, b, r2) = linfit(&xs, &ys);
+        assert!((a - 2.0).abs() < 1e-12);
+        assert!((b - 3.0).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn piecewise_recovers_knee() {
+        // t_l = 0.05, b_th = 32, c = 0.002 — the Fig. 2(a) shape.
+        let bs: Vec<f64> = (1..=128).map(|b| b as f64).collect();
+        let ts: Vec<f64> = bs
+            .iter()
+            .map(|&b| if b <= 32.0 { 0.05 } else { 0.002 * (b - 32.0) + 0.05 })
+            .collect();
+        let fit = fit_piecewise(&bs, &ts);
+        assert!((fit.t_l - 0.05).abs() < 1e-3, "{fit:?}");
+        assert!((fit.b_th - 32.0).abs() <= 1.0, "{fit:?}");
+        assert!((fit.c - 0.002).abs() < 1e-4, "{fit:?}");
+    }
+
+    #[test]
+    fn piecewise_tolerates_noise() {
+        let mut rng = crate::util::rng::Pcg::seeded(99);
+        let bs: Vec<f64> = (1..=128).map(|b| b as f64).collect();
+        let ts: Vec<f64> = bs
+            .iter()
+            .map(|&b| {
+                let base = if b <= 24.0 { 0.08 } else { 0.003 * (b - 24.0) + 0.08 };
+                base * (1.0 + 0.02 * rng.normal())
+            })
+            .collect();
+        let fit = fit_piecewise(&bs, &ts);
+        assert!((fit.b_th - 24.0).abs() <= 4.0, "{fit:?}");
+        assert!((fit.c - 0.003).abs() < 3e-4, "{fit:?}");
+    }
+}

@@ -1,0 +1,110 @@
+//! Fading processes: fast Rayleigh fading within a frame, log-normal
+//! shadowing across training periods.
+//!
+//! The paper optimizes with the *average* rates (eq. 5–6) because a training
+//! period spans many LTE frames; the per-period channel dynamics it appeals
+//! to ("the batchsize of each device varies across training periods because
+//! of the channel dynamics", Remark 2) enter through slow large-scale
+//! variation. We model that as i.i.d. log-normal shadowing redrawn each
+//! period on top of the static path loss; fast Rayleigh fading is averaged
+//! analytically inside the rate computation.
+
+use crate::util::rng::Pcg;
+
+/// Per-period large-scale channel state of one device.
+#[derive(Clone, Copy, Debug)]
+pub struct ShadowingProcess {
+    /// shadowing standard deviation in dB (0 disables dynamics)
+    pub sigma_db: f64,
+    /// temporal correlation of successive periods, in [0,1)
+    /// (first-order Gauss–Markov; 0 = i.i.d.)
+    pub rho: f64,
+    state_db: f64,
+}
+
+impl ShadowingProcess {
+    pub fn new(sigma_db: f64, rho: f64, rng: &mut Pcg) -> Self {
+        assert!((0.0..1.0).contains(&rho), "rho in [0,1)");
+        assert!(sigma_db >= 0.0);
+        let state_db = sigma_db * rng.normal();
+        ShadowingProcess { sigma_db, rho, state_db }
+    }
+
+    /// Advance one training period; returns the *linear* shadowing gain.
+    pub fn step(&mut self, rng: &mut Pcg) -> f64 {
+        let innov = (1.0 - self.rho * self.rho).sqrt() * self.sigma_db;
+        self.state_db = self.rho * self.state_db + innov * rng.normal();
+        10f64.powf(self.state_db / 10.0)
+    }
+
+    /// Current gain without advancing.
+    pub fn gain(&self) -> f64 {
+        10f64.powf(self.state_db / 10.0)
+    }
+}
+
+/// Draw one Rayleigh power realization |h|^2 ~ Exp(1).
+pub fn rayleigh_power(rng: &mut Pcg) -> f64 {
+    rng.exponential()
+}
+
+/// A block-fading trace: `n` i.i.d. |h|^2 samples (one per frame).
+pub fn block_fading_trace(n: usize, rng: &mut Pcg) -> Vec<f64> {
+    (0..n).map(|_| rayleigh_power(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::summarize;
+
+    #[test]
+    fn shadowing_zero_sigma_is_unity() {
+        let mut rng = Pcg::seeded(1);
+        let mut s = ShadowingProcess::new(0.0, 0.0, &mut rng);
+        for _ in 0..100 {
+            assert_eq!(s.step(&mut rng), 1.0);
+        }
+    }
+
+    #[test]
+    fn shadowing_log_moments() {
+        let mut rng = Pcg::seeded(2);
+        let mut s = ShadowingProcess::new(8.0, 0.0, &mut rng);
+        let xs: Vec<f64> = (0..100_000)
+            .map(|_| 10.0 * s.step(&mut rng).log10())
+            .collect();
+        let sum = summarize(xs.iter().copied());
+        assert!(sum.mean().abs() < 0.15, "mean {}", sum.mean());
+        assert!((sum.std() - 8.0).abs() < 0.15, "std {}", sum.std());
+    }
+
+    #[test]
+    fn shadowing_correlation() {
+        let mut rng = Pcg::seeded(3);
+        let rho = 0.9;
+        let mut s = ShadowingProcess::new(8.0, rho, &mut rng);
+        let xs: Vec<f64> = (0..200_000)
+            .map(|_| 10.0 * s.step(&mut rng).log10())
+            .collect();
+        // lag-1 autocorrelation ~ rho
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>();
+        let cov: f64 = xs
+            .windows(2)
+            .map(|w| (w[0] - mean) * (w[1] - mean))
+            .sum::<f64>();
+        let r1 = cov / var;
+        assert!((r1 - rho).abs() < 0.02, "r1 {r1}");
+    }
+
+    #[test]
+    fn trace_len_and_mean() {
+        let mut rng = Pcg::seeded(4);
+        let t = block_fading_trace(100_000, &mut rng);
+        assert_eq!(t.len(), 100_000);
+        let m = t.iter().sum::<f64>() / t.len() as f64;
+        assert!((m - 1.0).abs() < 0.02);
+    }
+}

@@ -1,0 +1,115 @@
+//! Per-device link state: static path loss + per-period shadowing, yielding
+//! the average uplink/downlink rates the optimizer consumes each period.
+
+use crate::util::rng::Pcg;
+use crate::wireless::fading::ShadowingProcess;
+use crate::wireless::pathloss::{mean_snr_dl, mean_snr_ul, sample_distance, CellConfig};
+use crate::wireless::rate::ergodic_rate;
+
+/// Rates of one device for one training period.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PeriodRates {
+    /// average uplink rate, bit/s (eq. 5)
+    pub ul_bps: f64,
+    /// average downlink rate, bit/s (eq. 6)
+    pub dl_bps: f64,
+}
+
+/// One device's wireless link.
+#[derive(Clone, Debug)]
+pub struct DeviceLink {
+    pub dist_m: f64,
+    shadow_ul: ShadowingProcess,
+    shadow_dl: ShadowingProcess,
+    cfg: CellConfig,
+}
+
+impl DeviceLink {
+    /// Place a device uniformly in the cell.
+    pub fn sample(cfg: CellConfig, shadow_sigma_db: f64, shadow_rho: f64, rng: &mut Pcg) -> Self {
+        let dist_m = sample_distance(&cfg, rng);
+        Self::at_distance(cfg, dist_m, shadow_sigma_db, shadow_rho, rng)
+    }
+
+    /// Place a device at a fixed distance (deterministic fleets in tests).
+    pub fn at_distance(
+        cfg: CellConfig,
+        dist_m: f64,
+        shadow_sigma_db: f64,
+        shadow_rho: f64,
+        rng: &mut Pcg,
+    ) -> Self {
+        DeviceLink {
+            dist_m,
+            shadow_ul: ShadowingProcess::new(shadow_sigma_db, shadow_rho, rng),
+            shadow_dl: ShadowingProcess::new(shadow_sigma_db, shadow_rho, rng),
+            cfg,
+        }
+    }
+
+    /// Advance one training period and return this period's average rates.
+    pub fn step(&mut self, rng: &mut Pcg) -> PeriodRates {
+        let g_ul = self.shadow_ul.step(rng);
+        let g_dl = self.shadow_dl.step(rng);
+        self.rates_with_gains(g_ul, g_dl)
+    }
+
+    /// Rates at the current shadowing state (no advance).
+    pub fn current(&self) -> PeriodRates {
+        self.rates_with_gains(self.shadow_ul.gain(), self.shadow_dl.gain())
+    }
+
+    fn rates_with_gains(&self, g_ul: f64, g_dl: f64) -> PeriodRates {
+        let w = self.cfg.bandwidth_hz;
+        PeriodRates {
+            ul_bps: ergodic_rate(w, mean_snr_ul(&self.cfg, self.dist_m) * g_ul),
+            dl_bps: ergodic_rate(w, mean_snr_dl(&self.cfg, self.dist_m) * g_dl),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closer_device_faster() {
+        let cfg = CellConfig::default();
+        let mut rng = Pcg::seeded(1);
+        let near = DeviceLink::at_distance(cfg, 50.0, 0.0, 0.0, &mut rng).current();
+        let far = DeviceLink::at_distance(cfg, 190.0, 0.0, 0.0, &mut rng).current();
+        assert!(near.ul_bps > far.ul_bps);
+        assert!(near.dl_bps > far.dl_bps);
+    }
+
+    #[test]
+    fn no_shadowing_rates_constant() {
+        let cfg = CellConfig::default();
+        let mut rng = Pcg::seeded(2);
+        let mut l = DeviceLink::at_distance(cfg, 100.0, 0.0, 0.0, &mut rng);
+        let r0 = l.step(&mut rng);
+        for _ in 0..10 {
+            assert_eq!(l.step(&mut rng), r0);
+        }
+    }
+
+    #[test]
+    fn shadowing_varies_rates() {
+        let cfg = CellConfig::default();
+        let mut rng = Pcg::seeded(3);
+        let mut l = DeviceLink::at_distance(cfg, 100.0, 8.0, 0.0, &mut rng);
+        let rs: Vec<f64> = (0..50).map(|_| l.step(&mut rng).ul_bps).collect();
+        let s = crate::util::stats::summarize(rs.iter().copied());
+        assert!(s.std() > 0.01 * s.mean(), "rates did not vary");
+    }
+
+    #[test]
+    fn rates_positive_and_bounded_by_capacity_at_huge_snr() {
+        let cfg = CellConfig::default();
+        let mut rng = Pcg::seeded(4);
+        let l = DeviceLink::at_distance(cfg, 10.0, 0.0, 0.0, &mut rng).current();
+        assert!(l.ul_bps > 0.0);
+        // 10 MHz * ~30 b/s/Hz is an absurd upper bound; sanity only
+        assert!(l.ul_bps < 10e6 * 30.0);
+    }
+}

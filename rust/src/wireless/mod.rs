@@ -1,0 +1,12 @@
+//! Wireless substrate (DESIGN.md S1–S2): path loss, fading, ergodic rates,
+//! TDMA frames — everything the paper's eq. (5), (6), (10), (11) need.
+
+pub mod fading;
+pub mod link;
+pub mod pathloss;
+pub mod rate;
+pub mod tdma;
+
+pub use link::{DeviceLink, PeriodRates};
+pub use pathloss::CellConfig;
+pub use tdma::SlotAllocation;

@@ -1,0 +1,143 @@
+//! Path-loss model and link-budget arithmetic (paper §VI-A).
+//!
+//! The paper's single-cell setup: 200 m radius, BS at the center, devices
+//! uniformly distributed, path loss `PL [dB] = 128.1 + 37.6 log10(d [km])`,
+//! Rayleigh small-scale fading with unit variance, uplink/downlink transmit
+//! power 28 dBm, bandwidth 10 MHz, noise power density -174 dBm/Hz.
+
+use crate::util::rng::Pcg;
+use crate::util::special::{db_to_lin, dbm_to_watt};
+
+/// Static link parameters for one cell.
+#[derive(Clone, Copy, Debug)]
+pub struct CellConfig {
+    /// cell radius in meters (paper: 200 m)
+    pub radius_m: f64,
+    /// uplink transmit power in dBm (paper: 28 dBm)
+    pub p_ul_dbm: f64,
+    /// downlink transmit power in dBm (paper: 28 dBm)
+    pub p_dl_dbm: f64,
+    /// system bandwidth in Hz (paper: 10 MHz)
+    pub bandwidth_hz: f64,
+    /// noise power spectral density in dBm/Hz (paper: -174)
+    pub noise_dbm_per_hz: f64,
+    /// minimum BS-device distance in meters (avoid the PL singularity)
+    pub min_dist_m: f64,
+}
+
+impl Default for CellConfig {
+    fn default() -> Self {
+        CellConfig {
+            radius_m: 200.0,
+            p_ul_dbm: 28.0,
+            p_dl_dbm: 28.0,
+            bandwidth_hz: 10e6,
+            noise_dbm_per_hz: -174.0,
+            min_dist_m: 10.0,
+        }
+    }
+}
+
+impl CellConfig {
+    /// Total noise power over the band, watts.
+    pub fn noise_watt(&self) -> f64 {
+        dbm_to_watt(self.noise_dbm_per_hz) * self.bandwidth_hz
+    }
+}
+
+/// `PL [dB] = 128.1 + 37.6 log10(d [km])` (3GPP macro, as in the paper).
+pub fn pathloss_db(dist_m: f64) -> f64 {
+    assert!(dist_m > 0.0, "pathloss at non-positive distance");
+    128.1 + 37.6 * (dist_m / 1000.0).log10()
+}
+
+/// Linear channel power gain from path loss (no fading).
+pub fn pathloss_gain(dist_m: f64) -> f64 {
+    db_to_lin(-pathloss_db(dist_m))
+}
+
+/// Draw a uniform position in the disk and return its distance to the BS.
+/// Area-uniform: r = R * sqrt(u), clamped to `min_dist_m`.
+pub fn sample_distance(cfg: &CellConfig, rng: &mut Pcg) -> f64 {
+    let r = cfg.radius_m * rng.f64().sqrt();
+    r.max(cfg.min_dist_m)
+}
+
+/// Mean SNR (linear) of a device at `dist_m` on the uplink.
+pub fn mean_snr_ul(cfg: &CellConfig, dist_m: f64) -> f64 {
+    dbm_to_watt(cfg.p_ul_dbm) * pathloss_gain(dist_m) / cfg.noise_watt()
+}
+
+/// Mean SNR (linear) of a device at `dist_m` on the downlink.
+pub fn mean_snr_dl(cfg: &CellConfig, dist_m: f64) -> f64 {
+    dbm_to_watt(cfg.p_dl_dbm) * pathloss_gain(dist_m) / cfg.noise_watt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pathloss_reference_values() {
+        // at 1 km PL = 128.1 dB exactly; at 100 m PL = 128.1 - 37.6 = 90.5 dB
+        assert!((pathloss_db(1000.0) - 128.1).abs() < 1e-9);
+        assert!((pathloss_db(100.0) - 90.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pathloss_monotone() {
+        let mut prev = 0.0;
+        for d in [10.0, 50.0, 100.0, 150.0, 200.0] {
+            let pl = pathloss_db(d);
+            assert!(pl > prev);
+            prev = pl;
+        }
+    }
+
+    #[test]
+    fn distances_within_cell() {
+        let cfg = CellConfig::default();
+        let mut rng = Pcg::seeded(1);
+        for _ in 0..10_000 {
+            let d = sample_distance(&cfg, &mut rng);
+            assert!(d >= cfg.min_dist_m && d <= cfg.radius_m);
+        }
+    }
+
+    #[test]
+    fn distance_area_uniform() {
+        // P(r <= R/2) should be ~1/4 for area-uniform placement.
+        let cfg = CellConfig { min_dist_m: 0.0001, ..CellConfig::default() };
+        let mut rng = Pcg::seeded(2);
+        let n = 100_000;
+        let inside = (0..n)
+            .filter(|_| sample_distance(&cfg, &mut rng) <= cfg.radius_m / 2.0)
+            .count();
+        let frac = inside as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.01, "frac {frac}");
+    }
+
+    #[test]
+    fn snr_decreases_with_distance() {
+        let cfg = CellConfig::default();
+        assert!(mean_snr_ul(&cfg, 50.0) > mean_snr_ul(&cfg, 150.0));
+        assert!(mean_snr_dl(&cfg, 50.0) > mean_snr_dl(&cfg, 150.0));
+    }
+
+    #[test]
+    fn snr_plausible_at_cell_edge() {
+        // 28 dBm tx, ~139 dB PL at 200 m... sanity: SNR should be modest but
+        // positive in dB terms at the edge with 10 MHz noise bandwidth.
+        let cfg = CellConfig::default();
+        let snr = mean_snr_ul(&cfg, 200.0);
+        let snr_db = 10.0 * snr.log10();
+        assert!(snr_db > -10.0 && snr_db < 40.0, "edge SNR {snr_db} dB");
+    }
+
+    #[test]
+    fn noise_power_value() {
+        let cfg = CellConfig::default();
+        // -174 dBm/Hz + 70 dB(10 MHz) = -104 dBm = 3.98e-14 W
+        assert!((cfg.noise_watt() - 3.98e-14).abs() < 0.05e-14);
+    }
+}

@@ -1,0 +1,69 @@
+//! Average data rates (paper eq. 5–6) over Rayleigh block fading.
+//!
+//! `R_k = W * E_h[ log2(1 + P|h|^2 / N0) ]` with `|h|^2 ~ Exp(1)` under
+//! unit-power Rayleigh fading. Two evaluators:
+//!  * `ergodic_rate` — closed form via the exponential integral E1
+//!    (util::special), used by the optimizer;
+//!  * `monte_carlo_rate` — sample mean over fading draws, used to
+//!    cross-validate the closed form (bench_channel + unit tests).
+
+use crate::util::rng::Pcg;
+use crate::util::special::ergodic_log2_rayleigh;
+
+/// Closed-form average rate in bit/s for mean SNR `gamma` (linear) and
+/// bandwidth `w_hz`.
+pub fn ergodic_rate(w_hz: f64, gamma: f64) -> f64 {
+    w_hz * ergodic_log2_rayleigh(gamma)
+}
+
+/// Monte-Carlo estimate of the same quantity over `n` fading draws.
+pub fn monte_carlo_rate(w_hz: f64, gamma: f64, n: usize, rng: &mut Pcg) -> f64 {
+    assert!(n > 0);
+    let mut acc = 0.0;
+    for _ in 0..n {
+        let x = rng.exponential(); // |h|^2
+        acc += (1.0 + gamma * x).log2();
+    }
+    w_hz * acc / n as f64
+}
+
+/// Instantaneous rate for one fading realization `h2 = |h|^2`.
+pub fn instantaneous_rate(w_hz: f64, gamma: f64, h2: f64) -> f64 {
+    w_hz * (1.0 + gamma * h2).log2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_vs_monte_carlo() {
+        let mut rng = Pcg::seeded(3);
+        for gamma in [0.5, 5.0, 50.0] {
+            let cf = ergodic_rate(10e6, gamma);
+            let mc = monte_carlo_rate(10e6, gamma, 300_000, &mut rng);
+            assert!((cf - mc).abs() / cf < 0.01, "gamma={gamma}: {cf} vs {mc}");
+        }
+    }
+
+    #[test]
+    fn rate_scales_with_bandwidth() {
+        let r1 = ergodic_rate(1e6, 10.0);
+        let r2 = ergodic_rate(2e6, 10.0);
+        assert!((r2 / r1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jensen_gap_positive() {
+        // E[log(1+gX)] < log(1+g) for E X = 1 (concavity).
+        let gamma = 20.0;
+        let erg = ergodic_log2_rayleigh(gamma);
+        assert!(erg < (1.0 + gamma).log2());
+        assert!(erg > 0.0);
+    }
+
+    #[test]
+    fn instantaneous_zero_fading_zero_rate() {
+        assert_eq!(instantaneous_rate(1e6, 100.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Integration: AOT XLA path vs pure-rust host model on identical inputs.
+//!
+//! This is the cross-layer correctness signal: the jax/Pallas train_step
+//! (lowered to HLO, executed by PJRT) and the independently-written rust
+//! oracle must agree on loss, accuracy and every gradient component.
+//!
+//! Requires `make artifacts`; tests self-skip (with a notice) if the
+//! directory is missing so `cargo test` works in a fresh checkout.
+
+use std::path::PathBuf;
+
+use feel::runtime::hostmodel::HostModel;
+use feel::runtime::{Kind, Runtime};
+use feel::util::rng::Pcg;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("FEEL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = PathBuf::from(dir);
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", p.display());
+        None
+    }
+}
+
+fn batch(n: usize, d: usize, c: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut r = Pcg::seeded(seed);
+    let x: Vec<f32> = (0..n * d).map(|_| r.normal() as f32).collect();
+    let y: Vec<i32> = (0..n).map(|_| r.below(c as u64) as i32).collect();
+    (x, y)
+}
+
+#[test]
+fn xla_matches_host_model_all_models() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).expect("load runtime");
+    let models: Vec<String> = rt.manifest.models.keys().cloned().collect();
+    let d = rt.manifest.input_dim;
+    let c = rt.manifest.classes;
+    for model in models {
+        let meta = rt.manifest.model(&model).unwrap().clone();
+        let host = HostModel::from_layout(&model, &meta.layout, d, c).unwrap();
+        let params = rt.init_params(&model).unwrap();
+        assert_eq!(params.len(), meta.params);
+
+        let bucket = *rt.manifest.buckets.first().unwrap().max(&1);
+        let (x, y) = batch(bucket, d, c, 42);
+        let w = vec![1f32; bucket];
+
+        let xla = rt.train_step(&model, &params, &x, &y, &w, bucket).unwrap();
+        let (hg, hl, hc) = host.train_step(&params, &x, &y, &w);
+
+        assert!(
+            (xla.loss - hl).abs() < 1e-4 * (1.0 + hl.abs()),
+            "{model}: loss xla={} host={hl}",
+            xla.loss
+        );
+        assert_eq!(xla.correct, hc, "{model}: correct");
+        assert_eq!(xla.grads.len(), hg.len());
+        let mut max_abs = 0f32;
+        let mut max_err = 0f32;
+        for (a, b) in xla.grads.iter().zip(&hg) {
+            max_abs = max_abs.max(b.abs());
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(
+            max_err < 1e-4 + 1e-3 * max_abs,
+            "{model}: grad max err {max_err} (max |g| {max_abs})"
+        );
+        println!("{model}: grads agree (max err {max_err:.2e})");
+    }
+}
+
+#[test]
+fn padded_bucket_semantics_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).expect("load runtime");
+    let model = rt.manifest.models.keys().next().unwrap().clone();
+    let d = rt.manifest.input_dim;
+    let c = rt.manifest.classes;
+    let params = rt.init_params(&model).unwrap();
+
+    // A true batch of n rows, padded into a larger bucket, must equal the
+    // host model on exactly those n rows.
+    let buckets = rt.manifest.buckets.clone();
+    let Some(&big) = buckets.iter().find(|&&b| b >= 3) else { return };
+    let n = big - 1; // deliberately not a bucket size when big > 2
+    let (x, y) = batch(n.max(1), d, c, 7);
+    let out = rt.train_step_padded(&model, &params, &x, &y).unwrap();
+
+    let meta = rt.manifest.model(&model).unwrap().clone();
+    let host = HostModel::from_layout(&model, &meta.layout, d, c).unwrap();
+    let w = vec![1f32; n.max(1)];
+    let (hg, hl, _) = host.train_step(&params, &x, &y, &w);
+    assert!((out.loss - hl).abs() < 1e-4 * (1.0 + hl.abs()), "loss {} vs {hl}", out.loss);
+    let max_err = out
+        .grads
+        .iter()
+        .zip(&hg)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 2e-3, "padded grads differ: {max_err}");
+}
+
+#[test]
+fn apply_update_is_sgd() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).expect("load runtime");
+    let model = rt.manifest.models.keys().next().unwrap().clone();
+    let params = rt.init_params(&model).unwrap();
+    let grads: Vec<f32> = params.iter().map(|p| p * 0.5 + 0.01).collect();
+    let lr = 0.1f32;
+    let out = rt.apply_update(&model, &params, &grads, lr).unwrap();
+    for i in 0..params.len() {
+        let want = params[i] - lr * grads[i];
+        assert!((out[i] - want).abs() < 1e-6, "param {i}: {} vs {want}", out[i]);
+    }
+}
+
+#[test]
+fn evaluate_matches_host_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).expect("load runtime");
+    let model = rt.manifest.models.keys().next().unwrap().clone();
+    let d = rt.manifest.input_dim;
+    let c = rt.manifest.classes;
+    let eb = rt.manifest.eval_batch;
+    let params = rt.init_params(&model).unwrap();
+    let (x, y) = batch(eb, d, c, 9);
+    let out = rt.evaluate(&model, &params, &x, &y).unwrap();
+
+    let meta = rt.manifest.model(&model).unwrap().clone();
+    let host = HostModel::from_layout(&model, &meta.layout, d, c).unwrap();
+    let w = vec![1f32; eb];
+    let (hl, hc) = host.loss(&params, &x, &y, &w);
+    assert!((out.loss - hl).abs() < 1e-4 * (1.0 + hl.abs()));
+    assert_eq!(out.correct, hc);
+    assert!(out.correct >= 0.0 && out.correct <= eb as f32);
+}
+
+#[test]
+fn training_reduces_loss_via_xla() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).expect("load runtime");
+    let model = rt.manifest.models.keys().next().unwrap().clone();
+    let d = rt.manifest.input_dim;
+    let c = rt.manifest.classes;
+    let mut params = rt.init_params(&model).unwrap();
+    let bucket = rt.manifest.max_bucket().min(16);
+    let (x, y) = batch(bucket, d, c, 21);
+    let w = vec![1f32; bucket];
+
+    let first = rt.train_step(&model, &params, &x, &y, &w, bucket).unwrap();
+    let mut loss = first.loss;
+    params = rt.apply_update(&model, &params, &first.grads, 0.1).unwrap();
+    for _ in 0..20 {
+        let s = rt.train_step(&model, &params, &x, &y, &w, bucket).unwrap();
+        loss = s.loss;
+        params = rt.apply_update(&model, &params, &s.grads, 0.1).unwrap();
+    }
+    assert!(
+        loss < first.loss * 0.7,
+        "XLA training did not reduce loss: {} -> {loss}",
+        first.loss
+    );
+}
+
+#[test]
+fn manifest_kinds_complete() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("load runtime");
+    for model in rt.manifest.models.keys() {
+        for &b in &rt.manifest.buckets {
+            assert!(rt.manifest.find(model, Kind::TrainStep, b).is_some());
+        }
+        assert!(rt.manifest.find(model, Kind::ApplyUpdate, 0).is_some());
+        assert!(rt.manifest.find(model, Kind::Init, 0).is_some());
+    }
+}

@@ -1,0 +1,219 @@
+//! Cross-module integration + property tests over the whole L3 stack
+//! (no artifacts needed — host backend).
+
+use feel::config::{Config, Experiment};
+use feel::coordinator::{HostBackend, Scheme, Trainer, TrainerConfig};
+use feel::data::{generate, partition, Partition, SynthConfig};
+use feel::device::paper_cpu_fleet;
+use feel::opt::types::{DeviceInst, Instance};
+use feel::opt::{solve, solve_downlink, solve_uplink};
+use feel::testkit::{forall, F64Range, Gen, PairOf, UsizeRange, VecOf};
+use feel::util::rng::Pcg;
+use feel::wireless::{CellConfig, PeriodRates};
+
+/// Random-but-valid optimizer instances for property tests.
+struct InstGen {
+    k: usize,
+}
+
+impl Gen for InstGen {
+    type Value = (u64, usize);
+    fn generate(&self, rng: &mut Pcg) -> (u64, usize) {
+        (rng.next_u64(), self.k)
+    }
+    fn shrink(&self, _v: &(u64, usize)) -> Vec<(u64, usize)> {
+        Vec::new()
+    }
+}
+
+fn instance_from(seed: u64, k: usize) -> Instance {
+    let mut rng = Pcg::seeded(seed);
+    let devices = (0..k)
+        .map(|_| DeviceInst {
+            speed: rng.range_f64(5.0, 200.0),
+            offset: if rng.f64() < 0.5 { 0.0 } else { rng.range_f64(0.01, 0.3) },
+            b_min: if rng.f64() < 0.5 { 1.0 } else { rng.range_f64(8.0, 32.0) },
+            b_max: 128.0,
+            rate_ul: rng.range_f64(1e6, 1e8),
+            rate_dl: rng.range_f64(1e6, 1e8),
+            update_lat: rng.range_f64(0.0, 0.1),
+        })
+        .collect();
+    Instance {
+        devices,
+        s_bits: rng.range_f64(1e4, 1e7),
+        frame_ul: 0.01,
+        frame_dl: 0.01,
+        xi: rng.range_f64(0.001, 1.0),
+    }
+}
+
+#[test]
+fn prop_solver_always_feasible() {
+    // every random instance must yield a feasible, synchronous solution
+    for k in [2usize, 5, 13] {
+        forall(42, 30, &InstGen { k }, |&(seed, k)| {
+            let inst = instance_from(seed, k);
+            let Ok(sol) = solve(&inst, 1e-7) else { return false };
+            let s = &sol.solution;
+            let tau_ok = s.tau_ul.iter().sum::<f64>() <= inst.frame_ul * (1.0 + 1e-5)
+                && s.tau_dl.iter().sum::<f64>() <= inst.frame_dl * (1.0 + 1e-5);
+            let batch_ok = s
+                .batches
+                .iter()
+                .zip(&inst.devices)
+                .all(|(&b, d)| b >= d.b_min - 1e-6 && b <= d.b_max + 1e-6);
+            let sync_ok = inst.devices.iter().zip(&s.batches).zip(&s.tau_ul).all(
+                |((d, &b), &tau)| {
+                    let t = d.offset + b / d.speed
+                        + inst.s_bits * inst.frame_ul / (tau * d.rate_ul);
+                    t <= s.t_up * (1.0 + 1e-3)
+                },
+            );
+            tau_ok && batch_ok && sync_ok && sol.efficiency > 0.0
+        });
+    }
+}
+
+#[test]
+fn prop_uplink_batch_conservation() {
+    // sum of allocated batches equals the requested global batch
+    forall(7, 40, &PairOf(InstGen { k: 8 }, F64Range(0.1, 0.9)), |((seed, k), frac)| {
+        let inst = instance_from(*seed, *k);
+        let (lo, hi) = inst.batch_range();
+        let b = lo + frac * (hi - lo);
+        let Ok(sol) = solve_uplink(&inst, b, 1e-8) else { return false };
+        (sol.batches.iter().sum::<f64>() - b).abs() < 1e-2 * b.max(1.0)
+    });
+}
+
+#[test]
+fn prop_efficiency_monotone_in_xi() {
+    // scaling xi scales efficiency linearly (same allocation)
+    forall(11, 20, &InstGen { k: 6 }, |&(seed, k)| {
+        let inst = instance_from(seed, k);
+        let mut inst2 = inst.clone();
+        inst2.xi *= 3.0;
+        let (Ok(a), Ok(b)) = (solve(&inst, 1e-7), solve(&inst2, 1e-7)) else {
+            return false;
+        };
+        (b.efficiency / a.efficiency - 3.0).abs() < 0.05
+    });
+}
+
+#[test]
+fn prop_downlink_slots_positive_and_packed() {
+    forall(13, 40, &InstGen { k: 10 }, |&(seed, k)| {
+        let inst = instance_from(seed, k);
+        let Ok(dl) = solve_downlink(&inst, 1e-9) else { return false };
+        let total: f64 = dl.tau.iter().sum();
+        dl.tau.iter().all(|&t| t > 0.0)
+            && (total - inst.frame_dl).abs() < 1e-4 * inst.frame_dl
+    });
+}
+
+#[test]
+fn prop_partition_always_disjoint_cover() {
+    let ds = generate(&SynthConfig { dim: 8, ..Default::default() }, 997, 3);
+    forall(17, 25, &PairOf(UsizeRange(1, 16), UsizeRange(0, 1)), |(k, kind)| {
+        let kind = if *kind == 0 { Partition::Iid } else { Partition::NonIid };
+        let mut rng = Pcg::seeded(*k as u64);
+        let parts = partition(&ds, *k, kind, &mut rng);
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all == (0..ds.len()).collect::<Vec<_>>()
+    });
+}
+
+#[test]
+fn prop_quantize_batches_bounds() {
+    let inst = instance_from(99, 6);
+    forall(19, 50, &VecOf(6, F64Range(1.0, 128.0)), |bs| {
+        let q = feel::opt::types::quantize(bs, &inst);
+        q.iter()
+            .zip(&inst.devices)
+            .all(|(&b, d)| b as f64 >= d.b_min - 1e-9 && b as f64 <= d.b_max + 1e-9)
+    });
+}
+
+#[test]
+fn failure_injection_empty_and_degenerate() {
+    // degenerate configurations must error, not hang or panic
+    let inst = instance_from(1, 4);
+    assert!(solve_uplink(&inst, 0.5, 1e-8).is_err()); // below sum b_min
+    assert!(solve_uplink(&inst, 1e9, 1e-8).is_err()); // above sum b_max
+    let mut bad = inst.clone();
+    bad.devices[0].rate_ul = -1.0;
+    assert!(bad.validate().is_err());
+    let mut bad = inst.clone();
+    bad.s_bits = 0.0;
+    assert!(bad.validate().is_err());
+}
+
+#[test]
+fn trainer_full_stack_noniid_vs_iid_gap() {
+    // the individual-learning scheme must show a larger IID->non-IID
+    // accuracy drop than the proposed scheme (Table II's observation)
+    let cfg = SynthConfig { dim: 32, ..Default::default() };
+    let train = generate(&cfg, 1200, 5);
+    let test = generate(&cfg, 400, 5);
+    let run = |scheme: Scheme, part: Partition| -> f64 {
+        let mut be = HostBackend::for_model("mini_res", 32, 10, 1).unwrap();
+        let mut rng = Pcg::seeded(9);
+        let fleet = paper_cpu_fleet(6, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+        let tc = TrainerConfig { scheme, eval_every: 0, ..Default::default() };
+        let mut tr = Trainer::new(tc, fleet, &train, &test, part, &mut be).unwrap();
+        tr.run(60).unwrap();
+        tr.evaluate().unwrap().1
+    };
+    let gap_prop = run(Scheme::Proposed, Partition::Iid)
+        - run(Scheme::Proposed, Partition::NonIid);
+    let gap_ind = run(Scheme::Individual { local_batch: 128 }, Partition::Iid)
+        - run(Scheme::Individual { local_batch: 128 }, Partition::NonIid);
+    assert!(
+        gap_ind > gap_prop - 0.02,
+        "individual gap {gap_ind} should exceed proposed gap {gap_prop}"
+    );
+}
+
+#[test]
+fn config_to_training_pipeline() {
+    // config file -> experiment -> fleet -> one period, end to end
+    let src = r#"
+model = "mini_mobile"
+[fleet]
+k = 3
+[data]
+dim = 16
+train_n = 300
+test_n = 120
+[train]
+scheme = "proposed"
+eval_every = 1
+"#;
+    let exp = Experiment::from_config(&Config::parse(src).unwrap()).unwrap();
+    let mut be = HostBackend::for_model(&exp.model, exp.synth.dim, exp.synth.classes, 0).unwrap();
+    let train = generate(&exp.synth, exp.train_n, 0);
+    let test = generate(&exp.synth, exp.test_n, 0);
+    let mut rng = Pcg::seeded(0);
+    let fleet = exp.fleet(&mut rng);
+    let mut tr =
+        Trainer::new(exp.trainer.clone(), fleet, &train, &test, exp.partition, &mut be).unwrap();
+    tr.run(3).unwrap();
+    assert_eq!(tr.log.records.len(), 3);
+    assert!(tr.log.records[0].test_acc.is_some());
+}
+
+#[test]
+fn rates_feed_optimizer_sanely() {
+    // a real sampled fleet's rates produce a solvable instance every period
+    let mut rng = Pcg::seeded(21);
+    let mut fleet = paper_cpu_fleet(12, 7e7, 1e8, CellConfig::default(), 8.0, 0.5, &mut rng);
+    for _ in 0..50 {
+        let rates: Vec<PeriodRates> = fleet.iter_mut().map(|d| d.link.step(&mut rng)).collect();
+        let inst =
+            Instance::from_fleet(&fleet, &rates, 128.0, 182_400.0, 0.01, 0.01, 0.05).unwrap();
+        let sol = solve(&inst, 1e-6).unwrap();
+        assert!(sol.efficiency.is_finite() && sol.efficiency > 0.0);
+    }
+}
