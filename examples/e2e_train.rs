@@ -7,6 +7,8 @@
 //! Requires `make artifacts`. Run:
 //!   cargo run --release --example e2e_train [periods]
 
+#![allow(clippy::field_reassign_with_default)]
+
 use feel::config::Experiment;
 use feel::coordinator::{Scheme, Trainer};
 use feel::exp::common::{make_backend, make_data, BackendKind};
@@ -27,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     exp.test_n = 1024;
     exp.trainer.eval_every = 10;
 
-    let mut backend = make_backend(&exp, BackendKind::Pjrt)?;
+    let backend = make_backend(&exp, BackendKind::Pjrt)?;
     let (train, test) = make_data(&exp);
     let mut rng = Pcg::seeded(1);
     let fleet = exp.fleet(&mut rng);
@@ -39,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         &train,
         &test,
         exp.partition,
-        backend.as_mut(),
+        backend.as_ref(),
     )?;
     println!("e2e: mini_res (570k params) x K=6 CPUs, {periods} FEEL periods via PJRT...");
     tr.run(periods)?;

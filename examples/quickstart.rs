@@ -7,6 +7,8 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
+#![allow(clippy::field_reassign_with_default)]
+
 use feel::config::Experiment;
 use feel::coordinator::{Scheme, Trainer};
 use feel::exp::common::{make_backend, make_data, BackendKind};
@@ -27,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         BackendKind::Host
     };
 
-    let mut backend = make_backend(&exp, kind)?;
+    let backend = make_backend(&exp, kind)?;
     let (train, test) = make_data(&exp);
     let mut rng = Pcg::seeded(7);
     let fleet = exp.fleet(&mut rng);
@@ -42,7 +44,7 @@ fn main() -> anyhow::Result<()> {
         &train,
         &test,
         exp.partition,
-        backend.as_mut(),
+        backend.as_ref(),
     )?;
     tr.run(20)?;
 

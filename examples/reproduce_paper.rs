@@ -6,6 +6,8 @@
 //! full: paper-scale periods — long; use the CLI (`feel experiment ...`)
 //! to run individual artifacts at custom scales.
 
+#![allow(clippy::field_reassign_with_default)]
+
 use feel::config::Experiment;
 use feel::exp::common::BackendKind;
 use feel::exp::{fig2, fig3, fig45, table2};

@@ -1,0 +1,94 @@
+//! Fleet-scaling bench: whole-period throughput (periods/sec) of the
+//! Proposed scheme vs worker-thread count at K = 4 / 16 / 64 devices, on
+//! the host backend. This is the headline number for the parallel
+//! device-execution engine — the per-device train/compress work dominates a
+//! period at large K, so periods/sec should scale with threads until the
+//! coordinator-side solve/aggregate serial fraction bites.
+//!
+//! Emits a `BENCH_fleet.json` baseline next to the Cargo.toml for the perf
+//! trajectory across PRs.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::time::Instant;
+
+use feel::config::Experiment;
+use feel::coordinator::{HostBackend, Scheme, Trainer};
+use feel::data::{generate, Partition};
+use feel::util::json::{num, obj, s, Json};
+use feel::util::rng::Pcg;
+use feel::util::threads;
+
+const DIM: usize = 32;
+const MEASURE_PERIODS: usize = 4;
+
+fn periods_per_sec(k: usize, worker_threads: usize) -> f64 {
+    let mut exp = Experiment::default();
+    exp.k = k;
+    exp.synth.dim = DIM;
+    exp.train_n = 192 * k;
+    exp.test_n = 128;
+    let train = generate(&exp.synth, exp.train_n, 1);
+    let test = generate(&exp.synth, exp.test_n, 1);
+    let be = HostBackend::for_model("mini_res", DIM, exp.synth.classes, 1).unwrap();
+    let mut cfg = exp.trainer.clone();
+    cfg.scheme = Scheme::Proposed;
+    cfg.eval_every = 0;
+    cfg.threads = worker_threads;
+    let mut rng = Pcg::seeded(3);
+    let fleet = exp.fleet(&mut rng);
+    let mut tr = Trainer::new(cfg, fleet, &train, &test, Partition::Iid, &be).unwrap();
+    tr.step_period().unwrap(); // warmup (allocators, page faults)
+    let t0 = Instant::now();
+    tr.run(MEASURE_PERIODS).unwrap();
+    MEASURE_PERIODS as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let cores = threads::available();
+    let mut counts = vec![1usize, 2];
+    if cores > 2 {
+        counts.push(cores);
+    }
+    println!("\n== fleet_scale (cores = {cores}) ==");
+    println!("{:<10} {:>8} {:>16} {:>10}", "config", "threads", "periods/sec", "speedup");
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut speedup_k64 = 1.0f64;
+    for &k in &[4usize, 16, 64] {
+        let mut base = 0.0f64;
+        for &t in &counts {
+            let pps = periods_per_sec(k, t);
+            if t == 1 {
+                base = pps;
+            }
+            let speedup = pps / base;
+            if k == 64 {
+                speedup_k64 = speedup_k64.max(speedup);
+            }
+            println!("{:<10} {:>8} {:>16.3} {:>9.2}x", format!("k{k}"), t, pps, speedup);
+            rows.push(obj(vec![
+                ("k", num(k as f64)),
+                ("threads", num(t as f64)),
+                ("periods_per_sec", num(pps)),
+                ("speedup_vs_1t", num(speedup)),
+            ]));
+        }
+    }
+
+    let out = obj(vec![
+        ("bench", s("fleet_scale")),
+        ("scheme", s("proposed")),
+        ("model", s("mini_res")),
+        ("dim", num(DIM as f64)),
+        ("cores", num(cores as f64)),
+        ("measure_periods", num(MEASURE_PERIODS as f64)),
+        ("best_speedup_k64", num(speedup_k64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_fleet.json";
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("\nbaseline -> {path} (best k=64 speedup {speedup_k64:.2}x)"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -4,6 +4,8 @@
 //! sizes. The table rows these throughputs feed are Table II (schemes) and
 //! Fig. 4/5 (policies).
 
+#![allow(clippy::field_reassign_with_default)]
+
 use feel::benchkit::Bench;
 use feel::compress::Sbc;
 use feel::config::Experiment;
@@ -30,13 +32,13 @@ fn main() {
         (Scheme::Fixed { policy: BatchPolicy::Online, optimal_slots: true }, "online"),
         (Scheme::Fixed { policy: BatchPolicy::Full, optimal_slots: true }, "full_batch"),
     ] {
-        let mut be = HostBackend::for_model("mini_res", 48, 10, 1).unwrap();
+        let be = HostBackend::for_model("mini_res", 48, 10, 1).unwrap();
         let mut cfg = exp.trainer.clone();
         cfg.scheme = scheme;
         cfg.eval_every = 0;
         let mut rng = Pcg::seeded(3);
         let fleet = exp.fleet(&mut rng);
-        let mut tr = Trainer::new(cfg, fleet, &train, &test, Partition::Iid, &mut be).unwrap();
+        let mut tr = Trainer::new(cfg, fleet, &train, &test, Partition::Iid, &be).unwrap();
         b.bench(&format!("one_period_{name}_k6"), || {
             tr.step_period().unwrap();
         });

@@ -32,7 +32,7 @@ fn main() {
         let model = "mini_res".to_string();
         let d = rt.manifest.input_dim;
         let c = rt.manifest.classes;
-        let mut be = PjrtBackend::new(rt, &model).unwrap();
+        let be = PjrtBackend::new(rt, &model).unwrap();
         let params = be.init_params().unwrap();
 
         for n in [1usize, 16, 64, 128] {
@@ -57,7 +57,7 @@ fn main() {
         });
 
         // host-model comparison at the same geometry
-        let mut host = HostBackend::for_model(&model, d, c, 0).unwrap();
+        let host = HostBackend::for_model(&model, d, c, 0).unwrap();
         let hp = host.init_params().unwrap();
         let (x, y) = batch(64, d, c, 64);
         b.bench("host_train_step_b64", || {

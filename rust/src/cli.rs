@@ -8,7 +8,9 @@
 //!   experiment   — regenerate a paper table/figure: fig2 fig3 table2 fig4 fig5
 //!
 //! Common flags: --config <path>, --out <dir>, --backend host|pjrt,
-//! --periods N, --k N, --scheme NAME, --partition iid|noniid, --seed N.
+//! --periods N, --k N, --scheme NAME, --partition iid|noniid, --seed N,
+//! --threads N (worker threads for device fan-out + large GEMMs; 0 = all
+//! cores; numerics are identical at any value).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -81,6 +83,7 @@ COMMANDS:
   train       run a FEEL training experiment
               --config <file>  --backend host|pjrt  --periods N  --scheme S
               --k N  --partition iid|noniid  --seed N  --out results/
+              --threads N (0 = all cores; results identical at any value)
   optimize    solve one period's joint batchsize + slot allocation
               --k N  --batch B  --gpu  --seed N
   channel     print sampled per-device average rates
@@ -139,6 +142,11 @@ fn experiment_from_args(args: &Args) -> Result<Experiment> {
     if let Some(m) = args.get("model") {
         exp.model = m.to_string();
     }
+    if let Some(t) = args.get("threads") {
+        exp.trainer.threads = t.parse().context("--threads")?;
+    }
+    // the linalg row-blocked GEMM reads the crate-wide knob
+    crate::util::threads::set_global_threads(exp.trainer.threads);
     Ok(exp)
 }
 
@@ -157,18 +165,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     let kind = backend_kind(args)?;
     let rec = Recorder::new(&out_dir(args), &format!("train_{}", exp.name))?;
 
-    let mut backend = make_backend(&exp, kind)?;
+    let backend = make_backend(&exp, kind)?;
     let (train, test) = make_data(&exp);
     let mut rng = Pcg::seeded(exp.trainer.seed ^ 0xf1ee7);
     let fleet = exp.fleet(&mut rng);
     println!(
-        "training {} on {:?} backend: K={}, scheme={}, {:?}, {} periods",
+        "training {} on {:?} backend: K={}, scheme={}, {:?}, {} periods, {} threads",
         exp.model,
         kind,
         exp.k,
         exp.trainer.scheme.name(),
         exp.partition,
-        periods
+        periods,
+        crate::util::threads::resolve(exp.trainer.threads),
     );
     let mut tr = Trainer::new(
         exp.trainer.clone(),
@@ -176,7 +185,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         &train,
         &test,
         exp.partition,
-        backend.as_mut(),
+        backend.as_ref(),
     )?;
     let warm = args.usize_or("warm", 0)?;
     if warm > 0 {
@@ -287,6 +296,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let mut base = Experiment::default();
     base.train_n = args.usize_or("train-n", 3000)?;
     base.synth.dim = args.usize_or("dim", if kind == BackendKind::Pjrt { 768 } else { 192 })?;
+    base.trainer.threads = args.usize_or("threads", 0)?;
+    crate::util::threads::set_global_threads(base.trainer.threads);
     match which {
         "fig2" => fig2::drive(&rec),
         "fig3" => {
@@ -332,6 +343,17 @@ mod tests {
         let a = Args::parse(&argv("train --periods abc")).unwrap();
         assert!(a.usize_or("periods", 1).is_err());
         assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn threads_flag_plumbs_into_trainer_config() {
+        let a = Args::parse(&argv("train --threads 4")).unwrap();
+        let exp = experiment_from_args(&a).unwrap();
+        assert_eq!(exp.trainer.threads, 4);
+        let a = Args::parse(&argv("train --threads nope")).unwrap();
+        assert!(experiment_from_args(&a).is_err());
+        // leave the global knob on auto for other tests
+        crate::util::threads::set_global_threads(0);
     }
 
     #[test]

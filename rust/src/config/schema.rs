@@ -85,6 +85,7 @@ impl Experiment {
         t.b_max = c.usize_or("train.b_max", t.b_max);
         t.base_lr = c.f64_or("train.lr", t.base_lr);
         t.eval_every = c.usize_or("train.eval_every", t.eval_every);
+        t.threads = c.usize_or("train.threads", t.threads);
         t.seed = c.usize_or("train.seed", t.seed as usize) as u64;
         t.wire_ratio = c.f64_or("compress.wire_ratio", t.wire_ratio);
         t.quant_bits = c.usize_or("compress.quant_bits", t.quant_bits as usize) as u32;
@@ -166,6 +167,7 @@ train_n = 2400
 scheme = "online"
 lr = 0.2
 periods = 50
+threads = 8
 [compress]
 sbc = false
 "#;
@@ -174,6 +176,7 @@ sbc = false
         assert!(e.gpu);
         assert_eq!(e.partition, Partition::NonIid);
         assert_eq!(e.trainer.base_lr, 0.2);
+        assert_eq!(e.trainer.threads, 8);
         assert!(e.trainer.sbc_keep.is_none());
         assert!(matches!(e.trainer.scheme, Scheme::Fixed { .. }));
     }

@@ -10,7 +10,9 @@
 //! Both receive *exact* batch semantics: PJRT pads into pow-2 buckets with
 //! a mask (runtime::client), the host model runs the exact batch.
 
-use anyhow::Result;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
 
 use crate::runtime::hostmodel::HostModel;
 use crate::runtime::Runtime;
@@ -24,49 +26,63 @@ pub struct Step {
 }
 
 /// Where device compute runs.
-pub trait Backend {
+///
+/// Thread-safe by contract: the exec engine shares one backend across all
+/// device workers, so every method takes `&self` and implementations must
+/// be `Send + Sync`. Methods are pure functions of their inputs (any
+/// internal state — caches, stats — must not affect results).
+pub trait Backend: Send + Sync {
     /// Number of flat parameters.
     fn params(&self) -> usize;
     /// Deterministic initial parameter vector.
-    fn init_params(&mut self) -> Result<Vec<f32>>;
+    fn init_params(&self) -> Result<Vec<f32>>;
     /// Forward/backward on an exact batch.
-    fn train_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<Step>;
+    fn train_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<Step>;
     /// SGD update.
-    fn apply_update(&mut self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>>;
+    fn apply_update(&self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>>;
     /// Mean loss + accuracy over a dataset.
-    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)>;
+    fn evaluate(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)>;
 }
 
-/// PJRT-backed production path.
+/// PJRT-backed production path. The PJRT client serializes execution (its
+/// executable cache and stats are mutable), so the runtime sits behind a
+/// mutex; per-call concurrency for this backend comes from PJRT's own
+/// intra-op parallelism rather than the exec engine's fan-out.
 pub struct PjrtBackend {
-    pub rt: Runtime,
+    pub rt: Mutex<Runtime>,
     pub model: String,
 }
 
 impl PjrtBackend {
     pub fn new(rt: Runtime, model: &str) -> Result<Self> {
         rt.manifest.model(model)?; // validate
-        Ok(PjrtBackend { rt, model: model.to_string() })
+        Ok(PjrtBackend { rt: Mutex::new(rt), model: model.to_string() })
+    }
+
+    fn lock(&self) -> Result<std::sync::MutexGuard<'_, Runtime>> {
+        self.rt.lock().map_err(|_| anyhow!("PJRT runtime mutex poisoned"))
     }
 }
 
 impl Backend for PjrtBackend {
     fn params(&self) -> usize {
-        self.rt.manifest.models[&self.model].params
+        let rt = self.rt.lock().expect("PJRT runtime mutex poisoned");
+        rt.manifest.models[&self.model].params
     }
 
-    fn init_params(&mut self) -> Result<Vec<f32>> {
-        self.rt.init_params(&self.model)
+    fn init_params(&self) -> Result<Vec<f32>> {
+        self.lock()?.init_params(&self.model)
     }
 
-    fn train_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<Step> {
+    fn train_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<Step> {
         // batches larger than the biggest bucket are chunked and aggregated
         // (weighted by chunk size) — exact full-batch semantics
-        let max_b = self.rt.manifest.max_bucket();
-        let d = self.rt.manifest.input_dim;
+        let mut rt = self.lock()?;
+        let max_b = rt.manifest.max_bucket();
+        let d = rt.manifest.input_dim;
         let n = y.len();
         if n <= max_b {
-            let out = self.rt.train_step_padded(&self.model, params, x, y)?;
+            let out = rt.train_step_padded(&self.model, params, x, y)?;
             return Ok(Step { grads: out.grads, loss: out.loss, correct: out.correct });
         }
         let p = params.len();
@@ -76,7 +92,7 @@ impl Backend for PjrtBackend {
         let mut i = 0;
         while i < n {
             let end = (i + max_b).min(n);
-            let out = self.rt.train_step_padded(
+            let out = rt.train_step_padded(
                 &self.model,
                 params,
                 &x[i * d..end * d],
@@ -95,12 +111,12 @@ impl Backend for PjrtBackend {
         })
     }
 
-    fn apply_update(&mut self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>> {
-        self.rt.apply_update(&self.model, params, grads, lr)
+    fn apply_update(&self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>> {
+        self.lock()?.apply_update(&self.model, params, grads, lr)
     }
 
-    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
-        self.rt.evaluate_dataset(&self.model, params, x, y)
+    fn evaluate(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        self.lock()?.evaluate_dataset(&self.model, params, x, y)
     }
 }
 
@@ -180,17 +196,17 @@ impl Backend for HostBackend {
         self.model.params
     }
 
-    fn init_params(&mut self) -> Result<Vec<f32>> {
+    fn init_params(&self) -> Result<Vec<f32>> {
         Ok(self.model.init_params_host(&self.layout, self.seed))
     }
 
-    fn train_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<Step> {
+    fn train_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<Step> {
         let w = vec![1f32; y.len()];
         let (grads, loss, correct) = self.model.train_step(params, x, y, &w);
         Ok(Step { grads, loss, correct })
     }
 
-    fn apply_update(&mut self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>> {
+    fn apply_update(&self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>> {
         Ok(params
             .iter()
             .zip(grads)
@@ -198,7 +214,7 @@ impl Backend for HostBackend {
             .collect())
     }
 
-    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+    fn evaluate(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
         let n = y.len();
         let w = vec![1f32; n];
         let (loss, correct) = self.model.loss(params, x, y, &w);
@@ -221,7 +237,7 @@ mod tests {
 
     #[test]
     fn host_backend_trains() {
-        let mut be = HostBackend::for_model("mini_res", 32, 5, 1).unwrap();
+        let be = HostBackend::for_model("mini_res", 32, 5, 1).unwrap();
         let mut params = be.init_params().unwrap();
         let (x, y) = batch(16, 32, 5, 2);
         let s0 = be.train_step(&params, &x, &y).unwrap();
@@ -243,8 +259,25 @@ mod tests {
     }
 
     #[test]
+    fn backend_is_object_safe_and_shared() {
+        // the exec engine's usage pattern: one &dyn Backend across threads
+        let be = HostBackend::for_model("mini_dense", 8, 3, 1).unwrap();
+        let dy: &dyn Backend = &be;
+        let params = dy.init_params().unwrap();
+        std::thread::scope(|s| {
+            for seed in 0..3u64 {
+                let params = &params;
+                s.spawn(move || {
+                    let (x, y) = batch(4, 8, 3, seed);
+                    dy.train_step(params, &x, &y).unwrap();
+                });
+            }
+        });
+    }
+
+    #[test]
     fn host_eval_consistent_with_train_loss() {
-        let mut be = HostBackend::for_model("mini_mobile", 16, 4, 3).unwrap();
+        let be = HostBackend::for_model("mini_mobile", 16, 4, 3).unwrap();
         let params = be.init_params().unwrap();
         let (x, y) = batch(24, 16, 4, 4);
         let s = be.train_step(&params, &x, &y).unwrap();

@@ -1,8 +1,13 @@
 //! The FEEL training loop: periods of plan → local gradients → compress →
 //! aggregate → update, with the simulated clock advancing by each period's
 //! end-to-end latency (paper steps 1–5, Fig. 1).
+//!
+//! Planning (scheme.rs) runs on the coordinator thread; execution of the K
+//! per-device steps is fanned out through `exec::Engine`. All cross-device
+//! reductions happen here, in fixed device order, so numerics are
+//! bitwise-identical at any thread count.
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Result};
 
 use super::backend::Backend;
 use super::clock::SimClock;
@@ -13,6 +18,8 @@ use super::xi::XiEstimator;
 use crate::compress::Sbc;
 use crate::data::{partition, Dataset, DeviceData, Partition};
 use crate::device::Device;
+use crate::exec::{self, Engine};
+use crate::grad::Aggregator;
 use crate::opt::types::Instance;
 use crate::util::rng::Pcg;
 use crate::wireless::PeriodRates;
@@ -43,6 +50,9 @@ pub struct TrainerConfig {
     /// optimizer tolerance
     pub eps: f64,
     pub seed: u64,
+    /// worker threads for per-device execution (0 = all cores). Changes
+    /// wall-clock only — numerics are identical at any value.
+    pub threads: usize,
 }
 
 impl Default for TrainerConfig {
@@ -61,6 +71,7 @@ impl Default for TrainerConfig {
             eval_every: 10,
             eps: 1e-6,
             seed: 0,
+            threads: 0,
         }
     }
 }
@@ -109,11 +120,26 @@ impl TrainLog {
             .map(|r| r.sim_time)
     }
 
+    /// Mean train loss over periods `[start, start + len)` — the guarded
+    /// form of the head/tail window slicing convergence checks use. Returns
+    /// a clean error (instead of a slice panic) when the run is shorter
+    /// than the requested window.
+    pub fn mean_loss_window(&self, start: usize, len: usize) -> Result<f64> {
+        let n = self.records.len();
+        let Some(end) = start.checked_add(len) else {
+            bail!("loss window {start}+{len} overflows");
+        };
+        if len == 0 || end > n {
+            bail!("loss window [{start}, {end}) out of range: run has {n} periods");
+        }
+        Ok(self.records[start..end].iter().map(|r| r.train_loss).sum::<f64>() / len as f64)
+    }
+
     /// First simulated time at which test accuracy reached `target`.
     pub fn time_to_acc(&self, target: f64) -> Option<f64> {
         self.records
             .iter()
-            .find(|r| r.test_acc.map_or(false, |a| a >= target))
+            .find(|r| r.test_acc.is_some_and(|a| a >= target))
             .map(|r| r.sim_time)
     }
 
@@ -146,7 +172,8 @@ pub struct Trainer<'a> {
     pub fleet: Vec<Device>,
     pub workers: Vec<Worker>,
     pub server: Server,
-    backend: &'a mut dyn Backend,
+    backend: &'a dyn Backend,
+    engine: Engine,
     train: &'a Dataset,
     test: &'a Dataset,
     clock: SimClock,
@@ -163,7 +190,7 @@ impl<'a> Trainer<'a> {
         train: &'a Dataset,
         test: &'a Dataset,
         kind: Partition,
-        backend: &'a mut dyn Backend,
+        backend: &'a dyn Backend,
     ) -> Result<Self> {
         let mut rng = Pcg::seeded(cfg.seed);
         let parts = partition(train, fleet.len(), kind, &mut rng);
@@ -178,12 +205,14 @@ impl<'a> Trainer<'a> {
             .collect();
         let params = backend.init_params()?;
         let xi = XiEstimator::new(cfg.xi_init, cfg.xi_alpha);
+        let engine = Engine::new(cfg.threads);
         Ok(Trainer {
             cfg,
             fleet,
             workers,
             server: Server::new(params),
             backend,
+            engine,
             train,
             test,
             clock: SimClock::new(),
@@ -192,6 +221,11 @@ impl<'a> Trainer<'a> {
             last_train_loss: None,
             log: TrainLog::default(),
         })
+    }
+
+    /// Worker threads the per-device fan-out uses.
+    pub fn threads(&self) -> usize {
+        self.engine.threads()
     }
 
     /// Warm-start: train the global model centrally for `steps` SGD steps
@@ -332,49 +366,55 @@ impl<'a> Trainer<'a> {
         Ok(())
     }
 
-    /// Steps 1–5 for gradient-exchange schemes. Returns the batch-weighted
-    /// train loss across devices.
+    /// Steps 1–5 for gradient-exchange schemes. The per-device steps run in
+    /// parallel on the engine; aggregation reduces the returned
+    /// contributions in fixed device order (eq. 1, f64 accumulation).
+    /// Returns the batch-weighted train loss across devices.
     fn gradient_period(&mut self, plan: &Plan, lr: f32) -> Result<f64> {
-        let p = self.server.p();
-        let mut agg = crate::grad::Aggregator::new(p);
+        let outcomes = exec::gradient_round(
+            &self.engine,
+            self.backend,
+            &mut self.workers,
+            &self.server.params,
+            self.train,
+            &plan.batches,
+            self.cfg.seed,
+            self.server.period as u64,
+        )?;
+        let mut agg = Aggregator::new(self.server.p());
         let mut loss_acc = 0f64;
         let mut w_acc = 0f64;
-        for (k, w) in self.workers.iter_mut().enumerate() {
-            let b = plan.batches[k].max(1);
-            let (x, y) = w.data.sample(self.train, b);
-            let step = self
-                .backend
-                .train_step(&self.server.params, &x, &y)
-                .with_context(|| format!("device {k} train_step"))?;
-            loss_acc += step.loss as f64 * b as f64;
-            w_acc += b as f64;
-            let (g, _bits) = w.compress(step.grads);
-            agg.add(&g, b as f64)?;
+        for o in &outcomes {
+            agg.add(&o.grad, o.weight)?;
+            loss_acc += o.loss * o.weight;
+            w_acc += o.weight;
         }
         let global = agg.finish()?;
         self.server.params = self.backend.apply_update(&self.server.params, &global, lr)?;
         Ok(loss_acc / w_acc)
     }
 
-    /// Model-based FL: one local epoch per device, then FedAvg.
+    /// Model-based FL: one local epoch per device (parallel), then FedAvg
+    /// in fixed device order.
     fn model_fl_period(&mut self, local_batch: usize, lr: f32) -> Result<f64> {
-        let mut averaged: Vec<(Vec<f32>, f64)> = Vec::with_capacity(self.workers.len());
+        let outcomes = exec::model_fl_round(
+            &self.engine,
+            self.backend,
+            &mut self.workers,
+            &self.server.params,
+            self.train,
+            local_batch,
+            lr,
+            self.cfg.seed,
+            self.server.period as u64,
+        )?;
         let mut loss_acc = 0f64;
         let mut w_acc = 0f64;
-        for w in self.workers.iter_mut() {
-            let mut params = self.server.params.clone();
-            let n = w.shard_len();
-            let steps = n.div_ceil(local_batch).max(1);
-            let mut last_loss = 0f32;
-            for _ in 0..steps {
-                let (x, y) = w.data.sample(self.train, local_batch.min(n));
-                let s = self.backend.train_step(&params, &x, &y)?;
-                last_loss = s.loss;
-                params = self.backend.apply_update(&params, &s.grads, lr)?;
-            }
-            loss_acc += last_loss as f64 * n as f64;
-            w_acc += n as f64;
-            averaged.push((params, n as f64));
+        let mut averaged: Vec<(Vec<f32>, f64)> = Vec::with_capacity(outcomes.len());
+        for o in outcomes {
+            loss_acc += o.loss * o.weight;
+            w_acc += o.weight;
+            averaged.push((o.params, o.weight));
         }
         self.server.average_params(&averaged)?;
         Ok(loss_acc / w_acc)
@@ -382,18 +422,22 @@ impl<'a> Trainer<'a> {
 
     /// Individual learning: one local step per device on its own params.
     fn individual_period(&mut self, plan: &Plan, lr: f32) -> Result<f64> {
+        let outcomes = exec::individual_round(
+            &self.engine,
+            self.backend,
+            &mut self.workers,
+            &self.server.params,
+            self.train,
+            &plan.batches,
+            lr,
+            self.cfg.seed,
+            self.server.period as u64,
+        )?;
         let mut loss_acc = 0f64;
         let mut w_acc = 0f64;
-        let global = self.server.params.clone();
-        for (k, w) in self.workers.iter_mut().enumerate() {
-            let mut params = w.local_params.take().unwrap_or_else(|| global.clone());
-            let b = plan.batches[k].max(1);
-            let (x, y) = w.data.sample(self.train, b);
-            let s = self.backend.train_step(&params, &x, &y)?;
-            params = self.backend.apply_update(&params, &s.grads, lr)?;
-            loss_acc += s.loss as f64 * b as f64;
-            w_acc += b as f64;
-            w.local_params = Some(params);
+        for o in &outcomes {
+            loss_acc += o.loss * o.weight;
+            w_acc += o.weight;
         }
         Ok(loss_acc / w_acc)
     }
@@ -401,26 +445,31 @@ impl<'a> Trainer<'a> {
     /// Evaluate on the held-out set. Global-model schemes evaluate the
     /// server params; individual learning averages each device's metrics
     /// (the paper's final step averages the models — we report the mean
-    /// device performance, which matches its "isolated islands" framing).
-    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+    /// device performance, which matches its "isolated islands" framing),
+    /// with the per-device evaluations fanned out on the engine.
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
         match self.cfg.scheme {
             Scheme::Individual { .. } => {
-                let mut loss = 0f64;
-                let mut acc = 0f64;
-                let mut n = 0f64;
-                let global = self.server.params.clone();
-                for w in self.workers.iter() {
-                    let params = w.local_params.as_ref().unwrap_or(&global);
-                    let (l, a) = self.backend.evaluate(params, &self.test.x, &self.test.y)?;
-                    loss += l;
-                    acc += a;
-                    n += 1.0;
-                }
+                let results = exec::eval_round(
+                    &self.engine,
+                    self.backend,
+                    &self.workers,
+                    &self.server.params,
+                    &self.test.x,
+                    &self.test.y,
+                )?;
+                let n = results.len() as f64;
+                let (loss, acc) = results
+                    .iter()
+                    .fold((0f64, 0f64), |(l, a), r| (l + r.0, a + r.1));
                 Ok((loss / n, acc / n))
             }
-            _ => self
-                .backend
-                .evaluate(&self.server.params, &self.test.x, &self.test.y),
+            // full-dataset eval on the coordinator thread: the GEMM row
+            // blocking inside may fan out, capped by the trainer's budget
+            _ => crate::util::threads::with_budget(self.engine.threads(), || {
+                self.backend
+                    .evaluate(&self.server.params, &self.test.x, &self.test.y)
+            }),
         }
     }
 
@@ -452,9 +501,9 @@ mod tests {
 
     fn run_scheme(scheme: Scheme, periods: usize) -> TrainLog {
         let (train, test, fleet) = tiny_world();
-        let mut be = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+        let be = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
         let cfg = TrainerConfig { scheme, eval_every: periods, ..Default::default() };
-        let mut tr = Trainer::new(cfg, fleet, &train, &test, Partition::Iid, &mut be).unwrap();
+        let mut tr = Trainer::new(cfg, fleet, &train, &test, Partition::Iid, &be).unwrap();
         tr.run(periods).unwrap();
         tr.log.clone()
     }
@@ -463,13 +512,26 @@ mod tests {
     fn proposed_loss_decreases() {
         let log = run_scheme(Scheme::Proposed, 40);
         assert_eq!(log.records.len(), 40);
-        let first = log.records[..5].iter().map(|r| r.train_loss).sum::<f64>() / 5.0;
-        let last = log.records[35..].iter().map(|r| r.train_loss).sum::<f64>() / 5.0;
+        let first = log.mean_loss_window(0, 5).unwrap();
+        let last = log.mean_loss_window(35, 5).unwrap();
         assert!(last < first, "loss {first} -> {last}");
         // simulated time strictly increases
         for w in log.records.windows(2) {
             assert!(w[1].sim_time > w[0].sim_time);
         }
+    }
+
+    #[test]
+    fn loss_window_guards_short_runs() {
+        let log = run_scheme(Scheme::Proposed, 3);
+        // in-range window works
+        assert!(log.mean_loss_window(0, 3).is_ok());
+        // short run: a clean error, not a slice panic
+        let err = log.mean_loss_window(35, 5).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        assert!(log.mean_loss_window(0, 4).is_err());
+        assert!(log.mean_loss_window(0, 0).is_err());
+        assert!(log.mean_loss_window(usize::MAX, 2).is_err());
     }
 
     #[test]
@@ -513,10 +575,9 @@ mod tests {
     #[test]
     fn eval_runs_and_is_bounded() {
         let (train, test, fleet) = tiny_world();
-        let mut be = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+        let be = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
         let cfg = TrainerConfig { eval_every: 5, ..Default::default() };
-        let mut tr =
-            Trainer::new(cfg, fleet, &train, &test, Partition::NonIid, &mut be).unwrap();
+        let mut tr = Trainer::new(cfg, fleet, &train, &test, Partition::NonIid, &be).unwrap();
         tr.run(10).unwrap();
         let acc = tr.log.final_acc().unwrap();
         assert!((0.0..=1.0).contains(&acc));
@@ -525,15 +586,26 @@ mod tests {
     #[test]
     fn warm_start_reduces_initial_loss() {
         let (train, test, fleet) = tiny_world();
-        let mut be = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+        let be = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
         let cfg = TrainerConfig::default();
         let mut tr =
-            Trainer::new(cfg.clone(), fleet.clone(), &train, &test, Partition::Iid, &mut be)
+            Trainer::new(cfg.clone(), fleet.clone(), &train, &test, Partition::Iid, &be)
                 .unwrap();
         let (l_cold, _) = tr.evaluate().unwrap();
         tr.warm_start(80, 64, 0.05).unwrap();
         let (l_warm, _) = tr.evaluate().unwrap();
         assert!(l_warm < l_cold, "{l_cold} -> {l_warm}");
+    }
+
+    #[test]
+    fn explicit_thread_count_respected() {
+        let (train, test, fleet) = tiny_world();
+        let be = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+        let cfg = TrainerConfig { threads: 3, eval_every: 0, ..Default::default() };
+        let mut tr = Trainer::new(cfg, fleet, &train, &test, Partition::Iid, &be).unwrap();
+        assert_eq!(tr.threads(), 3);
+        tr.run(2).unwrap();
+        assert_eq!(tr.log.records.len(), 2);
     }
 
     #[test]

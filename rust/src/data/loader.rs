@@ -28,18 +28,27 @@ impl DeviceData {
 
     /// Sample a batch of `b` rows without replacement (with replacement if
     /// `b` exceeds the shard, which the paper's B^max <= N_k precludes but
-    /// tiny test shards may hit).
+    /// tiny test shards may hit), advancing the shard's own sampler state.
     pub fn sample(&mut self, ds: &Dataset, b: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = self.rng.clone();
+        let out = self.sample_with(ds, b, &mut rng);
+        self.rng = rng;
+        out
+    }
+
+    /// Same sampling, but driven by an externally-supplied RNG. The exec
+    /// engine derives one per `(seed, period, device)` so batch selection
+    /// is independent of execution order and thread count.
+    pub fn sample_with(&self, ds: &Dataset, b: usize, rng: &mut Pcg) -> (Vec<f32>, Vec<i32>) {
         assert!(b >= 1);
         let picks: Vec<usize> = if b <= self.indices.len() {
-            self.rng
-                .sample_indices(self.indices.len(), b)
+            rng.sample_indices(self.indices.len(), b)
                 .into_iter()
                 .map(|j| self.indices[j])
                 .collect()
         } else {
             (0..b)
-                .map(|_| self.indices[self.rng.below(self.indices.len() as u64) as usize])
+                .map(|_| self.indices[rng.below(self.indices.len() as u64) as usize])
                 .collect()
         };
         ds.gather(&picks)

@@ -1,0 +1,155 @@
+//! The scoped-thread fan-out primitive the round executors are built on.
+
+use anyhow::Result;
+
+use crate::util::threads;
+
+/// Deterministic parallel executor: runs an indexed job per item on up to
+/// `threads` scoped threads and returns the results in item order.
+///
+/// Items are split into contiguous chunks (one per thread); each result
+/// lands in its item's slot, so the output order — and therefore every
+/// downstream reduction — is independent of thread scheduling.
+#[derive(Clone, Copy, Debug)]
+pub struct Engine {
+    threads: usize,
+}
+
+impl Engine {
+    /// `threads = 0` resolves to the crate-wide default
+    /// (`util::threads::global_threads()`, i.e. all cores unless the CLI
+    /// `--threads` flag or `train.threads` config key capped it).
+    pub fn new(threads: usize) -> Engine {
+        let t = if threads == 0 { threads::global_threads() } else { threads };
+        Engine { threads: t.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(k, &mut items[k])` for every item, in parallel, returning the
+    /// results in item order. The first error (by item order) is returned
+    /// after all workers finish.
+    pub fn run_mut<T, R, F>(&self, items: &mut [T], f: F) -> Result<Vec<R>>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> Result<R> + Sync,
+    {
+        let n = items.len();
+        let threads = self.threads.min(n);
+        if threads <= 1 {
+            // single-worker path: per-device jobs also get a serial budget,
+            // so `threads = 1` means one thread, full stop
+            return threads::with_budget(1, || {
+                items.iter_mut().enumerate().map(|(k, t)| f(k, t)).collect()
+            });
+        }
+        let chunk = n.div_ceil(threads);
+        let mut slots: Vec<Option<Result<R>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        std::thread::scope(|s| {
+            let f = &f;
+            for (ci, (ts, outs)) in
+                items.chunks_mut(chunk).zip(slots.chunks_mut(chunk)).enumerate()
+            {
+                s.spawn(move || {
+                    // budget 1: device jobs must not nest another fan-out
+                    threads::with_budget(1, || {
+                        for (j, (t, o)) in ts.iter_mut().zip(outs.iter_mut()).enumerate() {
+                            *o = Some(f(ci * chunk + j, t));
+                        }
+                    });
+                });
+            }
+        });
+        slots.into_iter().map(|o| o.expect("exec worker lost a slot")).collect()
+    }
+
+    /// Run `f(k)` for `k in 0..n`, in parallel, returning results in index
+    /// order. The read-only variant of `run_mut` for jobs that borrow their
+    /// inputs immutably (e.g. per-device evaluation).
+    pub fn run_indexed<R, F>(&self, n: usize, f: F) -> Result<Vec<R>>
+    where
+        R: Send,
+        F: Fn(usize) -> Result<R> + Sync,
+    {
+        let threads = self.threads.min(n);
+        if threads <= 1 {
+            return threads::with_budget(1, || (0..n).map(&f).collect());
+        }
+        let chunk = n.div_ceil(threads);
+        let mut slots: Vec<Option<Result<R>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        std::thread::scope(|s| {
+            let f = &f;
+            for (ci, outs) in slots.chunks_mut(chunk).enumerate() {
+                s.spawn(move || {
+                    threads::with_budget(1, || {
+                        for (j, o) in outs.iter_mut().enumerate() {
+                            *o = Some(f(ci * chunk + j));
+                        }
+                    });
+                });
+            }
+        });
+        slots.into_iter().map(|o| o.expect("exec worker lost a slot")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_item_order_any_thread_count() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let e = Engine::new(threads);
+            let mut items: Vec<usize> = (0..17).collect();
+            let out = e.run_mut(&mut items, |k, v| Ok(k * 10 + *v)).unwrap();
+            assert_eq!(out, (0..17).map(|k| k * 11).collect::<Vec<_>>(), "t={threads}");
+        }
+    }
+
+    #[test]
+    fn mutations_land_on_the_right_item() {
+        let e = Engine::new(4);
+        let mut items = vec![0usize; 10];
+        e.run_mut(&mut items, |k, v| {
+            *v = k + 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(items, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let e = Engine::new(3);
+        let mut items = vec![(); 6];
+        let r = e.run_mut(&mut items, |k, _| {
+            if k == 4 {
+                anyhow::bail!("device {k} failed")
+            }
+            Ok(k)
+        });
+        assert!(r.unwrap_err().to_string().contains("device 4"));
+    }
+
+    #[test]
+    fn empty_and_indexed() {
+        let e = Engine::new(8);
+        let mut empty: Vec<u32> = Vec::new();
+        assert!(e.run_mut(&mut empty, |_, _| Ok(0)).unwrap().is_empty());
+        assert!(e.run_indexed(0, |_| Ok(0)).unwrap().is_empty());
+        let out = e.run_indexed(9, |k| Ok(k * k)).unwrap();
+        assert_eq!(out, (0..9).map(|k| k * k).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_resolves_to_cores() {
+        let e = Engine::new(0);
+        assert!(e.threads() >= 1);
+    }
+}

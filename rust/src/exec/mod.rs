@@ -1,0 +1,30 @@
+//! Parallel device-execution engine.
+//!
+//! The FEEL coordinator plans each period (scheme.rs picks per-device
+//! batchsizes and prices the period's latency under the wireless/compute
+//! models), then *executes* the K per-device learning steps. Execution is
+//! embarrassingly parallel — each device's step depends only on the global
+//! parameters, the device's own state, and a counter-derived RNG stream —
+//! so this module fans it out over a scoped thread pool.
+//!
+//! Determinism contract (validated by `tests/exec_determinism.rs`):
+//! running any scheme with any `--threads` value produces bitwise-identical
+//! `TrainLog` records. Three mechanisms enforce it:
+//!
+//! 1. per-device RNG streams are derived from `(seed, period, device_id)`
+//!    (`Pcg::for_device`), never from shared sampler state, so batch
+//!    selection cannot depend on execution order;
+//! 2. workers return their contributions and **all cross-device reduction
+//!    happens on the caller's thread in fixed device order** (f64
+//!    accumulation via `grad::Aggregator`);
+//! 3. results are collected into device-indexed slots, so thread
+//!    scheduling cannot reorder them.
+
+pub mod engine;
+pub mod round;
+
+pub use engine::Engine;
+pub use round::{
+    eval_round, gradient_round, individual_round, model_fl_round, GradOutcome, LocalFitOutcome,
+    LocalStepOutcome,
+};

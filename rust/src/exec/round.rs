@@ -1,0 +1,208 @@
+//! Per-scheme round executors: the *execution* half of a FEEL period.
+//!
+//! `scheme::plan_period` decides what each device should do; these
+//! functions do it, fanning the K device steps out over the engine and
+//! returning per-device outcomes **in device order** so the trainer can
+//! reduce them deterministically (see exec/mod.rs for the contract).
+
+use anyhow::{Context, Result};
+
+use super::engine::Engine;
+use crate::coordinator::backend::Backend;
+use crate::coordinator::worker::Worker;
+use crate::data::Dataset;
+use crate::util::rng::Pcg;
+
+/// One device's gradient-scheme contribution.
+pub struct GradOutcome {
+    /// the gradient as the server will see it (post compression round-trip)
+    pub grad: Vec<f32>,
+    /// aggregation weight |B_k|
+    pub weight: f64,
+    /// the device's mean train loss on its batch
+    pub loss: f64,
+}
+
+/// One device's model-FL (FedAvg) contribution.
+pub struct LocalFitOutcome {
+    /// locally-trained parameters
+    pub params: Vec<f32>,
+    /// averaging weight N_k (shard size)
+    pub weight: f64,
+    /// last local-step loss
+    pub loss: f64,
+}
+
+/// One device's individual-learning step summary.
+pub struct LocalStepOutcome {
+    pub weight: f64,
+    pub loss: f64,
+}
+
+/// Steps 1–3 of a gradient-exchange period: every device samples its
+/// planned batch, runs forward/backward on the global parameters, and
+/// compresses its gradient. Aggregation stays with the caller.
+#[allow(clippy::too_many_arguments)]
+pub fn gradient_round(
+    engine: &Engine,
+    backend: &dyn Backend,
+    workers: &mut [Worker],
+    params: &[f32],
+    train: &Dataset,
+    batches: &[usize],
+    seed: u64,
+    period: u64,
+) -> Result<Vec<GradOutcome>> {
+    engine.run_mut(workers, |k, w| {
+        let b = batches[k].max(1);
+        let mut rng = Pcg::for_device(seed, period, k as u64);
+        let (x, y) = w.data.sample_with(train, b, &mut rng);
+        let step = backend
+            .train_step(params, &x, &y)
+            .with_context(|| format!("device {k} train_step"))?;
+        let (grad, _bits) = w.compress(step.grads);
+        Ok(GradOutcome { grad, weight: b as f64, loss: step.loss as f64 })
+    })
+}
+
+/// Model-based FL round: one local epoch per device from the global
+/// parameters, returning the locally-trained models for FedAvg.
+#[allow(clippy::too_many_arguments)]
+pub fn model_fl_round(
+    engine: &Engine,
+    backend: &dyn Backend,
+    workers: &mut [Worker],
+    global: &[f32],
+    train: &Dataset,
+    local_batch: usize,
+    lr: f32,
+    seed: u64,
+    period: u64,
+) -> Result<Vec<LocalFitOutcome>> {
+    engine.run_mut(workers, |k, w| {
+        let mut params = global.to_vec();
+        let n = w.shard_len();
+        let steps = n.div_ceil(local_batch).max(1);
+        let mut rng = Pcg::for_device(seed, period, k as u64);
+        let mut last_loss = 0f32;
+        for _ in 0..steps {
+            let (x, y) = w.data.sample_with(train, local_batch.min(n), &mut rng);
+            let s = backend
+                .train_step(&params, &x, &y)
+                .with_context(|| format!("device {k} local step"))?;
+            last_loss = s.loss;
+            params = backend.apply_update(&params, &s.grads, lr)?;
+        }
+        Ok(LocalFitOutcome { params, weight: n as f64, loss: last_loss as f64 })
+    })
+}
+
+/// Individual-learning round: one local mini-batch step per device on its
+/// own parameters (initialized from `global` on first touch).
+#[allow(clippy::too_many_arguments)]
+pub fn individual_round(
+    engine: &Engine,
+    backend: &dyn Backend,
+    workers: &mut [Worker],
+    global: &[f32],
+    train: &Dataset,
+    batches: &[usize],
+    lr: f32,
+    seed: u64,
+    period: u64,
+) -> Result<Vec<LocalStepOutcome>> {
+    engine.run_mut(workers, |k, w| {
+        let mut params = w.local_params.take().unwrap_or_else(|| global.to_vec());
+        let b = batches[k].max(1);
+        let mut rng = Pcg::for_device(seed, period, k as u64);
+        let (x, y) = w.data.sample_with(train, b, &mut rng);
+        let s = backend
+            .train_step(&params, &x, &y)
+            .with_context(|| format!("device {k} individual step"))?;
+        params = backend.apply_update(&params, &s.grads, lr)?;
+        w.local_params = Some(params);
+        Ok(LocalStepOutcome { weight: b as f64, loss: s.loss as f64 })
+    })
+}
+
+/// Per-device evaluation (individual learning): each device's local model
+/// (falling back to `global`) against the held-out set, in device order.
+pub fn eval_round(
+    engine: &Engine,
+    backend: &dyn Backend,
+    workers: &[Worker],
+    global: &[f32],
+    x: &[f32],
+    y: &[i32],
+) -> Result<Vec<(f64, f64)>> {
+    engine.run_indexed(workers.len(), |k| {
+        let params = workers[k].local_params.as_deref().unwrap_or(global);
+        backend.evaluate(params, x, y)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Sbc;
+    use crate::coordinator::backend::HostBackend;
+    use crate::data::synthetic::{generate, SynthConfig};
+    use crate::data::DeviceData;
+
+    fn world(k: usize, p_sbc: bool) -> (Dataset, Vec<Worker>, HostBackend) {
+        let cfg = SynthConfig { dim: 12, ..Default::default() };
+        let train = generate(&cfg, 40 * k, 1);
+        let be = HostBackend::for_model("mini_dense", 12, 10, 2).unwrap();
+        let p = be.params();
+        let workers: Vec<Worker> = (0..k)
+            .map(|id| {
+                let idx: Vec<usize> = (id * 40..(id + 1) * 40).collect();
+                let sbc = if p_sbc { Some(Sbc::new(0.01, p)) } else { None };
+                Worker::new(id, DeviceData::new(idx, Pcg::seeded(id as u64)), sbc)
+            })
+            .collect();
+        (train, workers, be)
+    }
+
+    #[test]
+    fn gradient_round_thread_invariant() {
+        let (train, mut w1, be) = world(5, true);
+        let (_, mut w4, _) = world(5, true);
+        let params = be.init_params().unwrap();
+        let batches = vec![8usize; 5];
+        let a = gradient_round(&Engine::new(1), &be, &mut w1, &params, &train, &batches, 9, 3)
+            .unwrap();
+        let b = gradient_round(&Engine::new(4), &be, &mut w4, &params, &train, &batches, 9, 3)
+            .unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.grad, y.grad);
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+            assert_eq!(x.weight, y.weight);
+        }
+    }
+
+    #[test]
+    fn individual_round_keeps_local_params() {
+        let (train, mut workers, be) = world(3, false);
+        let params = be.init_params().unwrap();
+        let batches = vec![4usize; 3];
+        individual_round(
+            &Engine::new(2),
+            &be,
+            &mut workers,
+            &params,
+            &train,
+            &batches,
+            0.1,
+            1,
+            0,
+        )
+        .unwrap();
+        for w in &workers {
+            let local = w.local_params.as_ref().unwrap();
+            assert_eq!(local.len(), params.len());
+            assert_ne!(local, &params);
+        }
+    }
+}

@@ -71,13 +71,13 @@ pub fn run_scheme(
     warm_steps: usize,
     time_limit: Option<f64>,
 ) -> Result<TrainLog> {
-    let mut backend = make_backend(exp, kind)?;
+    let backend = make_backend(exp, kind)?;
     let (train, test) = make_data(exp);
     let mut rng = Pcg::seeded(exp.trainer.seed ^ 0xf1ee7);
     let fleet = exp.fleet(&mut rng);
     let mut cfg = exp.trainer.clone();
     cfg.scheme = scheme;
-    let mut tr = Trainer::new(cfg, fleet, &train, &test, exp.partition, backend.as_mut())?;
+    let mut tr = Trainer::new(cfg, fleet, &train, &test, exp.partition, backend.as_ref())?;
     if warm_steps > 0 {
         tr.warm_start(warm_steps, 64, 0.05)?;
     }

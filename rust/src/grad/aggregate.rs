@@ -37,6 +37,34 @@ impl Aggregator {
         self.contributions
     }
 
+    /// Merge another aggregator's partial state (a *shard*) into this one.
+    /// Accumulation is f64 throughout, so merging contiguous shards in
+    /// device order reproduces the order the streaming `add` path would
+    /// have used per shard; cross-shard grouping differs only by f64
+    /// addition reassociation (exact for integer-valued contributions).
+    pub fn merge(&mut self, other: &Aggregator) -> Result<()> {
+        if other.acc.len() != self.acc.len() {
+            bail!("shard length {} != {}", other.acc.len(), self.acc.len());
+        }
+        for (a, &b) in self.acc.iter_mut().zip(&other.acc) {
+            *a += b;
+        }
+        self.total_weight += other.total_weight;
+        self.contributions += other.contributions;
+        Ok(())
+    }
+
+    /// Reduce a set of shard aggregators (in the given fixed order) into
+    /// one. The tree-reduce entry point for sharded/parallel aggregation.
+    pub fn reduce_shards(shards: Vec<Aggregator>) -> Result<Aggregator> {
+        let mut it = shards.into_iter();
+        let mut root = it.next().ok_or_else(|| anyhow::anyhow!("no shards to reduce"))?;
+        for s in it {
+            root.merge(&s)?;
+        }
+        Ok(root)
+    }
+
     /// Finish: the batch-weighted average (eq. 1).
     pub fn finish(self) -> Result<Vec<f32>> {
         if self.contributions == 0 {
@@ -99,6 +127,43 @@ mod tests {
     #[test]
     fn rejects_empty_finish() {
         assert!(Aggregator::new(2).finish().is_err());
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_shards() {
+        let mut a = Aggregator::new(3);
+        let b = Aggregator::new(2);
+        assert!(a.merge(&b).is_err());
+        assert!(Aggregator::reduce_shards(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn shard_merge_equals_streaming_add() {
+        // integer-valued grads/weights: f64 sums are exact, so shard-merge
+        // must equal the device-order streaming path *bitwise*
+        let grads: Vec<Vec<f32>> = (0..8)
+            .map(|k| (0..16).map(|i| ((k * 31 + i * 7) % 23) as f32 - 11.0).collect())
+            .collect();
+        let mut stream = Aggregator::new(16);
+        for (k, g) in grads.iter().enumerate() {
+            stream.add(g, (k + 1) as f64).unwrap();
+        }
+        let shards: Vec<Aggregator> = grads
+            .chunks(3)
+            .enumerate()
+            .map(|(ci, ch)| {
+                let mut a = Aggregator::new(16);
+                for (j, g) in ch.iter().enumerate() {
+                    a.add(g, (ci * 3 + j + 1) as f64).unwrap();
+                }
+                a
+            })
+            .collect();
+        let merged = Aggregator::reduce_shards(shards).unwrap();
+        assert_eq!(merged.contributions(), stream.contributions());
+        let a = stream.finish().unwrap();
+        let b = merged.finish().unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

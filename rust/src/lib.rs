@@ -10,6 +10,13 @@
 //! that executes the AOT-compiled JAX/Pallas computations in `artifacts/`.
 //! Python only runs at build time (`make artifacts`).
 
+// Style decisions the codebase makes deliberately (index-loop GEMM kernels,
+// config structs built by field assignment from Default) — kept out of
+// clippy's way so CI can run with -D warnings.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+#![allow(clippy::too_many_arguments)]
+
 pub mod benchkit;
 pub mod cli;
 pub mod compress;
@@ -17,6 +24,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod device;
+pub mod exec;
 pub mod exp;
 pub mod grad;
 pub mod metrics;

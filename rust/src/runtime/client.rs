@@ -14,6 +14,9 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::manifest::{Kind, Manifest};
+// The offline build has no real `xla` crate; compile against the stub
+// (swap this import back to the crate to re-enable PJRT execution).
+use super::xla_stub as xla;
 
 /// Outcome of one train-step execution.
 #[derive(Clone, Debug)]

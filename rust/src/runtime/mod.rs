@@ -8,6 +8,7 @@
 pub mod client;
 pub mod hostmodel;
 pub mod manifest;
+pub(crate) mod xla_stub;
 
 pub use client::{EvalOut, Runtime, RuntimeStats, StepOut};
 pub use manifest::{Artifact, Kind, Manifest, ModelMeta};

@@ -1,14 +1,53 @@
 //! Dense linear algebra substrate for the host model: row-major f32 GEMM
 //! with the three orientations backprop needs, written cache-consciously
-//! (ikj loop order, 64-wide j blocking). Good enough that the pure-rust
-//! oracle can drive the large Table-II sweeps; the AOT/XLA path remains the
-//! production hot path.
+//! (ikj loop order, contiguous row blocks). Large calls are fanned out over
+//! `util::threads::global_threads()` scoped threads by *output-row blocks*,
+//! which keeps every output element's accumulation order identical to the
+//! single-thread path — results are bitwise identical at any thread count.
+//! Good enough that the pure-rust oracle can drive the large Table-II
+//! sweeps; the AOT/XLA path remains the production hot path.
+
+use crate::util::threads;
+
+/// Only fan out when a call is worth a thread spawn: below this many
+/// multiply-adds the serial kernel wins.
+const PAR_FLOP_THRESHOLD: usize = 1 << 24;
+
+/// Number of row blocks to split `rows` output rows into for a call of
+/// `flops` multiply-adds (1 = stay serial). Consults the thread-local
+/// budget, which `exec::Engine` pins to 1 inside its device workers — so
+/// per-device train steps never nest a second fan-out (no threads² under
+/// the engine), and `TrainerConfig::threads` caps eval-path GEMMs too.
+fn row_blocks(rows: usize, flops: usize) -> usize {
+    let t = threads::local_budget();
+    if t <= 1 || rows < 2 || flops < PAR_FLOP_THRESHOLD {
+        1
+    } else {
+        t.min(rows)
+    }
+}
 
 /// c[m,n] += a[m,k] * b[k,n] (row-major).
 pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    let blocks = row_blocks(m, m * k * n);
+    if blocks <= 1 {
+        return gemm_block(m, k, n, a, b, c);
+    }
+    let rows_per = m.div_ceil(blocks);
+    std::thread::scope(|s| {
+        for (bi, cc) in c.chunks_mut(rows_per * n).enumerate() {
+            let rows = cc.len() / n;
+            let lo = bi * rows_per;
+            let aa = &a[lo * k..(lo + rows) * k];
+            s.spawn(move || gemm_block(rows, k, n, aa, b, cc));
+        }
+    });
+}
+
+fn gemm_block(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
@@ -25,18 +64,47 @@ pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
 }
 
 /// c[k,n] += a[m,k]^T * d[m,n]  (weight gradient: x^T dy).
+///
+/// Parallel split is over blocks of c's rows (the k dimension); each block
+/// scans all m samples in order, so per-element accumulation order matches
+/// the serial kernel exactly.
 pub fn gemm_at(m: usize, k: usize, n: usize, a: &[f32], d: &[f32], c: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(d.len(), m * n);
     debug_assert_eq!(c.len(), k * n);
+    let blocks = row_blocks(k, m * k * n);
+    if blocks <= 1 {
+        return gemm_at_block(m, 0, k, k, n, a, d, c);
+    }
+    let rows_per = k.div_ceil(blocks);
+    std::thread::scope(|s| {
+        for (bi, cc) in c.chunks_mut(rows_per * n).enumerate() {
+            let rows = cc.len() / n;
+            let lo = bi * rows_per;
+            s.spawn(move || gemm_at_block(m, lo, rows, k, n, a, d, cc));
+        }
+    });
+}
+
+/// One kk-block of `gemm_at`: `c_block` holds rows `k_lo..k_lo+k_rows` of c.
+fn gemm_at_block(
+    m: usize,
+    k_lo: usize,
+    k_rows: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    d: &[f32],
+    c_block: &mut [f32],
+) {
     for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
+        let aseg = &a[i * k + k_lo..i * k + k_lo + k_rows];
         let drow = &d[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
+        for (kk, &av) in aseg.iter().enumerate() {
             if av == 0.0 {
                 continue;
             }
-            let crow = &mut c[kk * n..(kk + 1) * n];
+            let crow = &mut c_block[kk * n..(kk + 1) * n];
             for j in 0..n {
                 crow[j] += av * drow[j];
             }
@@ -49,6 +117,22 @@ pub fn gemm_bt(m: usize, k: usize, n: usize, d: &[f32], b: &[f32], c: &mut [f32]
     debug_assert_eq!(d.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * k);
+    let blocks = row_blocks(m, m * k * n);
+    if blocks <= 1 {
+        return gemm_bt_block(m, k, n, d, b, c);
+    }
+    let rows_per = m.div_ceil(blocks);
+    std::thread::scope(|s| {
+        for (bi, cc) in c.chunks_mut(rows_per * k).enumerate() {
+            let rows = cc.len() / k;
+            let lo = bi * rows_per;
+            let dd = &d[lo * n..(lo + rows) * n];
+            s.spawn(move || gemm_bt_block(rows, k, n, dd, b, cc));
+        }
+    });
+}
+
+fn gemm_bt_block(m: usize, k: usize, n: usize, d: &[f32], b: &[f32], c: &mut [f32]) {
     for i in 0..m {
         let drow = &d[i * n..(i + 1) * n];
         let crow = &mut c[i * k..(i + 1) * k];
@@ -143,5 +227,65 @@ mod tests {
         let mut c = vec![1.0f32; 1];
         gemm(1, 1, 1, &[2.0], &[3.0], &mut c);
         assert_eq!(c[0], 7.0);
+    }
+
+    /// Forcing the blocked path (by calling the block kernels directly on a
+    /// split) must be bitwise identical to the serial kernel — the
+    /// determinism invariant the threaded dispatch relies on.
+    #[test]
+    fn blocked_kernels_bitwise_equal_serial() {
+        let (m, k, n) = (32, 24, 17);
+        let a = filled(m * k, 7);
+        let b = filled(k * n, 8);
+        let d = filled(m * n, 9);
+
+        // gemm: split rows of c
+        let mut serial = vec![0f32; m * n];
+        gemm_block(m, k, n, &a, &b, &mut serial);
+        let mut split = vec![0f32; m * n];
+        let rows = 10;
+        for (bi, cc) in split.chunks_mut(rows * n).enumerate() {
+            let r = cc.len() / n;
+            let lo = bi * rows;
+            gemm_block(r, k, n, &a[lo * k..(lo + r) * k], &b, cc);
+        }
+        assert_eq!(serial, split);
+
+        // gemm_at: split rows of c (the k dimension)
+        let mut serial = vec![0f32; k * n];
+        gemm_at_block(m, 0, k, k, n, &a, &d, &mut serial);
+        let mut split = vec![0f32; k * n];
+        let rows = 7;
+        for (bi, cc) in split.chunks_mut(rows * n).enumerate() {
+            let r = cc.len() / n;
+            gemm_at_block(m, bi * rows, r, k, n, &a, &d, cc);
+        }
+        assert_eq!(serial, split);
+
+        // gemm_bt: split rows of c
+        let mut serial = vec![0f32; m * k];
+        gemm_bt_block(m, k, n, &d, &b, &mut serial);
+        let mut split = vec![0f32; m * k];
+        let rows = 9;
+        for (bi, cc) in split.chunks_mut(rows * k).enumerate() {
+            let r = cc.len() / k;
+            let lo = bi * rows;
+            gemm_bt_block(r, k, n, &d[lo * n..(lo + r) * n], &b, cc);
+        }
+        assert_eq!(serial, split);
+    }
+
+    /// A call big enough to cross the parallel threshold still matches the
+    /// serial block kernel exactly.
+    #[test]
+    fn parallel_dispatch_bitwise_equal_serial() {
+        let (m, k, n) = (512, 192, 256); // 25M madds > PAR_FLOP_THRESHOLD
+        let a = filled(m * k, 11);
+        let b = filled(k * n, 12);
+        let mut par = vec![0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut par);
+        let mut ser = vec![0f32; m * n];
+        gemm_block(m, k, n, &a, &b, &mut ser);
+        assert_eq!(par, ser);
     }
 }

@@ -6,3 +6,4 @@ pub mod linalg;
 pub mod rng;
 pub mod special;
 pub mod stats;
+pub mod threads;

@@ -37,6 +37,17 @@ impl Pcg {
         Pcg::new(s ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15), tag)
     }
 
+    /// Counter-derived stream for device `device` in period `period` of a
+    /// run seeded with `seed`. Unlike `fork`, no RNG state is consumed:
+    /// the stream depends only on the three coordinates, so per-device
+    /// sampling is identical no matter which thread runs the device or in
+    /// which order the fleet executes (the exec-engine invariant).
+    pub fn for_device(seed: u64, period: u64, device: u64) -> Pcg {
+        let state = splitmix64(seed)
+            .wrapping_add(splitmix64(period.wrapping_mul(0xa24b_aed4_963e_e407)));
+        Pcg::new(splitmix64(state ^ device.wrapping_mul(0x9e37_79b9_7f4a_7c15)), device)
+    }
+
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -142,6 +153,16 @@ fn mul_hi_lo(a: u64, b: u64) -> (u64, u64) {
     ((wide >> 64) as u64, wide as u64)
 }
 
+/// SplitMix64 finalizer (Steele et al. 2014) — bijective avalanche mix used
+/// to turn correlated (seed, period, device) coordinates into well-separated
+/// PCG seeds.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +182,32 @@ mod tests {
         let mut b = Pcg::seeded(2);
         let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
         assert!(same < 3);
+    }
+
+    #[test]
+    fn for_device_is_replayable_and_distinct() {
+        // same coordinates -> identical stream
+        let mut a = Pcg::for_device(7, 3, 1);
+        let mut b = Pcg::for_device(7, 3, 1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // any coordinate change -> a different stream
+        for (p, d) in [(3u64, 2u64), (4, 1), (3, 0)] {
+            let mut a = Pcg::for_device(7, 3, 1);
+            let mut c = Pcg::for_device(7, p, d);
+            let same = (0..100).filter(|_| a.next_u32() == c.next_u32()).count();
+            assert!(same < 3, "period {p} device {d}");
+        }
+    }
+
+    #[test]
+    fn splitmix_avalanches() {
+        // neighbouring inputs land far apart
+        let a = splitmix64(0);
+        let b = splitmix64(1);
+        assert_ne!(a, b);
+        assert!((a ^ b).count_ones() > 10);
     }
 
     #[test]

@@ -1,0 +1,107 @@
+//! Crate-wide worker-thread knob for the parallel execution paths
+//! (`exec::Engine` device fan-out, `util::linalg` row-blocked GEMM).
+//!
+//! The count is a *cap on concurrency*, never a semantic input: every
+//! parallel path in the crate is required to produce bitwise-identical
+//! results at any thread count (see `tests/exec_determinism.rs`). A value
+//! of 0 means "auto" — use every available core.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Configured global thread count (0 = auto). Set once at startup by the
+/// CLI `--threads` flag / `train.threads` config key.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread parallelism budget override (0 = unset, fall back to the
+    /// global knob). `exec::Engine` sets this to 1 inside its workers so
+    /// nested code (the linalg row-blocked GEMMs) stays serial instead of
+    /// spawning threads² under the device fan-out.
+    static LOCAL_BUDGET: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Number of logical cores the host exposes (>= 1).
+pub fn available() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a configured count: 0 = all available cores.
+pub fn resolve(threads: usize) -> usize {
+    if threads == 0 {
+        available()
+    } else {
+        threads
+    }
+}
+
+/// Set the crate-wide default thread count (0 = auto).
+pub fn set_global_threads(n: usize) {
+    THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The crate-wide default thread count, resolved (always >= 1).
+pub fn global_threads() -> usize {
+    resolve(THREADS.load(Ordering::Relaxed))
+}
+
+/// The parallelism budget for the current thread (always >= 1): the
+/// innermost `with_budget` override, else the global knob. Nested parallel
+/// code (linalg GEMM blocking) must consult this, not `global_threads`.
+pub fn local_budget() -> usize {
+    let b = LOCAL_BUDGET.with(Cell::get);
+    if b == 0 {
+        global_threads()
+    } else {
+        b
+    }
+}
+
+/// Run `f` with this thread's parallelism budget set to `resolve(n)`,
+/// restoring the previous budget afterwards.
+pub fn with_budget<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let prev = LOCAL_BUDGET.with(|c| {
+        let prev = c.get();
+        c.set(resolve(n).max(1));
+        prev
+    });
+    let out = f();
+    LOCAL_BUDGET.with(|c| c.set(prev));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn available_positive() {
+        assert!(available() >= 1);
+    }
+
+    #[test]
+    fn resolve_auto_and_explicit() {
+        assert_eq!(resolve(0), available());
+        assert_eq!(resolve(3), 3);
+    }
+
+    #[test]
+    fn global_default_is_auto() {
+        // other tests may race on the global; only check it resolves >= 1
+        assert!(global_threads() >= 1);
+    }
+
+    #[test]
+    fn budget_scopes_and_nests() {
+        let outer = local_budget();
+        assert!(outer >= 1);
+        let inner = with_budget(1, || {
+            let one = local_budget();
+            let nested = with_budget(5, local_budget);
+            (one, nested)
+        });
+        assert_eq!(inner, (1, 5));
+        // restored after the scope
+        assert_eq!(local_budget(), outer);
+    }
+}

@@ -1,0 +1,163 @@
+//! The exec engine's core invariant: identical numerics at any thread
+//! count. Running the same configuration with 1, 2, and 8 worker threads
+//! must produce bitwise-identical `TrainLog` records — batch sampling uses
+//! counter-derived per-(seed, period, device) RNG streams and every
+//! cross-device reduction happens in fixed device order, so thread
+//! scheduling can never leak into results.
+
+use feel::coordinator::{HostBackend, Scheme, TrainLog, Trainer, TrainerConfig};
+use feel::data::{generate, Partition, SynthConfig};
+use feel::device::paper_cpu_fleet;
+use feel::grad::Aggregator;
+use feel::util::rng::Pcg;
+use feel::wireless::CellConfig;
+
+fn run_with_threads(scheme: Scheme, threads: usize, periods: usize) -> TrainLog {
+    let cfg = SynthConfig { dim: 24, ..Default::default() };
+    let train = generate(&cfg, 800, 1);
+    let test = generate(&cfg, 200, 1);
+    let mut rng = Pcg::seeded(2);
+    let fleet = paper_cpu_fleet(4, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+    let be = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+    let tc = TrainerConfig { scheme, threads, eval_every: 4, ..Default::default() };
+    let mut tr = Trainer::new(tc, fleet, &train, &test, Partition::Iid, &be).unwrap();
+    tr.run(periods).unwrap();
+    tr.log.clone()
+}
+
+fn assert_bitwise_equal(a: &TrainLog, b: &TrainLog, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: period count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        let p = x.period;
+        assert_eq!(x.period, y.period, "{label} p{p}");
+        assert_eq!(x.b_total, y.b_total, "{label} p{p}: b_total");
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{label} p{p}: train_loss {} vs {}",
+            x.train_loss,
+            y.train_loss
+        );
+        assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits(), "{label} p{p}: sim_time");
+        assert_eq!(x.t_period.to_bits(), y.t_period.to_bits(), "{label} p{p}: t_period");
+        assert_eq!(x.lr.to_bits(), y.lr.to_bits(), "{label} p{p}: lr");
+        assert_eq!(
+            x.efficiency.to_bits(),
+            y.efficiency.to_bits(),
+            "{label} p{p}: efficiency"
+        );
+        assert_eq!(
+            x.test_loss.map(f64::to_bits),
+            y.test_loss.map(f64::to_bits),
+            "{label} p{p}: test_loss"
+        );
+        assert_eq!(
+            x.test_acc.map(f64::to_bits),
+            y.test_acc.map(f64::to_bits),
+            "{label} p{p}: test_acc"
+        );
+    }
+}
+
+#[test]
+fn proposed_identical_at_1_2_8_threads() {
+    let base = run_with_threads(Scheme::Proposed, 1, 10);
+    for t in [2usize, 8] {
+        let par = run_with_threads(Scheme::Proposed, t, 10);
+        assert_bitwise_equal(&base, &par, &format!("proposed t={t}"));
+    }
+    // and the run actually learns, so the equality is not vacuous
+    assert!(base.records[9].train_loss < base.records[0].train_loss);
+}
+
+#[test]
+fn gradient_fl_identical_across_threads() {
+    let base = run_with_threads(Scheme::GradientFl, 1, 4);
+    let par = run_with_threads(Scheme::GradientFl, 8, 4);
+    assert_bitwise_equal(&base, &par, "gradient_fl");
+}
+
+#[test]
+fn model_fl_identical_across_threads() {
+    let base = run_with_threads(Scheme::ModelFl { local_batch: 32 }, 1, 4);
+    let par = run_with_threads(Scheme::ModelFl { local_batch: 32 }, 8, 4);
+    assert_bitwise_equal(&base, &par, "model_fl");
+}
+
+#[test]
+fn individual_identical_across_threads() {
+    // exercises the per-device eval fan-out too (eval_every fires)
+    let base = run_with_threads(Scheme::Individual { local_batch: 64 }, 1, 6);
+    let par = run_with_threads(Scheme::Individual { local_batch: 64 }, 8, 6);
+    assert_bitwise_equal(&base, &par, "individual");
+}
+
+/// Aggregator shard-merge property: for integer-valued contributions
+/// (exact in f64), merging per-shard aggregators in device order equals the
+/// streaming device-order `add` path bitwise; for arbitrary floats the two
+/// groupings agree to f64 rounding.
+#[test]
+fn aggregator_shard_merge_property() {
+    let mut rng = Pcg::seeded(42);
+    for trial in 0..20u64 {
+        let p = 64;
+        let k = 2 + (trial % 7) as usize;
+        let shard_size = 1 + (trial % 3) as usize;
+        // integer-valued case: exact equality
+        let grads: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..p).map(|_| (rng.below(41) as f32) - 20.0).collect())
+            .collect();
+        let weights: Vec<f64> = (0..k).map(|_| (1 + rng.below(64)) as f64).collect();
+
+        let mut stream = Aggregator::new(p);
+        for (g, &w) in grads.iter().zip(&weights) {
+            stream.add(g, w).unwrap();
+        }
+        let shards: Vec<Aggregator> = grads
+            .chunks(shard_size)
+            .zip(weights.chunks(shard_size))
+            .map(|(gs, ws)| {
+                let mut a = Aggregator::new(p);
+                for (g, &w) in gs.iter().zip(ws) {
+                    a.add(g, w).unwrap();
+                }
+                a
+            })
+            .collect();
+        let merged = Aggregator::reduce_shards(shards).unwrap();
+        assert_eq!(merged.contributions(), stream.contributions(), "trial {trial}");
+        assert_eq!(
+            merged.finish().unwrap(),
+            stream.finish().unwrap(),
+            "trial {trial}: integer shard-merge must be exact"
+        );
+
+        // float case: agreement to f64 rounding
+        let grads: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..p).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut stream = Aggregator::new(p);
+        for (g, &w) in grads.iter().zip(&weights) {
+            stream.add(g, w).unwrap();
+        }
+        let shards: Vec<Aggregator> = grads
+            .chunks(shard_size)
+            .zip(weights.chunks(shard_size))
+            .map(|(gs, ws)| {
+                let mut a = Aggregator::new(p);
+                for (g, &w) in gs.iter().zip(ws) {
+                    a.add(g, w).unwrap();
+                }
+                a
+            })
+            .collect();
+        let merged = Aggregator::reduce_shards(shards).unwrap().finish().unwrap();
+        let streamed = stream.finish().unwrap();
+        for (a, b) in merged.iter().zip(&streamed) {
+            assert!(
+                (a - b).abs() <= 1e-6 * (1.0 + a.abs()),
+                "trial {trial}: {a} vs {b}"
+            );
+        }
+    }
+}

@@ -136,7 +136,7 @@ fn evaluate_matches_host_loss() {
     let (hl, hc) = host.loss(&params, &x, &y, &w);
     assert!((out.loss - hl).abs() < 1e-4 * (1.0 + hl.abs()));
     assert_eq!(out.correct, hc);
-    assert!(out.correct >= 0.0 && out.correct <= eb as f32);
+    assert!((0.0..=eb as f32).contains(&out.correct));
 }
 
 #[test]

@@ -158,11 +158,11 @@ fn trainer_full_stack_noniid_vs_iid_gap() {
     let train = generate(&cfg, 1200, 5);
     let test = generate(&cfg, 400, 5);
     let run = |scheme: Scheme, part: Partition| -> f64 {
-        let mut be = HostBackend::for_model("mini_res", 32, 10, 1).unwrap();
+        let be = HostBackend::for_model("mini_res", 32, 10, 1).unwrap();
         let mut rng = Pcg::seeded(9);
         let fleet = paper_cpu_fleet(6, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
         let tc = TrainerConfig { scheme, eval_every: 0, ..Default::default() };
-        let mut tr = Trainer::new(tc, fleet, &train, &test, part, &mut be).unwrap();
+        let mut tr = Trainer::new(tc, fleet, &train, &test, part, &be).unwrap();
         tr.run(60).unwrap();
         tr.evaluate().unwrap().1
     };
@@ -192,13 +192,13 @@ scheme = "proposed"
 eval_every = 1
 "#;
     let exp = Experiment::from_config(&Config::parse(src).unwrap()).unwrap();
-    let mut be = HostBackend::for_model(&exp.model, exp.synth.dim, exp.synth.classes, 0).unwrap();
+    let be = HostBackend::for_model(&exp.model, exp.synth.dim, exp.synth.classes, 0).unwrap();
     let train = generate(&exp.synth, exp.train_n, 0);
     let test = generate(&exp.synth, exp.test_n, 0);
     let mut rng = Pcg::seeded(0);
     let fleet = exp.fleet(&mut rng);
     let mut tr =
-        Trainer::new(exp.trainer.clone(), fleet, &train, &test, exp.partition, &mut be).unwrap();
+        Trainer::new(exp.trainer.clone(), fleet, &train, &test, exp.partition, &be).unwrap();
     tr.run(3).unwrap();
     assert_eq!(tr.log.records.len(), 3);
     assert!(tr.log.records[0].test_acc.is_some());
