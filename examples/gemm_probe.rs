@@ -1,14 +1,40 @@
+//! Quick serial-kernel probe: packed-tile gemm vs the frozen pre-packing
+//! kernel on a host-model-shaped call (see benches/bench_gemm.rs for the
+//! full sweep + JSON baseline).
+
 fn main() {
     use std::time::Instant;
-    use feel::util::linalg::gemm;
+    use feel::util::linalg::{gemm, gemm_ref};
     use feel::util::rng::Pcg;
+    use feel::util::threads;
+
     let mut r = Pcg::seeded(1);
     let (m, k, n) = (128, 768, 256);
-    let a: Vec<f32> = (0..m*k).map(|_| r.normal() as f32).collect();
-    let b: Vec<f32> = (0..k*n).map(|_| r.normal() as f32).collect();
-    let mut c = vec![0f32; m*n];
+    let a: Vec<f32> = (0..m * k).map(|_| r.normal() as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| r.normal() as f32).collect();
+    let mut c = vec![0f32; m * n];
+    let flops = 2.0 * (m * k * n) as f64;
+
     let t = Instant::now();
-    for _ in 0..50 { c.iter_mut().for_each(|x| *x = 0.0); gemm(m, k, n, &a, &b, &mut c); }
+    for _ in 0..50 {
+        c.iter_mut().for_each(|x| *x = 0.0);
+        gemm_ref(m, k, n, &a, &b, &mut c);
+    }
+    let dt_ref = t.elapsed().as_secs_f64() / 50.0;
+
+    let t = Instant::now();
+    for _ in 0..50 {
+        c.iter_mut().for_each(|x| *x = 0.0);
+        threads::with_budget(1, || gemm(m, k, n, &a, &b, &mut c));
+    }
     let dt = t.elapsed().as_secs_f64() / 50.0;
-    println!("gemm {m}x{k}x{n}: {:.3} ms, {:.2} GFLOP/s", dt*1e3, 2.0*(m*k*n) as f64/dt/1e9);
+
+    println!(
+        "gemm {m}x{k}x{n}: ref {:.3} ms ({:.2} GFLOP/s) -> packed {:.3} ms ({:.2} GFLOP/s), {:.2}x",
+        dt_ref * 1e3,
+        flops / dt_ref / 1e9,
+        dt * 1e3,
+        flops / dt / 1e9,
+        dt_ref / dt
+    );
 }

@@ -20,9 +20,11 @@ use feel::util::rng::Pcg;
 use feel::util::threads;
 
 const DIM: usize = 32;
-const MEASURE_PERIODS: usize = 4;
 
-fn periods_per_sec(k: usize, worker_threads: usize) -> f64 {
+/// (periods/sec, serial fraction): throughput plus how much of the period
+/// wall time the coordinator's serial sections (solver + shard combine +
+/// apply_update) consumed — the ROADMAP "perf trajectory" pair.
+fn periods_per_sec(k: usize, worker_threads: usize, measure_periods: usize) -> (f64, f64) {
     let mut exp = Experiment::default();
     exp.k = k;
     exp.synth.dim = DIM;
@@ -38,27 +40,38 @@ fn periods_per_sec(k: usize, worker_threads: usize) -> f64 {
     let mut rng = Pcg::seeded(3);
     let fleet = exp.fleet(&mut rng);
     let mut tr = Trainer::new(cfg, fleet, &train, &test, Partition::Iid, &be).unwrap();
-    tr.step_period().unwrap(); // warmup (allocators, page faults)
+    tr.step_period().unwrap(); // warmup (allocators, workspace pools, page faults)
+    let warm = tr.log.wall;
     let t0 = Instant::now();
-    tr.run(MEASURE_PERIODS).unwrap();
-    MEASURE_PERIODS as f64 / t0.elapsed().as_secs_f64()
+    tr.run(measure_periods).unwrap();
+    let pps = measure_periods as f64 / t0.elapsed().as_secs_f64();
+    // serial fraction over the measured periods only (subtract warmup)
+    let serial = (tr.log.wall.solver_secs + tr.log.wall.reduce_secs)
+        - (warm.solver_secs + warm.reduce_secs);
+    let total = tr.log.wall.total_secs - warm.total_secs;
+    (pps, if total > 0.0 { serial / total } else { 0.0 })
 }
 
 fn main() {
+    let quick = std::env::var("FEEL_BENCH_QUICK").is_ok();
+    let measure_periods = if quick { 2 } else { 4 };
     let cores = threads::available();
     let mut counts = vec![1usize, 2];
     if cores > 2 {
         counts.push(cores);
     }
     println!("\n== fleet_scale (cores = {cores}) ==");
-    println!("{:<10} {:>8} {:>16} {:>10}", "config", "threads", "periods/sec", "speedup");
+    println!(
+        "{:<10} {:>8} {:>16} {:>10} {:>10}",
+        "config", "threads", "periods/sec", "speedup", "serial"
+    );
 
     let mut rows: Vec<Json> = Vec::new();
     let mut speedup_k64 = 1.0f64;
     for &k in &[4usize, 16, 64] {
         let mut base = 0.0f64;
         for &t in &counts {
-            let pps = periods_per_sec(k, t);
+            let (pps, serial_fraction) = periods_per_sec(k, t, measure_periods);
             if t == 1 {
                 base = pps;
             }
@@ -66,12 +79,20 @@ fn main() {
             if k == 64 {
                 speedup_k64 = speedup_k64.max(speedup);
             }
-            println!("{:<10} {:>8} {:>16.3} {:>9.2}x", format!("k{k}"), t, pps, speedup);
+            println!(
+                "{:<10} {:>8} {:>16.3} {:>9.2}x {:>9.1}%",
+                format!("k{k}"),
+                t,
+                pps,
+                speedup,
+                serial_fraction * 100.0
+            );
             rows.push(obj(vec![
                 ("k", num(k as f64)),
                 ("threads", num(t as f64)),
                 ("periods_per_sec", num(pps)),
                 ("speedup_vs_1t", num(speedup)),
+                ("serial_fraction", num(serial_fraction)),
             ]));
         }
     }
@@ -82,7 +103,8 @@ fn main() {
         ("model", s("mini_res")),
         ("dim", num(DIM as f64)),
         ("cores", num(cores as f64)),
-        ("measure_periods", num(MEASURE_PERIODS as f64)),
+        ("quick", Json::Bool(quick)),
+        ("measure_periods", num(measure_periods as f64)),
         ("best_speedup_k64", num(speedup_k64)),
         ("results", Json::Arr(rows)),
     ]);

@@ -1,0 +1,191 @@
+//! GEMM kernel bench: the packed-tile microkernel (serial and threaded)
+//! vs `gemm_ref`, the frozen pre-packing kernel, across square sizes and
+//! the host-model's actual layer shapes. The acceptance bar for the
+//! packed kernel is ≥ 3× over `gemm_ref` at 256³ and above (serial vs
+//! serial, so the comparison isolates the kernel, not the fan-out).
+//!
+//! Emits a `BENCH_gemm.json` baseline next to the Cargo.toml for the perf
+//! trajectory across PRs. `FEEL_BENCH_QUICK=1` cuts iterations for CI
+//! smoke runs.
+
+use std::time::Instant;
+
+use feel::util::json::{num, obj, s, Json};
+use feel::util::linalg::{gemm, gemm_at, gemm_bt, gemm_ref};
+use feel::util::rng::Pcg;
+use feel::util::threads;
+
+fn filled(len: usize, seed: u64) -> Vec<f32> {
+    let mut r = Pcg::seeded(seed);
+    (0..len).map(|_| r.normal() as f32).collect()
+}
+
+/// Mean seconds per call over `iters` timed iterations (after 1 warmup).
+fn time_it<F: FnMut()>(mut f: F, iters: usize) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Iteration count targeting a roughly constant measurement window.
+fn iters_for(flops: usize, quick: bool) -> usize {
+    let budget = if quick { 5e7 } else { 1e9 };
+    ((budget / flops as f64) as usize).clamp(2, 200)
+}
+
+fn main() {
+    let quick = std::env::var("FEEL_BENCH_QUICK").is_ok();
+    // square sweep + the mini_dense/mini_res/mini_mobile layer shapes the
+    // host oracle actually runs (batch 128)
+    let shapes: &[(usize, usize, usize, &str)] = &[
+        (64, 64, 64, "square"),
+        (128, 128, 128, "square"),
+        (256, 256, 256, "square"),
+        (384, 384, 384, "square"),
+        (512, 512, 512, "square"),
+        (128, 588, 192, "mini_dense blk"),
+        (128, 256, 256, "mini_res body"),
+        (128, 384, 384, "mini_mobile body"),
+    ];
+
+    println!("\n== gemm (cores = {}) ==", threads::available());
+    println!(
+        "{:<24} {:>12} {:>12} {:>12} {:>9} {:>10}",
+        "shape", "ref", "packed", "packed-mt", "speedup", "GFLOP/s"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut speedup_256 = 0.0f64;
+    for &(m, k, n, label) in shapes {
+        let a = filled(m * k, 1);
+        let b = filled(k * n, 2);
+        let mut c = vec![0f32; m * n];
+        let flops = 2 * m * k * n;
+        let iters = iters_for(m * k * n, quick);
+
+        let t_ref = time_it(
+            || {
+                c.iter_mut().for_each(|x| *x = 0.0);
+                gemm_ref(m, k, n, &a, &b, &mut c);
+                std::hint::black_box(&c);
+            },
+            iters,
+        );
+        let t_packed = time_it(
+            || {
+                c.iter_mut().for_each(|x| *x = 0.0);
+                threads::with_budget(1, || gemm(m, k, n, &a, &b, &mut c));
+                std::hint::black_box(&c);
+            },
+            iters,
+        );
+        let t_mt = time_it(
+            || {
+                c.iter_mut().for_each(|x| *x = 0.0);
+                gemm(m, k, n, &a, &b, &mut c);
+                std::hint::black_box(&c);
+            },
+            iters,
+        );
+        let speedup = t_ref / t_packed;
+        if (m, k, n) == (256, 256, 256) {
+            speedup_256 = speedup;
+        }
+        let gflops = flops as f64 / t_packed / 1e9;
+        println!(
+            "{:<24} {:>10.2}ms {:>10.2}ms {:>10.2}ms {:>8.2}x {:>10.2}",
+            format!("{m}x{k}x{n} {label}"),
+            t_ref * 1e3,
+            t_packed * 1e3,
+            t_mt * 1e3,
+            speedup,
+            gflops,
+        );
+        rows.push(obj(vec![
+            ("op", Json::Str("gemm".into())),
+            ("label", s(label)),
+            ("m", num(m as f64)),
+            ("k", num(k as f64)),
+            ("n", num(n as f64)),
+            ("ref_ms", num(t_ref * 1e3)),
+            ("packed_ms", num(t_packed * 1e3)),
+            ("packed_mt_ms", num(t_mt * 1e3)),
+            ("speedup_vs_ref", num(speedup)),
+            ("gflops_serial", num(gflops)),
+        ]));
+    }
+
+    // the two transposed orientations at the acceptance size (serial)
+    let (m, k, n) = (256usize, 256usize, 256usize);
+    let a = filled(m * k, 3);
+    let d = filled(m * n, 4);
+    let b = filled(k * n, 5);
+    let iters = iters_for(m * k * n, quick);
+    let mut c_at = vec![0f32; k * n];
+    let t_at = time_it(
+        || {
+            c_at.iter_mut().for_each(|x| *x = 0.0);
+            threads::with_budget(1, || gemm_at(m, k, n, &a, &d, &mut c_at));
+            std::hint::black_box(&c_at);
+        },
+        iters,
+    );
+    let mut c_bt = vec![0f32; m * k];
+    let t_bt = time_it(
+        || {
+            c_bt.iter_mut().for_each(|x| *x = 0.0);
+            threads::with_budget(1, || gemm_bt(m, k, n, &d, &b, &mut c_bt));
+            std::hint::black_box(&c_bt);
+        },
+        iters,
+    );
+    let flops = 2.0 * (m * k * n) as f64;
+    println!(
+        "{:<24} {:>23} {:>12} {:>9} {:>10.2}",
+        "256^3 gemm_at (x^T dy)",
+        "",
+        format!("{:.2}ms", t_at * 1e3),
+        "",
+        flops / t_at / 1e9
+    );
+    println!(
+        "{:<24} {:>23} {:>12} {:>9} {:>10.2}",
+        "256^3 gemm_bt (dy W^T)",
+        "",
+        format!("{:.2}ms", t_bt * 1e3),
+        "",
+        flops / t_bt / 1e9
+    );
+    rows.push(obj(vec![
+        ("op", Json::Str("gemm_at".into())),
+        ("m", num(m as f64)),
+        ("k", num(k as f64)),
+        ("n", num(n as f64)),
+        ("packed_ms", num(t_at * 1e3)),
+        ("gflops_serial", num(flops / t_at / 1e9)),
+    ]));
+    rows.push(obj(vec![
+        ("op", Json::Str("gemm_bt".into())),
+        ("m", num(m as f64)),
+        ("k", num(k as f64)),
+        ("n", num(n as f64)),
+        ("packed_ms", num(t_bt * 1e3)),
+        ("gflops_serial", num(flops / t_bt / 1e9)),
+    ]));
+
+    let out = obj(vec![
+        ("bench", s("gemm")),
+        ("cores", num(threads::available() as f64)),
+        ("quick", Json::Bool(quick)),
+        ("speedup_256_vs_ref", num(speedup_256)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_gemm.json";
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("\nbaseline -> {path} (256^3 speedup {speedup_256:.2}x vs ref)"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

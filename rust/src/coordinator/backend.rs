@@ -14,7 +14,7 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::hostmodel::HostModel;
+use crate::runtime::hostmodel::{HostModel, Workspace};
 use crate::runtime::Runtime;
 
 /// One train-step result.
@@ -38,6 +38,21 @@ pub trait Backend: Send + Sync {
     fn init_params(&self) -> Result<Vec<f32>>;
     /// Forward/backward on an exact batch.
     fn train_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<Step>;
+    /// Forward/backward drawing intermediates from a caller-owned
+    /// [`Workspace`] (one per exec-engine worker slot), so steady-state
+    /// steps stop hitting the allocator. Backends without host-side
+    /// intermediates (PJRT) ignore the workspace; results are identical to
+    /// `train_step` either way.
+    fn train_step_ws(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        ws: &mut Workspace,
+    ) -> Result<Step> {
+        let _ = ws;
+        self.train_step(params, x, y)
+    }
     /// SGD update.
     fn apply_update(&self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>>;
     /// Mean loss + accuracy over a dataset.
@@ -201,8 +216,19 @@ impl Backend for HostBackend {
     }
 
     fn train_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<Step> {
-        let w = vec![1f32; y.len()];
-        let (grads, loss, correct) = self.model.train_step(params, x, y, &w);
+        self.train_step_ws(params, x, y, &mut Workspace::new())
+    }
+
+    fn train_step_ws(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        ws: &mut Workspace,
+    ) -> Result<Step> {
+        let w = ws.take_filled(y.len(), 1.0);
+        let (grads, loss, correct) = self.model.train_step_ws(params, x, y, &w, ws);
+        ws.recycle(w);
         Ok(Step { grads, loss, correct })
     }
 

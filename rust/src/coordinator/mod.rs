@@ -12,5 +12,5 @@ pub mod xi;
 
 pub use backend::{Backend, HostBackend, PjrtBackend};
 pub use scheme::{plan_period, Plan, Scheme};
-pub use trainer::{PeriodRecord, TrainLog, Trainer, TrainerConfig};
+pub use trainer::{PeriodRecord, TrainLog, Trainer, TrainerConfig, WallStats};
 pub use xi::XiEstimator;

@@ -7,6 +7,8 @@
 //! reductions happen here, in fixed device order, so numerics are
 //! bitwise-identical at any thread count.
 
+use std::time::Instant;
+
 use anyhow::{bail, Result};
 
 use super::backend::Backend;
@@ -92,10 +94,39 @@ pub struct PeriodRecord {
     pub efficiency: f64,
 }
 
+/// Wall-clock accounting of the coordinator's *serial* sections, summed
+/// over the run — the denominator-side of the ROADMAP "perf trajectory"
+/// item (the serial fraction is what caps periods/sec scaling at K = 64+).
+/// Wall times are measurement, not simulation: they never feed back into
+/// results and are excluded from the determinism contract.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WallStats {
+    /// channel draws + per-period planning (the paper's solver), seconds
+    pub solver_secs: f64,
+    /// shard combine + global apply_update / FedAvg, seconds
+    pub reduce_secs: f64,
+    /// total wall seconds spent inside `step_period`
+    pub total_secs: f64,
+}
+
+impl WallStats {
+    /// Fraction of period wall time spent in the serial coordinator
+    /// sections (0.0 when nothing has run yet).
+    pub fn serial_fraction(&self) -> f64 {
+        if self.total_secs > 0.0 {
+            (self.solver_secs + self.reduce_secs) / self.total_secs
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Whole-run log.
 #[derive(Clone, Debug, Default)]
 pub struct TrainLog {
     pub records: Vec<PeriodRecord>,
+    /// serial-fraction wall-clock accounting (see [`WallStats`])
+    pub wall: WallStats,
 }
 
 impl TrainLog {
@@ -180,6 +211,9 @@ pub struct Trainer<'a> {
     xi: XiEstimator,
     rng: Pcg,
     last_train_loss: Option<f64>,
+    /// long-lived server-side accumulator, reset each period (its p-sized
+    /// f64 buffer is allocated once per run, not once per round)
+    agg: Aggregator,
     pub log: TrainLog,
 }
 
@@ -206,6 +240,7 @@ impl<'a> Trainer<'a> {
         let params = backend.init_params()?;
         let xi = XiEstimator::new(cfg.xi_init, cfg.xi_alpha);
         let engine = Engine::new(cfg.threads);
+        let agg = Aggregator::new(p);
         Ok(Trainer {
             cfg,
             fleet,
@@ -219,6 +254,7 @@ impl<'a> Trainer<'a> {
             xi,
             rng,
             last_train_loss: None,
+            agg,
             log: TrainLog::default(),
         })
     }
@@ -233,10 +269,15 @@ impl<'a> Trainer<'a> {
     /// from a pre-trained model).
     pub fn warm_start(&mut self, steps: usize, b: usize, lr: f32) -> Result<()> {
         let n = self.train.len();
+        let budget = self.engine.threads();
         for _ in 0..steps {
             let idx = self.rng.sample_indices(n, b.min(n));
             let (x, y) = self.train.gather(&idx);
-            let s = self.backend.train_step(&self.server.params, &x, &y)?;
+            // centralized steps run on the coordinator thread: cap their
+            // GEMM fan-out at the trainer's budget, like evaluate() does
+            let s = crate::util::threads::with_budget(budget, || {
+                self.backend.train_step(&self.server.params, &x, &y)
+            })?;
             self.server.params =
                 self.backend.apply_update(&self.server.params, &s.grads, lr)?;
         }
@@ -300,6 +341,7 @@ impl<'a> Trainer<'a> {
 
     /// One full training period (paper steps 1–5).
     pub fn step_period(&mut self) -> Result<()> {
+        let t_step = Instant::now();
         let inst = self.period_instance()?;
         let shard_sizes: Vec<usize> = self.workers.iter().map(|w| w.shard_len()).collect();
         let plan = plan_period(
@@ -310,6 +352,7 @@ impl<'a> Trainer<'a> {
             self.cfg.eps,
             &mut self.rng,
         )?;
+        self.log.wall.solver_secs += t_step.elapsed().as_secs_f64();
         let b_total: usize = plan.batches.iter().sum();
         // eta = O(sqrt(B)) scaling (paper §III-A, refs [36][37]); capped at
         // 1x base so whole-shard schemes (gradient/model FL) don't blow up.
@@ -363,15 +406,22 @@ impl<'a> Trainer<'a> {
             test_acc,
             efficiency: if plan.t_period > 0.0 { dl / plan.t_period } else { 0.0 },
         });
+        self.log.wall.total_secs += t_step.elapsed().as_secs_f64();
         Ok(())
     }
 
     /// Steps 1–5 for gradient-exchange schemes. The per-device steps run in
-    /// parallel on the engine; aggregation reduces the returned
-    /// contributions in fixed device order (eq. 1, f64 accumulation).
+    /// parallel on the engine, with each engine worker folding its
+    /// contiguous device range into a local `Aggregator` shard (eq. 1, f64
+    /// accumulation, device order); the coordinator then folds the
+    /// ≤ `exec::MAX_AGG_SHARDS` shards — sequentially, still in device
+    /// order (never a pairwise tree: the f64 grouping is part of the
+    /// reproducibility contract) — into the long-lived server accumulator.
+    /// Shard boundaries depend only on K, so numerics are bitwise
+    /// identical at any thread count.
     /// Returns the batch-weighted train loss across devices.
     fn gradient_period(&mut self, plan: &Plan, lr: f32) -> Result<f64> {
-        let outcomes = exec::gradient_round(
+        let shards = exec::gradient_round_sharded(
             &self.engine,
             self.backend,
             &mut self.workers,
@@ -381,16 +431,18 @@ impl<'a> Trainer<'a> {
             self.cfg.seed,
             self.server.period as u64,
         )?;
-        let mut agg = Aggregator::new(self.server.p());
+        let t0 = Instant::now();
+        self.agg.reset();
         let mut loss_acc = 0f64;
         let mut w_acc = 0f64;
-        for o in &outcomes {
-            agg.add(&o.grad, o.weight)?;
-            loss_acc += o.loss * o.weight;
-            w_acc += o.weight;
+        for s in &shards {
+            self.agg.merge(&s.agg)?;
+            loss_acc += s.loss;
+            w_acc += s.weight;
         }
-        let global = agg.finish()?;
+        let global = self.agg.average()?;
         self.server.params = self.backend.apply_update(&self.server.params, &global, lr)?;
+        self.log.wall.reduce_secs += t0.elapsed().as_secs_f64();
         Ok(loss_acc / w_acc)
     }
 
@@ -416,7 +468,9 @@ impl<'a> Trainer<'a> {
             w_acc += o.weight;
             averaged.push((o.params, o.weight));
         }
+        let t0 = Instant::now();
         self.server.average_params(&averaged)?;
+        self.log.wall.reduce_secs += t0.elapsed().as_secs_f64();
         Ok(loss_acc / w_acc)
     }
 
@@ -606,6 +660,17 @@ mod tests {
         assert_eq!(tr.threads(), 3);
         tr.run(2).unwrap();
         assert_eq!(tr.log.records.len(), 2);
+    }
+
+    #[test]
+    fn wall_stats_accumulate() {
+        let log = run_scheme(Scheme::Proposed, 5);
+        assert!(log.wall.total_secs > 0.0);
+        assert!(log.wall.solver_secs > 0.0);
+        assert!(log.wall.reduce_secs > 0.0);
+        let f = log.wall.serial_fraction();
+        assert!(f > 0.0 && f < 1.0, "serial fraction {f}");
+        assert_eq!(WallStats::default().serial_fraction(), 0.0);
     }
 
     #[test]

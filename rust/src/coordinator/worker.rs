@@ -4,6 +4,7 @@
 
 use crate::compress::Sbc;
 use crate::data::DeviceData;
+use crate::runtime::hostmodel::Workspace;
 
 /// One device's training-loop state.
 pub struct Worker {
@@ -13,11 +14,14 @@ pub struct Worker {
     pub sbc: Option<Sbc>,
     /// local parameters for local-training schemes (None = uses global)
     pub local_params: Option<Vec<f32>>,
+    /// reusable train-step buffer arena: sized on the first step, then
+    /// steady-state steps stop allocating (see runtime::hostmodel)
+    pub scratch: Workspace,
 }
 
 impl Worker {
     pub fn new(id: usize, data: DeviceData, sbc: Option<Sbc>) -> Self {
-        Worker { id, data, sbc, local_params: None }
+        Worker { id, data, sbc, local_params: None, scratch: Workspace::new() }
     }
 
     /// Pass a gradient through the device's compressor (identity if none).

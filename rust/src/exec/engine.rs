@@ -37,28 +37,61 @@ impl Engine {
         R: Send,
         F: Fn(usize, &mut T) -> Result<R> + Sync,
     {
+        // an item is a chunk of one
+        self.run_chunked(items, 1, |k, _, ts| f(k, &mut ts[0]))
+    }
+
+    /// Run `f(ci, offset, chunk)` for every contiguous `chunk`-sized block
+    /// of `items`, in parallel, returning one result per chunk in chunk
+    /// order. `offset` is the index of the chunk's first item.
+    ///
+    /// Chunk boundaries are a pure function of `(items.len(), chunk)` —
+    /// never of the thread count — so callers that fold a chunk serially
+    /// (e.g. per-shard gradient aggregation) get identical fold groupings,
+    /// and therefore identical numerics, at any `--threads` value. Threads
+    /// only decide *which worker* runs a chunk, never what the chunk is.
+    pub fn run_chunked<T, R, F>(&self, items: &mut [T], chunk: usize, f: F) -> Result<Vec<R>>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, usize, &mut [T]) -> Result<R> + Sync,
+    {
         let n = items.len();
-        let threads = self.threads.min(n);
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let chunk = chunk.max(1);
+        let nchunks = n.div_ceil(chunk);
+        let threads = self.threads.min(nchunks);
         if threads <= 1 {
-            // single-worker path: per-device jobs also get a serial budget,
-            // so `threads = 1` means one thread, full stop
             return threads::with_budget(1, || {
-                items.iter_mut().enumerate().map(|(k, t)| f(k, t)).collect()
+                items
+                    .chunks_mut(chunk)
+                    .enumerate()
+                    .map(|(ci, ts)| f(ci, ci * chunk, ts))
+                    .collect()
             });
         }
-        let chunk = n.div_ceil(threads);
-        let mut slots: Vec<Option<Result<R>>> = Vec::with_capacity(n);
-        slots.resize_with(n, || None);
+        // contiguous runs of `per` whole chunks per worker thread
+        let per = nchunks.div_ceil(threads);
+        let mut slots: Vec<Option<Result<R>>> = Vec::with_capacity(nchunks);
+        slots.resize_with(nchunks, || None);
         std::thread::scope(|s| {
             let f = &f;
-            for (ci, (ts, outs)) in
-                items.chunks_mut(chunk).zip(slots.chunks_mut(chunk)).enumerate()
+            for (g, (group, outs)) in items
+                .chunks_mut(per * chunk)
+                .zip(slots.chunks_mut(per))
+                .enumerate()
             {
+                let base = g * per;
                 s.spawn(move || {
                     // budget 1: device jobs must not nest another fan-out
                     threads::with_budget(1, || {
-                        for (j, (t, o)) in ts.iter_mut().zip(outs.iter_mut()).enumerate() {
-                            *o = Some(f(ci * chunk + j, t));
+                        for (j, (ts, o)) in
+                            group.chunks_mut(chunk).zip(outs.iter_mut()).enumerate()
+                        {
+                            let ci = base + j;
+                            *o = Some(f(ci, ci * chunk, ts));
                         }
                     });
                 });
@@ -151,5 +184,58 @@ mod tests {
     fn zero_resolves_to_cores() {
         let e = Engine::new(0);
         assert!(e.threads() >= 1);
+    }
+
+    #[test]
+    fn chunked_results_identical_at_any_thread_count() {
+        // 17 items, chunk 3 -> chunks [0..3), [3..6), ..., [15..17)
+        let want: Vec<(usize, usize, usize)> = vec![
+            (0, 0, 3),
+            (1, 3, 3),
+            (2, 6, 3),
+            (3, 9, 3),
+            (4, 12, 3),
+            (5, 15, 2),
+        ];
+        for threads in [1usize, 2, 3, 8, 64] {
+            let e = Engine::new(threads);
+            let mut items: Vec<usize> = (0..17).collect();
+            let out = e
+                .run_chunked(&mut items, 3, |ci, off, ts| {
+                    // items land in the right chunk
+                    for (j, v) in ts.iter().enumerate() {
+                        assert_eq!(*v, off + j);
+                    }
+                    Ok((ci, off, ts.len()))
+                })
+                .unwrap();
+            assert_eq!(out, want, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn chunked_mutations_and_errors() {
+        let e = Engine::new(4);
+        let mut items = vec![0usize; 10];
+        e.run_chunked(&mut items, 4, |_, off, ts| {
+            for (j, v) in ts.iter_mut().enumerate() {
+                *v = off + j + 1;
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(items, (1..=10).collect::<Vec<_>>());
+
+        let mut items = vec![(); 9];
+        let r = e.run_chunked(&mut items, 2, |ci, _, _| {
+            if ci == 3 {
+                anyhow::bail!("shard {ci} failed")
+            }
+            Ok(ci)
+        });
+        assert!(r.unwrap_err().to_string().contains("shard 3"));
+
+        let mut empty: Vec<u8> = Vec::new();
+        assert!(e.run_chunked(&mut empty, 5, |_, _, _| Ok(())).unwrap().is_empty());
     }
 }

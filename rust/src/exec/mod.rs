@@ -14,10 +14,12 @@
 //! 1. per-device RNG streams are derived from `(seed, period, device_id)`
 //!    (`Pcg::for_device`), never from shared sampler state, so batch
 //!    selection cannot depend on execution order;
-//! 2. workers return their contributions and **all cross-device reduction
-//!    happens on the caller's thread in fixed device order** (f64
-//!    accumulation via `grad::Aggregator`);
-//! 3. results are collected into device-indexed slots, so thread
+//! 2. all cross-device reduction happens in fixed device order with f64
+//!    accumulation (`grad::Aggregator`). The gradient path folds devices
+//!    into per-shard aggregators on the workers (`gradient_round_sharded`),
+//!    but shard boundaries are a pure function of the fleet size K — never
+//!    the thread count — so the fold grouping is invariant too;
+//! 3. results are collected into device-/shard-indexed slots, so thread
 //!    scheduling cannot reorder them.
 
 pub mod engine;
@@ -25,6 +27,6 @@ pub mod round;
 
 pub use engine::Engine;
 pub use round::{
-    eval_round, gradient_round, individual_round, model_fl_round, GradOutcome, LocalFitOutcome,
-    LocalStepOutcome,
+    agg_shard_size, eval_round, gradient_round, gradient_round_sharded, individual_round,
+    model_fl_round, GradOutcome, GradShard, LocalFitOutcome, LocalStepOutcome, MAX_AGG_SHARDS,
 };

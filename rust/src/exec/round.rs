@@ -11,7 +11,20 @@ use super::engine::Engine;
 use crate::coordinator::backend::Backend;
 use crate::coordinator::worker::Worker;
 use crate::data::Dataset;
+use crate::grad::Aggregator;
 use crate::util::rng::Pcg;
+
+/// Cap on aggregation shards per round. Shard boundaries must be a pure
+/// function of the fleet size K (never the thread count) to keep the
+/// determinism contract, so the shard size is `ceil(K / MAX_AGG_SHARDS)`:
+/// per-device shards up to K = 32, then a bounded number of contiguous
+/// device ranges that each engine worker folds locally.
+pub const MAX_AGG_SHARDS: usize = 32;
+
+/// Devices per aggregation shard for a K-device fleet.
+pub fn agg_shard_size(k: usize) -> usize {
+    k.div_ceil(MAX_AGG_SHARDS).max(1)
+}
 
 /// One device's gradient-scheme contribution.
 pub struct GradOutcome {
@@ -39,9 +52,26 @@ pub struct LocalStepOutcome {
     pub loss: f64,
 }
 
+/// One contiguous device range's folded gradient-round contribution.
+pub struct GradShard {
+    /// batch-weighted partial aggregate over the shard's devices (added in
+    /// ascending device order, f64 accumulation)
+    pub agg: Aggregator,
+    /// Σ loss_k · |B_k| over the shard, in device order
+    pub loss: f64,
+    /// Σ |B_k| over the shard
+    pub weight: f64,
+}
+
 /// Steps 1–3 of a gradient-exchange period: every device samples its
 /// planned batch, runs forward/backward on the global parameters, and
 /// compresses its gradient. Aggregation stays with the caller.
+///
+/// The trainer's production path is [`gradient_round_sharded`]; this
+/// per-device form is the *reference* the sharded fold is tested against
+/// (`sharded_round_matches_streaming_reduce`) and the entry point for
+/// callers that need the raw per-device gradients. Any change to the
+/// sampling/compression/weighting here must be mirrored there.
 #[allow(clippy::too_many_arguments)]
 pub fn gradient_round(
     engine: &Engine,
@@ -58,10 +88,55 @@ pub fn gradient_round(
         let mut rng = Pcg::for_device(seed, period, k as u64);
         let (x, y) = w.data.sample_with(train, b, &mut rng);
         let step = backend
-            .train_step(params, &x, &y)
+            .train_step_ws(params, &x, &y, &mut w.scratch)
             .with_context(|| format!("device {k} train_step"))?;
         let (grad, _bits) = w.compress(step.grads);
         Ok(GradOutcome { grad, weight: b as f64, loss: step.loss as f64 })
+    })
+}
+
+/// The sharded form of [`gradient_round`]: devices are split into
+/// contiguous shards of `agg_shard_size(K)` and each engine worker folds
+/// its shard's gradients straight into a local [`Aggregator`] (f64, device
+/// order) instead of materializing K dense gradients for a single-thread
+/// streaming reduce. The caller combines the returned shards — still in
+/// device order — via `Aggregator::merge`/`reduce_shards`.
+///
+/// Thread-count invariance: shard boundaries come from K alone (see
+/// [`agg_shard_size`]) and `Engine::run_chunked` never lets the thread
+/// count reshape chunks, so the f64 fold grouping — and the final global
+/// gradient — is bitwise identical at any `--threads` value.
+#[allow(clippy::too_many_arguments)]
+pub fn gradient_round_sharded(
+    engine: &Engine,
+    backend: &dyn Backend,
+    workers: &mut [Worker],
+    params: &[f32],
+    train: &Dataset,
+    batches: &[usize],
+    seed: u64,
+    period: u64,
+) -> Result<Vec<GradShard>> {
+    let p = params.len();
+    let shard = agg_shard_size(workers.len());
+    engine.run_chunked(workers, shard, |_, base, devs| {
+        let mut agg = Aggregator::new(p);
+        let mut loss = 0f64;
+        let mut weight = 0f64;
+        for (j, w) in devs.iter_mut().enumerate() {
+            let k = base + j;
+            let b = batches[k].max(1);
+            let mut rng = Pcg::for_device(seed, period, k as u64);
+            let (x, y) = w.data.sample_with(train, b, &mut rng);
+            let step = backend
+                .train_step_ws(params, &x, &y, &mut w.scratch)
+                .with_context(|| format!("device {k} train_step"))?;
+            let (grad, _bits) = w.compress(step.grads);
+            agg.add(&grad, b as f64)?;
+            loss += step.loss as f64 * b as f64;
+            weight += b as f64;
+        }
+        Ok(GradShard { agg, loss, weight })
     })
 }
 
@@ -88,7 +163,7 @@ pub fn model_fl_round(
         for _ in 0..steps {
             let (x, y) = w.data.sample_with(train, local_batch.min(n), &mut rng);
             let s = backend
-                .train_step(&params, &x, &y)
+                .train_step_ws(&params, &x, &y, &mut w.scratch)
                 .with_context(|| format!("device {k} local step"))?;
             last_loss = s.loss;
             params = backend.apply_update(&params, &s.grads, lr)?;
@@ -117,7 +192,7 @@ pub fn individual_round(
         let mut rng = Pcg::for_device(seed, period, k as u64);
         let (x, y) = w.data.sample_with(train, b, &mut rng);
         let s = backend
-            .train_step(&params, &x, &y)
+            .train_step_ws(&params, &x, &y, &mut w.scratch)
             .with_context(|| format!("device {k} individual step"))?;
         params = backend.apply_update(&params, &s.grads, lr)?;
         w.local_params = Some(params);
@@ -179,6 +254,51 @@ mod tests {
             assert_eq!(x.grad, y.grad);
             assert_eq!(x.loss.to_bits(), y.loss.to_bits());
             assert_eq!(x.weight, y.weight);
+        }
+    }
+
+    #[test]
+    fn sharded_round_matches_streaming_reduce() {
+        // K = 5 -> per-device shards; fold must equal the per-device round
+        // reduced in device order with the same f64 aggregator.
+        let (train, mut w_dev, be) = world(5, true);
+        let (_, mut w_shard, _) = world(5, true);
+        let params = be.init_params().unwrap();
+        let batches = vec![6usize; 5];
+        let outcomes =
+            gradient_round(&Engine::new(2), &be, &mut w_dev, &params, &train, &batches, 7, 2)
+                .unwrap();
+        let mut stream = Aggregator::new(params.len());
+        for o in &outcomes {
+            stream.add(&o.grad, o.weight).unwrap();
+        }
+        let shards = gradient_round_sharded(
+            &Engine::new(2),
+            &be,
+            &mut w_shard,
+            &params,
+            &train,
+            &batches,
+            7,
+            2,
+        )
+        .unwrap();
+        assert_eq!(shards.len(), 5); // per-device shards at K <= 32
+        let merged =
+            Aggregator::reduce_shards(shards.into_iter().map(|s| s.agg).collect()).unwrap();
+        assert_eq!(merged.finish().unwrap(), stream.finish().unwrap());
+    }
+
+    #[test]
+    fn shard_size_fixed_by_fleet_size() {
+        assert_eq!(agg_shard_size(1), 1);
+        assert_eq!(agg_shard_size(32), 1);
+        assert_eq!(agg_shard_size(33), 2);
+        assert_eq!(agg_shard_size(64), 2);
+        assert_eq!(agg_shard_size(1000), 32);
+        // shard count never exceeds the cap
+        for k in [1usize, 7, 32, 33, 64, 999, 4096] {
+            assert!(k.div_ceil(agg_shard_size(k)) <= MAX_AGG_SHARDS, "k={k}");
         }
     }
 

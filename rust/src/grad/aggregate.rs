@@ -17,6 +17,15 @@ impl Aggregator {
         Aggregator { acc: vec![0f64; p], total_weight: 0.0, contributions: 0 }
     }
 
+    /// Clear for the next period, keeping the f64 accumulator allocation —
+    /// the server-side aggregator is a long-lived object reset each round,
+    /// not reallocated (p can be millions of terms).
+    pub fn reset(&mut self) {
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        self.total_weight = 0.0;
+        self.contributions = 0;
+    }
+
     /// Add one device's gradient with weight |B_k|.
     pub fn add(&mut self, grad: &[f32], weight: f64) -> Result<()> {
         if grad.len() != self.acc.len() {
@@ -54,8 +63,11 @@ impl Aggregator {
         Ok(())
     }
 
-    /// Reduce a set of shard aggregators (in the given fixed order) into
-    /// one. The tree-reduce entry point for sharded/parallel aggregation.
+    /// Reduce a set of shard aggregators into one by a *sequential fold in
+    /// the given order* — deliberately not a pairwise tree: the f64
+    /// grouping is part of the bitwise-reproducibility contract, so the
+    /// combine order must stay fixed (shards are produced in device order
+    /// and merged in device order).
     pub fn reduce_shards(shards: Vec<Aggregator>) -> Result<Aggregator> {
         let mut it = shards.into_iter();
         let mut root = it.next().ok_or_else(|| anyhow::anyhow!("no shards to reduce"))?;
@@ -65,13 +77,20 @@ impl Aggregator {
         Ok(root)
     }
 
-    /// Finish: the batch-weighted average (eq. 1).
-    pub fn finish(self) -> Result<Vec<f32>> {
+    /// The batch-weighted average (eq. 1) without consuming the
+    /// accumulator, so a reused server-side aggregator can emit one global
+    /// gradient per period across its lifetime.
+    pub fn average(&self) -> Result<Vec<f32>> {
         if self.contributions == 0 {
             bail!("no gradients aggregated");
         }
         let w = self.total_weight;
-        Ok(self.acc.into_iter().map(|a| (a / w) as f32).collect())
+        Ok(self.acc.iter().map(|a| (a / w) as f32).collect())
+    }
+
+    /// Finish: the batch-weighted average (eq. 1), consuming form.
+    pub fn finish(self) -> Result<Vec<f32>> {
+        self.average()
     }
 }
 
@@ -164,6 +183,29 @@ mod tests {
         let a = stream.finish().unwrap();
         let b = merged.finish().unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reset_reuse_equals_fresh() {
+        let g1 = vec![1.0f32, -2.0, 4.0];
+        let g2 = vec![0.5f32, 3.0, -1.0];
+        let mut reused = Aggregator::new(3);
+        reused.add(&g1, 2.0).unwrap();
+        reused.add(&g2, 1.0).unwrap();
+        let first = reused.average().unwrap();
+        // reset and run a different period through the same accumulator
+        reused.reset();
+        assert_eq!(reused.contributions(), 0);
+        reused.add(&g2, 5.0).unwrap();
+        let mut fresh = Aggregator::new(3);
+        fresh.add(&g2, 5.0).unwrap();
+        assert_eq!(reused.average().unwrap(), fresh.average().unwrap());
+        // average() is repeatable and agrees with finish()
+        assert_eq!(reused.average().unwrap(), reused.clone().finish().unwrap());
+        assert_ne!(first, reused.average().unwrap());
+        // reset clears the "has contributions" state too
+        reused.reset();
+        assert!(reused.average().is_err());
     }
 
     #[test]

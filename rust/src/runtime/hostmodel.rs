@@ -10,6 +10,13 @@
 //! The architecture is reconstructed from the manifest's flat-param layout
 //! (tensor names are the contract, see python/compile/model.py), so host and
 //! XLA views can never drift silently: any layout change breaks parsing.
+//!
+//! Hot-path allocation discipline: `train_step_ws`/`forward_tape` draw every
+//! intermediate buffer (activation tape, d-activation accumulators, dlogits,
+//! replicated bias rows, row-concats) from a caller-owned [`Workspace`]
+//! pool. Buffer shapes are fixed per (model, batch) shape, so after the
+//! first step the pool is warm and steady-state training allocates only the
+//! returned gradient vector.
 
 use anyhow::{bail, Context, Result};
 
@@ -72,6 +79,96 @@ impl<'a> Cursor<'a> {
             .iter()
             .position(|(n, _)| n == name)
             .map(|i| (self.offsets[i], self.entries[i].1.as_slice()))
+    }
+}
+
+/// Reusable per-worker scratch arena for train-step intermediates.
+///
+/// A best-fit pool of f32 buffers plus a pool of tape "shells" (the outer
+/// `Vec<Vec<f32>>`). Buffers are taken by length, used, and recycled; the
+/// multiset of shapes a train step needs is constant per (model, batch)
+/// shape, so the pool stabilizes after one step and reuse is exact.
+/// Reuse never changes numerics: every taken buffer is fully re-filled
+/// (zeroed or copied) before use.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f32>>,
+    shells: Vec<Vec<Vec<f32>>>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Number of pooled buffers currently idle (test/diagnostic hook for
+    /// the "pool stabilizes" property).
+    pub fn pooled_buffers(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// An empty buffer with capacity >= `len` (best-fit from the pool).
+    fn grab(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.pool.iter().enumerate() {
+            if b.capacity() < len {
+                continue;
+            }
+            let tighter = match best {
+                None => true,
+                Some(j) => b.capacity() < self.pool[j].capacity(),
+            };
+            if tighter {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                let mut v = self.pool.swap_remove(i);
+                v.clear();
+                v
+            }
+            None => Vec::with_capacity(len),
+        }
+    }
+
+    /// A buffer of exactly `len` elements, each set to `value`.
+    pub fn take_filled(&mut self, len: usize, value: f32) -> Vec<f32> {
+        let mut v = self.grab(len);
+        v.resize(len, value);
+        v
+    }
+
+    /// A zero-filled buffer of exactly `len` elements.
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        self.take_filled(len, 0.0)
+    }
+
+    /// A buffer holding a copy of `src`.
+    pub fn copy_of(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut v = self.grab(src.len());
+        v.extend_from_slice(src);
+        v
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn recycle(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.pool.push(v);
+        }
+    }
+
+    /// An empty tape shell (outer vec) from the pool.
+    fn take_shell(&mut self) -> Vec<Vec<f32>> {
+        self.shells.pop().unwrap_or_default()
+    }
+
+    /// Recycle a tape: inner buffers go to the pool, the shell is kept.
+    fn recycle_tape(&mut self, mut tape: Vec<Vec<f32>>) {
+        for v in tape.drain(..) {
+            self.recycle(v);
+        }
+        self.shells.push(tape);
     }
 }
 
@@ -163,20 +260,29 @@ impl HostModel {
         })
     }
 
-    /// Forward pass; returns logits [n, classes] and the activation tape.
-    fn forward_tape(&self, flat: &[f32], x: &[f32], n: usize) -> (Vec<f32>, Vec<Vec<f32>>) {
+    /// Forward pass; returns logits [n, classes] and the activation tape
+    /// (ending with the stashed head input), all drawn from `ws`.
+    fn forward_tape(
+        &self,
+        flat: &[f32],
+        x: &[f32],
+        n: usize,
+        ws: &mut Workspace,
+    ) -> (Vec<f32>, Vec<Vec<f32>>) {
         let d = self.input_dim;
         debug_assert_eq!(x.len(), n * d);
-        let mut tape: Vec<Vec<f32>> = vec![x.to_vec()];
+        let mut tape: Vec<Vec<f32>> = ws.take_shell();
+        tape.push(ws.copy_of(x));
         match self.family {
             Family::Dense => {
                 // activation i+1 = relu(concat(tape...) W + b)
                 for l in &self.layers {
                     let Layer::Dense { w, b, din, dout, .. } = l else { unreachable!() };
-                    let cat = concat_rows(&tape, n);
+                    let cat = concat_rows(&tape, n, ws);
                     debug_assert_eq!(cat.len(), n * din);
-                    let mut h = bias_rows(&flat[*b..*b + *dout], n);
+                    let mut h = bias_rows(&flat[*b..*b + *dout], n, ws);
                     gemm(n, *din, *dout, &cat, &flat[*w..*w + din * dout], &mut h);
+                    ws.recycle(cat);
                     relu_inplace(&mut h);
                     tape.push(h);
                 }
@@ -185,25 +291,26 @@ impl HostModel {
                 for l in &self.layers {
                     match l {
                         Layer::Dense { w, b, din, dout, .. } => {
-                            let x0 = tape.last().unwrap().clone();
-                            let mut h = bias_rows(&flat[*b..*b + *dout], n);
-                            gemm(n, *din, *dout, &x0, &flat[*w..*w + din * dout], &mut h);
+                            let mut h = bias_rows(&flat[*b..*b + *dout], n, ws);
+                            let x0 = tape.last().unwrap();
+                            gemm(n, *din, *dout, x0, &flat[*w..*w + din * dout], &mut h);
                             relu_inplace(&mut h);
                             tape.push(h);
                         }
                         Layer::Res { aw, ab, bw, bb, width } => {
                             let wd = *width;
-                            let h = tape.last().unwrap().clone();
-                            let mut inner = bias_rows(&flat[*ab..*ab + wd], n);
-                            gemm(n, wd, wd, &h, &flat[*aw..*aw + wd * wd], &mut inner);
+                            let mut inner = bias_rows(&flat[*ab..*ab + wd], n, ws);
+                            let h = tape.last().unwrap();
+                            gemm(n, wd, wd, h, &flat[*aw..*aw + wd * wd], &mut inner);
                             relu_inplace(&mut inner);
-                            tape.push(inner.clone()); // a-activation
-                            let mut out = bias_rows(&flat[*bb..*bb + wd], n);
+                            let mut out = bias_rows(&flat[*bb..*bb + wd], n, ws);
                             gemm(n, wd, wd, &inner, &flat[*bw..*bw + wd * wd], &mut out);
-                            for (o, &hh) in out.iter_mut().zip(&h) {
+                            let h = tape.last().unwrap();
+                            for (o, &hh) in out.iter_mut().zip(h) {
                                 *o += hh; // skip connection (pre-relu sum)
                             }
                             relu_inplace(&mut out);
+                            tape.push(inner); // a-activation
                             tape.push(out);
                         }
                         _ => unreachable!(),
@@ -214,26 +321,26 @@ impl HostModel {
                 for l in &self.layers {
                     match l {
                         Layer::Dense { w, b, din, dout, .. } => {
-                            let x0 = tape.last().unwrap().clone();
-                            let mut h = bias_rows(&flat[*b..*b + *dout], n);
-                            gemm(n, *din, *dout, &x0, &flat[*w..*w + din * dout], &mut h);
+                            let mut h = bias_rows(&flat[*b..*b + *dout], n, ws);
+                            let x0 = tape.last().unwrap();
+                            gemm(n, *din, *dout, x0, &flat[*w..*w + din * dout], &mut h);
                             relu_inplace(&mut h);
                             tape.push(h);
                         }
                         Layer::Sep { dw, w, b, width } => {
                             let wd = *width;
-                            let h = tape.last().unwrap().clone();
                             let scale = &flat[*dw..*dw + wd];
-                            let mut dwo = vec![0f32; n * wd];
+                            let mut dwo = ws.take_zeroed(n * wd);
+                            let h = tape.last().unwrap();
                             for i in 0..n {
                                 for j in 0..wd {
                                     dwo[i * wd + j] = (h[i * wd + j] * scale[j]).max(0.0);
                                 }
                             }
-                            tape.push(dwo.clone()); // depthwise activation
-                            let mut out = bias_rows(&flat[*b..*b + wd], n);
+                            let mut out = bias_rows(&flat[*b..*b + wd], n, ws);
                             gemm(n, wd, wd, &dwo, &flat[*w..*w + wd * wd], &mut out);
                             relu_inplace(&mut out);
+                            tape.push(dwo); // depthwise activation
                             tape.push(out);
                         }
                         _ => unreachable!(),
@@ -244,11 +351,11 @@ impl HostModel {
         // head
         let (hw, hb, hin) = self.head;
         let head_in = match self.family {
-            Family::Dense => concat_rows(&tape, n),
-            _ => tape.last().unwrap().clone(),
+            Family::Dense => concat_rows(&tape, n, ws),
+            _ => ws.copy_of(tape.last().unwrap()),
         };
         debug_assert_eq!(head_in.len(), n * hin);
-        let mut logits = bias_rows(&flat[hb..hb + self.classes], n);
+        let mut logits = bias_rows(&flat[hb..hb + self.classes], n, ws);
         gemm(n, hin, self.classes, &head_in, &flat[hw..hw + hin * self.classes], &mut logits);
         tape.push(head_in); // stash head input for backward
         (logits, tape)
@@ -256,70 +363,100 @@ impl HostModel {
 
     /// Forward only: logits [n, classes].
     pub fn forward(&self, flat: &[f32], x: &[f32], n: usize) -> Vec<f32> {
-        self.forward_tape(flat, x, n).0
+        let mut ws = Workspace::new();
+        let (logits, tape) = self.forward_tape(flat, x, n, &mut ws);
+        ws.recycle_tape(tape);
+        logits
     }
 
     /// Masked mean CE loss + correct count (mirrors masked_softmax_xent_ref).
     pub fn loss(&self, flat: &[f32], x: &[f32], y: &[i32], w: &[f32]) -> (f32, f32) {
         let n = y.len();
         let logits = self.forward(flat, x, n);
-        let (loss, correct, _) = softmax_xent(&logits, y, w, self.classes);
-        (loss, correct)
+        softmax_xent_loss(&logits, y, w, self.classes)
     }
 
     /// Full train step: (grads, loss, correct) — mirrors the AOT train_step.
+    /// One-shot form; hot loops should hold a [`Workspace`] and call
+    /// [`HostModel::train_step_ws`] instead.
     pub fn train_step(&self, flat: &[f32], x: &[f32], y: &[i32], w: &[f32]) -> (Vec<f32>, f32, f32) {
+        self.train_step_ws(flat, x, y, w, &mut Workspace::new())
+    }
+
+    /// Full train step drawing every intermediate from `ws`: after the
+    /// first call with a given (model, batch) shape, the only allocation
+    /// left is the returned gradient vector.
+    pub fn train_step_ws(
+        &self,
+        flat: &[f32],
+        x: &[f32],
+        y: &[i32],
+        w: &[f32],
+        ws: &mut Workspace,
+    ) -> (Vec<f32>, f32, f32) {
         let n = y.len();
         let c = self.classes;
-        let (logits, tape) = self.forward_tape(flat, x, n);
-        let (loss, correct, mut dlogits) = softmax_xent(&logits, y, w, c);
+        let (logits, mut tape) = self.forward_tape(flat, x, n, ws);
+        let mut dlogits = ws.take_zeroed(n * c);
+        let (loss, correct) = softmax_xent_grad(&logits, y, w, c, &mut dlogits);
+        ws.recycle(logits);
         let mut grads = vec![0f32; self.params];
 
-        // head backward
+        // head backward (head input was stashed at the end of the tape)
         let (hw, hb, hin) = self.head;
-        let head_in = tape.last().unwrap();
-        gemm_at(n, hin, c, head_in, &dlogits, &mut grads[hw..hw + hin * c]);
+        let head_in = tape.pop().unwrap();
+        gemm_at(n, hin, c, &head_in, &dlogits, &mut grads[hw..hw + hin * c]);
         col_sums(&dlogits, n, c, &mut grads[hb..hb + c]);
-        let mut dhead_in = vec![0f32; n * hin];
+        let mut dhead_in = ws.take_zeroed(n * hin);
         gemm_bt(n, hin, c, &dlogits, &flat[hw..hw + hin * c], &mut dhead_in);
-        dlogits.clear();
+        ws.recycle(dlogits);
+        ws.recycle(head_in);
 
         match self.family {
-            Family::Dense => self.backward_dense(flat, &tape, dhead_in, n, &mut grads),
-            Family::Res => self.backward_res(flat, &tape, dhead_in, n, &mut grads),
-            Family::Mobile => self.backward_mobile(flat, &tape, dhead_in, n, &mut grads),
+            Family::Dense => self.backward_dense(flat, &tape, dhead_in, n, &mut grads, ws),
+            Family::Res => self.backward_res(flat, &tape, dhead_in, n, &mut grads, ws),
+            Family::Mobile => self.backward_mobile(flat, &tape, dhead_in, n, &mut grads, ws),
         }
+        ws.recycle_tape(tape);
         (grads, loss, correct)
     }
 
     fn backward_dense(
         &self,
         flat: &[f32],
-        tape: &[Vec<f32>],
+        acts: &[Vec<f32>],
         dhead_in: Vec<f32>,
         n: usize,
         grads: &mut [f32],
+        ws: &mut Workspace,
     ) {
-        // tape: [x, h1, .., hL, head_in]; head_in = concat(x, h1..hL).
-        let acts = &tape[..tape.len() - 1];
+        // acts: [x, h1, .., hL]; the head consumed concat(x, h1..hL).
         let widths: Vec<usize> = acts.iter().map(|a| a.len() / n).collect();
         // d(activation) accumulators, seeded by splitting dhead_in.
-        let mut dacts: Vec<Vec<f32>> = acts.iter().map(|a| vec![0f32; a.len()]).collect();
+        let mut dacts: Vec<Vec<f32>> = ws.take_shell();
+        for a in acts {
+            dacts.push(ws.take_zeroed(a.len()));
+        }
         split_rows(&dhead_in, n, &widths, &mut dacts, true);
+        ws.recycle(dhead_in);
         // walk blocks backward; block i consumed concat(acts[..=i]).
         for (bi, l) in self.layers.iter().enumerate().rev() {
             let Layer::Dense { w, b, din, dout, .. } = l else { unreachable!() };
             let out_idx = bi + 1;
             // relu gate
-            let mut dh = dacts[out_idx].clone();
+            let mut dh = ws.copy_of(&dacts[out_idx]);
             relu_gate(&mut dh, &acts[out_idx]);
-            let cat = concat_rows(&acts[..=bi].to_vec(), n);
+            let cat = concat_rows(&acts[..=bi], n, ws);
             gemm_at(n, *din, *dout, &cat, &dh, &mut grads[*w..*w + din * dout]);
             col_sums(&dh, n, *dout, &mut grads[*b..*b + *dout]);
-            let mut dcat = vec![0f32; n * din];
+            ws.recycle(cat);
+            let mut dcat = ws.take_zeroed(n * din);
             gemm_bt(n, *din, *dout, &dh, &flat[*w..*w + din * dout], &mut dcat);
+            ws.recycle(dh);
             split_rows(&dcat, n, &widths[..=bi], &mut dacts, true);
+            ws.recycle(dcat);
         }
+        ws.recycle_tape(dacts);
     }
 
     fn backward_res(
@@ -329,10 +466,11 @@ impl HostModel {
         dhead_in: Vec<f32>,
         n: usize,
         grads: &mut [f32],
+        ws: &mut Workspace,
     ) {
-        // tape: [x, stem, (a0, o0), (a1, o1), ..., head_in(copy of last o)]
+        // tape: [x, stem, (a0, o0), (a1, o1), ...]
         let mut dout = dhead_in; // gradient wrt current output activation
-        let mut ti = tape.len() - 2; // index of last real activation
+        let mut ti = tape.len() - 1; // index of last real activation
         for l in self.layers.iter().rev() {
             match l {
                 Layer::Res { aw, ab, bw, bb, width } => {
@@ -340,10 +478,10 @@ impl HostModel {
                     let out = &tape[ti]; // relu(h + inner B + b)
                     let a_act = &tape[ti - 1]; // relu(h A + a)
                     let h = &tape[ti - 2]; // block input
-                    let mut dsum = dout.clone();
+                    let mut dsum = dout; // gate in place (dout is dead after)
                     relu_gate(&mut dsum, out);
                     // dsum flows to both skip (dh) and the B-branch
-                    let mut db_in = vec![0f32; n * wd]; // d(a_act)
+                    let mut db_in = ws.take_zeroed(n * wd); // d(a_act)
                     gemm_at(n, wd, wd, a_act, &dsum, &mut grads[*bw..*bw + wd * wd]);
                     col_sums(&dsum, n, wd, &mut grads[*bb..*bb + wd]);
                     gemm_bt(n, wd, wd, &dsum, &flat[*bw..*bw + wd * wd], &mut db_in);
@@ -352,24 +490,27 @@ impl HostModel {
                     col_sums(&db_in, n, wd, &mut grads[*ab..*ab + wd]);
                     let mut dh = dsum; // skip path
                     gemm_bt(n, wd, wd, &db_in, &flat[*aw..*aw + wd * wd], &mut dh);
+                    ws.recycle(db_in);
                     dout = dh;
                     ti -= 2;
                 }
                 Layer::Dense { w, b, din, dout: dd, .. } => {
                     let out = &tape[ti];
                     let x0 = &tape[ti - 1];
-                    let mut dh = dout.clone();
+                    let mut dh = dout; // gate in place
                     relu_gate(&mut dh, out);
                     gemm_at(n, *din, *dd, x0, &dh, &mut grads[*w..*w + din * dd]);
                     col_sums(&dh, n, *dd, &mut grads[*b..*b + *dd]);
-                    let mut dx = vec![0f32; n * din];
+                    let mut dx = ws.take_zeroed(n * din);
                     gemm_bt(n, *din, *dd, &dh, &flat[*w..*w + din * dd], &mut dx);
+                    ws.recycle(dh);
                     dout = dx;
                     ti -= 1;
                 }
                 _ => unreachable!(),
             }
         }
+        ws.recycle(dout);
     }
 
     fn backward_mobile(
@@ -379,9 +520,10 @@ impl HostModel {
         dhead_in: Vec<f32>,
         n: usize,
         grads: &mut [f32],
+        ws: &mut Workspace,
     ) {
         let mut dout = dhead_in;
-        let mut ti = tape.len() - 2;
+        let mut ti = tape.len() - 1;
         for l in self.layers.iter().rev() {
             match l {
                 Layer::Sep { dw, w, b, width } => {
@@ -389,17 +531,17 @@ impl HostModel {
                     let out = &tape[ti]; // relu(dwo W + b)
                     let dwo = &tape[ti - 1]; // relu(h * scale)
                     let h = &tape[ti - 2];
-                    let mut dh_out = dout.clone();
+                    let mut dh_out = dout; // gate in place
                     relu_gate(&mut dh_out, out);
                     gemm_at(n, wd, wd, dwo, &dh_out, &mut grads[*w..*w + wd * wd]);
                     col_sums(&dh_out, n, wd, &mut grads[*b..*b + wd]);
-                    let mut ddwo = vec![0f32; n * wd];
+                    let mut ddwo = ws.take_zeroed(n * wd);
                     gemm_bt(n, wd, wd, &dh_out, &flat[*w..*w + wd * wd], &mut ddwo);
                     relu_gate(&mut ddwo, dwo);
                     // d scale_j = sum_i h_ij * ddwo_ij ; dh_ij = scale_j * ddwo_ij
                     let scale = &flat[*dw..*dw + wd];
                     let gscale = &mut grads[*dw..*dw + wd];
-                    let mut dh = vec![0f32; n * wd];
+                    let mut dh = dh_out; // reuse: fully overwritten below
                     for i in 0..n {
                         for j in 0..wd {
                             let g = ddwo[i * wd + j];
@@ -407,24 +549,27 @@ impl HostModel {
                             dh[i * wd + j] = scale[j] * g;
                         }
                     }
+                    ws.recycle(ddwo);
                     dout = dh;
                     ti -= 2;
                 }
                 Layer::Dense { w, b, din, dout: dd, .. } => {
                     let out = &tape[ti];
                     let x0 = &tape[ti - 1];
-                    let mut dh = dout.clone();
+                    let mut dh = dout; // gate in place
                     relu_gate(&mut dh, out);
                     gemm_at(n, *din, *dd, x0, &dh, &mut grads[*w..*w + din * dd]);
                     col_sums(&dh, n, *dd, &mut grads[*b..*b + *dd]);
-                    let mut dx = vec![0f32; n * din];
+                    let mut dx = ws.take_zeroed(n * din);
                     gemm_bt(n, *din, *dd, &dh, &flat[*w..*w + din * dd], &mut dx);
+                    ws.recycle(dh);
                     dout = dx;
                     ti -= 1;
                 }
                 _ => unreachable!(),
             }
         }
+        ws.recycle(dout);
     }
 
     /// Host-side parameter init (used when running without artifacts; NOT
@@ -469,28 +614,27 @@ fn relu_gate(dh: &mut [f32], out: &[f32]) {
     }
 }
 
-/// Replicate bias to n rows.
-fn bias_rows(bias: &[f32], n: usize) -> Vec<f32> {
-    let d = bias.len();
-    let mut out = vec![0f32; n * d];
-    for i in 0..n {
-        out[i * d..(i + 1) * d].copy_from_slice(bias);
+/// Replicate bias to n rows (buffer drawn from the workspace).
+fn bias_rows(bias: &[f32], n: usize, ws: &mut Workspace) -> Vec<f32> {
+    let mut out = ws.grab(n * bias.len());
+    for _ in 0..n {
+        out.extend_from_slice(bias);
     }
     out
 }
 
-/// Row-wise concat of per-activation matrices (all n rows).
-fn concat_rows(parts: &[Vec<f32>], n: usize) -> Vec<f32> {
-    let widths: Vec<usize> = parts.iter().map(|p| p.len() / n).collect();
-    let total: usize = widths.iter().sum();
-    let mut out = vec![0f32; n * total];
+/// Row-wise concat of per-activation matrices (all n rows; buffer drawn
+/// from the workspace and written once, append-only — no pre-zeroing).
+fn concat_rows(parts: &[Vec<f32>], n: usize, ws: &mut Workspace) -> Vec<f32> {
+    let total: usize = parts.iter().map(|p| p.len() / n).sum();
+    let mut out = ws.grab(n * total);
     for i in 0..n {
-        let mut off = 0;
-        for (p, &w) in parts.iter().zip(&widths) {
-            out[i * total + off..i * total + off + w].copy_from_slice(&p[i * w..(i + 1) * w]);
-            off += w;
+        for p in parts {
+            let w = p.len() / n;
+            out.extend_from_slice(&p[i * w..(i + 1) * w]);
         }
     }
+    debug_assert_eq!(out.len(), n * total);
     out
 }
 
@@ -525,33 +669,46 @@ fn col_sums(d: &[f32], n: usize, c: usize, out: &mut [f32]) {
     }
 }
 
-/// Masked softmax CE: returns (mean loss, correct count, dlogits [n,c]).
-fn softmax_xent(logits: &[f32], y: &[i32], w: &[f32], c: usize) -> (f32, f32, Vec<f32>) {
+/// Masked softmax CE, loss/accuracy only: (mean loss, correct count).
+fn softmax_xent_loss(logits: &[f32], y: &[i32], w: &[f32], c: usize) -> (f32, f32) {
     let n = y.len();
     debug_assert_eq!(logits.len(), n * c);
     let denom = w.iter().sum::<f32>().max(1.0);
     let mut loss = 0f32;
     let mut correct = 0f32;
-    let mut dlogits = vec![0f32; n * c];
     for i in 0..n {
         let row = &logits[i * c..(i + 1) * c];
-        let zmax = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0f32;
-        for &v in row {
-            sum += (v - zmax).exp();
-        }
-        let lse = sum.ln();
+        let (zmax, sum) = row_lse(row);
         let yi = y[i] as usize;
-        loss += w[i] * (lse - (row[yi] - zmax));
-        // NaN-safe argmax: total_cmp orders NaN consistently instead of
-        // panicking mid-experiment when a run diverges.
-        let argmax = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .unwrap()
-            .0;
-        if argmax == yi {
+        loss += w[i] * (sum.ln() - (row[yi] - zmax));
+        if row_argmax(row) == yi {
+            correct += w[i];
+        }
+    }
+    (loss / denom, correct)
+}
+
+/// Masked softmax CE with gradient: fills `dlogits` [n,c] (fully
+/// overwritten) and returns (mean loss, correct count).
+fn softmax_xent_grad(
+    logits: &[f32],
+    y: &[i32],
+    w: &[f32],
+    c: usize,
+    dlogits: &mut [f32],
+) -> (f32, f32) {
+    let n = y.len();
+    debug_assert_eq!(logits.len(), n * c);
+    debug_assert_eq!(dlogits.len(), n * c);
+    let denom = w.iter().sum::<f32>().max(1.0);
+    let mut loss = 0f32;
+    let mut correct = 0f32;
+    for i in 0..n {
+        let row = &logits[i * c..(i + 1) * c];
+        let (zmax, sum) = row_lse(row);
+        let yi = y[i] as usize;
+        loss += w[i] * (sum.ln() - (row[yi] - zmax));
+        if row_argmax(row) == yi {
             correct += w[i];
         }
         let coef = w[i] / denom;
@@ -560,7 +717,27 @@ fn softmax_xent(logits: &[f32], y: &[i32], w: &[f32], c: usize) -> (f32, f32, Ve
             dlogits[i * c + j] = coef * (p - if j == yi { 1.0 } else { 0.0 });
         }
     }
-    (loss / denom, correct, dlogits)
+    (loss / denom, correct)
+}
+
+/// Stable softmax row statistics: (row max, Σ exp(v - max)).
+fn row_lse(row: &[f32]) -> (f32, f32) {
+    let zmax = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f32;
+    for &v in row {
+        sum += (v - zmax).exp();
+    }
+    (zmax, sum)
+}
+
+/// NaN-safe argmax: total_cmp orders NaN consistently instead of
+/// panicking mid-experiment when a run diverges.
+fn row_argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .unwrap()
+        .0
 }
 
 #[cfg(test)]
@@ -714,5 +891,36 @@ mod tests {
         let m = HostModel::from_layout("mini_mobile", &layout, 6, 3).unwrap();
         let want: usize = layout.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
         assert_eq!(m.params, want);
+    }
+
+    /// Workspace reuse is invisible to numerics (a reused arena produces
+    /// bitwise-identical steps) and the pool stabilizes after the first
+    /// step — steady-state training recycles instead of allocating.
+    #[test]
+    fn workspace_reuse_bitwise_stable_all_families() {
+        for (model, layout) in [
+            ("mini_dense", layout_dense()),
+            ("mini_res", layout_res()),
+            ("mini_mobile", layout_mobile()),
+        ] {
+            let (d, c) = (6, 3);
+            let m = HostModel::from_layout(model, &layout, d, c).unwrap();
+            let p = rand_params(&m, &layout, 21);
+            let (x, y, w) = batch(5, d, c, 22);
+            let mut ws = Workspace::new();
+            let first = m.train_step_ws(&p, &x, &y, &w, &mut ws);
+            let pooled = ws.pooled_buffers();
+            assert!(pooled > 0, "{model}: nothing recycled");
+            for _ in 0..3 {
+                let again = m.train_step_ws(&p, &x, &y, &w, &mut ws);
+                assert_eq!(first.0, again.0, "{model}: grads drifted under reuse");
+                assert_eq!(first.1.to_bits(), again.1.to_bits(), "{model}: loss");
+                assert_eq!(first.2.to_bits(), again.2.to_bits(), "{model}: correct");
+                assert_eq!(ws.pooled_buffers(), pooled, "{model}: pool kept growing");
+            }
+            // and the one-shot path (fresh workspace) agrees too
+            let fresh = m.train_step(&p, &x, &y, &w);
+            assert_eq!(first.0, fresh.0, "{model}: ws vs fresh");
+        }
     }
 }

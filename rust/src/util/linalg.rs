@@ -1,17 +1,60 @@
 //! Dense linear algebra substrate for the host model: row-major f32 GEMM
-//! with the three orientations backprop needs, written cache-consciously
-//! (ikj loop order, contiguous row blocks). Large calls are fanned out over
-//! `util::threads::global_threads()` scoped threads by *output-row blocks*,
-//! which keeps every output element's accumulation order identical to the
-//! single-thread path — results are bitwise identical at any thread count.
-//! Good enough that the pure-rust oracle can drive the large Table-II
-//! sweeps; the AOT/XLA path remains the production hot path.
+//! with the three orientations backprop needs.
+//!
+//! The serial core is a cache-blocked, panel-packing microkernel in the
+//! BLIS mold: the depth dimension is split into `KC` panels, operand
+//! panels are packed into contiguous micro-tile layouts (`MR`-row A
+//! strips, `NR`-column B strips), and an `MR`×`NR` register-tile inner
+//! loop accumulates with no branches so LLVM autovectorizes it. All three
+//! orientations (`gemm`, `gemm_at`, `gemm_bt`) share one packed kernel via
+//! index accessors, so the transposed views pay only a packing-order cost.
+//!
+//! Large calls are fanned out over `util::threads::global_threads()` scoped
+//! threads by *output-row blocks*. Every output element is computed by
+//! exactly one thread and its depth-accumulation order (ascending within
+//! each `KC` panel, panels in ascending order) is independent of the row
+//! split, so results are **bitwise identical at any thread count**. The
+//! kernel choice (packed vs. small fallback) is made once per call from the
+//! full problem shape, never per block, for the same reason.
+//!
+//! Absolute numerics differ slightly from the pre-packing kernel: the
+//! register tile accumulates each `KC` panel separately before adding it to
+//! C, which reassociates the f32 sums. Consumers hold comparisons to ~1e-4
+//! relative tolerance (see tests/integration_runtime.rs), which this stays
+//! well inside.
+
+use std::cell::RefCell;
 
 use crate::util::threads;
 
 /// Only fan out when a call is worth a thread spawn: below this many
 /// multiply-adds the serial kernel wins.
 const PAR_FLOP_THRESHOLD: usize = 1 << 24;
+
+/// Below this many multiply-adds the panel-packing overhead beats the
+/// cache wins; use the plain ikj fallback kernel.
+const PACK_FLOP_THRESHOLD: usize = 1 << 15;
+
+/// Register-tile rows (A micro-strip height). `MC % MR == 0`.
+const MR: usize = 4;
+/// Register-tile columns (B micro-strip width). `NC % NR == 0`.
+const NR: usize = 8;
+/// Output rows per packed A panel (A panel = `MC`×`KC` ≈ 64 KiB, L2-warm).
+const MC: usize = 64;
+/// Depth per packed panel (shared by the A and B panels).
+const KC: usize = 256;
+/// Output columns per packed B panel (B panel = `KC`×`NC` ≈ 256 KiB).
+const NC: usize = 256;
+
+thread_local! {
+    /// Per-thread (A, B) packing buffers. Reused across every GEMM the
+    /// owning thread runs — for an engine worker that's all layers × all
+    /// devices it folds within a round (engine threads are scoped per
+    /// round, so the buffers are re-created once per round per worker, not
+    /// per call).
+    static PANELS: RefCell<(Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
 
 /// Number of row blocks to split `rows` output rows into for a call of
 /// `flops` multiply-adds (1 = stay serial). Consults the thread-local
@@ -27,34 +70,59 @@ fn row_blocks(rows: usize, flops: usize) -> usize {
     }
 }
 
+/// Kernel choice for a call of `flops` multiply-adds. Decided once per
+/// call from the full shape (never per row block) so the choice — and the
+/// per-element accumulation order — cannot depend on the thread count.
+fn use_packed(flops: usize) -> bool {
+    flops >= PACK_FLOP_THRESHOLD
+}
+
 /// c[m,n] += a[m,k] * b[k,n] (row-major).
 pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    let packed = use_packed(m * k * n);
     let blocks = row_blocks(m, m * k * n);
     if blocks <= 1 {
-        return gemm_block(m, k, n, a, b, c);
+        return gemm_rows(packed, m, 0, k, n, a, b, c);
     }
     let rows_per = m.div_ceil(blocks);
     std::thread::scope(|s| {
         for (bi, cc) in c.chunks_mut(rows_per * n).enumerate() {
             let rows = cc.len() / n;
             let lo = bi * rows_per;
-            let aa = &a[lo * k..(lo + rows) * k];
-            s.spawn(move || gemm_block(rows, k, n, aa, b, cc));
+            s.spawn(move || gemm_rows(packed, rows, lo, k, n, a, b, cc));
         }
     });
 }
 
-fn gemm_block(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+/// Rows `lo..lo+rows` of the `gemm` output (`cc` = that row block of c).
+fn gemm_rows(
+    packed: bool,
+    rows: usize,
+    lo: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    cc: &mut [f32],
+) {
+    if packed {
+        gemm_packed(rows, k, n, |i, kk| a[(lo + i) * k + kk], |kk, j| b[kk * n + j], cc);
+    } else {
+        gemm_small(rows, k, n, &a[lo * k..(lo + rows) * k], b, cc);
+    }
+}
+
+/// Branchless serial fallback for shapes too small to pack (ikj order; the
+/// old kernel's `av == 0.0` early-continue is gone so the inner loop
+/// autovectorizes on dense inputs).
+fn gemm_small(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
         for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
             let brow = &b[kk * n..(kk + 1) * n];
             for j in 0..n {
                 crow[j] += av * brow[j];
@@ -66,28 +134,49 @@ fn gemm_block(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32])
 /// c[k,n] += a[m,k]^T * d[m,n]  (weight gradient: x^T dy).
 ///
 /// Parallel split is over blocks of c's rows (the k dimension); each block
-/// scans all m samples in order, so per-element accumulation order matches
-/// the serial kernel exactly.
+/// scans all m samples in ascending order, so per-element accumulation
+/// order matches the serial kernel exactly.
 pub fn gemm_at(m: usize, k: usize, n: usize, a: &[f32], d: &[f32], c: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(d.len(), m * n);
     debug_assert_eq!(c.len(), k * n);
+    let packed = use_packed(m * k * n);
     let blocks = row_blocks(k, m * k * n);
     if blocks <= 1 {
-        return gemm_at_block(m, 0, k, k, n, a, d, c);
+        return gemm_at_rows(packed, m, 0, k, k, n, a, d, c);
     }
     let rows_per = k.div_ceil(blocks);
     std::thread::scope(|s| {
         for (bi, cc) in c.chunks_mut(rows_per * n).enumerate() {
             let rows = cc.len() / n;
             let lo = bi * rows_per;
-            s.spawn(move || gemm_at_block(m, lo, rows, k, n, a, d, cc));
+            s.spawn(move || gemm_at_rows(packed, m, lo, rows, k, n, a, d, cc));
         }
     });
 }
 
-/// One kk-block of `gemm_at`: `c_block` holds rows `k_lo..k_lo+k_rows` of c.
-fn gemm_at_block(
+/// Rows `k_lo..k_lo+k_rows` of the `gemm_at` output (the k dimension);
+/// depth is the sample dimension m.
+fn gemm_at_rows(
+    packed: bool,
+    m: usize,
+    k_lo: usize,
+    k_rows: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    d: &[f32],
+    cb: &mut [f32],
+) {
+    if packed {
+        gemm_packed(k_rows, m, n, |i, s| a[s * k + k_lo + i], |s, j| d[s * n + j], cb);
+    } else {
+        gemm_at_small(m, k_lo, k_rows, k, n, a, d, cb);
+    }
+}
+
+/// Branchless fallback for one k-row block of `gemm_at`.
+fn gemm_at_small(
     m: usize,
     k_lo: usize,
     k_rows: usize,
@@ -101,9 +190,6 @@ fn gemm_at_block(
         let aseg = &a[i * k + k_lo..i * k + k_lo + k_rows];
         let drow = &d[i * n..(i + 1) * n];
         for (kk, &av) in aseg.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
             let crow = &mut c_block[kk * n..(kk + 1) * n];
             for j in 0..n {
                 crow[j] += av * drow[j];
@@ -117,22 +203,41 @@ pub fn gemm_bt(m: usize, k: usize, n: usize, d: &[f32], b: &[f32], c: &mut [f32]
     debug_assert_eq!(d.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * k);
+    let packed = use_packed(m * k * n);
     let blocks = row_blocks(m, m * k * n);
     if blocks <= 1 {
-        return gemm_bt_block(m, k, n, d, b, c);
+        return gemm_bt_rows(packed, m, 0, k, n, d, b, c);
     }
     let rows_per = m.div_ceil(blocks);
     std::thread::scope(|s| {
         for (bi, cc) in c.chunks_mut(rows_per * k).enumerate() {
             let rows = cc.len() / k;
             let lo = bi * rows_per;
-            let dd = &d[lo * n..(lo + rows) * n];
-            s.spawn(move || gemm_bt_block(rows, k, n, dd, b, cc));
+            s.spawn(move || gemm_bt_rows(packed, rows, lo, k, n, d, b, cc));
         }
     });
 }
 
-fn gemm_bt_block(m: usize, k: usize, n: usize, d: &[f32], b: &[f32], c: &mut [f32]) {
+/// Rows `lo..lo+rows` of the `gemm_bt` output; depth is n.
+fn gemm_bt_rows(
+    packed: bool,
+    rows: usize,
+    lo: usize,
+    k: usize,
+    n: usize,
+    d: &[f32],
+    b: &[f32],
+    cc: &mut [f32],
+) {
+    if packed {
+        gemm_packed(rows, n, k, |i, j| d[(lo + i) * n + j], |j, kk| b[kk * n + j], cc);
+    } else {
+        gemm_bt_small(rows, k, n, &d[lo * n..(lo + rows) * n], b, cc);
+    }
+}
+
+/// Dot-product fallback for `gemm_bt` (both operands row-contiguous).
+fn gemm_bt_small(m: usize, k: usize, n: usize, d: &[f32], b: &[f32], c: &mut [f32]) {
     for i in 0..m {
         let drow = &d[i * n..(i + 1) * n];
         let crow = &mut c[i * k..(i + 1) * k];
@@ -143,6 +248,144 @@ fn gemm_bt_block(m: usize, k: usize, n: usize, d: &[f32], b: &[f32], c: &mut [f3
                 acc += drow[j] * brow[j];
             }
             crow[kk] += acc;
+        }
+    }
+}
+
+/// The packed-tile core: c[i*n + j] += Σ_s av(i, s) · bv(s, j) for an m×n
+/// output with `depth` reduction terms. `av`/`bv` are index accessors so
+/// the three GEMM orientations (and their strided/transposed operand
+/// views) monomorphize onto this one kernel; packing makes every inner
+/// loop read contiguous memory regardless of the source stride.
+#[inline(always)]
+fn gemm_packed<A, B>(m: usize, depth: usize, n: usize, av: A, bv: B, c: &mut [f32])
+where
+    A: Fn(usize, usize) -> f32,
+    B: Fn(usize, usize) -> f32,
+{
+    debug_assert_eq!(c.len(), m * n);
+    PANELS.with(|cell| {
+        let mut panels = cell.borrow_mut();
+        let (apack, bpack) = &mut *panels;
+        apack.resize(MC * KC, 0.0);
+        bpack.resize(KC * NC, 0.0);
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            for pc in (0..depth).step_by(KC) {
+                let kc = KC.min(depth - pc);
+                pack_b(&bv, pc, kc, jc, nc, bpack);
+                for ic in (0..m).step_by(MC) {
+                    let mc = MC.min(m - ic);
+                    pack_a(&av, ic, mc, pc, kc, apack);
+                    for jr in (0..nc).step_by(NR) {
+                        let cols = NR.min(nc - jr);
+                        let bp = &bpack[(jr / NR) * (kc * NR)..][..kc * NR];
+                        for ir in (0..mc).step_by(MR) {
+                            let rows = MR.min(mc - ir);
+                            let ap = &apack[(ir / MR) * (kc * MR)..][..kc * MR];
+                            let acc = microkernel(kc, ap, bp);
+                            for (r, arow) in acc.iter().enumerate().take(rows) {
+                                let crow =
+                                    &mut c[(ic + ir + r) * n + jc + jr..][..cols];
+                                for (cv, &a) in crow.iter_mut().zip(&arow[..cols]) {
+                                    *cv += a;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Pack the `mc`×`kc` A block starting at (ic, pc) into `MR`-row strips:
+/// strip `it` holds rows `ic+it*MR ..`, laid out depth-major so the
+/// microkernel reads `MR` consecutive values per depth step. Ragged edge
+/// rows are zero-padded (harmless: the padded products are never written
+/// back to c).
+#[inline(always)]
+fn pack_a<A: Fn(usize, usize) -> f32>(
+    av: &A,
+    ic: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+    apack: &mut [f32],
+) {
+    for (it, ir) in (0..mc).step_by(MR).enumerate() {
+        let rows = MR.min(mc - ir);
+        let panel = &mut apack[it * kc * MR..(it + 1) * kc * MR];
+        for kk in 0..kc {
+            for r in 0..MR {
+                panel[kk * MR + r] =
+                    if r < rows { av(ic + ir + r, pc + kk) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack the `kc`×`nc` B block starting at (pc, jc) into `NR`-column
+/// strips, depth-major, zero-padding ragged edge columns.
+#[inline(always)]
+fn pack_b<B: Fn(usize, usize) -> f32>(
+    bv: &B,
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+    bpack: &mut [f32],
+) {
+    for (jt, jr) in (0..nc).step_by(NR).enumerate() {
+        let cols = NR.min(nc - jr);
+        let panel = &mut bpack[jt * kc * NR..(jt + 1) * kc * NR];
+        for kk in 0..kc {
+            for j in 0..NR {
+                panel[kk * NR + j] =
+                    if j < cols { bv(pc + kk, jc + jr + j) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// The `MR`×`NR` register tile: one packed A strip × one packed B strip
+/// over `kc` depth steps. Constant trip counts + branchless body keep the
+/// accumulators in registers and let LLVM unroll/vectorize the `NR` loop.
+#[inline(always)]
+fn microkernel(kc: usize, ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
+    let mut acc = [[0f32; NR]; MR];
+    for kk in 0..kc {
+        let a = &ap[kk * MR..kk * MR + MR];
+        let b = &bp[kk * NR..kk * NR + NR];
+        for r in 0..MR {
+            let ar = a[r];
+            let arow = &mut acc[r];
+            for j in 0..NR {
+                arow[j] += ar * b[j];
+            }
+        }
+    }
+    acc
+}
+
+/// The pre-microkernel serial kernel, kept verbatim (including its branchy
+/// `av == 0.0` skip) as the frozen baseline `benches/bench_gemm.rs`
+/// measures speedups against. Not used by any production path.
+pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
         }
     }
 }
@@ -163,9 +406,43 @@ mod tests {
         c
     }
 
+    fn naive_at(m: usize, k: usize, n: usize, a: &[f32], d: &[f32]) -> Vec<f32> {
+        let mut c = vec![0f32; k * n];
+        for kk in 0..k {
+            for j in 0..n {
+                for i in 0..m {
+                    c[kk * n + j] += a[i * k + kk] * d[i * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn naive_bt(m: usize, k: usize, n: usize, d: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0f32; m * k];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * k + kk] += d[i * n + j] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
     fn filled(len: usize, seed: u64) -> Vec<f32> {
         let mut r = crate::util::rng::Pcg::seeded(seed);
         (0..len).map(|_| r.normal() as f32).collect()
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], label: &str) {
+        assert_eq!(got.len(), want.len(), "{label}: length");
+        for (i, (x, y)) in got.iter().zip(want).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+                "{label}[{i}]: {x} vs {y}"
+            );
+        }
     }
 
     #[test]
@@ -175,10 +452,7 @@ mod tests {
         let b = filled(k * n, 2);
         let mut c = vec![0f32; m * n];
         gemm(m, k, n, &a, &b, &mut c);
-        let want = naive(m, k, n, &a, &b);
-        for (x, y) in c.iter().zip(&want) {
-            assert!((x - y).abs() < 1e-4);
-        }
+        assert_close(&c, &naive(m, k, n, &a, &b), "gemm small");
     }
 
     #[test]
@@ -188,18 +462,7 @@ mod tests {
         let d = filled(m * n, 4);
         let mut c = vec![0f32; k * n];
         gemm_at(m, k, n, &a, &d, &mut c);
-        // naive a^T d
-        let mut want = vec![0f32; k * n];
-        for kk in 0..k {
-            for j in 0..n {
-                for i in 0..m {
-                    want[kk * n + j] += a[i * k + kk] * d[i * n + j];
-                }
-            }
-        }
-        for (x, y) in c.iter().zip(&want) {
-            assert!((x - y).abs() < 1e-4);
-        }
+        assert_close(&c, &naive_at(m, k, n, &a, &d), "gemm_at small");
     }
 
     #[test]
@@ -209,17 +472,7 @@ mod tests {
         let b = filled(k * n, 6);
         let mut c = vec![0f32; m * k];
         gemm_bt(m, k, n, &d, &b, &mut c);
-        let mut want = vec![0f32; m * k];
-        for i in 0..m {
-            for kk in 0..k {
-                for j in 0..n {
-                    want[i * k + kk] += d[i * n + j] * b[kk * n + j];
-                }
-            }
-        }
-        for (x, y) in c.iter().zip(&want) {
-            assert!((x - y).abs() < 1e-4);
-        }
+        assert_close(&c, &naive_bt(m, k, n, &d, &b), "gemm_bt small");
     }
 
     #[test]
@@ -229,63 +482,135 @@ mod tests {
         assert_eq!(c[0], 7.0);
     }
 
-    /// Forcing the blocked path (by calling the block kernels directly on a
-    /// split) must be bitwise identical to the serial kernel — the
-    /// determinism invariant the threaded dispatch relies on.
     #[test]
-    fn blocked_kernels_bitwise_equal_serial() {
-        let (m, k, n) = (32, 24, 17);
+    fn gemm_ref_matches_naive() {
+        let (m, k, n) = (9, 13, 6);
+        let a = filled(m * k, 21);
+        let b = filled(k * n, 22);
+        let mut c = vec![0f32; m * n];
+        gemm_ref(m, k, n, &a, &b, &mut c);
+        assert_close(&c, &naive(m, k, n, &a, &b), "gemm_ref");
+    }
+
+    /// Packed microkernel vs the naive oracle across ragged shapes — m, k,
+    /// n deliberately not multiples of MR/NR/KC so every zero-padded edge
+    /// path runs. Forced through the packed path regardless of size.
+    #[test]
+    fn packed_matches_naive_ragged_shapes() {
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 2),
+            (4, 8, 8),
+            (5, 300, 11),
+            (17, 9, 33),
+            (33, 64, 17),
+            (65, 129, 63),
+            (70, 260, 40),
+            (128, 33, 9),
+            (130, 70, 270),
+        ];
+        for (si, &(m, k, n)) in shapes.iter().enumerate() {
+            let seed = 100 + 3 * si as u64;
+            let a = filled(m * k, seed);
+            let b = filled(k * n, seed + 1);
+            let d = filled(m * n, seed + 2);
+
+            let mut c = vec![0f32; m * n];
+            gemm_rows(true, m, 0, k, n, &a, &b, &mut c);
+            assert_close(&c, &naive(m, k, n, &a, &b), &format!("packed gemm {m}x{k}x{n}"));
+
+            let mut c = vec![0f32; k * n];
+            gemm_at_rows(true, m, 0, k, k, n, &a, &d, &mut c);
+            assert_close(
+                &c,
+                &naive_at(m, k, n, &a, &d),
+                &format!("packed gemm_at {m}x{k}x{n}"),
+            );
+
+            let mut c = vec![0f32; m * k];
+            gemm_bt_rows(true, m, 0, k, n, &d, &b, &mut c);
+            assert_close(
+                &c,
+                &naive_bt(m, k, n, &d, &b),
+                &format!("packed gemm_bt {m}x{k}x{n}"),
+            );
+        }
+    }
+
+    /// Packed kernels accumulate (+=) into a pre-filled c, like every
+    /// caller (bias rows, gradient slabs) relies on.
+    #[test]
+    fn packed_accumulates_into_prefilled_c() {
+        let (m, k, n) = (37, 41, 23);
+        let a = filled(m * k, 31);
+        let b = filled(k * n, 32);
+        let bias = filled(m * n, 33);
+        let mut c = bias.clone();
+        gemm_rows(true, m, 0, k, n, &a, &b, &mut c);
+        let mut want = naive(m, k, n, &a, &b);
+        for (w, &v) in want.iter_mut().zip(&bias) {
+            *w += v;
+        }
+        assert_close(&c, &want, "packed accumulate");
+    }
+
+    /// The determinism invariant the threaded dispatch relies on: splitting
+    /// the output rows into blocks must be bitwise identical to the
+    /// one-shot call, for all three orientations, on the packed path.
+    #[test]
+    fn packed_row_split_bitwise_equal_one_shot() {
+        let (m, k, n) = (70, 90, 50);
         let a = filled(m * k, 7);
         let b = filled(k * n, 8);
         let d = filled(m * n, 9);
 
         // gemm: split rows of c
-        let mut serial = vec![0f32; m * n];
-        gemm_block(m, k, n, &a, &b, &mut serial);
+        let mut one = vec![0f32; m * n];
+        gemm_rows(true, m, 0, k, n, &a, &b, &mut one);
         let mut split = vec![0f32; m * n];
-        let rows = 10;
+        let rows = 11;
         for (bi, cc) in split.chunks_mut(rows * n).enumerate() {
             let r = cc.len() / n;
-            let lo = bi * rows;
-            gemm_block(r, k, n, &a[lo * k..(lo + r) * k], &b, cc);
+            gemm_rows(true, r, bi * rows, k, n, &a, &b, cc);
         }
-        assert_eq!(serial, split);
+        assert_eq!(one, split);
 
         // gemm_at: split rows of c (the k dimension)
-        let mut serial = vec![0f32; k * n];
-        gemm_at_block(m, 0, k, k, n, &a, &d, &mut serial);
+        let mut one = vec![0f32; k * n];
+        gemm_at_rows(true, m, 0, k, k, n, &a, &d, &mut one);
         let mut split = vec![0f32; k * n];
         let rows = 7;
         for (bi, cc) in split.chunks_mut(rows * n).enumerate() {
             let r = cc.len() / n;
-            gemm_at_block(m, bi * rows, r, k, n, &a, &d, cc);
+            gemm_at_rows(true, m, bi * rows, r, k, n, &a, &d, cc);
         }
-        assert_eq!(serial, split);
+        assert_eq!(one, split);
 
         // gemm_bt: split rows of c
-        let mut serial = vec![0f32; m * k];
-        gemm_bt_block(m, k, n, &d, &b, &mut serial);
+        let mut one = vec![0f32; m * k];
+        gemm_bt_rows(true, m, 0, k, n, &d, &b, &mut one);
         let mut split = vec![0f32; m * k];
         let rows = 9;
         for (bi, cc) in split.chunks_mut(rows * k).enumerate() {
             let r = cc.len() / k;
-            let lo = bi * rows;
-            gemm_bt_block(r, k, n, &d[lo * n..(lo + r) * n], &b, cc);
+            gemm_bt_rows(true, r, bi * rows, k, n, &d, &b, cc);
         }
-        assert_eq!(serial, split);
+        assert_eq!(one, split);
     }
 
-    /// A call big enough to cross the parallel threshold still matches the
-    /// serial block kernel exactly.
+    /// A call big enough to cross the parallel threshold is bitwise equal
+    /// under any thread budget (the public-API form of the invariant).
     #[test]
     fn parallel_dispatch_bitwise_equal_serial() {
         let (m, k, n) = (512, 192, 256); // 25M madds > PAR_FLOP_THRESHOLD
         let a = filled(m * k, 11);
         let b = filled(k * n, 12);
-        let mut par = vec![0f32; m * n];
-        gemm(m, k, n, &a, &b, &mut par);
         let mut ser = vec![0f32; m * n];
-        gemm_block(m, k, n, &a, &b, &mut ser);
-        assert_eq!(par, ser);
+        threads::with_budget(1, || gemm(m, k, n, &a, &b, &mut ser));
+        for t in [2usize, 8] {
+            let mut par = vec![0f32; m * n];
+            threads::with_budget(t, || gemm(m, k, n, &a, &b, &mut par));
+            assert_eq!(ser, par, "budget {t}");
+        }
     }
 }

@@ -3,11 +3,14 @@
 //! must produce bitwise-identical `TrainLog` records — batch sampling uses
 //! counter-derived per-(seed, period, device) RNG streams and every
 //! cross-device reduction happens in fixed device order, so thread
-//! scheduling can never leak into results.
+//! scheduling can never leak into results. The sharded gradient reduce
+//! keeps the invariant because shard boundaries are a pure function of the
+//! fleet size K (see `exec::agg_shard_size`), never of the thread count.
 
-use feel::coordinator::{HostBackend, Scheme, TrainLog, Trainer, TrainerConfig};
-use feel::data::{generate, Partition, SynthConfig};
+use feel::coordinator::{Backend, HostBackend, Scheme, TrainLog, Trainer, TrainerConfig};
+use feel::data::{generate, DeviceData, Partition, SynthConfig};
 use feel::device::paper_cpu_fleet;
+use feel::exec::{agg_shard_size, gradient_round_sharded, Engine};
 use feel::grad::Aggregator;
 use feel::util::rng::Pcg;
 use feel::wireless::CellConfig;
@@ -90,6 +93,64 @@ fn individual_identical_across_threads() {
     let base = run_with_threads(Scheme::Individual { local_batch: 64 }, 1, 6);
     let par = run_with_threads(Scheme::Individual { local_batch: 64 }, 8, 6);
     assert_bitwise_equal(&base, &par, "individual");
+}
+
+/// The sharded gradient round (engine workers folding contiguous device
+/// ranges into local aggregator shards) must produce a bitwise-identical
+/// global gradient and loss at any thread count — including at K > 32,
+/// where shards span multiple devices and worker chunks don't align with
+/// single devices.
+#[test]
+fn sharded_gradient_round_thread_invariant() {
+    use feel::coordinator::worker::Worker;
+
+    let k = 40; // -> agg_shard_size = 2: multi-device shards
+    assert_eq!(agg_shard_size(k), 2);
+    let cfg = SynthConfig { dim: 12, ..Default::default() };
+    let train = generate(&cfg, 20 * k, 1);
+    let be = HostBackend::for_model("mini_dense", 12, 10, 2).unwrap();
+    let params = be.init_params().unwrap();
+    let batches = vec![4usize; k];
+
+    let run = |threads: usize| {
+        let mut workers: Vec<Worker> = (0..k)
+            .map(|id| {
+                let idx: Vec<usize> = (id * 20..(id + 1) * 20).collect();
+                Worker::new(id, DeviceData::new(idx, Pcg::seeded(id as u64)), None)
+            })
+            .collect();
+        let shards = gradient_round_sharded(
+            &Engine::new(threads),
+            &be,
+            &mut workers,
+            &params,
+            &train,
+            &batches,
+            11,
+            5,
+        )
+        .unwrap();
+        assert_eq!(shards.len(), k.div_ceil(agg_shard_size(k)));
+        let mut loss = 0f64;
+        let mut weight = 0f64;
+        for s in &shards {
+            loss += s.loss;
+            weight += s.weight;
+        }
+        let global = Aggregator::reduce_shards(shards.into_iter().map(|s| s.agg).collect())
+            .unwrap()
+            .finish()
+            .unwrap();
+        (global, loss.to_bits(), weight.to_bits())
+    };
+
+    let base = run(1);
+    for t in [2usize, 8] {
+        let par = run(t);
+        assert_eq!(base.0, par.0, "t={t}: global gradient");
+        assert_eq!(base.1, par.1, "t={t}: loss bits");
+        assert_eq!(base.2, par.2, "t={t}: weight bits");
+    }
 }
 
 /// Aggregator shard-merge property: for integer-valued contributions
