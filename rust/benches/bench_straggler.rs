@@ -1,0 +1,124 @@
+//! Straggler-policy bench: simulated seconds per period for the three
+//! round policies (sync / deadline / async) under a jittered fleet, swept
+//! over dropout ∈ {0, 0.1, 0.3}. The headline number is the *simulated*
+//! time axis — the whole point of the deadline/async policies is to cut
+//! the barrier tail a straggler-heavy fleet inflicts on the sync scheme —
+//! plus the participation and staleness the cut costs.
+//!
+//! Emits a `BENCH_straggler.json` baseline next to the Cargo.toml, beside
+//! `BENCH_fleet.json` / `BENCH_gemm.json`, for the perf trajectory across
+//! PRs.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::time::Instant;
+
+use feel::config::Experiment;
+use feel::coordinator::{HostBackend, Scheme, TrainLog, Trainer};
+use feel::data::{generate, Partition};
+use feel::device::StragglerModel;
+use feel::sched::RoundPolicy;
+use feel::util::json::{num, obj, s, Json};
+use feel::util::rng::Pcg;
+
+const DIM: usize = 32;
+const K: usize = 12;
+const JITTER: f64 = 0.5;
+
+struct Run {
+    log: TrainLog,
+    wall_secs: f64,
+}
+
+fn run(policy: RoundPolicy, dropout: f64, periods: usize) -> Run {
+    let mut exp = Experiment::default();
+    exp.k = K;
+    exp.synth.dim = DIM;
+    exp.train_n = 96 * K;
+    exp.test_n = 128;
+    let train = generate(&exp.synth, exp.train_n, 1);
+    let test = generate(&exp.synth, exp.test_n, 1);
+    let be = HostBackend::for_model("mini_res", DIM, exp.synth.classes, 1).unwrap();
+    let mut cfg = exp.trainer.clone();
+    cfg.scheme = Scheme::Proposed;
+    cfg.eval_every = 0;
+    cfg.policy = policy;
+    cfg.straggler = StragglerModel::new(JITTER, dropout).unwrap();
+    let mut rng = Pcg::seeded(3);
+    let fleet = exp.fleet(&mut rng);
+    let mut tr = Trainer::new(cfg, fleet, &train, &test, Partition::Iid, &be).unwrap();
+    let t0 = Instant::now();
+    tr.run(periods).unwrap();
+    Run { log: tr.log.clone(), wall_secs: t0.elapsed().as_secs_f64() }
+}
+
+fn main() {
+    let quick = std::env::var("FEEL_BENCH_QUICK").is_ok();
+    let periods = if quick { 4 } else { 12 };
+    let policies: [(&str, RoundPolicy); 3] = [
+        ("sync", RoundPolicy::Sync),
+        ("deadline", RoundPolicy::Deadline { factor: 1.25 }),
+        ("async", RoundPolicy::Async { alpha: 0.6, beta: 0.5, quorum: 0.5 }),
+    ];
+    let dropouts = [0.0f64, 0.1, 0.3];
+
+    println!("\n== straggler policies (K = {K}, jitter = {JITTER}, {periods} periods) ==");
+    println!(
+        "{:<10} {:>8} {:>14} {:>10} {:>10} {:>10} {:>10}",
+        "policy", "dropout", "sim s/period", "vs sync", "applied", "stale", "loss"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    for &dropout in &dropouts {
+        let mut sync_spp = f64::NAN;
+        for (name, policy) in policies {
+            let r = run(policy, dropout, periods);
+            let n = r.log.records.len().max(1) as f64;
+            let spp = r.log.sim_time() / n;
+            if name == "sync" {
+                sync_spp = spp;
+            }
+            let applied: f64 = r.log.records.iter().map(|x| x.applied as f64).sum::<f64>() / n;
+            let stale: f64 = r.log.records.iter().map(|x| x.stale_mean).sum::<f64>() / n;
+            let loss = r.log.final_loss().unwrap_or(f64::NAN);
+            println!(
+                "{:<10} {:>8} {:>14.4} {:>9.2}x {:>10.2} {:>10.3} {:>10.4}",
+                name,
+                dropout,
+                spp,
+                sync_spp / spp,
+                applied,
+                stale,
+                loss
+            );
+            rows.push(obj(vec![
+                ("policy", s(name)),
+                ("dropout", num(dropout)),
+                ("jitter", num(JITTER)),
+                ("sim_secs_per_period", num(spp)),
+                ("speedup_vs_sync", num(sync_spp / spp)),
+                ("mean_applied", num(applied)),
+                ("mean_staleness", num(stale)),
+                ("final_train_loss", num(loss)),
+                ("wall_secs", num(r.wall_secs)),
+            ]));
+        }
+    }
+
+    let out = obj(vec![
+        ("bench", s("straggler")),
+        ("scheme", s("proposed")),
+        ("model", s("mini_res")),
+        ("k", num(K as f64)),
+        ("dim", num(DIM as f64)),
+        ("jitter", num(JITTER)),
+        ("quick", Json::Bool(quick)),
+        ("periods", num(periods as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_straggler.json";
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("\nbaseline -> {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

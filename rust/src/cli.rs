@@ -10,16 +10,19 @@
 //! Common flags: --config <path>, --out <dir>, --backend host|pjrt,
 //! --periods N, --k N, --scheme NAME, --partition iid|noniid, --seed N,
 //! --threads N (worker threads for device fan-out + large GEMMs; 0 = all
-//! cores; numerics are identical at any value).
+//! cores; numerics are identical at any value), --policy NAME plus the
+//! straggler knobs --jitter/--dropout and the per-policy knobs
+//! --deadline-factor / --async-alpha / --async-beta / --quorum.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{parse_scheme, Config, Experiment};
+use crate::config::{parse_policy, parse_scheme, Config, Experiment};
 use crate::coordinator::Trainer;
-use crate::device::paper_profiles;
+use crate::device::{paper_profiles, StragglerModel};
+use crate::sched::RoundPolicy;
 use crate::exp::common::{make_backend, make_data, BackendKind};
 use crate::exp::{fig2, fig3, fig45, table2};
 use crate::metrics::Recorder;
@@ -81,7 +84,17 @@ USAGE: feel <command> [flags]
 
 COMMANDS:
   train       run a FEEL training experiment
-              --config <file>  --backend host|pjrt  --periods N  --scheme S
+              --config <file>  --backend host|pjrt  --periods N
+              --scheme proposed|gradient_fl|model_fl|individual|online|full_batch|random_batch
+              --policy sync|deadline|async   how gradient rounds close:
+                sync     barrier on the slowest device (paper default)
+                deadline drop devices past --deadline-factor x the nominal
+                         makespan (>= 1, default 1.25); re-plan them next period
+                async    close at a --quorum fraction of arrivals (default 0.5);
+                         stale gradients weighted alpha/(1+s)^beta via
+                         --async-alpha (default 0.6) / --async-beta (default 0.5)
+              --jitter F  --dropout F   straggler model: per-device latency
+                         jitter amplitude and per-period failure probability
               --k N  --partition iid|noniid  --seed N  --out results/
               --threads N (0 = all cores; results identical at any value)
   optimize    solve one period's joint batchsize + slot allocation
@@ -145,9 +158,44 @@ fn experiment_from_args(args: &Args) -> Result<Experiment> {
     if let Some(t) = args.get("threads") {
         exp.trainer.threads = t.parse().context("--threads")?;
     }
+    if let Some(p) = args.get("policy") {
+        exp.trainer.policy = parse_policy(p)?;
+    }
+    reject_stray_policy_flags(args, exp.trainer.policy)?;
+    match &mut exp.trainer.policy {
+        RoundPolicy::Sync => {}
+        RoundPolicy::Deadline { factor } => {
+            *factor = args.f64_or("deadline-factor", *factor)?;
+        }
+        RoundPolicy::Async { alpha, beta, quorum } => {
+            *alpha = args.f64_or("async-alpha", *alpha)?;
+            *beta = args.f64_or("async-beta", *beta)?;
+            *quorum = args.f64_or("quorum", *quorum)?;
+        }
+    }
+    exp.trainer.policy.validate()?;
+    exp.trainer.straggler = StragglerModel::new(
+        args.f64_or("jitter", exp.trainer.straggler.jitter)?,
+        args.f64_or("dropout", exp.trainer.straggler.dropout)?,
+    )?;
     // the linalg row-blocked GEMM reads the crate-wide knob
     crate::util::threads::set_global_threads(exp.trainer.threads);
     Ok(exp)
+}
+
+/// A per-policy knob passed alongside a policy it does not apply to is a
+/// mistake, not a no-op — silently ignoring `--quorum` under the sync
+/// policy would run a different experiment than the user asked for. The
+/// knob table lives on `RoundPolicy` so this and the config-file check
+/// can never drift apart.
+fn reject_stray_policy_flags(args: &Args, policy: RoundPolicy) -> Result<()> {
+    for knob in RoundPolicy::ALL_KNOBS {
+        let flag = knob.replace('_', "-");
+        if args.get(&flag).is_some() && !policy.knob_names().contains(knob) {
+            bail!("--{flag} does not apply to round policy {:?}", policy.name());
+        }
+    }
+    Ok(())
 }
 
 fn backend_kind(args: &Args) -> Result<BackendKind> {
@@ -170,11 +218,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut rng = Pcg::seeded(exp.trainer.seed ^ 0xf1ee7);
     let fleet = exp.fleet(&mut rng);
     println!(
-        "training {} on {:?} backend: K={}, scheme={}, {:?}, {} periods, {} threads",
+        "training {} on {:?} backend: K={}, scheme={}, policy={}, {:?}, {} periods, {} threads",
         exp.model,
         kind,
         exp.k,
         exp.trainer.scheme.name(),
+        exp.trainer.policy.name(),
         exp.partition,
         periods,
         crate::util::threads::resolve(exp.trainer.threads),
@@ -354,6 +403,52 @@ mod tests {
         assert!(experiment_from_args(&a).is_err());
         // leave the global knob on auto for other tests
         crate::util::threads::set_global_threads(0);
+    }
+
+    #[test]
+    fn policy_flags_plumb_into_trainer_config() {
+        let a = Args::parse(&argv("train --policy deadline --deadline-factor 1.4")).unwrap();
+        let exp = experiment_from_args(&a).unwrap();
+        assert_eq!(exp.trainer.policy, RoundPolicy::Deadline { factor: 1.4 });
+        let a = Args::parse(&argv(
+            "train --policy async --async-alpha 0.9 --async-beta 1.0 --quorum 0.75 \
+             --jitter 0.3 --dropout 0.05",
+        ))
+        .unwrap();
+        let exp = experiment_from_args(&a).unwrap();
+        assert_eq!(
+            exp.trainer.policy,
+            RoundPolicy::Async { alpha: 0.9, beta: 1.0, quorum: 0.75 }
+        );
+        assert_eq!(exp.trainer.straggler, StragglerModel { jitter: 0.3, dropout: 0.05 });
+        crate::util::threads::set_global_threads(0);
+    }
+
+    #[test]
+    fn bad_scheme_and_policy_errors_list_accepted_values() {
+        let a = Args::parse(&argv("train --policy fifo")).unwrap();
+        let err = experiment_from_args(&a).unwrap_err().to_string();
+        assert!(err.contains("sync | deadline | async"), "{err}");
+        let a = Args::parse(&argv("train --scheme sgd")).unwrap();
+        let err = experiment_from_args(&a).unwrap_err().to_string();
+        assert!(err.contains("proposed") && err.contains("individual"), "{err}");
+        // knob validation fires at argument time too
+        let a = Args::parse(&argv("train --policy deadline --deadline-factor 0.3")).unwrap();
+        assert!(experiment_from_args(&a).is_err());
+        let a = Args::parse(&argv("train --dropout 2.0")).unwrap();
+        assert!(experiment_from_args(&a).is_err());
+        // a knob for a policy that is not active is an error, not a no-op
+        let a = Args::parse(&argv("train --quorum 0.25")).unwrap();
+        let err = experiment_from_args(&a).unwrap_err().to_string();
+        assert!(err.contains("does not apply"), "{err}");
+        let a = Args::parse(&argv("train --policy deadline --quorum 0.25")).unwrap();
+        assert!(experiment_from_args(&a).is_err());
+        let a = Args::parse(&argv("train --policy async --deadline-factor 1.2")).unwrap();
+        assert!(experiment_from_args(&a).is_err());
+        crate::util::threads::set_global_threads(0);
+        // the help text enumerates both flags' accepted values
+        assert!(HELP.contains("--policy sync|deadline|async"));
+        assert!(HELP.contains("--scheme proposed|gradient_fl|model_fl|individual"));
     }
 
     #[test]

@@ -3,5 +3,5 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::{parse_scheme, Experiment};
+pub use schema::{parse_policy, parse_scheme, Experiment, SCHEME_NAMES};
 pub use toml::{Config, Value};

@@ -6,10 +6,16 @@ use anyhow::{bail, Result};
 use super::toml::Config;
 use crate::coordinator::{Scheme, TrainerConfig};
 use crate::data::{Partition, SynthConfig};
-use crate::device::{paper_cpu_fleet, paper_gpu_fleet, Device, GpuModule};
+use crate::device::{paper_cpu_fleet, paper_gpu_fleet, Device, GpuModule, StragglerModel};
 use crate::opt::BatchPolicy;
+use crate::sched::{RoundPolicy, POLICY_NAMES};
 use crate::util::rng::Pcg;
 use crate::wireless::CellConfig;
+
+/// Accepted `--scheme` / `train.scheme` values (keep in sync with
+/// [`parse_scheme`]; the CLI help and error paths print this).
+pub const SCHEME_NAMES: &str =
+    "proposed | gradient_fl | model_fl | individual | online | full_batch | random_batch";
 
 /// Fully-resolved experiment description.
 #[derive(Clone, Debug)]
@@ -95,6 +101,11 @@ impl Experiment {
             t.sbc_keep = None;
         }
         t.scheme = parse_scheme(c.str_or("train.scheme", "proposed"), t.b_max)?;
+        t.policy = parse_policy_config(c)?;
+        t.straggler = StragglerModel::new(
+            c.f64_or("fleet.jitter", t.straggler.jitter),
+            c.f64_or("fleet.dropout", t.straggler.dropout),
+        )?;
         Ok(e)
     }
 
@@ -135,8 +146,43 @@ pub fn parse_scheme(s: &str, b_max: usize) -> Result<Scheme> {
         "random_batch" | "random" => {
             Scheme::Fixed { policy: BatchPolicy::Random, optimal_slots: true }
         }
-        other => bail!("unknown scheme {other:?}"),
+        other => bail!("unknown scheme {other:?} (accepted: {SCHEME_NAMES})"),
     })
+}
+
+/// Parse a round-policy name as used in configs and on the CLI.
+pub fn parse_policy(s: &str) -> Result<RoundPolicy> {
+    RoundPolicy::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown policy {s:?} (accepted: {POLICY_NAMES})"))
+}
+
+/// Resolve `train.policy` and its knobs (`train.deadline_factor`,
+/// `train.async_alpha`, `train.async_beta`, `train.quorum`), validating
+/// at parse time instead of deep inside the trainer.
+fn parse_policy_config(c: &Config) -> Result<RoundPolicy> {
+    let mut p = parse_policy(c.str_or("train.policy", "sync"))?;
+    // a knob for a different policy is a mistake, not a no-op — silently
+    // ignoring `train.quorum` under sync would run a different experiment
+    // than the config describes (knob table: `RoundPolicy::ALL_KNOBS`)
+    for knob in RoundPolicy::ALL_KNOBS {
+        let key = format!("train.{knob}");
+        if c.get(&key).is_some() && !p.knob_names().contains(knob) {
+            bail!("config key {key} does not apply to train.policy = {:?}", p.name());
+        }
+    }
+    match &mut p {
+        RoundPolicy::Sync => {}
+        RoundPolicy::Deadline { factor } => {
+            *factor = c.f64_or("train.deadline_factor", *factor);
+        }
+        RoundPolicy::Async { alpha, beta, quorum } => {
+            *alpha = c.f64_or("train.async_alpha", *alpha);
+            *beta = c.f64_or("train.async_beta", *beta);
+            *quorum = c.f64_or("train.quorum", *quorum);
+        }
+    }
+    p.validate()?;
+    Ok(p)
 }
 
 #[cfg(test)]
@@ -184,8 +230,64 @@ sbc = false
     #[test]
     fn rejects_bad_scheme_and_partition() {
         let c = Config::parse("[train]\nscheme = \"sgd\"").unwrap();
-        assert!(Experiment::from_config(&c).is_err());
+        let err = Experiment::from_config(&c).unwrap_err().to_string();
+        assert!(err.contains("proposed") && err.contains("random_batch"), "{err}");
         let c = Config::parse("[data]\npartition = \"skewed\"").unwrap();
+        assert!(Experiment::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn policy_and_straggler_keys() {
+        // defaults: sync barrier, no perturbation
+        let e = Experiment::from_config(&Config::parse("").unwrap()).unwrap();
+        assert!(e.trainer.policy.is_sync());
+        assert!(!e.trainer.straggler.is_active());
+        // deadline with a custom factor + straggler knobs
+        let src = r#"
+[fleet]
+jitter = 0.4
+dropout = 0.1
+[train]
+policy = "deadline"
+deadline_factor = 1.3
+"#;
+        let e = Experiment::from_config(&Config::parse(src).unwrap()).unwrap();
+        assert_eq!(e.trainer.policy, RoundPolicy::Deadline { factor: 1.3 });
+        assert_eq!(e.trainer.straggler, StragglerModel { jitter: 0.4, dropout: 0.1 });
+        // async knobs
+        let src = r#"
+[train]
+policy = "async"
+async_alpha = 0.8
+async_beta = 1.0
+quorum = 0.25
+"#;
+        let e = Experiment::from_config(&Config::parse(src).unwrap()).unwrap();
+        assert_eq!(
+            e.trainer.policy,
+            RoundPolicy::Async { alpha: 0.8, beta: 1.0, quorum: 0.25 }
+        );
+    }
+
+    #[test]
+    fn bad_policy_values_fail_at_parse_with_accepted_list() {
+        let c = Config::parse("[train]\npolicy = \"fifo\"").unwrap();
+        let err = Experiment::from_config(&c).unwrap_err().to_string();
+        assert!(err.contains("sync | deadline | async"), "{err}");
+        // knob validation happens at parse time, not deep in the trainer
+        let c = Config::parse("[train]\npolicy = \"deadline\"\ndeadline_factor = 0.5").unwrap();
+        assert!(Experiment::from_config(&c).is_err());
+        let c = Config::parse("[train]\npolicy = \"async\"\nquorum = 2.0").unwrap();
+        assert!(Experiment::from_config(&c).is_err());
+        let c = Config::parse("[fleet]\ndropout = 1.5").unwrap();
+        assert!(Experiment::from_config(&c).is_err());
+        // a knob for a policy that is not active is an error, not a no-op
+        let c = Config::parse("[train]\nquorum = 0.5").unwrap();
+        let err = Experiment::from_config(&c).unwrap_err().to_string();
+        assert!(err.contains("does not apply"), "{err}");
+        let c = Config::parse("[train]\npolicy = \"deadline\"\nasync_alpha = 0.5").unwrap();
+        assert!(Experiment::from_config(&c).is_err());
+        let c = Config::parse("[train]\npolicy = \"async\"\ndeadline_factor = 1.5").unwrap();
         assert!(Experiment::from_config(&c).is_err());
     }
 

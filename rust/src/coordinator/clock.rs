@@ -20,6 +20,14 @@ impl SimClock {
         self.now += dt;
     }
 
+    /// Advance to the absolute time `t` (event-queue style). Panics if `t`
+    /// would move the clock backwards: simulated time is monotone, and a
+    /// past-dated event is always an upstream bug.
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(t.is_finite() && t >= self.now, "clock cannot rewind {} -> {t}", self.now);
+        self.now = t;
+    }
+
     pub fn now(&self) -> f64 {
         self.now
     }
@@ -38,9 +46,26 @@ mod tests {
     }
 
     #[test]
+    fn advances_to_absolute_times() {
+        let mut c = SimClock::new();
+        c.advance_to(2.5);
+        c.advance_to(2.5); // no-op, not a rewind
+        c.advance(0.5);
+        assert_eq!(c.now(), 3.0);
+    }
+
+    #[test]
     #[should_panic]
     fn rejects_negative() {
         SimClock::new().advance(-1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_rewind() {
+        let mut c = SimClock::new();
+        c.advance(2.0);
+        c.advance_to(1.0);
     }
 
     #[test]

@@ -61,8 +61,42 @@ pub struct Plan {
     /// subperiod breakdown for telemetry
     pub t_up: f64,
     pub t_down: f64,
+    /// per-device *nominal* arrival time at the server (local gradient +
+    /// upload, seconds from period start), clamped into `[0, t_up]` — the
+    /// event times the `sched/` round policies perturb and schedule on.
+    /// Invariant: `finish.len() == K` and `max_k finish[k] <= t_up`, so a
+    /// jitter-free barrier lands exactly on the plan's uplink makespan.
+    pub finish: Vec<f64>,
     /// the optimizer's predicted learning efficiency (if it ran)
     pub predicted_efficiency: Option<f64>,
+}
+
+/// Per-device nominal uplink-arrival times under the slot vector `tau_ul`
+/// for an upload of `bits` per device: the same affine-compute +
+/// slotted-upload expression the makespan formulas fold with `max`,
+/// clamped to the solved makespan `t_up` so bisection slack can never push
+/// an arrival past the barrier it solved for. A non-positive slot means
+/// the device never uploads (clamps to `t_up`).
+fn uplink_finish_times(
+    inst: &Instance,
+    batches: &[f64],
+    tau_ul: &[f64],
+    bits: f64,
+    t_up: f64,
+) -> Vec<f64> {
+    inst.devices
+        .iter()
+        .zip(batches)
+        .zip(tau_ul)
+        .map(|((d, &b), &tk)| {
+            let t_comm = if tk > 0.0 {
+                bits * inst.frame_ul / (tk * d.rate_ul)
+            } else {
+                f64::INFINITY
+            };
+            (d.offset + b / d.speed + t_comm).min(t_up)
+        })
+        .collect()
 }
 
 /// Plan one period for `scheme` given this period's `Instance` (rates
@@ -79,11 +113,19 @@ pub fn plan_period(
         Scheme::Proposed => {
             let g = opt::solve(inst, eps)?;
             let batches = g.solution.quantized_batches(inst);
+            let finish = uplink_finish_times(
+                inst,
+                &g.solution.batches,
+                &g.solution.tau_ul,
+                inst.s_bits,
+                g.solution.t_up,
+            );
             Ok(Plan {
                 batches,
                 t_period: g.solution.period_latency(),
                 t_up: g.solution.t_up,
                 t_down: g.solution.t_down,
+                finish,
                 predicted_efficiency: Some(g.efficiency),
             })
         }
@@ -91,11 +133,13 @@ pub fn plan_period(
             // full local dataset; equal slots on both links
             let batches: Vec<f64> = shard_sizes.iter().map(|&n| n as f64).collect();
             let sol = solve_equal_slots(inst, &batches);
+            let finish = uplink_finish_times(inst, &batches, &sol.tau_ul, inst.s_bits, sol.t_up);
             Ok(Plan {
                 batches: shard_sizes.to_vec(),
                 t_period: sol.period_latency(),
                 t_up: sol.t_up,
                 t_down: sol.t_down,
+                finish,
                 predicted_efficiency: None,
             })
         }
@@ -121,11 +165,16 @@ pub fn plan_period(
                 .iter()
                 .map(|d| param_bits * inst.frame_dl / (tau_dl * d.rate_dl) + d.update_lat)
                 .fold(0.0f64, f64::max);
+            let t_up = t_compute + t_ul;
+            let batches_f: Vec<f64> = shard_sizes.iter().map(|&n| n as f64).collect();
+            let tau = vec![tau_ul; k];
+            let finish = uplink_finish_times(inst, &batches_f, &tau, param_bits, t_up);
             Ok(Plan {
                 batches: shard_sizes.to_vec(), // one epoch touches the shard
                 t_period: t_compute + t_ul + t_dl,
-                t_up: t_compute + t_ul,
+                t_up,
                 t_down: t_dl,
+                finish,
                 predicted_efficiency: None,
             })
         }
@@ -141,11 +190,18 @@ pub fn plan_period(
                 .zip(&batches)
                 .map(|(d, &b)| d.offset + b as f64 / d.speed + d.update_lat)
                 .fold(0.0f64, f64::max);
+            let finish = inst
+                .devices
+                .iter()
+                .zip(&batches)
+                .map(|(d, &b)| (d.offset + b as f64 / d.speed + d.update_lat).min(t))
+                .collect();
             Ok(Plan {
                 batches,
                 t_period: t,
                 t_up: t,
                 t_down: 0.0,
+                finish,
                 predicted_efficiency: None,
             })
         }
@@ -157,11 +213,13 @@ pub fn plan_period(
                 solve_equal_slots(inst, &batches_f)
             };
             let batches = quantize(&batches_f, inst);
+            let finish = uplink_finish_times(inst, &batches_f, &sol.tau_ul, inst.s_bits, sol.t_up);
             Ok(Plan {
                 batches,
                 t_period: sol.period_latency(),
                 t_up: sol.t_up,
                 t_down: sol.t_down,
+                finish,
                 predicted_efficiency: None,
             })
         }
@@ -251,6 +309,37 @@ mod tests {
         .unwrap();
         assert_eq!(p.t_down, 0.0);
         assert!(p.batches.iter().all(|&b| b == 128));
+    }
+
+    #[test]
+    fn finish_times_clamped_and_cover_fleet() {
+        // every plan exposes K nominal arrival times in [0, t_up]; for the
+        // equal-slot gradient scheme the slowest arrival IS the makespan
+        // (same fold, same float ops), which is what lets a jitter-free
+        // sync barrier reproduce t_period bitwise
+        let inst = test_instance(6);
+        let mut rng = Pcg::seeded(6);
+        for scheme in [
+            Scheme::Proposed,
+            Scheme::GradientFl,
+            Scheme::ModelFl { local_batch: 32 },
+            Scheme::Individual { local_batch: 64 },
+            Scheme::Fixed { policy: BatchPolicy::Random, optimal_slots: true },
+        ] {
+            let p = plan_period(scheme, &inst, &shards(6), 32.0 * 570_000.0, EPS, &mut rng)
+                .unwrap();
+            assert_eq!(p.finish.len(), 6, "{scheme:?}");
+            for (k, &f) in p.finish.iter().enumerate() {
+                assert!(
+                    f.is_finite() && f >= 0.0 && f <= p.t_up,
+                    "{scheme:?} device {k}: finish {f} outside [0, {}]",
+                    p.t_up
+                );
+            }
+        }
+        let gfl = plan_period(Scheme::GradientFl, &inst, &shards(6), 0.0, EPS, &mut rng).unwrap();
+        let max_finish = gfl.finish.iter().fold(0.0f64, |a, &b| a.max(b));
+        assert_eq!(max_finish.to_bits(), gfl.t_up.to_bits());
     }
 
     #[test]

@@ -4,7 +4,9 @@
 pub mod cpu;
 pub mod fleet;
 pub mod gpu;
+pub mod straggler;
 
 pub use cpu::CpuModule;
 pub use fleet::{paper_cpu_fleet, paper_gpu_fleet, Compute, Device};
 pub use gpu::{paper_profiles, GpuModule};
+pub use straggler::{Perturbation, StragglerModel};

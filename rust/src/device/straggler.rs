@@ -1,0 +1,164 @@
+//! Straggler model: per-device latency jitter and dropout.
+//!
+//! Real edge fleets are long-tailed — background load, thermal throttling,
+//! link outages — while the paper's latency model is deterministic given
+//! the channel draws. This module injects that tail *on top of* the
+//! analytic per-device finish times, so the scheduler policies in `sched/`
+//! have something to schedule around.
+//!
+//! Determinism contract: perturbations are drawn from counter-derived
+//! `Pcg::for_device` streams keyed by `(seed ^ STRAGGLER_TAG, period,
+//! device)`, never from shared RNG state. Fault injection is therefore a
+//! pure function of the run coordinates — independent of thread count,
+//! execution order, and of *which* round policy consumes the draws — and
+//! the tag keeps the streams disjoint from batch sampling, which uses the
+//! untagged seed.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Pcg;
+
+/// Stream tag separating straggler draws from batch-sampling draws that
+/// share the same `(seed, period, device)` coordinates.
+const STRAGGLER_TAG: u64 = 0x57a6_6e1e_d15c_0de5;
+
+/// Per-period, per-device perturbation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Perturbation {
+    /// multiplicative latency factor, >= 1 (1 = nominal speed)
+    pub slowdown: f64,
+    /// the device fails this period: its contribution never arrives
+    pub dropped: bool,
+}
+
+impl Perturbation {
+    /// The identity perturbation (nominal latency, no failure).
+    pub fn none() -> Self {
+        Perturbation { slowdown: 1.0, dropped: false }
+    }
+}
+
+/// Fleet-wide straggler configuration.
+///
+/// `slowdown = 1 + jitter * Exp(1)` — exponential so the tail is heavy
+/// (mean slowdown `1 + jitter`, but the max over K devices grows like
+/// `1 + jitter * ln K`, which is exactly the barrier pathology the
+/// Deadline/Async policies exist to cut). `dropout` is the per-period
+/// probability a device fails outright.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerModel {
+    /// jitter amplitude (0 = deterministic latency)
+    pub jitter: f64,
+    /// per-period per-device dropout probability in [0, 1)
+    pub dropout: f64,
+}
+
+impl StragglerModel {
+    pub fn new(jitter: f64, dropout: f64) -> Result<StragglerModel> {
+        if !(jitter.is_finite() && jitter >= 0.0) {
+            bail!("straggler jitter must be finite and >= 0, got {jitter}");
+        }
+        if !(dropout.is_finite() && (0.0..1.0).contains(&dropout)) {
+            bail!("straggler dropout must be in [0, 1), got {dropout}");
+        }
+        Ok(StragglerModel { jitter, dropout })
+    }
+
+    /// No perturbation at all: the identity model.
+    pub fn none() -> StragglerModel {
+        StragglerModel { jitter: 0.0, dropout: 0.0 }
+    }
+
+    /// Whether any perturbation can occur. Inactive models skip RNG
+    /// entirely, so a zero-jitter zero-dropout run is bitwise identical to
+    /// one that never constructed a straggler model.
+    pub fn is_active(&self) -> bool {
+        self.jitter > 0.0 || self.dropout > 0.0
+    }
+
+    /// Draw device `device`'s perturbation for `period` of a run seeded
+    /// with `seed`. The draw order is fixed (dropout uniform first, then
+    /// the jitter exponential) so enabling one knob never shifts the
+    /// other's stream.
+    pub fn sample(&self, seed: u64, period: u64, device: u64) -> Perturbation {
+        if !self.is_active() {
+            return Perturbation::none();
+        }
+        let mut rng = Pcg::for_device(seed ^ STRAGGLER_TAG, period, device);
+        let dropped = rng.f64() < self.dropout;
+        let slowdown = 1.0 + self.jitter * rng.exponential();
+        Perturbation { slowdown, dropped }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_is_identity_without_rng() {
+        let m = StragglerModel::none();
+        assert!(!m.is_active());
+        for d in 0..8 {
+            assert_eq!(m.sample(7, 3, d), Perturbation::none());
+        }
+    }
+
+    #[test]
+    fn validates_knobs() {
+        assert!(StragglerModel::new(-0.1, 0.0).is_err());
+        assert!(StragglerModel::new(f64::NAN, 0.0).is_err());
+        assert!(StragglerModel::new(0.0, 1.0).is_err());
+        assert!(StragglerModel::new(0.0, -0.2).is_err());
+        assert!(StragglerModel::new(0.5, 0.3).is_ok());
+    }
+
+    #[test]
+    fn draws_are_replayable_and_coordinate_separated() {
+        let m = StragglerModel::new(0.5, 0.2).unwrap();
+        let a = m.sample(11, 5, 3);
+        assert_eq!(a, m.sample(11, 5, 3));
+        // any coordinate change gives an independent draw stream: over many
+        // devices the slowdowns cannot all coincide
+        let same = (0..200)
+            .filter(|&d| m.sample(11, 5, d).slowdown == m.sample(11, 6, d).slowdown)
+            .count();
+        assert!(same < 3, "{same} coincident draws across periods");
+    }
+
+    #[test]
+    fn slowdown_at_least_one_and_dropout_rate_sane() {
+        let m = StragglerModel::new(0.5, 0.25).unwrap();
+        let n = 4000u64;
+        let mut drops = 0usize;
+        let mut mean = 0.0;
+        for d in 0..n {
+            let p = m.sample(1, 0, d);
+            assert!(p.slowdown >= 1.0);
+            drops += p.dropped as usize;
+            mean += p.slowdown;
+        }
+        mean /= n as f64;
+        let rate = drops as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.03, "dropout rate {rate}");
+        // Exp(1) jitter: mean slowdown == 1 + jitter
+        assert!((mean - 1.5).abs() < 0.05, "mean slowdown {mean}");
+    }
+
+    #[test]
+    fn jitter_only_never_drops_and_dropout_only_never_slows() {
+        let jitter_only = StragglerModel::new(0.4, 0.0).unwrap();
+        let dropout_only = StragglerModel::new(0.0, 0.4).unwrap();
+        for d in 0..500 {
+            assert!(!jitter_only.sample(2, 1, d).dropped);
+            assert_eq!(dropout_only.sample(2, 1, d).slowdown, 1.0);
+        }
+        // the dropout draw comes first, so the two knobs see the same
+        // uniform: a device dropped by dropout_only is also dropped when
+        // jitter is enabled on top
+        let both = StragglerModel::new(0.4, 0.4).unwrap();
+        for d in 0..200 {
+            assert_eq!(dropout_only.sample(2, 1, d).dropped, both.sample(2, 1, d).dropped);
+        }
+    }
+}

@@ -27,6 +27,7 @@ pub mod round;
 
 pub use engine::Engine;
 pub use round::{
-    agg_shard_size, eval_round, gradient_round, gradient_round_sharded, individual_round,
-    model_fl_round, GradOutcome, GradShard, LocalFitOutcome, LocalStepOutcome, MAX_AGG_SHARDS,
+    agg_shard_size, eval_round, gradient_round, gradient_round_sharded,
+    gradient_round_sharded_masked, gradient_round_subset, individual_round, model_fl_round,
+    GradOutcome, GradShard, LocalFitOutcome, LocalStepOutcome, MAX_AGG_SHARDS,
 };

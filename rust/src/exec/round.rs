@@ -5,7 +5,7 @@
 //! returning per-device outcomes **in device order** so the trainer can
 //! reduce them deterministically (see exec/mod.rs for the contract).
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::engine::Engine;
 use crate::coordinator::backend::Backend;
@@ -117,6 +117,36 @@ pub fn gradient_round_sharded(
     seed: u64,
     period: u64,
 ) -> Result<Vec<GradShard>> {
+    gradient_round_sharded_masked(
+        engine, backend, workers, params, train, batches, None, seed, period,
+    )
+}
+
+/// [`gradient_round_sharded`] with a participation mask: devices whose
+/// mask entry is `false` (dropped by the straggler model or past a
+/// deadline — see `sched/`) are skipped entirely, contributing neither
+/// compute nor weight. Shard boundaries are unchanged, so a shard whose
+/// devices are all masked comes back *empty* (zero contributions) and
+/// merges as a no-op; a `None` mask is bitwise-identical to the unmasked
+/// round. Skipping cannot perturb other devices: each device's batch draw
+/// comes from its own counter-derived RNG stream.
+#[allow(clippy::too_many_arguments)]
+pub fn gradient_round_sharded_masked(
+    engine: &Engine,
+    backend: &dyn Backend,
+    workers: &mut [Worker],
+    params: &[f32],
+    train: &Dataset,
+    batches: &[usize],
+    mask: Option<&[bool]>,
+    seed: u64,
+    period: u64,
+) -> Result<Vec<GradShard>> {
+    if let Some(m) = mask {
+        if m.len() != workers.len() {
+            bail!("mask length {} != fleet size {}", m.len(), workers.len());
+        }
+    }
     let p = params.len();
     let shard = agg_shard_size(workers.len());
     engine.run_chunked(workers, shard, |_, base, devs| {
@@ -125,6 +155,9 @@ pub fn gradient_round_sharded(
         let mut weight = 0f64;
         for (j, w) in devs.iter_mut().enumerate() {
             let k = base + j;
+            if mask.is_some_and(|m| !m[k]) {
+                continue;
+            }
             let b = batches[k].max(1);
             let mut rng = Pcg::for_device(seed, period, k as u64);
             let (x, y) = w.data.sample_with(train, b, &mut rng);
@@ -137,6 +170,53 @@ pub fn gradient_round_sharded(
             weight += b as f64;
         }
         Ok(GradShard { agg, loss, weight })
+    })
+}
+
+/// Gradient steps for an arbitrary *subset* of the fleet — async rounds
+/// (`sched/`) dispatch only the devices that are idle. `jobs` lists
+/// `(device id, batchsize)` in strictly ascending device order; outcomes
+/// come back in the same order. The RNG stream still keys on the device's
+/// global id and the round's period, so a device samples the same batch
+/// whether it runs in a full or a subset round of the same period.
+pub fn gradient_round_subset(
+    engine: &Engine,
+    backend: &dyn Backend,
+    workers: &mut [Worker],
+    params: &[f32],
+    train: &Dataset,
+    jobs: &[(usize, usize)],
+    seed: u64,
+    period: u64,
+) -> Result<Vec<GradOutcome>> {
+    for w in jobs.windows(2) {
+        if w[1].0 <= w[0].0 {
+            bail!("subset jobs must be in strictly ascending device order");
+        }
+    }
+    if let Some(&(last, _)) = jobs.last() {
+        if last >= workers.len() {
+            bail!("job device {last} out of range (K = {})", workers.len());
+        }
+    }
+    let mut subset: Vec<(usize, usize, &mut Worker)> = Vec::with_capacity(jobs.len());
+    let mut ji = 0usize;
+    for (k, w) in workers.iter_mut().enumerate() {
+        if ji < jobs.len() && jobs[ji].0 == k {
+            subset.push((k, jobs[ji].1, w));
+            ji += 1;
+        }
+    }
+    engine.run_mut(&mut subset, |_, (k, b, w)| {
+        let k = *k;
+        let b = (*b).max(1);
+        let mut rng = Pcg::for_device(seed, period, k as u64);
+        let (x, y) = w.data.sample_with(train, b, &mut rng);
+        let step = backend
+            .train_step_ws(params, &x, &y, &mut w.scratch)
+            .with_context(|| format!("device {k} train_step"))?;
+        let (grad, _bits) = w.compress(step.grads);
+        Ok(GradOutcome { grad, weight: b as f64, loss: step.loss as f64 })
     })
 }
 
@@ -300,6 +380,93 @@ mod tests {
         for k in [1usize, 7, 32, 33, 64, 999, 4096] {
             assert!(k.div_ceil(agg_shard_size(k)) <= MAX_AGG_SHARDS, "k={k}");
         }
+    }
+
+    #[test]
+    fn masked_round_skips_devices_and_none_mask_matches() {
+        let (train, mut w_a, be) = world(5, true);
+        let (_, mut w_b, _) = world(5, true);
+        let (_, mut w_c, _) = world(5, true);
+        let params = be.init_params().unwrap();
+        let batches = vec![6usize; 5];
+        let full = gradient_round_sharded(
+            &Engine::new(2), &be, &mut w_a, &params, &train, &batches, 7, 2,
+        )
+        .unwrap();
+        let none_mask = gradient_round_sharded_masked(
+            &Engine::new(2), &be, &mut w_b, &params, &train, &batches, None, 7, 2,
+        )
+        .unwrap();
+        for (a, b) in full.iter().zip(&none_mask) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.weight, b.weight);
+            assert_eq!(a.agg.average().unwrap(), b.agg.average().unwrap());
+        }
+        // drop devices 1 and 3: their shards (K=5 -> per-device) come back
+        // empty and the others are untouched
+        let mask = vec![true, false, true, false, true];
+        let masked = gradient_round_sharded_masked(
+            &Engine::new(2), &be, &mut w_c, &params, &train, &batches, Some(&mask), 7, 2,
+        )
+        .unwrap();
+        assert_eq!(masked.len(), 5);
+        for (k, (m, f)) in masked.iter().zip(&full).enumerate() {
+            if mask[k] {
+                assert_eq!(m.agg.contributions(), 1, "device {k}");
+                assert_eq!(m.loss.to_bits(), f.loss.to_bits(), "device {k}");
+            } else {
+                assert_eq!(m.agg.contributions(), 0, "device {k}: shard must be empty");
+                assert_eq!(m.weight, 0.0);
+                assert_eq!(m.loss, 0.0);
+            }
+        }
+        // mask length mismatch is a clean error
+        let (_, mut w_d, _) = world(5, true);
+        let short = [true; 3];
+        assert!(gradient_round_sharded_masked(
+            &Engine::new(1), &be, &mut w_d, &params, &train, &batches, Some(&short[..]), 7, 2,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn subset_round_matches_full_round_per_device() {
+        // a device's gradient in a subset round must equal its gradient in
+        // the full per-device round of the same (seed, period)
+        let (train, mut w_full, be) = world(5, true);
+        let (_, mut w_sub, _) = world(5, true);
+        let params = be.init_params().unwrap();
+        let batches = vec![6usize; 5];
+        let full = gradient_round(
+            &Engine::new(2), &be, &mut w_full, &params, &train, &batches, 9, 4,
+        )
+        .unwrap();
+        let jobs = vec![(1usize, 6usize), (3, 6), (4, 6)];
+        let sub = gradient_round_subset(
+            &Engine::new(2), &be, &mut w_sub, &params, &train, &jobs, 9, 4,
+        )
+        .unwrap();
+        assert_eq!(sub.len(), 3);
+        for (o, &(dev, _)) in sub.iter().zip(&jobs) {
+            assert_eq!(o.grad, full[dev].grad, "device {dev}");
+            assert_eq!(o.loss.to_bits(), full[dev].loss.to_bits(), "device {dev}");
+        }
+        // unsorted or out-of-range jobs are clean errors
+        let (_, mut w_bad, _) = world(5, true);
+        assert!(gradient_round_subset(
+            &Engine::new(1), &be, &mut w_bad, &params, &train, &[(3, 4), (1, 4)], 9, 4,
+        )
+        .is_err());
+        assert!(gradient_round_subset(
+            &Engine::new(1), &be, &mut w_bad, &params, &train, &[(5, 4)], 9, 4,
+        )
+        .is_err());
+        // empty subset is a no-op
+        let out = gradient_round_subset(
+            &Engine::new(1), &be, &mut w_bad, &params, &train, &[], 9, 4,
+        )
+        .unwrap();
+        assert!(out.is_empty());
     }
 
     #[test]

@@ -46,6 +46,28 @@ impl Aggregator {
         self.contributions
     }
 
+    /// Staleness-aware add (async rounds, see `sched/`): the gradient
+    /// enters eq. 1 with its batch weight discounted by the polynomial
+    /// decay `alpha / (1 + s)^beta` ([`staleness_factor`]). At staleness 0
+    /// every contribution carries the same `alpha`, which cancels in the
+    /// weighted average — so an all-fresh async round aggregates exactly
+    /// like the synchronous path.
+    pub fn add_stale(
+        &mut self,
+        grad: &[f32],
+        weight: f64,
+        staleness: u64,
+        alpha: f64,
+        beta: f64,
+    ) -> Result<()> {
+        // an extreme decay can underflow the discount to exactly 0.0
+        // ((1 + s)^beta overflows to inf for large beta); floor it so an
+        // ancient gradient degrades to a negligible contribution instead
+        // of tripping `add`'s positive-weight guard mid-run
+        let w = (weight * staleness_factor(alpha, beta, staleness)).max(f64::MIN_POSITIVE);
+        self.add(grad, w)
+    }
+
     /// Merge another aggregator's partial state (a *shard*) into this one.
     /// Accumulation is f64 throughout, so merging contiguous shards in
     /// device order reproduces the order the streaming `add` path would
@@ -92,6 +114,13 @@ impl Aggregator {
     pub fn finish(self) -> Result<Vec<f32>> {
         self.average()
     }
+}
+
+/// Polynomial staleness discount `alpha / (1 + s)^beta` (FedAsync-style):
+/// a gradient computed `s` server rounds ago keeps `alpha` of its weight
+/// at `s = 0` and decays polynomially from there.
+pub fn staleness_factor(alpha: f64, beta: f64, staleness: u64) -> f64 {
+    alpha / (1.0 + staleness as f64).powf(beta)
 }
 
 /// One-shot convenience: aggregate a slice of (grad, weight) pairs.
@@ -206,6 +235,89 @@ mod tests {
         // reset clears the "has contributions" state too
         reused.reset();
         assert!(reused.average().is_err());
+    }
+
+    #[test]
+    fn empty_shard_merge_property() {
+        // a deadline round can hand the reducer shards where *every*
+        // device was dropped: merging an empty shard must be a bitwise
+        // no-op anywhere in the fold, and an all-empty reduce must surface
+        // the "no gradients" error instead of emitting zeros
+        let mut rng = crate::util::rng::Pcg::seeded(7);
+        for trial in 0..20u64 {
+            let p = 32;
+            let k = 1 + (trial % 5) as usize;
+            let grads: Vec<Vec<f32>> =
+                (0..k).map(|_| (0..p).map(|_| rng.normal() as f32).collect()).collect();
+            // interleave an empty shard before, between, and after the
+            // real per-device shards
+            let mut shards: Vec<Aggregator> = Vec::new();
+            shards.push(Aggregator::new(p)); // leading empty
+            for (i, g) in grads.iter().enumerate() {
+                let mut a = Aggregator::new(p);
+                a.add(g, (i + 1) as f64).unwrap();
+                shards.push(a);
+                shards.push(Aggregator::new(p)); // trailing empties
+            }
+            let merged = Aggregator::reduce_shards(shards).unwrap();
+            assert_eq!(merged.contributions(), k, "trial {trial}");
+            let mut dense = Aggregator::new(p);
+            for (i, g) in grads.iter().enumerate() {
+                dense.add(g, (i + 1) as f64).unwrap();
+            }
+            assert_eq!(
+                merged.finish().unwrap(),
+                dense.finish().unwrap(),
+                "trial {trial}: empty shards must not perturb the fold"
+            );
+        }
+        // all shards empty: contributions stay 0 and averaging errors
+        let all_empty: Vec<Aggregator> = (0..4).map(|_| Aggregator::new(8)).collect();
+        let merged = Aggregator::reduce_shards(all_empty).unwrap();
+        assert_eq!(merged.contributions(), 0);
+        assert!(merged.average().is_err());
+        // merging an empty shard of the wrong width is still rejected
+        let mut a = Aggregator::new(8);
+        assert!(a.merge(&Aggregator::new(4)).is_err());
+    }
+
+    #[test]
+    fn staleness_factor_decay() {
+        // s = 0 keeps alpha; decay is monotone in s and steeper in beta
+        assert_eq!(staleness_factor(0.6, 0.5, 0), 0.6);
+        assert_eq!(staleness_factor(1.0, 0.0, 9), 1.0); // beta 0: no decay
+        let f1 = staleness_factor(0.6, 0.5, 1);
+        let f2 = staleness_factor(0.6, 0.5, 2);
+        assert!(f1 < 0.6 && f2 < f1);
+        assert!(staleness_factor(0.6, 2.0, 1) < f1);
+        assert!((f1 - 0.6 / 2f64.sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn add_stale_discounts_weight() {
+        let g1 = vec![1.0f32, 0.0];
+        let g2 = vec![0.0f32, 1.0];
+        // fresh-only aggregation at uniform staleness == plain aggregation
+        let mut fresh = Aggregator::new(2);
+        fresh.add_stale(&g1, 2.0, 0, 0.6, 0.5).unwrap();
+        fresh.add_stale(&g2, 2.0, 0, 0.6, 0.5).unwrap();
+        assert_eq!(fresh.finish().unwrap(), vec![0.5, 0.5]);
+        // a stale gradient is down-weighted against a fresh one:
+        // beta = 1, s = 3 -> factor 1/4 of alpha
+        let mut mixed = Aggregator::new(2);
+        mixed.add_stale(&g1, 4.0, 0, 1.0, 1.0).unwrap();
+        mixed.add_stale(&g2, 4.0, 3, 1.0, 1.0).unwrap();
+        let out = mixed.finish().unwrap();
+        assert!((out[0] - 0.8).abs() < 1e-7, "{out:?}");
+        assert!((out[1] - 0.2).abs() < 1e-7, "{out:?}");
+        // an extreme decay ((1+s)^beta = inf -> factor 0) degrades to a
+        // negligible contribution, never to a mid-run error
+        let mut extreme = Aggregator::new(2);
+        extreme.add_stale(&g1, 4.0, 0, 1.0, 400.0).unwrap();
+        extreme.add_stale(&g2, 4.0, 9, 1.0, 400.0).unwrap();
+        let out = extreme.finish().unwrap();
+        assert!((out[0] - 1.0).abs() < 1e-7, "{out:?}");
+        assert!(out[1].abs() < 1e-7, "{out:?}");
     }
 
     #[test]

@@ -2,4 +2,4 @@
 
 pub mod aggregate;
 
-pub use aggregate::{aggregate, Aggregator};
+pub use aggregate::{aggregate, staleness_factor, Aggregator};

@@ -30,6 +30,7 @@ pub mod grad;
 pub mod metrics;
 pub mod opt;
 pub mod runtime;
+pub mod sched;
 pub mod testkit;
 pub mod util;
 pub mod wireless;

@@ -1,0 +1,519 @@
+//! Per-policy round execution on the event queue.
+//!
+//! The trainer plans a period (scheme.rs), then hands the plan here. The
+//! scheduler turns the plan's per-device nominal finish times plus the
+//! straggler perturbations into completion events, drains the queue
+//! according to the round policy, and folds the surviving contributions
+//! into the caller's server-side [`Aggregator`]. All simulated-time
+//! arithmetic stays in here and is returned as `RoundReport::duration`;
+//! the trainer owns the `SimClock` and is the only place that advances it.
+//!
+//! Determinism: event times are computed on the coordinator thread from
+//! counter-derived straggler draws, the queue pops in `(time, device)`
+//! order, and gradient execution goes through the `exec` rounds whose
+//! results land in device-ordered slots — so every policy produces
+//! bitwise-identical `TrainLog` records at any thread count.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::policy::RoundPolicy;
+use super::queue::{Event, EventQueue};
+use crate::coordinator::backend::Backend;
+use crate::coordinator::scheme::Plan;
+use crate::coordinator::worker::Worker;
+use crate::data::Dataset;
+use crate::device::StragglerModel;
+use crate::exec::{self, Engine};
+use crate::grad::Aggregator;
+use crate::opt::types::Instance;
+
+/// One buffered async contribution, computed at dispatch time against the
+/// then-current global parameters and held until its completion event.
+struct Pending {
+    grad: Vec<f32>,
+    batch: usize,
+    loss: f64,
+    /// the period the gradient was computed in (staleness anchor)
+    period: u64,
+}
+
+/// What one scheduled round did, for the trainer's bookkeeping.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundReport {
+    /// simulated seconds this period took end-to-end (incl. downlink)
+    pub duration: f64,
+    /// batch-weighted mean train loss over the *applied* gradients
+    /// (NaN when nothing arrived — the trainer carries the previous loss)
+    pub train_loss: f64,
+    /// total batch actually applied this period (drives xi estimation)
+    pub b_effective: usize,
+    /// gradients applied this period
+    pub applied: usize,
+    /// devices lost to dropout this period
+    pub dropped: usize,
+    /// devices that missed the deadline (their batch is carried forward)
+    pub late: usize,
+    /// batch-weighted mean staleness of the applied gradients (async)
+    pub stale_mean: f64,
+    /// whether any gradient entered the aggregate (callers skip the
+    /// server update otherwise)
+    pub updated: bool,
+    /// wall seconds spent in the serial merge section (perf telemetry
+    /// only — never feeds back into results)
+    pub reduce_secs: f64,
+}
+
+/// Policy-driven round scheduler. Owns the cross-period event queue (async
+/// in-flight work), per-device busy flags, and the deadline carry ledger.
+pub struct RoundScheduler {
+    policy: RoundPolicy,
+    straggler: StragglerModel,
+    seed: u64,
+    /// in-flight async contributions, keyed by absolute completion time
+    inflight: EventQueue<Pending>,
+    busy: Vec<bool>,
+    /// per-device batch deferred by a missed deadline, re-planned into the
+    /// device's next period (capped at its batch ceiling)
+    carry: Vec<usize>,
+}
+
+impl RoundScheduler {
+    pub fn new(
+        policy: RoundPolicy,
+        straggler: StragglerModel,
+        k: usize,
+        seed: u64,
+    ) -> Result<RoundScheduler> {
+        policy.validate()?;
+        Ok(RoundScheduler {
+            policy,
+            straggler,
+            seed,
+            inflight: EventQueue::new(),
+            busy: vec![false; k],
+            carry: vec![0; k],
+        })
+    }
+
+    pub fn policy(&self) -> RoundPolicy {
+        self.policy
+    }
+
+    /// Devices whose deadline-missed batch is pending re-planning.
+    pub fn carried(&self) -> &[usize] {
+        &self.carry
+    }
+
+    /// Fold the deadline carry ledger into this period's plan: each
+    /// deferred batch is added to its device's planned batch and the
+    /// device's nominal finish time extended by the extra compute. Growth
+    /// is capped twice — at the device's batch ceiling AND at the compute
+    /// it can still fit before this period's deadline — so a carried
+    /// device always remains able to arrive on time at nominal speed
+    /// (otherwise a large carry would deterministically re-miss every
+    /// period and the device would livelock out of the training run).
+    /// Carry beyond the caps is forfeited. No-op for non-deadline
+    /// policies.
+    pub fn apply_carry(&mut self, plan: &mut Plan, inst: &Instance) {
+        let RoundPolicy::Deadline { factor } = self.policy else {
+            return;
+        };
+        let deadline = plan.t_up * factor;
+        for (k, c) in self.carry.iter_mut().enumerate() {
+            if *c == 0 {
+                continue;
+            }
+            let d = &inst.devices[k];
+            let cap = (d.b_max.floor() as usize).max(plan.batches[k]);
+            // compute headroom before the deadline, in samples
+            let headroom = ((deadline - plan.finish[k]).max(0.0) * d.speed).floor() as usize;
+            let grown = (plan.batches[k] + (*c).min(headroom)).min(cap);
+            let added = grown - plan.batches[k];
+            if added > 0 {
+                plan.batches[k] = grown;
+                plan.finish[k] += added as f64 / d.speed;
+            }
+            *c = 0; // a re-miss re-adds the (grown) batch
+        }
+    }
+
+    /// Execute one gradient-exchange period under the configured policy.
+    /// `period` is the round's RNG/staleness coordinate (the trainer's
+    /// `server.period` before the post-round increment), `now` the current
+    /// simulated time, and `agg` the caller's reset server accumulator.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gradient_period(
+        &mut self,
+        engine: &Engine,
+        backend: &dyn Backend,
+        workers: &mut [Worker],
+        params: &[f32],
+        train: &Dataset,
+        plan: &Plan,
+        period: u64,
+        now: f64,
+        agg: &mut Aggregator,
+    ) -> Result<RoundReport> {
+        debug_assert_eq!(workers.len(), self.busy.len(), "fleet size changed under scheduler");
+        match self.policy {
+            RoundPolicy::Sync => {
+                self.barrier_period(engine, backend, workers, params, train, plan, period, agg)
+            }
+            RoundPolicy::Deadline { factor } => self.deadline_period(
+                factor, engine, backend, workers, params, train, plan, period, agg,
+            ),
+            RoundPolicy::Async { alpha, beta, quorum } => self.async_period(
+                alpha, beta, quorum, engine, backend, workers, params, train, plan, period, now,
+                agg,
+            ),
+        }
+    }
+
+    /// Sync: the paper's barrier, expressed as "drain the event queue".
+    /// With the straggler model inactive every arrival is the plan's
+    /// clamped nominal finish, so the barrier lands exactly on the plan's
+    /// uplink makespan and the period duration reproduces `plan.t_period`
+    /// bitwise. A dropped device is detected at the nominal makespan and
+    /// excluded from the reduce; the barrier still waits for every
+    /// surviving straggler.
+    #[allow(clippy::too_many_arguments)]
+    fn barrier_period(
+        &mut self,
+        engine: &Engine,
+        backend: &dyn Backend,
+        workers: &mut [Worker],
+        params: &[f32],
+        train: &Dataset,
+        plan: &Plan,
+        period: u64,
+        agg: &mut Aggregator,
+    ) -> Result<RoundReport> {
+        let k = workers.len();
+        let mut queue: EventQueue<()> = EventQueue::new();
+        let mut mask = vec![true; k];
+        let mut dropped = 0usize;
+        for d in 0..k {
+            let pert = self.straggler.sample(self.seed, period, d as u64);
+            if pert.dropped {
+                mask[d] = false;
+                dropped += 1;
+            } else {
+                queue.push(plan.finish[d] * pert.slowdown, d, ());
+            }
+        }
+        // the fold below is commutative, so the queue's total order buys
+        // no extra determinism here — sync runs on the queue so all three
+        // policies share one event representation (and one code path to
+        // audit), not because pop order matters to a barrier
+        let mut barrier = plan.t_up;
+        while let Some(e) = queue.pop() {
+            barrier = barrier.max(e.time);
+        }
+        let mask_opt = if dropped > 0 { Some(&mask[..]) } else { None };
+        let (loss_acc, w_acc, reduce_secs) = self.run_masked(
+            engine, backend, workers, params, train, plan, mask_opt, period, agg,
+        )?;
+        let planned: usize = plan.batches.iter().sum();
+        Ok(RoundReport {
+            duration: barrier + plan.t_down,
+            train_loss: if w_acc > 0.0 { loss_acc / w_acc } else { f64::NAN },
+            b_effective: if dropped == 0 { planned } else { w_acc as usize },
+            applied: k - dropped,
+            dropped,
+            late: 0,
+            stale_mean: 0.0,
+            updated: agg.contributions() > 0,
+            reduce_secs,
+        })
+    }
+
+    /// Deadline: pop arrivals up to `factor * t_up`; later events are
+    /// discarded from the reduce and their planned batch carried into the
+    /// device's next period. Crash detection matches the sync barrier's
+    /// model — a dropped device is noticed at the nominal makespan `t_up`
+    /// — so a round only waits out the full deadline when a *straggler*
+    /// actually misses it. Period-for-period a deadline round therefore
+    /// never closes after the barrier would have.
+    #[allow(clippy::too_many_arguments)]
+    fn deadline_period(
+        &mut self,
+        factor: f64,
+        engine: &Engine,
+        backend: &dyn Backend,
+        workers: &mut [Worker],
+        params: &[f32],
+        train: &Dataset,
+        plan: &Plan,
+        period: u64,
+        agg: &mut Aggregator,
+    ) -> Result<RoundReport> {
+        let k = workers.len();
+        let deadline = plan.t_up * factor;
+        let mut queue: EventQueue<()> = EventQueue::new();
+        let mut mask = vec![false; k];
+        let mut dropped = 0usize;
+        for d in 0..k {
+            let pert = self.straggler.sample(self.seed, period, d as u64);
+            if pert.dropped {
+                dropped += 1;
+            } else {
+                queue.push(plan.finish[d] * pert.slowdown, d, ());
+            }
+        }
+        let mut late = 0usize;
+        let mut arrived = 0usize;
+        let mut t_close = 0f64;
+        while let Some(e) = queue.pop() {
+            if e.time <= deadline {
+                mask[e.device] = true;
+                arrived += 1;
+                t_close = t_close.max(e.time);
+            } else {
+                late += 1;
+                self.carry[e.device] += plan.batches[e.device].max(1);
+            }
+        }
+        if dropped > 0 {
+            t_close = t_close.max(plan.t_up);
+        }
+        if late > 0 {
+            t_close = deadline;
+        }
+        let mask_opt = if arrived == k { None } else { Some(&mask[..]) };
+        let (loss_acc, w_acc, reduce_secs) = self.run_masked(
+            engine, backend, workers, params, train, plan, mask_opt, period, agg,
+        )?;
+        let planned: usize = plan.batches.iter().sum();
+        Ok(RoundReport {
+            duration: t_close + plan.t_down,
+            train_loss: if w_acc > 0.0 { loss_acc / w_acc } else { f64::NAN },
+            b_effective: if arrived == k { planned } else { w_acc as usize },
+            applied: arrived,
+            dropped,
+            late,
+            stale_mean: 0.0,
+            updated: agg.contributions() > 0,
+            reduce_secs,
+        })
+    }
+
+    /// Async: dispatch every idle device against the current parameters,
+    /// then close the round at the quorum-th arrival in the cross-period
+    /// queue. Busy devices keep computing; their gradients land in a later
+    /// round discounted by `alpha / (1 + s)^beta`.
+    #[allow(clippy::too_many_arguments)]
+    fn async_period(
+        &mut self,
+        alpha: f64,
+        beta: f64,
+        quorum: f64,
+        engine: &Engine,
+        backend: &dyn Backend,
+        workers: &mut [Worker],
+        params: &[f32],
+        train: &Dataset,
+        plan: &Plan,
+        period: u64,
+        now: f64,
+        agg: &mut Aggregator,
+    ) -> Result<RoundReport> {
+        let k = workers.len();
+        // 1. dispatch idle devices (device order; a dropped device loses
+        //    this period's work and is re-dispatched next period)
+        let mut jobs: Vec<(usize, usize)> = Vec::new();
+        let mut arrivals: Vec<f64> = Vec::new();
+        let mut dropped = 0usize;
+        for d in 0..k {
+            if self.busy[d] {
+                continue;
+            }
+            let pert = self.straggler.sample(self.seed, period, d as u64);
+            if pert.dropped {
+                dropped += 1;
+                continue;
+            }
+            jobs.push((d, plan.batches[d].max(1)));
+            arrivals.push(now + plan.finish[d] * pert.slowdown);
+        }
+        if !jobs.is_empty() {
+            let outcomes = exec::gradient_round_subset(
+                engine, backend, workers, params, train, &jobs, self.seed, period,
+            )?;
+            for ((&(dev, batch), &at), o) in jobs.iter().zip(&arrivals).zip(outcomes) {
+                self.busy[dev] = true;
+                self.inflight
+                    .push(at, dev, Pending { grad: o.grad, batch, loss: o.loss, period });
+            }
+        }
+        // 2. close the round at the quorum-th pending arrival
+        if self.inflight.is_empty() {
+            // everyone dropped or nothing in flight: an idle period of the
+            // nominal length, no update
+            return Ok(RoundReport {
+                duration: plan.t_period,
+                train_loss: f64::NAN,
+                b_effective: 0,
+                applied: 0,
+                dropped,
+                late: 0,
+                stale_mean: 0.0,
+                updated: false,
+                reduce_secs: 0.0,
+            });
+        }
+        let need = ((quorum * k as f64).ceil() as usize).clamp(1, k).min(self.inflight.len());
+        let mut popped: Vec<Event<Pending>> = Vec::with_capacity(need);
+        for _ in 0..need {
+            popped.push(self.inflight.pop().expect("queue length checked"));
+        }
+        // anything else already in by the aggregation instant joins this
+        // round too (an arrival during the following downlink waits for
+        // the next round: its gradient is applied against the *next*
+        // update, which is exactly what its staleness count then says)
+        let t_close = popped.last().expect("need >= 1").time.max(now);
+        while self.inflight.peek_time().is_some_and(|t| t <= t_close) {
+            popped.push(self.inflight.pop().expect("peeked"));
+        }
+        // 3. apply in arrival order with staleness-discounted weights
+        let t0 = Instant::now();
+        let mut loss_acc = 0f64;
+        let mut w_acc = 0f64;
+        let mut stale_acc = 0f64;
+        for e in &popped {
+            self.busy[e.device] = false;
+            let s = period - e.payload.period;
+            let w = e.payload.batch as f64;
+            agg.add_stale(&e.payload.grad, w, s, alpha, beta)?;
+            loss_acc += e.payload.loss * w;
+            w_acc += w;
+            stale_acc += s as f64 * w;
+        }
+        Ok(RoundReport {
+            duration: (t_close - now) + plan.t_down,
+            train_loss: loss_acc / w_acc,
+            b_effective: w_acc as usize,
+            applied: popped.len(),
+            dropped,
+            late: 0,
+            stale_mean: stale_acc / w_acc,
+            updated: true,
+            reduce_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    #[cfg(test)]
+    fn carry_mut(&mut self) -> &mut Vec<usize> {
+        &mut self.carry
+    }
+
+    /// Shared barrier/deadline execution tail: the sharded gradient round
+    /// over the (possibly masked) fleet, merged into `agg` in device order
+    /// — the exact fold the legacy synchronous path used, so a `None` mask
+    /// reproduces it bitwise.
+    #[allow(clippy::too_many_arguments)]
+    fn run_masked(
+        &self,
+        engine: &Engine,
+        backend: &dyn Backend,
+        workers: &mut [Worker],
+        params: &[f32],
+        train: &Dataset,
+        plan: &Plan,
+        mask: Option<&[bool]>,
+        period: u64,
+        agg: &mut Aggregator,
+    ) -> Result<(f64, f64, f64)> {
+        let shards = exec::gradient_round_sharded_masked(
+            engine,
+            backend,
+            workers,
+            params,
+            train,
+            &plan.batches,
+            mask,
+            self.seed,
+            period,
+        )?;
+        let t0 = Instant::now();
+        let mut loss_acc = 0f64;
+        let mut w_acc = 0f64;
+        for s in &shards {
+            agg.merge(&s.agg)?;
+            loss_acc += s.loss;
+            w_acc += s.weight;
+        }
+        Ok((loss_acc, w_acc, t0.elapsed().as_secs_f64()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::types::test_instance;
+
+    fn plan_for(inst: &Instance) -> Plan {
+        let k = inst.k();
+        Plan {
+            batches: vec![10; k],
+            t_period: 1.2,
+            t_up: 1.0,
+            t_down: 0.2,
+            finish: vec![0.9; k],
+            predicted_efficiency: None,
+        }
+    }
+
+    #[test]
+    fn apply_carry_grows_batches_and_finish_then_clears() {
+        let inst = test_instance(3);
+        let policy = RoundPolicy::Deadline { factor: 1.25 };
+        let mut sched = RoundScheduler::new(policy, StragglerModel::none(), 3, 7).unwrap();
+        let mut plan = plan_for(&inst);
+        sched.carry_mut()[1] = 6;
+        sched.apply_carry(&mut plan, &inst);
+        assert_eq!(plan.batches, vec![10, 16, 10]);
+        // finish extends by exactly the extra compute time
+        let extra = 6.0 / inst.devices[1].speed;
+        assert_eq!(plan.finish[1], 0.9 + extra);
+        assert_eq!(plan.finish[0], 0.9);
+        // the ledger is consumed
+        assert_eq!(sched.carried(), &[0, 0, 0]);
+    }
+
+    #[test]
+    fn apply_carry_caps_at_deadline_headroom_and_batch_ceiling() {
+        // a huge carry must not grow the batch past what the device can
+        // still compute before the deadline — that would deterministically
+        // re-miss every period (livelock)
+        let inst = test_instance(2); // device 0: speed 20, b_max 128
+        let policy = RoundPolicy::Deadline { factor: 1.25 };
+        let mut sched = RoundScheduler::new(policy, StragglerModel::none(), 2, 7).unwrap();
+        let mut plan = plan_for(&inst); // t_up 1.0, finish 0.9 -> headroom 0.35s = 7 samples
+        sched.carry_mut()[0] = 10_000;
+        sched.apply_carry(&mut plan, &inst);
+        assert_eq!(plan.batches[0], 17, "carry must cap at the deadline headroom");
+        assert!(plan.finish[0] <= plan.t_up * 1.25);
+        assert_eq!(sched.carried(), &[0, 0], "excess carry is forfeited");
+        // with a loose deadline the batch ceiling binds instead
+        let policy = RoundPolicy::Deadline { factor: 10.0 };
+        let mut sched = RoundScheduler::new(policy, StragglerModel::none(), 2, 7).unwrap();
+        let mut plan = plan_for(&inst);
+        sched.carry_mut()[0] = 10_000;
+        sched.apply_carry(&mut plan, &inst);
+        assert_eq!(plan.batches[0], 128, "loose deadline: cap at floor(b_max)");
+    }
+
+    #[test]
+    fn apply_carry_noop_for_non_deadline_policies() {
+        let inst = test_instance(2);
+        let mut sched =
+            RoundScheduler::new(RoundPolicy::Sync, StragglerModel::none(), 2, 7).unwrap();
+        let mut plan = plan_for(&inst);
+        sched.carry_mut()[0] = 6;
+        sched.apply_carry(&mut plan, &inst);
+        assert_eq!(plan.batches[0], 10);
+        assert_eq!(sched.carried(), &[6, 0]);
+    }
+}

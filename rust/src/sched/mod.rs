@@ -1,0 +1,43 @@
+//! Deterministic discrete-event round scheduler.
+//!
+//! The paper's TDMA frame is fully synchronous: every period barriers on
+//! the slowest device, so one straggler stalls the whole fleet. This
+//! subsystem replaces that implicit barrier with an explicit event queue
+//! keyed by simulated completion time and offers three round policies:
+//!
+//! * [`RoundPolicy::Sync`] — the original barrier, refactored onto the
+//!   queue (drain everything; period ends at the last arrival);
+//! * [`RoundPolicy::Deadline`] — semi-synchronous: arrivals after
+//!   `factor x` the nominal makespan are dropped from the reduce and
+//!   their batch re-planned into the device's next period;
+//! * [`RoundPolicy::Async`] — buffered-asynchronous: the round closes at
+//!   a quorum of arrivals and stale gradients are applied later with the
+//!   weight `alpha / (1 + s)^beta` (`grad::Aggregator::add_stale`).
+//!
+//! Determinism contract (validated by `tests/exec_determinism.rs`), the
+//! same three mechanisms as `exec/` plus one for event ordering:
+//!
+//! 1. every event time is computed on the coordinator thread from the
+//!    plan's nominal per-device finish times and counter-derived straggler
+//!    draws (`device::StragglerModel::sample` keyed by `(seed, period,
+//!    device)`) — fault injection is independent of execution order;
+//! 2. the queue pops in `(time, device id)` order under `f64::total_cmp`,
+//!    a total order over events — ties cannot be broken by push order,
+//!    thread scheduling, or hash state;
+//! 3. gradient execution goes through the `exec` rounds (device-ordered
+//!    result slots, K-determined shard boundaries), and every aggregation
+//!    — masked shard merges and staleness-weighted async applies alike —
+//!    happens in that popped/device order with f64 accumulation.
+//!
+//! With the straggler model inactive, `Sync` reproduces the legacy
+//! synchronous trainer bitwise: arrivals are the plan's clamped nominal
+//! finish times, so the barrier lands exactly on the plan's uplink
+//! makespan and the period advances by `plan.t_period`.
+
+pub mod executor;
+pub mod policy;
+pub mod queue;
+
+pub use executor::{RoundReport, RoundScheduler};
+pub use policy::{RoundPolicy, POLICY_NAMES};
+pub use queue::{Event, EventQueue};

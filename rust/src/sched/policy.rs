@@ -1,0 +1,165 @@
+//! Round policies: how a training period closes.
+//!
+//! `Sync` is the paper's TDMA barrier (wait for every device). `Deadline`
+//! is semi-synchronous in the spirit of adaptive-aggregation FL (Wang et
+//! al., arXiv:1804.05271): the server stops waiting at a deadline and
+//! re-plans the missing contributions into the next period. `Async` is a
+//! buffered-asynchronous mode (Prakash et al., arXiv:2111.00637 frame the
+//! staleness-vs-delay tradeoff it navigates): the server closes a round as
+//! soon as a quorum of gradients has arrived and discounts late, stale
+//! gradients by `alpha / (1 + s)^beta`.
+
+use anyhow::{bail, Result};
+
+/// Accepted `--policy` / `train.policy` values (keep in sync with
+/// [`RoundPolicy::parse`]; the CLI help and error paths print this).
+pub const POLICY_NAMES: &str = "sync | deadline | async";
+
+/// How the coordinator closes each training period.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum RoundPolicy {
+    /// Barrier on the slowest device (the paper's synchronous frame).
+    #[default]
+    Sync,
+    /// Semi-synchronous: the server waits until `factor` x the period's
+    /// nominal uplink makespan; devices that miss the deadline are dropped
+    /// from the reduce and their planned batch is carried into their next
+    /// period's plan.
+    Deadline {
+        /// deadline as a multiple of the nominal makespan, >= 1
+        factor: f64,
+    },
+    /// Buffered-asynchronous: each round closes once `quorum` (fraction of
+    /// the fleet) gradients are buffered; devices still computing keep
+    /// their in-flight work and deliver it in a later round, discounted by
+    /// the staleness weight `alpha / (1 + s)^beta` where `s` is the age of
+    /// the round the gradient was computed in.
+    Async {
+        /// base staleness weight, in (0, 1]
+        alpha: f64,
+        /// staleness decay exponent, >= 0
+        beta: f64,
+        /// fraction of the fleet that closes a round, in (0, 1]
+        quorum: f64,
+    },
+}
+
+impl RoundPolicy {
+    /// Every per-policy knob name, in canonical (underscore) form. Config
+    /// keys prefix these with `train.`; CLI flags swap `_` for `-`. The
+    /// single source of truth for the stray-knob rejection on both
+    /// surfaces.
+    pub const ALL_KNOBS: &'static [&'static str] =
+        &["deadline_factor", "async_alpha", "async_beta", "quorum"];
+
+    /// The subset of [`Self::ALL_KNOBS`] that applies to this policy.
+    pub fn knob_names(&self) -> &'static [&'static str] {
+        match self {
+            RoundPolicy::Sync => &[],
+            RoundPolicy::Deadline { .. } => &["deadline_factor"],
+            RoundPolicy::Async { .. } => &["async_alpha", "async_beta", "quorum"],
+        }
+    }
+
+    /// Parse a policy name as used in configs and on the CLI; knob fields
+    /// start at their defaults (`deadline` factor 1.25; `async` alpha 0.6,
+    /// beta 0.5, quorum 0.5).
+    pub fn parse(s: &str) -> Option<RoundPolicy> {
+        match s {
+            "sync" => Some(RoundPolicy::Sync),
+            "deadline" | "semi-sync" | "semisync" => Some(RoundPolicy::Deadline { factor: 1.25 }),
+            "async" => Some(RoundPolicy::Async { alpha: 0.6, beta: 0.5, quorum: 0.5 }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoundPolicy::Sync => "sync",
+            RoundPolicy::Deadline { .. } => "deadline",
+            RoundPolicy::Async { .. } => "async",
+        }
+    }
+
+    pub fn is_sync(&self) -> bool {
+        matches!(self, RoundPolicy::Sync)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            RoundPolicy::Sync => {}
+            RoundPolicy::Deadline { factor } => {
+                if !(factor.is_finite() && factor >= 1.0) {
+                    bail!("deadline factor must be finite and >= 1, got {factor}");
+                }
+            }
+            RoundPolicy::Async { alpha, beta, quorum } => {
+                if !(alpha.is_finite() && alpha > 0.0 && alpha <= 1.0) {
+                    bail!("async alpha must be in (0, 1], got {alpha}");
+                }
+                if !(beta.is_finite() && beta >= 0.0) {
+                    bail!("async beta must be finite and >= 0, got {beta}");
+                }
+                if !(quorum.is_finite() && quorum > 0.0 && quorum <= 1.0) {
+                    bail!("async quorum must be in (0, 1], got {quorum}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_names() {
+        for name in ["sync", "deadline", "async"] {
+            let p = RoundPolicy::parse(name).unwrap();
+            assert_eq!(p.name(), name);
+            p.validate().unwrap();
+        }
+        assert_eq!(RoundPolicy::parse("semi-sync").unwrap().name(), "deadline");
+        assert!(RoundPolicy::parse("fifo").is_none());
+    }
+
+    #[test]
+    fn default_is_sync() {
+        assert!(RoundPolicy::default().is_sync());
+        assert!(!RoundPolicy::parse("async").unwrap().is_sync());
+    }
+
+    #[test]
+    fn knob_table_is_a_disjoint_cover() {
+        // every policy's knobs come from ALL_KNOBS, and no knob belongs
+        // to two policies — the invariant the stray-knob rejection on the
+        // CLI/config surfaces relies on
+        let policies = [
+            RoundPolicy::Sync,
+            RoundPolicy::parse("deadline").unwrap(),
+            RoundPolicy::parse("async").unwrap(),
+        ];
+        let mut seen: Vec<&str> = Vec::new();
+        for p in policies {
+            for &k in p.knob_names() {
+                assert!(RoundPolicy::ALL_KNOBS.contains(&k), "{k} missing from ALL_KNOBS");
+                assert!(!seen.contains(&k), "{k} claimed by two policies");
+                seen.push(k);
+            }
+        }
+        assert_eq!(seen.len(), RoundPolicy::ALL_KNOBS.len());
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(RoundPolicy::Deadline { factor: 0.9 }.validate().is_err());
+        assert!(RoundPolicy::Deadline { factor: f64::INFINITY }.validate().is_err());
+        assert!(RoundPolicy::Async { alpha: 0.0, beta: 0.5, quorum: 0.5 }.validate().is_err());
+        assert!(RoundPolicy::Async { alpha: 1.5, beta: 0.5, quorum: 0.5 }.validate().is_err());
+        assert!(RoundPolicy::Async { alpha: 0.5, beta: -1.0, quorum: 0.5 }.validate().is_err());
+        assert!(RoundPolicy::Async { alpha: 0.5, beta: 0.5, quorum: 0.0 }.validate().is_err());
+        assert!(RoundPolicy::Async { alpha: 0.5, beta: 0.5, quorum: 1.1 }.validate().is_err());
+        assert!(RoundPolicy::Async { alpha: 0.5, beta: 0.0, quorum: 1.0 }.validate().is_ok());
+    }
+}

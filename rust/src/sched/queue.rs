@@ -1,0 +1,149 @@
+//! Deterministic discrete-event queue.
+//!
+//! A min-heap keyed by `(completion time, device id)`. Times are compared
+//! with `f64::total_cmp` and ties broken by device id, so the pop order is
+//! a *total* order that depends only on the events pushed — never on push
+//! order, thread scheduling, or hash state. This is the ordering half of
+//! the `sched/` determinism contract (see sched/mod.rs).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One scheduled completion: `payload` reaches the server at `time`.
+#[derive(Clone, Debug)]
+pub struct Event<P> {
+    /// absolute simulated time (seconds)
+    pub time: f64,
+    /// device id — the deterministic tie-break
+    pub device: usize,
+    pub payload: P,
+}
+
+/// Heap entry with the (time, device) ordering reversed so the std
+/// max-heap pops the *earliest* event first.
+struct Entry<P>(Event<P>);
+
+impl<P> PartialEq for Entry<P> {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.time.to_bits() == other.0.time.to_bits() && self.0.device == other.0.device
+    }
+}
+
+impl<P> Eq for Entry<P> {}
+
+impl<P> PartialOrd for Entry<P> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<P> Ord for Entry<P> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .0
+            .time
+            .total_cmp(&self.0.time)
+            .then_with(|| other.0.device.cmp(&self.0.device))
+    }
+}
+
+/// Min-queue of completion events.
+pub struct EventQueue<P> {
+    heap: BinaryHeap<Entry<P>>,
+}
+
+impl<P> Default for EventQueue<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<P> EventQueue<P> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new() }
+    }
+
+    /// Schedule `payload` to complete at `time` (panics on negative or
+    /// non-finite times — those are always upstream bugs, like
+    /// `SimClock::advance`).
+    pub fn push(&mut self, time: f64, device: usize, payload: P) {
+        assert!(time.is_finite() && time >= 0.0, "bad event time {time}");
+        self.heap.push(Entry(Event { time, device, payload }));
+    }
+
+    /// Remove and return the earliest event (ties broken by device id).
+    pub fn pop(&mut self) -> Option<Event<P>> {
+        self.heap.pop().map(|e| e.0)
+    }
+
+    /// Completion time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.0.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_regardless_of_push_order() {
+        let mut q = EventQueue::new();
+        for (t, d) in [(3.0, 0), (1.0, 4), (2.0, 2), (0.5, 7)] {
+            q.push(t, d, d * 10);
+        }
+        let order: Vec<(f64, usize, usize)> = std::iter::from_fn(|| q.pop())
+            .map(|e| (e.time, e.device, e.payload))
+            .collect();
+        assert_eq!(order, vec![(0.5, 7, 70), (1.0, 4, 40), (2.0, 2, 20), (3.0, 0, 0)]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ties_break_by_device_id() {
+        // push in descending device order; pops must come back ascending
+        let mut q = EventQueue::new();
+        for d in [5usize, 3, 9, 1] {
+            q.push(2.5, d, ());
+        }
+        let devs: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.device).collect();
+        assert_eq!(devs, vec![1, 3, 5, 9]);
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        q.push(4.0, 1, ());
+        q.push(2.0, 0, ());
+        assert_eq!(q.peek_time(), Some(2.0));
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.peek_time(), Some(4.0));
+        q.clear();
+        assert_eq!(q.peek_time(), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nan_time() {
+        EventQueue::new().push(f64::NAN, 0, ());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_negative_time() {
+        EventQueue::new().push(-1.0, 0, ());
+    }
+}
