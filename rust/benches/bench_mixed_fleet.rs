@@ -1,0 +1,144 @@
+//! Heterogeneous-fleet bench: whole-period throughput of a two-tier
+//! mixed fleet (tier-0 devices on `mini_dense`, tiers 1/2 on `mini_res`)
+//! against the homogeneous `mini_res` baseline, across the three round
+//! policies. Routing small devices to a small model family is the
+//! whole point of multi-backend fleets — the mixed run should close
+//! periods faster in wall time than an all-large fleet while both model
+//! families keep learning.
+//!
+//! Built through the config layer (`fleet.backends` rules →
+//! `make_fleet_backends`), so this bench also smoke-tests the exact path
+//! `feel train --backends ...` takes. Emits a `BENCH_mixed.json`
+//! baseline next to the Cargo.toml, beside the other `BENCH_*.json`
+//! files, for the perf trajectory across PRs.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::time::Instant;
+
+use feel::config::{Experiment, TierBackend};
+use feel::coordinator::{Scheme, TrainLog, Trainer};
+use feel::data::{generate, Partition};
+use feel::device::StragglerModel;
+use feel::exp::common::{make_fleet_backends, BackendKind};
+use feel::sched::RoundPolicy;
+use feel::util::json::{num, obj, s, Json};
+use feel::util::rng::Pcg;
+
+const DIM: usize = 32;
+const K: usize = 12;
+const JITTER: f64 = 0.3;
+
+struct Run {
+    log: TrainLog,
+    wall_secs: f64,
+    families: usize,
+}
+
+fn run(mixed: bool, policy: RoundPolicy, periods: usize) -> Run {
+    let mut exp = Experiment::default();
+    exp.k = K;
+    exp.model = "mini_res".into();
+    exp.synth.dim = DIM;
+    exp.train_n = 96 * K;
+    exp.test_n = 128;
+    if mixed {
+        exp.backends = vec![TierBackend {
+            tier: 0,
+            model: "mini_dense".into(),
+            backend: None,
+        }];
+    }
+    exp.trainer.scheme = Scheme::Proposed;
+    exp.trainer.eval_every = 0;
+    exp.trainer.policy = policy;
+    exp.trainer.straggler = StragglerModel::new(JITTER, 0.0).unwrap();
+    let backends = make_fleet_backends(&exp, BackendKind::Host).unwrap();
+    let train = generate(&exp.synth, exp.train_n, 1);
+    let test = generate(&exp.synth, exp.test_n, 1);
+    let mut rng = Pcg::seeded(3);
+    let fleet = exp.fleet(&mut rng);
+    let mut tr = Trainer::with_backends(
+        exp.trainer.clone(),
+        fleet,
+        &train,
+        &test,
+        Partition::Iid,
+        backends.set(),
+    )
+    .unwrap();
+    tr.step_period().unwrap(); // warmup (workspace pools, page faults)
+    let t0 = Instant::now();
+    tr.run(periods).unwrap();
+    Run {
+        log: tr.log.clone(),
+        wall_secs: t0.elapsed().as_secs_f64(),
+        families: backends.family_count(),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("FEEL_BENCH_QUICK").is_ok();
+    let periods = if quick { 3 } else { 10 };
+    let policies: [(&str, RoundPolicy); 3] = [
+        ("sync", RoundPolicy::Sync),
+        ("deadline", RoundPolicy::Deadline { factor: 1.25 }),
+        ("async", RoundPolicy::Async { alpha: 0.6, beta: 0.5, quorum: 0.5 }),
+    ];
+
+    println!("\n== mixed fleets (K = {K}, jitter = {JITTER}, {periods} periods) ==");
+    println!(
+        "{:<10} {:<14} {:>10} {:>14} {:>10} {:>10}",
+        "policy", "fleet", "families", "periods/sec", "vs homog", "loss"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    for (name, policy) in policies {
+        let mut homog_pps = f64::NAN;
+        for mixed in [false, true] {
+            let r = run(mixed, policy, periods);
+            let pps = periods as f64 / r.wall_secs;
+            if !mixed {
+                homog_pps = pps;
+            }
+            let fleet_name = if mixed { "dense+res" } else { "res-only" };
+            let loss = r.log.final_loss().unwrap_or(f64::NAN);
+            println!(
+                "{:<10} {:<14} {:>10} {:>14.3} {:>9.2}x {:>10.4}",
+                name,
+                fleet_name,
+                r.families,
+                pps,
+                pps / homog_pps,
+                loss
+            );
+            rows.push(obj(vec![
+                ("policy", s(name)),
+                ("fleet", s(fleet_name)),
+                ("families", num(r.families as f64)),
+                ("periods_per_sec", num(pps)),
+                ("speedup_vs_homogeneous", num(pps / homog_pps)),
+                ("final_train_loss", num(loss)),
+                ("sim_secs_per_period", num(r.log.sim_time() / r.log.records.len().max(1) as f64)),
+                ("wall_secs", num(r.wall_secs)),
+            ]));
+        }
+    }
+
+    let out = obj(vec![
+        ("bench", s("mixed_fleet")),
+        ("scheme", s("proposed")),
+        ("tier_rule", s("0:mini_dense (tiers 1-2: mini_res)")),
+        ("k", num(K as f64)),
+        ("dim", num(DIM as f64)),
+        ("jitter", num(JITTER)),
+        ("quick", Json::Bool(quick)),
+        ("periods", num(periods as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_mixed.json";
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("\nbaseline -> {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -12,18 +12,20 @@
 //! --threads N (worker threads for device fan-out + large GEMMs; 0 = all
 //! cores; numerics are identical at any value), --policy NAME plus the
 //! straggler knobs --jitter/--dropout and the per-policy knobs
-//! --deadline-factor / --async-alpha / --async-beta / --quorum.
+//! --deadline-factor / --async-alpha / --async-beta / --quorum, and
+//! --backends tier:model[:backend],... for heterogeneous fleets (see
+//! `coordinator::fleet_backends`).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{parse_policy, parse_scheme, Config, Experiment};
+use crate::config::{parse_backends_spec, parse_policy, parse_scheme, Config, Experiment};
 use crate::coordinator::Trainer;
 use crate::device::{paper_profiles, StragglerModel};
 use crate::sched::RoundPolicy;
-use crate::exp::common::{make_backend, make_data, BackendKind};
+use crate::exp::common::{make_data, make_fleet_backends, BackendKind};
 use crate::exp::{fig2, fig3, fig45, table2};
 use crate::metrics::Recorder;
 use crate::opt;
@@ -86,6 +88,11 @@ COMMANDS:
   train       run a FEEL training experiment
               --config <file>  --backend host|pjrt  --periods N
               --scheme proposed|gradient_fl|model_fl|individual|online|full_batch|random_batch
+              --backends tier:model[:backend],...   heterogeneous fleet: route
+                         each CPU speed tier (0|1|2; device tier = id mod 3) to
+                         its own model family / backend, e.g.
+                         0:mini_dense,1:mini_res — uncovered tiers use --model;
+                         config form: fleet.backends = [{tier, model, backend}]
               --policy sync|deadline|async   how gradient rounds close:
                 sync     barrier on the slowest device (paper default)
                 deadline drop devices past --deadline-factor x the nominal
@@ -155,6 +162,12 @@ fn experiment_from_args(args: &Args) -> Result<Experiment> {
     if let Some(m) = args.get("model") {
         exp.model = m.to_string();
     }
+    if let Some(spec) = args.get("backends") {
+        exp.backends = parse_backends_spec(spec)?;
+    }
+    // re-validate: --k/--gpu/--backends overrides can change the fleet's
+    // tier shape after the config-file check ran
+    exp.check_backend_tiers()?;
     if let Some(t) = args.get("threads") {
         exp.trainer.threads = t.parse().context("--threads")?;
     }
@@ -213,13 +226,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let kind = backend_kind(args)?;
     let rec = Recorder::new(&out_dir(args), &format!("train_{}", exp.name))?;
 
-    let backend = make_backend(&exp, kind)?;
+    let backends = make_fleet_backends(&exp, kind)?;
+    let set = backends.set();
     let (train, test) = make_data(&exp);
     let mut rng = Pcg::seeded(exp.trainer.seed ^ 0xf1ee7);
     let fleet = exp.fleet(&mut rng);
+    let models = (0..set.family_count())
+        .map(|f| format!("{} x{}", set.family_name(f), set.family_size(f)))
+        .collect::<Vec<_>>()
+        .join(" + ");
     println!(
-        "training {} on {:?} backend: K={}, scheme={}, policy={}, {:?}, {} periods, {} threads",
-        exp.model,
+        "training {models} on {:?}: K={}, scheme={}, policy={}, {:?}, {} periods, {} threads",
         kind,
         exp.k,
         exp.trainer.scheme.name(),
@@ -228,13 +245,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         periods,
         crate::util::threads::resolve(exp.trainer.threads),
     );
-    let mut tr = Trainer::new(
+    let mut tr = Trainer::with_backends(
         exp.trainer.clone(),
         fleet,
         &train,
         &test,
         exp.partition,
-        backend.as_ref(),
+        set,
     )?;
     let warm = args.usize_or("warm", 0)?;
     if warm > 0 {
@@ -449,6 +466,27 @@ mod tests {
         // the help text enumerates both flags' accepted values
         assert!(HELP.contains("--policy sync|deadline|async"));
         assert!(HELP.contains("--scheme proposed|gradient_fl|model_fl|individual"));
+    }
+
+    #[test]
+    fn backends_flag_plumbs_into_experiment() {
+        let a = Args::parse(&argv("train --backends 0:mini_dense,1:mini_res:host")).unwrap();
+        let exp = experiment_from_args(&a).unwrap();
+        assert_eq!(exp.backends.len(), 2);
+        assert_eq!(exp.backends[0].tier, 0);
+        assert_eq!(exp.backends[0].model, "mini_dense");
+        assert_eq!(exp.backends[1].backend.as_deref(), Some("host"));
+        // malformed specs and out-of-range tiers are clean errors
+        let a = Args::parse(&argv("train --backends nope")).unwrap();
+        assert!(experiment_from_args(&a).is_err());
+        let a = Args::parse(&argv("train --backends 7:mini_res")).unwrap();
+        let err = experiment_from_args(&a).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // gpu fleets have one tier, so tier 1 is rejected there too
+        let a = Args::parse(&argv("train --gpu --backends 1:mini_res")).unwrap();
+        assert!(experiment_from_args(&a).is_err());
+        crate::util::threads::set_global_threads(0);
+        assert!(HELP.contains("--backends tier:model[:backend]"));
     }
 
     #[test]

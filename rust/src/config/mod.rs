@@ -3,5 +3,7 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::{parse_policy, parse_scheme, Experiment, SCHEME_NAMES};
+pub use schema::{
+    parse_backends_spec, parse_policy, parse_scheme, Experiment, TierBackend, SCHEME_NAMES,
+};
 pub use toml::{Config, Value};

@@ -3,10 +3,12 @@
 
 use anyhow::{bail, Result};
 
-use super::toml::Config;
+use super::toml::{Config, Value};
 use crate::coordinator::{Scheme, TrainerConfig};
 use crate::data::{Partition, SynthConfig};
-use crate::device::{paper_cpu_fleet, paper_gpu_fleet, Device, GpuModule, StragglerModel};
+use crate::device::{
+    paper_cpu_fleet, paper_gpu_fleet, Device, GpuModule, StragglerModel, CPU_TIER_COUNT,
+};
 use crate::opt::BatchPolicy;
 use crate::sched::{RoundPolicy, POLICY_NAMES};
 use crate::util::rng::Pcg;
@@ -16,6 +18,19 @@ use crate::wireless::CellConfig;
 /// [`parse_scheme`]; the CLI help and error paths print this).
 pub const SCHEME_NAMES: &str =
     "proposed | gradient_fl | model_fl | individual | online | full_batch | random_batch";
+
+/// One per-tier backend rule: devices of CPU speed tier `tier` train
+/// `model` on `backend` (`host` | `pjrt`; `None` = the run's `--backend`
+/// kind). Configured as `fleet.backends = [{tier = 0, model =
+/// "mini_dense", backend = "host"}, ...]` or the CLI shorthand
+/// `--backends 0:mini_dense:host,1:mini_res`. Tiers without a rule fall
+/// back to the experiment's default `model`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TierBackend {
+    pub tier: usize,
+    pub model: String,
+    pub backend: Option<String>,
+}
 
 /// Fully-resolved experiment description.
 #[derive(Clone, Debug)]
@@ -36,6 +51,8 @@ pub struct Experiment {
     pub cycles_per_update: f64,
     pub gpu_module: GpuModule,
     pub trainer: TrainerConfig,
+    /// per-tier backend rules (empty = homogeneous fleet on `model`)
+    pub backends: Vec<TierBackend>,
 }
 
 impl Default for Experiment {
@@ -57,6 +74,7 @@ impl Default for Experiment {
             cycles_per_update: 1e8,
             gpu_module: GpuModule::new(0.110, 2.4e-3, 24.0, 2.0e9, 1.0e13),
             trainer: TrainerConfig::default(),
+            backends: Vec::new(),
         }
     }
 }
@@ -106,7 +124,59 @@ impl Experiment {
             c.f64_or("fleet.jitter", t.straggler.jitter),
             c.f64_or("fleet.dropout", t.straggler.dropout),
         )?;
+        if let Some(v) = c.get("fleet.backends") {
+            e.backends = parse_backend_rules(v)?;
+            e.check_backend_tiers()?;
+        }
         Ok(e)
+    }
+
+    /// Number of device tiers this experiment's fleet has: the paper's
+    /// three CPU speed tiers, or one for the identical-GPU fleet.
+    pub fn tier_count(&self) -> usize {
+        if self.gpu {
+            1
+        } else {
+            CPU_TIER_COUNT
+        }
+    }
+
+    /// The tier device `id` belongs to (matches `paper_cpu_fleet`'s
+    /// round-robin frequency assignment).
+    pub fn tier_of(&self, id: usize) -> usize {
+        id % self.tier_count()
+    }
+
+    /// Validate the per-tier backend rules against this experiment's
+    /// fleet shape. Call after any mutation of `backends`, `gpu`, or `k`
+    /// (the CLI does, after applying flag overrides). A rule for a tier
+    /// no device occupies is an error, not a no-op — silently dropping it
+    /// would run a different (homogeneous) experiment than the config
+    /// describes.
+    pub fn check_backend_tiers(&self) -> Result<()> {
+        let tiers = self.tier_count();
+        // round-robin assignment: tier t is occupied iff t < min(k, tiers)
+        let occupied = tiers.min(self.k);
+        for (i, r) in self.backends.iter().enumerate() {
+            if r.tier >= tiers {
+                bail!(
+                    "fleet.backends tier {} out of range (this fleet has {} tiers)",
+                    r.tier,
+                    tiers
+                );
+            }
+            if r.tier >= occupied {
+                bail!(
+                    "fleet.backends tier {} has no devices (fleet.k = {})",
+                    r.tier,
+                    self.k
+                );
+            }
+            if self.backends[..i].iter().any(|o| o.tier == r.tier) {
+                bail!("fleet.backends has two rules for tier {}", r.tier);
+            }
+        }
+        Ok(())
     }
 
     /// Build the device fleet this experiment describes.
@@ -154,6 +224,69 @@ pub fn parse_scheme(s: &str, b_max: usize) -> Result<Scheme> {
 pub fn parse_policy(s: &str) -> Result<RoundPolicy> {
     RoundPolicy::parse(s)
         .ok_or_else(|| anyhow::anyhow!("unknown policy {s:?} (accepted: {POLICY_NAMES})"))
+}
+
+/// Parse the `fleet.backends` config value: an array of inline tables
+/// `{tier = N, model = "name", backend = "host"|"pjrt"}` (backend
+/// optional — defaults to the run's `--backend` kind).
+pub fn parse_backend_rules(v: &Value) -> Result<Vec<TierBackend>> {
+    let Some(arr) = v.as_arr() else {
+        bail!("fleet.backends wants an array of {{tier, model, backend}} tables");
+    };
+    let mut rules = Vec::with_capacity(arr.len());
+    for item in arr {
+        let Some(t) = item.as_table() else {
+            bail!("fleet.backends entries want {{tier, model, backend}} tables");
+        };
+        for key in t.keys() {
+            if !matches!(key.as_str(), "tier" | "model" | "backend") {
+                bail!("fleet.backends entry has unknown key {key:?}");
+            }
+        }
+        let Some(tier) = t.get("tier").and_then(|x| x.as_usize()) else {
+            bail!("fleet.backends entry wants an integer tier");
+        };
+        let Some(model) = t.get("model").and_then(|x| x.as_str()) else {
+            bail!("fleet.backends entry wants a string model");
+        };
+        let backend = match t.get("backend") {
+            None => None,
+            Some(b) => match b.as_str() {
+                Some(s) => Some(s.to_string()),
+                None => bail!("fleet.backends backend wants a string"),
+            },
+        };
+        rules.push(TierBackend { tier, model: model.to_string(), backend });
+    }
+    Ok(rules)
+}
+
+/// Parse the CLI `--backends` shorthand: comma-separated
+/// `tier:model[:backend]` rules, e.g. `0:mini_dense,1:mini_res:host`.
+pub fn parse_backends_spec(spec: &str) -> Result<Vec<TierBackend>> {
+    let mut rules = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            bail!("--backends has an empty rule (format: tier:model[:backend],...)");
+        }
+        let fields: Vec<&str> = part.split(':').collect();
+        if !(2..=3).contains(&fields.len()) {
+            bail!("--backends rule {part:?} wants tier:model[:backend]");
+        }
+        let tier: usize = fields[0]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--backends rule {part:?}: bad tier {:?}", fields[0]))?;
+        if fields[1].is_empty() {
+            bail!("--backends rule {part:?} wants a model name");
+        }
+        rules.push(TierBackend {
+            tier,
+            model: fields[1].to_string(),
+            backend: fields.get(2).map(|s| s.to_string()),
+        });
+    }
+    Ok(rules)
 }
 
 /// Resolve `train.policy` and its knobs (`train.deadline_factor`,
@@ -289,6 +422,80 @@ quorum = 0.25
         assert!(Experiment::from_config(&c).is_err());
         let c = Config::parse("[train]\npolicy = \"async\"\ndeadline_factor = 1.5").unwrap();
         assert!(Experiment::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn backend_rules_from_config_and_cli() {
+        // defaults: no rules, homogeneous
+        let e = Experiment::from_config(&Config::parse("").unwrap()).unwrap();
+        assert!(e.backends.is_empty());
+        let src = r#"
+[fleet]
+k = 6
+backends = [{tier = 0, model = "mini_dense"}, {tier = 1, model = "mini_res", backend = "host"}]
+"#;
+        let e = Experiment::from_config(&Config::parse(src).unwrap()).unwrap();
+        assert_eq!(e.backends.len(), 2);
+        assert_eq!(
+            e.backends[0],
+            TierBackend { tier: 0, model: "mini_dense".into(), backend: None }
+        );
+        assert_eq!(
+            e.backends[1],
+            TierBackend { tier: 1, model: "mini_res".into(), backend: Some("host".into()) }
+        );
+        assert_eq!(e.tier_count(), 3);
+        assert_eq!(e.tier_of(4), 1);
+        // the CLI shorthand parses to the same rules
+        let cli = parse_backends_spec("0:mini_dense,1:mini_res:host").unwrap();
+        assert_eq!(cli, e.backends);
+        // malformed shorthand rules are clean errors
+        assert!(parse_backends_spec("").is_err());
+        assert!(parse_backends_spec("0").is_err());
+        assert!(parse_backends_spec("x:mini_dense").is_err());
+        assert!(parse_backends_spec("0:").is_err());
+        assert!(parse_backends_spec("0:m:host:extra").is_err());
+    }
+
+    #[test]
+    fn backend_rules_validate_tiers() {
+        // tier out of range for a CPU fleet (3 tiers)
+        let src = "[fleet]\nbackends = [{tier = 3, model = \"mini_res\"}]";
+        let err = Experiment::from_config(&Config::parse(src).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // duplicate tier rules
+        let src = "[fleet]\nbackends = [{tier = 0, model = \"a\"}, {tier = 0, model = \"b\"}]";
+        let err = Experiment::from_config(&Config::parse(src).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("two rules"), "{err}");
+        // gpu fleets have a single tier
+        let src = "[fleet]\ngpu = true\nbackends = [{tier = 1, model = \"mini_res\"}]";
+        assert!(Experiment::from_config(&Config::parse(src).unwrap()).is_err());
+        // a rule for a tier no device occupies is an error, not a no-op
+        let src = "[fleet]\nk = 2\nbackends = [{tier = 2, model = \"mini_dense\"}]";
+        let err = Experiment::from_config(&Config::parse(src).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no devices"), "{err}");
+        // ...but the same rule is fine once the fleet reaches the tier
+        let src = "[fleet]\nk = 3\nbackends = [{tier = 2, model = \"mini_dense\"}]";
+        assert!(Experiment::from_config(&Config::parse(src).unwrap()).is_ok());
+        // malformed entries
+        for bad in [
+            "[fleet]\nbackends = [{model = \"m\"}]",
+            "[fleet]\nbackends = [{tier = 0}]",
+            "[fleet]\nbackends = [{tier = 0, model = \"m\", extra = 1}]",
+            "[fleet]\nbackends = [7]",
+            "[fleet]\nbackends = 7",
+        ] {
+            assert!(
+                Experiment::from_config(&Config::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! Supported grammar — everything the experiment configs need:
 //!   * `[section]` and `[section.sub]` headers
-//!   * `key = "string" | 123 | 4.5 | true | false | [scalar, ...]`
+//!   * `key = "string" | 123 | 4.5 | true | false | [value, ...]`
+//!   * inline tables `{key = value, ...}` (used by `fleet.backends`)
 //!   * `#` comments, blank lines
 //!
 //! Values land in a flat `section.key -> Value` map with typed accessors.
@@ -17,6 +18,7 @@ pub enum Value {
     Float(f64),
     Bool(bool),
     Arr(Vec<Value>),
+    Table(BTreeMap<String, Value>),
 }
 
 impl Value {
@@ -49,6 +51,20 @@ impl Value {
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
             _ => None,
         }
     }
@@ -169,11 +185,32 @@ fn parse_value(s: &str) -> Result<Value, String> {
         if inner.is_empty() {
             return Ok(Value::Arr(Vec::new()));
         }
-        return inner
-            .split(',')
+        return split_top_level(inner)?
+            .into_iter()
             .map(|p| parse_value(p.trim()))
             .collect::<Result<Vec<_>, _>>()
             .map(Value::Arr);
+    }
+    if let Some(rest) = s.strip_prefix('{') {
+        let inner = rest.strip_suffix('}').ok_or("unterminated inline table")?;
+        let inner = inner.trim();
+        let mut map = BTreeMap::new();
+        if inner.is_empty() {
+            return Ok(Value::Table(map));
+        }
+        for part in split_top_level(inner)? {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("inline table entry {part:?} wants key = value"))?;
+            let key = key.trim();
+            if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                return Err(format!("bad inline table key {key:?}"));
+            }
+            if map.insert(key.to_string(), parse_value(val.trim())?).is_some() {
+                return Err(format!("duplicate inline table key {key}"));
+            }
+        }
+        return Ok(Value::Table(map));
     }
     if let Ok(i) = s.parse::<i64>() {
         return Ok(Value::Int(i));
@@ -182,6 +219,37 @@ fn parse_value(s: &str) -> Result<Value, String> {
         return Ok(Value::Float(f));
     }
     Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split on commas at bracket depth 0, outside strings — so array elements
+/// that are themselves inline tables (or nested arrays) stay intact.
+fn split_top_level(s: &str) -> Result<Vec<&str>, String> {
+    let mut parts = Vec::new();
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' | '{' if !in_str => depth += 1,
+            ']' | '}' if !in_str => {
+                depth -= 1;
+                if depth < 0 {
+                    return Err(format!("unbalanced brackets in {s:?}"));
+                }
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if depth != 0 || in_str {
+        return Err(format!("unbalanced brackets or quotes in {s:?}"));
+    }
+    parts.push(&s[start..]);
+    Ok(parts)
 }
 
 #[cfg(test)]
@@ -243,5 +311,40 @@ periods = 500
     fn hash_inside_string_kept() {
         let c = Config::parse("a = \"x#y\"").unwrap();
         assert_eq!(c.str_or("a", ""), "x#y");
+    }
+
+    #[test]
+    fn inline_table_arrays() {
+        let src = r#"
+[fleet]
+backends = [{tier = 0, model = "mini_dense"}, {tier = 1, model = "mini_res", backend = "host"}]
+"#;
+        let c = Config::parse(src).unwrap();
+        let arr = c.get("fleet.backends").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        let t0 = arr[0].as_table().unwrap();
+        assert_eq!(t0.get("tier").unwrap().as_usize(), Some(0));
+        assert_eq!(t0.get("model").unwrap().as_str(), Some("mini_dense"));
+        assert!(t0.get("backend").is_none());
+        let t1 = arr[1].as_table().unwrap();
+        assert_eq!(t1.get("backend").unwrap().as_str(), Some("host"));
+        // empty table and empty array still parse
+        let c = Config::parse("a = {}\nb = []").unwrap();
+        assert!(c.get("a").unwrap().as_table().unwrap().is_empty());
+        assert!(c.get("b").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn inline_table_rejects_malformed() {
+        assert!(Config::parse("a = {tier = 0").is_err());
+        assert!(Config::parse("a = {tier}").is_err());
+        assert!(Config::parse("a = {tier = 0, tier = 1}").is_err());
+        assert!(Config::parse("a = {bad key = 0}").is_err());
+        assert!(Config::parse("a = [{tier = 0}, {]").is_err());
+        // commas inside strings do not split elements
+        let c = Config::parse("a = [\"x,y\", \"z\"]").unwrap();
+        let arr = c.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].as_str(), Some("x,y"));
     }
 }

@@ -12,7 +12,7 @@
 
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::hostmodel::{HostModel, Workspace};
 use crate::runtime::Runtime;
@@ -27,10 +27,13 @@ pub struct Step {
 
 /// Where device compute runs.
 ///
-/// Thread-safe by contract: the exec engine shares one backend across all
-/// device workers, so every method takes `&self` and implementations must
-/// be `Send + Sync`. Methods are pure functions of their inputs (any
-/// internal state — caches, stats — must not affect results).
+/// Thread-safe by contract: the exec engine shares each backend across
+/// every device worker mapped to it (one fleet-wide backend in the
+/// homogeneous case, one per model family under a
+/// `fleet_backends::BackendSet`), so every method takes `&self` and
+/// implementations must be `Send + Sync`. Methods are pure functions of
+/// their inputs (any internal state — caches, stats — must not affect
+/// results).
 pub trait Backend: Send + Sync {
     /// Number of flat parameters.
     fn params(&self) -> usize;
@@ -57,6 +60,20 @@ pub trait Backend: Send + Sync {
     fn apply_update(&self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>>;
     /// Mean loss + accuracy over a dataset.
     fn evaluate(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)>;
+    /// [`Backend::evaluate`] drawing host-side scratch (the per-sample
+    /// weight vector) from a caller-owned [`Workspace`], so periodic
+    /// evaluation stops hitting the allocator. Backends without host-side
+    /// scratch ignore the workspace; results are identical either way.
+    fn evaluate_ws(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        ws: &mut Workspace,
+    ) -> Result<(f64, f64)> {
+        let _ = ws;
+        self.evaluate(params, x, y)
+    }
 }
 
 /// PJRT-backed production path. The PJRT client serializes execution (its
@@ -66,12 +83,17 @@ pub trait Backend: Send + Sync {
 pub struct PjrtBackend {
     pub rt: Mutex<Runtime>,
     pub model: String,
+    /// flat parameter count, cached at construction — `params()` must
+    /// never lock the runtime (a poisoned mutex would panic via
+    /// `.expect()`) nor index the manifest map (a missing model would
+    /// panic too); both failure modes are caught once in `new`
+    params: usize,
 }
 
 impl PjrtBackend {
     pub fn new(rt: Runtime, model: &str) -> Result<Self> {
-        rt.manifest.model(model)?; // validate
-        Ok(PjrtBackend { rt: Mutex::new(rt), model: model.to_string() })
+        let params = rt.manifest.model(model)?.params; // validate + cache
+        Ok(PjrtBackend { rt: Mutex::new(rt), model: model.to_string(), params })
     }
 
     fn lock(&self) -> Result<std::sync::MutexGuard<'_, Runtime>> {
@@ -81,8 +103,7 @@ impl PjrtBackend {
 
 impl Backend for PjrtBackend {
     fn params(&self) -> usize {
-        let rt = self.rt.lock().expect("PJRT runtime mutex poisoned");
-        rt.manifest.models[&self.model].params
+        self.params
     }
 
     fn init_params(&self) -> Result<Vec<f32>> {
@@ -90,6 +111,11 @@ impl Backend for PjrtBackend {
     }
 
     fn train_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<Step> {
+        // an empty batch would divide by n below and hand the aggregator a
+        // NaN loss that silently poisons the round — fail loudly instead
+        if y.is_empty() {
+            bail!("train_step on an empty batch (model {:?})", self.model);
+        }
         // batches larger than the biggest bucket are chunked and aggregated
         // (weighted by chunk size) — exact full-batch semantics
         let mut rt = self.lock()?;
@@ -131,6 +157,9 @@ impl Backend for PjrtBackend {
     }
 
     fn evaluate(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        if y.is_empty() {
+            bail!("evaluate on an empty dataset (model {:?})", self.model);
+        }
         self.lock()?.evaluate_dataset(&self.model, params, x, y)
     }
 }
@@ -226,6 +255,9 @@ impl Backend for HostBackend {
         y: &[i32],
         ws: &mut Workspace,
     ) -> Result<Step> {
+        if y.is_empty() {
+            bail!("train_step on an empty batch (model {:?})", self.model.name);
+        }
         let w = ws.take_filled(y.len(), 1.0);
         let (grads, loss, correct) = self.model.train_step_ws(params, x, y, &w, ws);
         ws.recycle(w);
@@ -241,9 +273,25 @@ impl Backend for HostBackend {
     }
 
     fn evaluate(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        self.evaluate_ws(params, x, y, &mut Workspace::new())
+    }
+
+    fn evaluate_ws(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        ws: &mut Workspace,
+    ) -> Result<(f64, f64)> {
+        if y.is_empty() {
+            bail!("evaluate on an empty dataset (model {:?})", self.model.name);
+        }
         let n = y.len();
-        let w = vec![1f32; n];
+        // the uniform per-sample weight vector comes from the workspace
+        // pool instead of a fresh `vec![1f32; n]` every eval call
+        let w = ws.take_filled(n, 1.0);
         let (loss, correct) = self.model.loss(params, x, y, &w);
+        ws.recycle(w);
         Ok((loss as f64, correct as f64 / n as f64))
     }
 }
@@ -299,6 +347,38 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn empty_batches_error_cleanly() {
+        // n == 0 used to divide by zero and hand the aggregator a NaN loss
+        let be = HostBackend::for_model("mini_dense", 8, 3, 1).unwrap();
+        let params = be.init_params().unwrap();
+        let err = be.train_step(&params, &[], &[]).unwrap_err().to_string();
+        assert!(err.contains("empty batch"), "{err}");
+        let mut ws = Workspace::new();
+        assert!(be.train_step_ws(&params, &[], &[], &mut ws).is_err());
+        let err = be.evaluate(&params, &[], &[]).unwrap_err().to_string();
+        assert!(err.contains("empty dataset"), "{err}");
+        assert!(be.evaluate_ws(&params, &[], &[], &mut ws).is_err());
+    }
+
+    #[test]
+    fn eval_workspace_matches_one_shot_and_stops_allocating() {
+        let be = HostBackend::for_model("mini_dense", 8, 3, 1).unwrap();
+        let params = be.init_params().unwrap();
+        let (x, y) = batch(12, 8, 3, 5);
+        let (l0, a0) = be.evaluate(&params, &x, &y).unwrap();
+        let mut ws = Workspace::new();
+        let (l1, a1) = be.evaluate_ws(&params, &x, &y, &mut ws).unwrap();
+        assert_eq!(l0.to_bits(), l1.to_bits());
+        assert_eq!(a0.to_bits(), a1.to_bits());
+        // after the first call the weight buffer comes from the pool
+        let pooled = ws.pooled_buffers();
+        assert!(pooled > 0);
+        let (l2, _) = be.evaluate_ws(&params, &x, &y, &mut ws).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(ws.pooled_buffers(), pooled, "eval must recycle, not grow the pool");
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! Heterogeneous multi-backend fleets: route each device to its own
+//! compute backend while keeping the bitwise thread-invariance contract.
+//!
+//! Real federated-edge fleets are mixed — small devices train a small
+//! model on the host path while big ones run a large model (or PJRT when
+//! linked). [`BackendSet`] is the per-device registry the trainer, the
+//! exec round executors, and the round scheduler resolve through instead
+//! of sharing one `&dyn Backend`:
+//!
+//! * every *model family* (distinct parameter space, keyed by model name)
+//!   appears once, in first-device order — family ids index the server's
+//!   per-family parameter vectors and the per-family [`Aggregator`]s
+//!   (`grad::Aggregator::for_family` tags shards so cross-family merges
+//!   are rejected even when parameter counts coincide);
+//! * every device id maps to exactly one family — a device's `Workspace`
+//!   therefore only ever sees one model's buffer shapes, so mixed fleets
+//!   keep the zero-alloc steady state;
+//! * the assignment is a pure function of the device id (per-tier rules
+//!   in `config::schema`, `fleet.backends` / `--backends`), never of the
+//!   thread count — determinism is untouched.
+//!
+//! Per-tier compute latency needs no new machinery: the planner's
+//! per-device nominal finish times (`Plan::finish`) already price each
+//! device's own compute module, and the `sched/` policies schedule on
+//! those.
+//!
+//! [`Aggregator`]: crate::grad::Aggregator
+
+use anyhow::{bail, Result};
+
+use super::backend::Backend;
+
+/// Per-device backend registry: distinct model families plus a
+/// device-id → family assignment. Borrowed backends keep ownership with
+/// the caller (mirroring how `Trainer` always borrowed its backend);
+/// `exp::common::FleetBackends` is the owning form experiments build
+/// from config.
+pub struct BackendSet<'a> {
+    /// family names (model names), distinct, first-device order
+    names: Vec<String>,
+    /// one backend per family (same order)
+    backends: Vec<&'a dyn Backend>,
+    /// flat parameter count per family, cached once
+    params: Vec<usize>,
+    /// device id -> family index
+    assign: Vec<usize>,
+}
+
+impl<'a> BackendSet<'a> {
+    /// Every device on one backend — the classic single-backend trainer.
+    pub fn homogeneous(k: usize, name: &str, backend: &'a dyn Backend) -> BackendSet<'a> {
+        BackendSet {
+            names: vec![name.to_string()],
+            backends: vec![backend],
+            params: vec![backend.params()],
+            assign: vec![0; k],
+        }
+    }
+
+    /// Build from distinct `(family name, backend)` pairs and a
+    /// device → family assignment. Families must be non-empty, uniquely
+    /// named, and each referenced by at least one device.
+    pub fn new(
+        families: Vec<(String, &'a dyn Backend)>,
+        assign: Vec<usize>,
+    ) -> Result<BackendSet<'a>> {
+        if families.is_empty() {
+            bail!("backend set needs at least one model family");
+        }
+        if assign.is_empty() {
+            bail!("backend set needs at least one device");
+        }
+        for (i, (name, _)) in families.iter().enumerate() {
+            if families[..i].iter().any(|(n, _)| n == name) {
+                bail!("duplicate model family {name:?} in backend set");
+            }
+        }
+        for (dev, &f) in assign.iter().enumerate() {
+            if f >= families.len() {
+                bail!(
+                    "device {dev} assigned to family {f}, but the set has {} families",
+                    families.len()
+                );
+            }
+        }
+        for f in 0..families.len() {
+            if !assign.contains(&f) {
+                bail!("model family {:?} is assigned to no device", families[f].0);
+            }
+        }
+        let (names, backends): (Vec<String>, Vec<&dyn Backend>) = families.into_iter().unzip();
+        let params = backends.iter().map(|b| b.params()).collect();
+        Ok(BackendSet { names, backends, params, assign })
+    }
+
+    /// Fleet size K.
+    pub fn k(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// Number of distinct model families (1 for homogeneous fleets).
+    pub fn family_count(&self) -> usize {
+        self.backends.len()
+    }
+
+    /// Does every device share one family? (The single-backend fast
+    /// paths — direct eval, FedAvg — key on this.)
+    pub fn is_homogeneous(&self) -> bool {
+        self.family_count() == 1
+    }
+
+    /// The backend device `dev` trains on.
+    pub fn for_device(&self, dev: usize) -> &'a dyn Backend {
+        self.backends[self.assign[dev]]
+    }
+
+    /// The model family device `dev` belongs to.
+    pub fn family_of(&self, dev: usize) -> usize {
+        self.assign[dev]
+    }
+
+    /// Family `f`'s canonical backend (init / server update / eval).
+    pub fn family_backend(&self, f: usize) -> &'a dyn Backend {
+        self.backends[f]
+    }
+
+    pub fn family_name(&self, f: usize) -> &str {
+        &self.names[f]
+    }
+
+    /// Flat parameter count of family `f` (cached; never locks).
+    pub fn family_params(&self, f: usize) -> usize {
+        self.params[f]
+    }
+
+    /// Flat parameter count of device `dev`'s model.
+    pub fn device_params(&self, dev: usize) -> usize {
+        self.params[self.assign[dev]]
+    }
+
+    /// Devices assigned to family `f`.
+    pub fn family_size(&self, f: usize) -> usize {
+        self.assign.iter().filter(|&&a| a == f).count()
+    }
+
+    /// Deterministic initial parameters for every family, in family order.
+    pub fn init_all(&self) -> Result<Vec<Vec<f32>>> {
+        self.backends.iter().map(|b| b.init_params()).collect()
+    }
+
+    /// Validate a per-family parameter slice against this set's geometry —
+    /// the guard every exec round runs before fanning out, so a
+    /// mixed-fleet mismatch fails with a clear error instead of a
+    /// slice panic deep inside a worker.
+    pub fn check_params(&self, params: &[Vec<f32>]) -> Result<()> {
+        if params.len() != self.family_count() {
+            bail!(
+                "got {} parameter vectors for {} model families",
+                params.len(),
+                self.family_count()
+            );
+        }
+        for (f, p) in params.iter().enumerate() {
+            if p.len() != self.params[f] {
+                bail!(
+                    "family {:?} parameter vector has {} terms, model wants {}",
+                    self.names[f],
+                    p.len(),
+                    self.params[f]
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::HostBackend;
+
+    fn hosts() -> (HostBackend, HostBackend) {
+        (
+            HostBackend::for_model("mini_dense", 8, 3, 1).unwrap(),
+            HostBackend::for_model("mini_res", 8, 3, 1).unwrap(),
+        )
+    }
+
+    #[test]
+    fn homogeneous_set_routes_every_device_to_one_family() {
+        let (a, _) = hosts();
+        let set = BackendSet::homogeneous(5, "mini_dense", &a);
+        assert_eq!(set.k(), 5);
+        assert_eq!(set.family_count(), 1);
+        assert!(set.is_homogeneous());
+        for d in 0..5 {
+            assert_eq!(set.family_of(d), 0);
+            assert_eq!(set.device_params(d), a.params());
+        }
+        assert_eq!(set.family_name(0), "mini_dense");
+        assert_eq!(set.family_size(0), 5);
+        let init = set.init_all().unwrap();
+        assert_eq!(init.len(), 1);
+        assert_eq!(init[0], a.init_params().unwrap());
+        set.check_params(&init).unwrap();
+    }
+
+    #[test]
+    fn mixed_set_resolves_per_device() {
+        let (a, b) = hosts();
+        let assign = vec![0, 1, 0, 1, 1];
+        let set = BackendSet::new(
+            vec![("mini_dense".into(), &a as &dyn Backend), ("mini_res".into(), &b)],
+            assign,
+        )
+        .unwrap();
+        assert!(!set.is_homogeneous());
+        assert_eq!(set.family_count(), 2);
+        assert_eq!(set.family_size(0), 2);
+        assert_eq!(set.family_size(1), 3);
+        assert_eq!(set.family_of(3), 1);
+        assert_eq!(set.for_device(0).params(), a.params());
+        assert_eq!(set.for_device(1).params(), b.params());
+        assert_ne!(set.family_params(0), set.family_params(1));
+        let init = set.init_all().unwrap();
+        assert_eq!(init[0].len(), a.params());
+        assert_eq!(init[1].len(), b.params());
+        set.check_params(&init).unwrap();
+        // geometry violations fail with clear errors
+        assert!(set.check_params(&init[..1]).is_err());
+        let mut bad = init.clone();
+        bad[1].pop();
+        let err = set.check_params(&bad).unwrap_err().to_string();
+        assert!(err.contains("mini_res"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed_sets() {
+        let (a, b) = hosts();
+        // empty families / devices
+        assert!(BackendSet::new(vec![], vec![0]).is_err());
+        assert!(
+            BackendSet::new(vec![("m".into(), &a as &dyn Backend)], vec![]).is_err()
+        );
+        // out-of-range assignment
+        assert!(
+            BackendSet::new(vec![("m".into(), &a as &dyn Backend)], vec![0, 1]).is_err()
+        );
+        // duplicate family name
+        assert!(BackendSet::new(
+            vec![("m".into(), &a as &dyn Backend), ("m".into(), &b)],
+            vec![0, 1],
+        )
+        .is_err());
+        // unused family
+        let err = BackendSet::new(
+            vec![("m".into(), &a as &dyn Backend), ("n".into(), &b)],
+            vec![0, 0],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("no device"), "{err}");
+    }
+}

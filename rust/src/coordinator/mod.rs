@@ -4,6 +4,7 @@
 
 pub mod backend;
 pub mod clock;
+pub mod fleet_backends;
 pub mod scheme;
 pub mod server;
 pub mod trainer;
@@ -11,6 +12,7 @@ pub mod worker;
 pub mod xi;
 
 pub use backend::{Backend, HostBackend, PjrtBackend};
+pub use fleet_backends::BackendSet;
 pub use scheme::{plan_period, Plan, Scheme};
 pub use trainer::{PeriodRecord, TrainLog, Trainer, TrainerConfig, WallStats};
 pub use xi::XiEstimator;

@@ -1,28 +1,70 @@
 //! Edge-server state: global parameters and per-period aggregation
 //! (paper steps 3–5 of the training period).
+//!
+//! Heterogeneous fleets (`fleet_backends`) give the server one global
+//! parameter vector per *model family*; homogeneous fleets have exactly
+//! one, and every accessor that doesn't name a family reads family 0.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::grad::Aggregator;
 
 /// The edge server.
 pub struct Server {
-    pub params: Vec<f32>,
+    /// per-family global parameters (family ids from `BackendSet`)
+    params: Vec<Vec<f32>>,
     /// running count of completed training periods
     pub period: usize,
 }
 
 impl Server {
+    /// Single-family server (the homogeneous-fleet form).
     pub fn new(params: Vec<f32>) -> Self {
-        Server { params, period: 0 }
+        Server { params: vec![params], period: 0 }
     }
 
-    pub fn p(&self) -> usize {
+    /// One global parameter vector per model family, in family order.
+    pub fn new_multi(params: Vec<Vec<f32>>) -> Result<Self> {
+        if params.is_empty() {
+            bail!("server needs at least one model family");
+        }
+        Ok(Server { params, period: 0 })
+    }
+
+    /// Number of model families this server holds parameters for.
+    pub fn families(&self) -> usize {
         self.params.len()
     }
 
+    /// Family 0's parameters — the single global model of a homogeneous
+    /// fleet, and the *reference* family of a mixed one.
+    pub fn params(&self) -> &[f32] {
+        &self.params[0]
+    }
+
+    /// Family `f`'s global parameters.
+    pub fn family_params(&self, f: usize) -> &[f32] {
+        &self.params[f]
+    }
+
+    /// All families' parameters, in family order — the per-family view
+    /// the exec rounds resolve devices against.
+    pub fn all_params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    /// Replace family `f`'s parameters (post-update).
+    pub fn set_family_params(&mut self, f: usize, params: Vec<f32>) {
+        self.params[f] = params;
+    }
+
+    /// Reference-family parameter count (see [`Server::params`]).
+    pub fn p(&self) -> usize {
+        self.params[0].len()
+    }
+
     /// Aggregate per-device gradients weighted by their batch sizes
-    /// (eq. 1) and return the global gradient.
+    /// (eq. 1) and return the global gradient (reference family).
     pub fn aggregate(&self, grads: &[(Vec<f32>, f64)]) -> Result<Vec<f32>> {
         let mut agg = Aggregator::new(self.p());
         for (g, w) in grads {
@@ -31,13 +73,15 @@ impl Server {
         agg.finish()
     }
 
-    /// FedAvg-style parameter averaging weighted by shard size.
+    /// FedAvg-style parameter averaging weighted by shard size
+    /// (homogeneous fleets only — model-FL across families is rejected
+    /// at trainer construction).
     pub fn average_params(&mut self, params: &[(Vec<f32>, f64)]) -> Result<()> {
         let mut agg = Aggregator::new(self.p());
         for (p, w) in params {
             agg.add(p, *w)?;
         }
-        self.params = agg.finish()?;
+        self.params[0] = agg.finish()?;
         Ok(())
     }
 }
@@ -59,6 +103,19 @@ mod tests {
     fn average_params_fedavg() {
         let mut s = Server::new(vec![0.0; 1]);
         s.average_params(&[(vec![1.0], 100.0), (vec![5.0], 300.0)]).unwrap();
-        assert_eq!(s.params, vec![4.0]);
+        assert_eq!(s.params(), &[4.0]);
+    }
+
+    #[test]
+    fn multi_family_params_are_independent() {
+        let mut s = Server::new_multi(vec![vec![1.0, 2.0], vec![3.0; 5]]).unwrap();
+        assert_eq!(s.families(), 2);
+        assert_eq!(s.p(), 2);
+        assert_eq!(s.family_params(1).len(), 5);
+        s.set_family_params(1, vec![9.0; 5]);
+        assert_eq!(s.family_params(0), &[1.0, 2.0]);
+        assert_eq!(s.family_params(1), &[9.0; 5]);
+        assert_eq!(s.all_params().len(), 2);
+        assert!(Server::new_multi(vec![]).is_err());
     }
 }

@@ -17,6 +17,7 @@ use anyhow::{bail, Result};
 
 use super::backend::Backend;
 use super::clock::SimClock;
+use super::fleet_backends::BackendSet;
 use super::scheme::{plan_period, Plan, Scheme};
 use super::server::Server;
 use super::worker::Worker;
@@ -27,6 +28,7 @@ use crate::device::{Device, StragglerModel};
 use crate::exec::{self, Engine};
 use crate::grad::Aggregator;
 use crate::opt::types::Instance;
+use crate::runtime::hostmodel::Workspace;
 use crate::sched::{RoundPolicy, RoundReport, RoundScheduler};
 use crate::util::rng::Pcg;
 use crate::wireless::PeriodRates;
@@ -232,13 +234,16 @@ impl TrainLog {
     }
 }
 
-/// The coordinator: owns the fleet, the data, the backend and the loop.
+/// The coordinator: owns the fleet, the data, the backend set and the
+/// loop. Heterogeneous fleets route each device to its own backend
+/// through a [`BackendSet`]; the server keeps one global model (and one
+/// long-lived gradient accumulator) per model family.
 pub struct Trainer<'a> {
     pub cfg: TrainerConfig,
     pub fleet: Vec<Device>,
     pub workers: Vec<Worker>,
     pub server: Server,
-    backend: &'a dyn Backend,
+    backends: BackendSet<'a>,
     engine: Engine,
     train: &'a Dataset,
     test: &'a Dataset,
@@ -246,16 +251,20 @@ pub struct Trainer<'a> {
     xi: XiEstimator,
     rng: Pcg,
     last_train_loss: Option<f64>,
-    /// long-lived server-side accumulator, reset each period (its p-sized
-    /// f64 buffer is allocated once per run, not once per round)
-    agg: Aggregator,
+    /// long-lived server-side accumulators, one per model family, reset
+    /// each period (their p-sized f64 buffers are allocated once per run,
+    /// not once per round)
+    aggs: Vec<Aggregator>,
     /// round-policy scheduler: event queue, straggler injection, deadline
     /// carry ledger, async in-flight work
     sched: RoundScheduler,
+    /// coordinator-thread eval scratch (global-model evaluation path)
+    eval_scratch: Workspace,
     pub log: TrainLog,
 }
 
 impl<'a> Trainer<'a> {
+    /// Homogeneous fleet: every device trains on `backend`.
     pub fn new(
         cfg: TrainerConfig,
         fleet: Vec<Device>,
@@ -264,21 +273,67 @@ impl<'a> Trainer<'a> {
         kind: Partition,
         backend: &'a dyn Backend,
     ) -> Result<Self> {
+        let k = fleet.len();
+        Trainer::with_backends(
+            cfg,
+            fleet,
+            train,
+            test,
+            kind,
+            BackendSet::homogeneous(k, "default", backend),
+        )
+    }
+
+    /// Heterogeneous fleet: each device resolves its backend and model
+    /// family through `backends` (see `coordinator::fleet_backends`). A
+    /// single-family set reproduces [`Trainer::new`] bitwise.
+    pub fn with_backends(
+        cfg: TrainerConfig,
+        fleet: Vec<Device>,
+        train: &'a Dataset,
+        test: &'a Dataset,
+        kind: Partition,
+        backends: BackendSet<'a>,
+    ) -> Result<Self> {
+        if backends.k() != fleet.len() {
+            bail!(
+                "backend set covers {} devices, fleet has {}",
+                backends.k(),
+                fleet.len()
+            );
+        }
+        // FedAvg averages parameter vectors across devices — undefined
+        // across model families
+        if !backends.is_homogeneous() && matches!(cfg.scheme, Scheme::ModelFl { .. }) {
+            bail!(
+                "scheme {:?} requires a homogeneous fleet: parameter averaging across \
+                 model families is undefined (families here: {})",
+                cfg.scheme.name(),
+                (0..backends.family_count())
+                    .map(|f| backends.family_name(f).to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+        }
         let mut rng = Pcg::seeded(cfg.seed);
         let parts = partition(train, fleet.len(), kind, &mut rng);
-        let p = backend.params();
         let workers = parts
             .into_iter()
             .enumerate()
             .map(|(id, idx)| {
+                // the compressor is sized to the device's own gradient
+                // geometry (its family's parameter count)
+                let p = backends.device_params(id);
                 let sbc = cfg.sbc_keep.map(|f| Sbc::new(f, p));
                 Worker::new(id, DeviceData::new(idx, rng.fork(id as u64 + 1)), sbc)
             })
             .collect();
-        let params = backend.init_params()?;
+        let params = backends.init_all()?;
         let xi = XiEstimator::new(cfg.xi_init, cfg.xi_alpha);
         let engine = Engine::new(cfg.threads);
-        let agg = Aggregator::new(p);
+        let aggs = (0..backends.family_count())
+            .map(|f| Aggregator::for_family(backends.family_params(f), f as u32))
+            .collect();
         // round policies and straggler injection act on the gradient
         // aggregation path; the local-training schemes have no per-period
         // server reduce to schedule around
@@ -305,8 +360,8 @@ impl<'a> Trainer<'a> {
             cfg,
             fleet,
             workers,
-            server: Server::new(params),
-            backend,
+            server: Server::new_multi(params)?,
+            backends,
             engine,
             train,
             test,
@@ -314,8 +369,9 @@ impl<'a> Trainer<'a> {
             xi,
             rng,
             last_train_loss: None,
-            agg,
+            aggs,
             sched,
+            eval_scratch: Workspace::new(),
             log: TrainLog::default(),
         })
     }
@@ -325,42 +381,63 @@ impl<'a> Trainer<'a> {
         self.engine.threads()
     }
 
-    /// Warm-start: train the global model centrally for `steps` SGD steps
-    /// of batchsize `b` before the federated comparison (Table II starts
-    /// from a pre-trained model).
+    /// Warm-start: train every family's global model centrally for
+    /// `steps` SGD steps of batchsize `b` before the federated comparison
+    /// (Table II starts from a pre-trained model). All families see the
+    /// same drawn batches — one RNG draw per step regardless of the
+    /// family count, so a homogeneous run is untouched.
     pub fn warm_start(&mut self, steps: usize, b: usize, lr: f32) -> Result<()> {
         let n = self.train.len();
         let budget = self.engine.threads();
         for _ in 0..steps {
             let idx = self.rng.sample_indices(n, b.min(n));
             let (x, y) = self.train.gather(&idx);
-            // centralized steps run on the coordinator thread: cap their
-            // GEMM fan-out at the trainer's budget, like evaluate() does
-            let s = crate::util::threads::with_budget(budget, || {
-                self.backend.train_step(&self.server.params, &x, &y)
-            })?;
-            self.server.params =
-                self.backend.apply_update(&self.server.params, &s.grads, lr)?;
+            for f in 0..self.backends.family_count() {
+                let backend = self.backends.family_backend(f);
+                let params = self.server.family_params(f);
+                // centralized steps run on the coordinator thread: cap
+                // their GEMM fan-out at the trainer's budget, like
+                // evaluate() does
+                let s = crate::util::threads::with_budget(budget, || {
+                    backend.train_step(params, &x, &y)
+                })?;
+                let updated = backend.apply_update(params, &s.grads, lr)?;
+                self.server.set_family_params(f, updated);
+            }
         }
-        // local-training schemes start every device from the warm model
+        // local-training schemes start every device from its family's
+        // warm model
         if matches!(self.cfg.scheme, Scheme::Individual { .. }) {
-            for w in &mut self.workers {
-                w.local_params = Some(self.server.params.clone());
+            for (id, w) in self.workers.iter_mut().enumerate() {
+                let f = self.backends.family_of(id);
+                w.local_params = Some(self.server.family_params(f).to_vec());
             }
         }
         Ok(())
     }
 
+    /// Parameter count the latency model prices payloads against: the
+    /// *largest* family's. The optimizer's `Instance` carries one fleet-
+    /// wide upload size, so mixed fleets are priced conservatively (and
+    /// symmetrically — the number cannot depend on which tier happens to
+    /// hold device 0). Homogeneous fleets see exactly their model's count.
+    fn wire_params(&self) -> usize {
+        (0..self.backends.family_count())
+            .map(|f| self.backends.family_params(f))
+            .max()
+            .expect("backend set has at least one family")
+    }
+
     /// Gradient payload size in bits under the latency model: s = r*d*p.
     fn grad_wire_bits(&self) -> f64 {
-        self.cfg.wire_ratio * self.cfg.quant_bits as f64 * self.server.p() as f64
+        self.cfg.wire_ratio * self.cfg.quant_bits as f64 * self.wire_params() as f64
     }
 
     /// Parameter payload for model-based FL: d bits per term, no sparse
     /// compression (parameters are dense; the paper's 200x gap between
     /// parameter and compressed-gradient traffic comes from exactly this).
     fn param_wire_bits(&self) -> f64 {
-        self.cfg.quant_bits as f64 * self.server.p() as f64
+        self.cfg.quant_bits as f64 * self.wire_params() as f64
     }
 
     /// eta = O(sqrt(B)) scaling (paper §III-A, refs [36][37]) for an
@@ -518,46 +595,57 @@ impl<'a> Trainer<'a> {
     /// policy. The scheduler fans the device steps out on the engine
     /// (shard boundaries from K alone, device-order f64 folds — see
     /// exec/mod.rs), injects straggler perturbations, drains its event
-    /// queue per the policy, and fills the long-lived server accumulator;
-    /// the trainer then applies the batch-weighted global gradient (eq. 1)
-    /// — unless nothing arrived, in which case the parameters stand.
-    /// Returns the round report plus the step size actually used — scaled
-    /// by `b_effective` (the aggregated batch), which equals the planned
-    /// total under a clean sync barrier but shrinks with every dropped or
-    /// deferred contribution.
+    /// queue per the policy, and fills the long-lived per-family server
+    /// accumulators; the trainer then applies each family's
+    /// batch-weighted global gradient (eq. 1) to that family's model —
+    /// a family nothing arrived for keeps its parameters standing. The
+    /// step size is shared across families, scaled by `b_effective` (the
+    /// total aggregated batch), which equals the planned total under a
+    /// clean sync barrier but shrinks with every dropped or deferred
+    /// contribution.
     fn gradient_period(&mut self, plan: &Plan) -> Result<(RoundReport, f64)> {
-        self.agg.reset();
+        for agg in &mut self.aggs {
+            agg.reset();
+        }
         let report = self.sched.gradient_period(
             &self.engine,
-            self.backend,
+            &self.backends,
             &mut self.workers,
-            &self.server.params,
+            self.server.all_params(),
             self.train,
             plan,
             self.server.period as u64,
             self.clock.now(),
-            &mut self.agg,
+            &mut self.aggs,
         )?;
         self.log.wall.reduce_secs += report.reduce_secs;
         let lr = self.lr_for_batch(report.b_effective);
         if report.updated {
             let t0 = Instant::now();
-            let global = self.agg.average()?;
-            self.server.params =
-                self.backend.apply_update(&self.server.params, &global, lr as f32)?;
+            for f in 0..self.aggs.len() {
+                if self.aggs[f].contributions() == 0 {
+                    continue;
+                }
+                let global = self.aggs[f].average()?;
+                let backend = self.backends.family_backend(f);
+                let updated =
+                    backend.apply_update(self.server.family_params(f), &global, lr as f32)?;
+                self.server.set_family_params(f, updated);
+            }
             self.log.wall.reduce_secs += t0.elapsed().as_secs_f64();
         }
         Ok((report, lr))
     }
 
     /// Model-based FL: one local epoch per device (parallel), then FedAvg
-    /// in fixed device order.
+    /// in fixed device order. Homogeneous fleets only (enforced at
+    /// construction).
     fn model_fl_period(&mut self, local_batch: usize, lr: f32) -> Result<f64> {
         let outcomes = exec::model_fl_round(
             &self.engine,
-            self.backend,
+            &self.backends,
             &mut self.workers,
-            &self.server.params,
+            self.server.all_params(),
             self.train,
             local_batch,
             lr,
@@ -582,9 +670,9 @@ impl<'a> Trainer<'a> {
     fn individual_period(&mut self, plan: &Plan, lr: f32) -> Result<f64> {
         let outcomes = exec::individual_round(
             &self.engine,
-            self.backend,
+            &self.backends,
             &mut self.workers,
-            &self.server.params,
+            self.server.all_params(),
             self.train,
             &plan.batches,
             lr,
@@ -601,18 +689,21 @@ impl<'a> Trainer<'a> {
     }
 
     /// Evaluate on the held-out set. Global-model schemes evaluate the
-    /// server params; individual learning averages each device's metrics
-    /// (the paper's final step averages the models — we report the mean
-    /// device performance, which matches its "isolated islands" framing),
-    /// with the per-device evaluations fanned out on the engine.
-    pub fn evaluate(&self) -> Result<(f64, f64)> {
+    /// server params — per family for mixed fleets, averaged weighted by
+    /// family device count; individual learning averages each device's
+    /// metrics (the paper's final step averages the models — we report
+    /// the mean device performance, which matches its "isolated islands"
+    /// framing), with the per-device evaluations fanned out on the
+    /// engine. Takes `&mut self` so evaluation scratch comes from
+    /// long-lived workspaces instead of the allocator.
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
         match self.cfg.scheme {
             Scheme::Individual { .. } => {
                 let results = exec::eval_round(
                     &self.engine,
-                    self.backend,
-                    &self.workers,
-                    &self.server.params,
+                    &self.backends,
+                    &mut self.workers,
+                    self.server.all_params(),
                     &self.test.x,
                     &self.test.y,
                 )?;
@@ -624,10 +715,37 @@ impl<'a> Trainer<'a> {
             }
             // full-dataset eval on the coordinator thread: the GEMM row
             // blocking inside may fan out, capped by the trainer's budget
-            _ => crate::util::threads::with_budget(self.engine.threads(), || {
-                self.backend
-                    .evaluate(&self.server.params, &self.test.x, &self.test.y)
-            }),
+            _ => {
+                let budget = self.engine.threads();
+                let backends = &self.backends;
+                let server = &self.server;
+                let ws = &mut self.eval_scratch;
+                let (test_x, test_y) = (&self.test.x, &self.test.y);
+                crate::util::threads::with_budget(budget, move || {
+                    if backends.is_homogeneous() {
+                        return backends
+                            .family_backend(0)
+                            .evaluate_ws(server.params(), test_x, test_y, ws);
+                    }
+                    // mixed fleet: mean over families weighted by how
+                    // many devices train each model
+                    let mut loss = 0f64;
+                    let mut acc = 0f64;
+                    for f in 0..backends.family_count() {
+                        let kf = backends.family_size(f) as f64;
+                        let (l, a) = backends.family_backend(f).evaluate_ws(
+                            server.family_params(f),
+                            test_x,
+                            test_y,
+                            ws,
+                        )?;
+                        loss += l * kf;
+                        acc += a * kf;
+                    }
+                    let k = backends.k() as f64;
+                    Ok((loss / k, acc / k))
+                })
+            }
         }
     }
 
@@ -909,6 +1027,149 @@ mod tests {
         for w in log.records.windows(2) {
             assert!(w[1].sim_time > w[0].sim_time);
         }
+    }
+
+    fn mixed_backend_set<'a>(
+        dense: &'a HostBackend,
+        res: &'a HostBackend,
+        k: usize,
+    ) -> crate::coordinator::BackendSet<'a> {
+        // even devices train mini_dense, odd train mini_res
+        crate::coordinator::BackendSet::new(
+            vec![
+                ("mini_dense".into(), dense as &dyn Backend),
+                ("mini_res".into(), res as &dyn Backend),
+            ],
+            (0..k).map(|id| id % 2).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn homogeneous_backend_set_matches_single_backend_bitwise() {
+        // Trainer::with_backends on a one-family set must reproduce
+        // Trainer::new exactly — the whole single-backend compatibility
+        // story rests on this
+        let (train, test, fleet) = tiny_world();
+        let be = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+        let cfg = TrainerConfig { eval_every: 5, ..Default::default() };
+        let mut a = Trainer::new(cfg.clone(), fleet.clone(), &train, &test, Partition::Iid, &be)
+            .unwrap();
+        a.run(6).unwrap();
+        let set = crate::coordinator::BackendSet::homogeneous(fleet.len(), "mini_res", &be);
+        let mut b =
+            Trainer::with_backends(cfg, fleet, &train, &test, Partition::Iid, set).unwrap();
+        b.run(6).unwrap();
+        for (x, y) in a.log.records.iter().zip(&b.log.records) {
+            assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+            assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits());
+            assert_eq!(x.b_total, y.b_total);
+            assert_eq!(x.test_loss.map(f64::to_bits), y.test_loss.map(f64::to_bits));
+        }
+    }
+
+    #[test]
+    fn mixed_fleet_trains_both_families_under_every_policy() {
+        let (train, test, fleet) = tiny_world();
+        let dense = HostBackend::for_model("mini_dense", 24, 10, 3).unwrap();
+        let res = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+        for policy in [
+            RoundPolicy::Sync,
+            RoundPolicy::Deadline { factor: 1.5 },
+            RoundPolicy::Async { alpha: 0.6, beta: 0.5, quorum: 0.5 },
+        ] {
+            let set = mixed_backend_set(&dense, &res, fleet.len());
+            let cfg = TrainerConfig { policy, eval_every: 10, ..Default::default() };
+            let mut tr = Trainer::with_backends(
+                cfg,
+                fleet.clone(),
+                &train,
+                &test,
+                Partition::Iid,
+                set,
+            )
+            .unwrap();
+            // both families' parameters move away from their init
+            let init = [
+                tr.server.family_params(0).to_vec(),
+                tr.server.family_params(1).to_vec(),
+            ];
+            tr.run(10).unwrap();
+            assert_eq!(tr.log.records.len(), 10, "{policy:?}");
+            for f in 0..2 {
+                assert_ne!(
+                    tr.server.family_params(f),
+                    &init[f][..],
+                    "{policy:?}: family {f} never updated"
+                );
+            }
+            // mixed eval reports sane, bounded metrics
+            let (loss, acc) = tr.evaluate().unwrap();
+            assert!(loss.is_finite(), "{policy:?}");
+            assert!((0.0..=1.0).contains(&acc), "{policy:?}");
+            // and the run learns
+            let l0 = tr.log.records[0].train_loss;
+            let l1 = tr.log.records.last().unwrap().train_loss;
+            assert!(l1 < l0 * 1.2, "{policy:?}: loss {l0} -> {l1}");
+        }
+    }
+
+    #[test]
+    fn mixed_fleet_warm_start_and_individual_scheme() {
+        let (train, test, fleet) = tiny_world();
+        let dense = HostBackend::for_model("mini_dense", 24, 10, 3).unwrap();
+        let res = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+        let set = mixed_backend_set(&dense, &res, fleet.len());
+        let cfg = TrainerConfig {
+            scheme: Scheme::Individual { local_batch: 32 },
+            eval_every: 2,
+            ..Default::default()
+        };
+        let mut tr =
+            Trainer::with_backends(cfg, fleet, &train, &test, Partition::Iid, set).unwrap();
+        tr.warm_start(5, 32, 0.05).unwrap();
+        // every device starts from its own family's warm model
+        for (id, w) in tr.workers.iter().enumerate() {
+            let f = id % 2;
+            assert_eq!(
+                w.local_params.as_deref().unwrap(),
+                tr.server.family_params(f),
+                "device {id}"
+            );
+        }
+        tr.run(3).unwrap();
+        assert!(tr.log.final_acc().is_some());
+    }
+
+    #[test]
+    fn mixed_fleet_rejects_model_fl_and_size_mismatch() {
+        let (train, test, fleet) = tiny_world();
+        let dense = HostBackend::for_model("mini_dense", 24, 10, 3).unwrap();
+        let res = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+        let set = mixed_backend_set(&dense, &res, fleet.len());
+        let cfg = TrainerConfig {
+            scheme: Scheme::ModelFl { local_batch: 32 },
+            ..Default::default()
+        };
+        let err = Trainer::with_backends(cfg, fleet.clone(), &train, &test, Partition::Iid, set)
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(err.contains("homogeneous"), "{err}");
+        // backend set sized for a different fleet
+        let set = mixed_backend_set(&dense, &res, fleet.len() + 2);
+        let err = Trainer::with_backends(
+            TrainerConfig::default(),
+            fleet,
+            &train,
+            &test,
+            Partition::Iid,
+            set,
+        )
+        .err()
+        .unwrap()
+        .to_string();
+        assert!(err.contains("devices"), "{err}");
     }
 
     #[test]

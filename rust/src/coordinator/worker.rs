@@ -14,8 +14,12 @@ pub struct Worker {
     pub sbc: Option<Sbc>,
     /// local parameters for local-training schemes (None = uses global)
     pub local_params: Option<Vec<f32>>,
-    /// reusable train-step buffer arena: sized on the first step, then
-    /// steady-state steps stop allocating (see runtime::hostmodel)
+    /// reusable train-step + eval buffer arena: sized on the first step,
+    /// then steady-state steps stop allocating (see runtime::hostmodel).
+    /// Effectively per-(worker, model-family): a device's family binding
+    /// in the fleet's `BackendSet` never changes, so the pool only ever
+    /// serves one model's buffer shapes — mixed fleets keep the
+    /// zero-alloc path
     pub scratch: Workspace,
 }
 

@@ -59,6 +59,12 @@ pub struct Device {
     pub link: DeviceLink,
 }
 
+/// Number of CPU speed tiers in the paper's fleet (§VI-B). Device `id`
+/// belongs to tier `id % CPU_TIER_COUNT` — the coordinate the per-tier
+/// backend rules (`fleet.backends`, see `coordinator::fleet_backends`)
+/// key on.
+pub const CPU_TIER_COUNT: usize = 3;
+
 /// The paper's CPU fleet (§VI-B): K devices in equal thirds of
 /// 0.7 / 1.4 / 2.1 GHz, uniform positions. `cycles_per_sample` and
 /// `cycles_per_update` are shared (same DNN on every device).
@@ -71,7 +77,7 @@ pub fn paper_cpu_fleet(
     shadow_rho: f64,
     rng: &mut Pcg,
 ) -> Vec<Device> {
-    let tiers = [0.7e9, 1.4e9, 2.1e9];
+    let tiers: [f64; CPU_TIER_COUNT] = [0.7e9, 1.4e9, 2.1e9];
     (0..k)
         .map(|id| Device {
             id,

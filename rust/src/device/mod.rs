@@ -7,6 +7,6 @@ pub mod gpu;
 pub mod straggler;
 
 pub use cpu::CpuModule;
-pub use fleet::{paper_cpu_fleet, paper_gpu_fleet, Compute, Device};
+pub use fleet::{paper_cpu_fleet, paper_gpu_fleet, Compute, Device, CPU_TIER_COUNT};
 pub use gpu::{paper_profiles, GpuModule};
 pub use straggler::{Perturbation, StragglerModel};

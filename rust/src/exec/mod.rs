@@ -21,6 +21,13 @@
 //!    the thread count — so the fold grouping is invariant too;
 //! 3. results are collected into device-/shard-indexed slots, so thread
 //!    scheduling cannot reorder them.
+//!
+//! Heterogeneous fleets add a fourth mechanism, not an exception: each
+//! executor resolves a device's backend and model family through
+//! `coordinator::BackendSet` — a pure function of the device id — and the
+//! sharded fold keeps one tagged aggregator per family inside each shard
+//! (`GradShard::aggs`), so mixed fleets reduce per family in the same
+//! fixed device order.
 
 pub mod engine;
 pub mod round;

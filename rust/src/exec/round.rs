@@ -4,11 +4,17 @@
 //! functions do it, fanning the K device steps out over the engine and
 //! returning per-device outcomes **in device order** so the trainer can
 //! reduce them deterministically (see exec/mod.rs for the contract).
+//!
+//! Heterogeneous fleets: every executor resolves each device's backend
+//! and model family through a [`BackendSet`] instead of sharing one
+//! `&dyn Backend`; `params` is the per-family parameter view
+//! (`Server::all_params`). The assignment is a pure function of the
+//! device id, so nothing about the determinism contract changes.
 
 use anyhow::{bail, Context, Result};
 
 use super::engine::Engine;
-use crate::coordinator::backend::Backend;
+use crate::coordinator::fleet_backends::BackendSet;
 use crate::coordinator::worker::Worker;
 use crate::data::Dataset;
 use crate::grad::Aggregator;
@@ -54,18 +60,62 @@ pub struct LocalStepOutcome {
 
 /// One contiguous device range's folded gradient-round contribution.
 pub struct GradShard {
-    /// batch-weighted partial aggregate over the shard's devices (added in
-    /// ascending device order, f64 accumulation)
-    pub agg: Aggregator,
+    /// batch-weighted partial aggregates, one per model family present in
+    /// the shard, in first-device order; devices are added in ascending
+    /// device order with f64 accumulation. Each aggregator carries its
+    /// family tag ([`Aggregator::for_family`]), so merging a shard into
+    /// the wrong family's server accumulator is rejected. Homogeneous
+    /// fleets always see exactly one entry (family 0); a fully-masked
+    /// shard comes back with no entries and merges as a no-op.
+    pub aggs: Vec<(usize, Aggregator)>,
     /// Σ loss_k · |B_k| over the shard, in device order
     pub loss: f64,
     /// Σ |B_k| over the shard
     pub weight: f64,
 }
 
+impl GradShard {
+    /// The shard's aggregator for model family `f`, if any device of that
+    /// family contributed.
+    pub fn family_agg(&self, f: usize) -> Option<&Aggregator> {
+        self.aggs.iter().find(|(fam, _)| *fam == f).map(|(_, a)| a)
+    }
+}
+
+/// Geometry guard every executor runs before fanning out: the per-family
+/// parameter view must match the backend set and the worker slice must
+/// cover the whole fleet. Failing here gives a clear error instead of a
+/// slice panic inside an engine worker.
+fn check_fleet_geometry(
+    backends: &BackendSet<'_>,
+    workers: usize,
+    params: &[Vec<f32>],
+) -> Result<()> {
+    backends.check_params(params)?;
+    if workers != backends.k() {
+        bail!("{workers} workers for a {}-device backend set", backends.k());
+    }
+    Ok(())
+}
+
+/// [`check_fleet_geometry`] plus the per-device batch plan length, for
+/// the executors that take one batch per device.
+fn check_round_geometry(
+    backends: &BackendSet<'_>,
+    workers: usize,
+    params: &[Vec<f32>],
+    batches: usize,
+) -> Result<()> {
+    check_fleet_geometry(backends, workers, params)?;
+    if batches != workers {
+        bail!("{batches} planned batches for {workers} devices");
+    }
+    Ok(())
+}
+
 /// Steps 1–3 of a gradient-exchange period: every device samples its
-/// planned batch, runs forward/backward on the global parameters, and
-/// compresses its gradient. Aggregation stays with the caller.
+/// planned batch, runs forward/backward on its family's global parameters,
+/// and compresses its gradient. Aggregation stays with the caller.
 ///
 /// The trainer's production path is [`gradient_round_sharded`]; this
 /// per-device form is the *reference* the sharded fold is tested against
@@ -75,20 +125,23 @@ pub struct GradShard {
 #[allow(clippy::too_many_arguments)]
 pub fn gradient_round(
     engine: &Engine,
-    backend: &dyn Backend,
+    backends: &BackendSet<'_>,
     workers: &mut [Worker],
-    params: &[f32],
+    params: &[Vec<f32>],
     train: &Dataset,
     batches: &[usize],
     seed: u64,
     period: u64,
 ) -> Result<Vec<GradOutcome>> {
+    check_round_geometry(backends, workers.len(), params, batches.len())?;
     engine.run_mut(workers, |k, w| {
+        let backend = backends.for_device(k);
+        let global = params[backends.family_of(k)].as_slice();
         let b = batches[k].max(1);
         let mut rng = Pcg::for_device(seed, period, k as u64);
         let (x, y) = w.data.sample_with(train, b, &mut rng);
         let step = backend
-            .train_step_ws(params, &x, &y, &mut w.scratch)
+            .train_step_ws(global, &x, &y, &mut w.scratch)
             .with_context(|| format!("device {k} train_step"))?;
         let (grad, _bits) = w.compress(step.grads);
         Ok(GradOutcome { grad, weight: b as f64, loss: step.loss as f64 })
@@ -97,28 +150,29 @@ pub fn gradient_round(
 
 /// The sharded form of [`gradient_round`]: devices are split into
 /// contiguous shards of `agg_shard_size(K)` and each engine worker folds
-/// its shard's gradients straight into a local [`Aggregator`] (f64, device
-/// order) instead of materializing K dense gradients for a single-thread
-/// streaming reduce. The caller combines the returned shards — still in
-/// device order — via `Aggregator::merge`/`reduce_shards`.
+/// its shard's gradients straight into per-family local [`Aggregator`]s
+/// (f64, device order) instead of materializing K dense gradients for a
+/// single-thread streaming reduce. The caller combines the returned
+/// shards — still in device order — via `Aggregator::merge`.
 ///
 /// Thread-count invariance: shard boundaries come from K alone (see
 /// [`agg_shard_size`]) and `Engine::run_chunked` never lets the thread
 /// count reshape chunks, so the f64 fold grouping — and the final global
-/// gradient — is bitwise identical at any `--threads` value.
+/// gradient — is bitwise identical at any `--threads` value. The family
+/// split inside a shard is a pure function of the device ids it covers.
 #[allow(clippy::too_many_arguments)]
 pub fn gradient_round_sharded(
     engine: &Engine,
-    backend: &dyn Backend,
+    backends: &BackendSet<'_>,
     workers: &mut [Worker],
-    params: &[f32],
+    params: &[Vec<f32>],
     train: &Dataset,
     batches: &[usize],
     seed: u64,
     period: u64,
 ) -> Result<Vec<GradShard>> {
     gradient_round_sharded_masked(
-        engine, backend, workers, params, train, batches, None, seed, period,
+        engine, backends, workers, params, train, batches, None, seed, period,
     )
 }
 
@@ -133,24 +187,24 @@ pub fn gradient_round_sharded(
 #[allow(clippy::too_many_arguments)]
 pub fn gradient_round_sharded_masked(
     engine: &Engine,
-    backend: &dyn Backend,
+    backends: &BackendSet<'_>,
     workers: &mut [Worker],
-    params: &[f32],
+    params: &[Vec<f32>],
     train: &Dataset,
     batches: &[usize],
     mask: Option<&[bool]>,
     seed: u64,
     period: u64,
 ) -> Result<Vec<GradShard>> {
+    check_round_geometry(backends, workers.len(), params, batches.len())?;
     if let Some(m) = mask {
         if m.len() != workers.len() {
             bail!("mask length {} != fleet size {}", m.len(), workers.len());
         }
     }
-    let p = params.len();
     let shard = agg_shard_size(workers.len());
     engine.run_chunked(workers, shard, |_, base, devs| {
-        let mut agg = Aggregator::new(p);
+        let mut aggs: Vec<(usize, Aggregator)> = Vec::new();
         let mut loss = 0f64;
         let mut weight = 0f64;
         for (j, w) in devs.iter_mut().enumerate() {
@@ -158,18 +212,25 @@ pub fn gradient_round_sharded_masked(
             if mask.is_some_and(|m| !m[k]) {
                 continue;
             }
+            let fam = backends.family_of(k);
+            let backend = backends.for_device(k);
+            let global = params[fam].as_slice();
             let b = batches[k].max(1);
             let mut rng = Pcg::for_device(seed, period, k as u64);
             let (x, y) = w.data.sample_with(train, b, &mut rng);
             let step = backend
-                .train_step_ws(params, &x, &y, &mut w.scratch)
+                .train_step_ws(global, &x, &y, &mut w.scratch)
                 .with_context(|| format!("device {k} train_step"))?;
             let (grad, _bits) = w.compress(step.grads);
-            agg.add(&grad, b as f64)?;
+            if aggs.iter().all(|(f, _)| *f != fam) {
+                aggs.push((fam, Aggregator::for_family(global.len(), fam as u32)));
+            }
+            let slot = aggs.iter_mut().find(|(f, _)| *f == fam).expect("just inserted");
+            slot.1.add(&grad, b as f64)?;
             loss += step.loss as f64 * b as f64;
             weight += b as f64;
         }
-        Ok(GradShard { agg, loss, weight })
+        Ok(GradShard { aggs, loss, weight })
     })
 }
 
@@ -181,14 +242,15 @@ pub fn gradient_round_sharded_masked(
 /// whether it runs in a full or a subset round of the same period.
 pub fn gradient_round_subset(
     engine: &Engine,
-    backend: &dyn Backend,
+    backends: &BackendSet<'_>,
     workers: &mut [Worker],
-    params: &[f32],
+    params: &[Vec<f32>],
     train: &Dataset,
     jobs: &[(usize, usize)],
     seed: u64,
     period: u64,
 ) -> Result<Vec<GradOutcome>> {
+    check_fleet_geometry(backends, workers.len(), params)?;
     for w in jobs.windows(2) {
         if w[1].0 <= w[0].0 {
             bail!("subset jobs must be in strictly ascending device order");
@@ -209,11 +271,13 @@ pub fn gradient_round_subset(
     }
     engine.run_mut(&mut subset, |_, (k, b, w)| {
         let k = *k;
+        let backend = backends.for_device(k);
+        let global = params[backends.family_of(k)].as_slice();
         let b = (*b).max(1);
         let mut rng = Pcg::for_device(seed, period, k as u64);
         let (x, y) = w.data.sample_with(train, b, &mut rng);
         let step = backend
-            .train_step_ws(params, &x, &y, &mut w.scratch)
+            .train_step_ws(global, &x, &y, &mut w.scratch)
             .with_context(|| format!("device {k} train_step"))?;
         let (grad, _bits) = w.compress(step.grads);
         Ok(GradOutcome { grad, weight: b as f64, loss: step.loss as f64 })
@@ -221,21 +285,26 @@ pub fn gradient_round_subset(
 }
 
 /// Model-based FL round: one local epoch per device from the global
-/// parameters, returning the locally-trained models for FedAvg.
+/// parameters, returning the locally-trained models for FedAvg. The
+/// trainer restricts this scheme to homogeneous fleets (parameter
+/// averaging across families is undefined), but the executor still
+/// resolves per device for uniformity.
 #[allow(clippy::too_many_arguments)]
 pub fn model_fl_round(
     engine: &Engine,
-    backend: &dyn Backend,
+    backends: &BackendSet<'_>,
     workers: &mut [Worker],
-    global: &[f32],
+    params: &[Vec<f32>],
     train: &Dataset,
     local_batch: usize,
     lr: f32,
     seed: u64,
     period: u64,
 ) -> Result<Vec<LocalFitOutcome>> {
+    check_fleet_geometry(backends, workers.len(), params)?;
     engine.run_mut(workers, |k, w| {
-        let mut params = global.to_vec();
+        let backend = backends.for_device(k);
+        let mut local = params[backends.family_of(k)].clone();
         let n = w.shard_len();
         let steps = n.div_ceil(local_batch).max(1);
         let mut rng = Pcg::for_device(seed, period, k as u64);
@@ -243,56 +312,69 @@ pub fn model_fl_round(
         for _ in 0..steps {
             let (x, y) = w.data.sample_with(train, local_batch.min(n), &mut rng);
             let s = backend
-                .train_step_ws(&params, &x, &y, &mut w.scratch)
+                .train_step_ws(&local, &x, &y, &mut w.scratch)
                 .with_context(|| format!("device {k} local step"))?;
             last_loss = s.loss;
-            params = backend.apply_update(&params, &s.grads, lr)?;
+            local = backend.apply_update(&local, &s.grads, lr)?;
         }
-        Ok(LocalFitOutcome { params, weight: n as f64, loss: last_loss as f64 })
+        Ok(LocalFitOutcome { params: local, weight: n as f64, loss: last_loss as f64 })
     })
 }
 
 /// Individual-learning round: one local mini-batch step per device on its
-/// own parameters (initialized from `global` on first touch).
+/// own parameters (initialized from its family's global on first touch).
 #[allow(clippy::too_many_arguments)]
 pub fn individual_round(
     engine: &Engine,
-    backend: &dyn Backend,
+    backends: &BackendSet<'_>,
     workers: &mut [Worker],
-    global: &[f32],
+    params: &[Vec<f32>],
     train: &Dataset,
     batches: &[usize],
     lr: f32,
     seed: u64,
     period: u64,
 ) -> Result<Vec<LocalStepOutcome>> {
+    check_round_geometry(backends, workers.len(), params, batches.len())?;
     engine.run_mut(workers, |k, w| {
-        let mut params = w.local_params.take().unwrap_or_else(|| global.to_vec());
+        let backend = backends.for_device(k);
+        let mut local = w
+            .local_params
+            .take()
+            .unwrap_or_else(|| params[backends.family_of(k)].clone());
         let b = batches[k].max(1);
         let mut rng = Pcg::for_device(seed, period, k as u64);
         let (x, y) = w.data.sample_with(train, b, &mut rng);
         let s = backend
-            .train_step_ws(&params, &x, &y, &mut w.scratch)
+            .train_step_ws(&local, &x, &y, &mut w.scratch)
             .with_context(|| format!("device {k} individual step"))?;
-        params = backend.apply_update(&params, &s.grads, lr)?;
-        w.local_params = Some(params);
+        local = backend.apply_update(&local, &s.grads, lr)?;
+        w.local_params = Some(local);
         Ok(LocalStepOutcome { weight: b as f64, loss: s.loss as f64 })
     })
 }
 
 /// Per-device evaluation (individual learning): each device's local model
-/// (falling back to `global`) against the held-out set, in device order.
+/// (falling back to its family's global) against the held-out set, in
+/// device order. Takes the workers mutably so evaluation draws its
+/// scratch from each worker's `Workspace` instead of allocating.
 pub fn eval_round(
     engine: &Engine,
-    backend: &dyn Backend,
-    workers: &[Worker],
-    global: &[f32],
+    backends: &BackendSet<'_>,
+    workers: &mut [Worker],
+    params: &[Vec<f32>],
     x: &[f32],
     y: &[i32],
 ) -> Result<Vec<(f64, f64)>> {
-    engine.run_indexed(workers.len(), |k| {
-        let params = workers[k].local_params.as_deref().unwrap_or(global);
-        backend.evaluate(params, x, y)
+    check_fleet_geometry(backends, workers.len(), params)?;
+    engine.run_mut(workers, |k, w| {
+        let backend = backends.for_device(k);
+        let global = params[backends.family_of(k)].as_slice();
+        let local = match &w.local_params {
+            Some(p) => p.as_slice(),
+            None => global,
+        };
+        backend.evaluate_ws(local, x, y, &mut w.scratch)
     })
 }
 
@@ -300,7 +382,7 @@ pub fn eval_round(
 mod tests {
     use super::*;
     use crate::compress::Sbc;
-    use crate::coordinator::backend::HostBackend;
+    use crate::coordinator::backend::{Backend, HostBackend};
     use crate::data::synthetic::{generate, SynthConfig};
     use crate::data::DeviceData;
 
@@ -323,11 +405,12 @@ mod tests {
     fn gradient_round_thread_invariant() {
         let (train, mut w1, be) = world(5, true);
         let (_, mut w4, _) = world(5, true);
-        let params = be.init_params().unwrap();
+        let set = BackendSet::homogeneous(5, "mini_dense", &be);
+        let fams = vec![be.init_params().unwrap()];
         let batches = vec![8usize; 5];
-        let a = gradient_round(&Engine::new(1), &be, &mut w1, &params, &train, &batches, 9, 3)
+        let a = gradient_round(&Engine::new(1), &set, &mut w1, &fams, &train, &batches, 9, 3)
             .unwrap();
-        let b = gradient_round(&Engine::new(4), &be, &mut w4, &params, &train, &batches, 9, 3)
+        let b = gradient_round(&Engine::new(4), &set, &mut w4, &fams, &train, &batches, 9, 3)
             .unwrap();
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
@@ -343,20 +426,21 @@ mod tests {
         // reduced in device order with the same f64 aggregator.
         let (train, mut w_dev, be) = world(5, true);
         let (_, mut w_shard, _) = world(5, true);
-        let params = be.init_params().unwrap();
+        let set = BackendSet::homogeneous(5, "mini_dense", &be);
+        let fams = vec![be.init_params().unwrap()];
         let batches = vec![6usize; 5];
         let outcomes =
-            gradient_round(&Engine::new(2), &be, &mut w_dev, &params, &train, &batches, 7, 2)
+            gradient_round(&Engine::new(2), &set, &mut w_dev, &fams, &train, &batches, 7, 2)
                 .unwrap();
-        let mut stream = Aggregator::new(params.len());
+        let mut stream = Aggregator::new(fams[0].len());
         for o in &outcomes {
             stream.add(&o.grad, o.weight).unwrap();
         }
         let shards = gradient_round_sharded(
             &Engine::new(2),
-            &be,
+            &set,
             &mut w_shard,
-            &params,
+            &fams,
             &train,
             &batches,
             7,
@@ -364,8 +448,10 @@ mod tests {
         )
         .unwrap();
         assert_eq!(shards.len(), 5); // per-device shards at K <= 32
-        let merged =
-            Aggregator::reduce_shards(shards.into_iter().map(|s| s.agg).collect()).unwrap();
+        let merged = Aggregator::reduce_shards(
+            shards.into_iter().flat_map(|s| s.aggs.into_iter().map(|(_, a)| a)).collect(),
+        )
+        .unwrap();
         assert_eq!(merged.finish().unwrap(), stream.finish().unwrap());
     }
 
@@ -387,35 +473,39 @@ mod tests {
         let (train, mut w_a, be) = world(5, true);
         let (_, mut w_b, _) = world(5, true);
         let (_, mut w_c, _) = world(5, true);
-        let params = be.init_params().unwrap();
+        let set = BackendSet::homogeneous(5, "mini_dense", &be);
+        let fams = vec![be.init_params().unwrap()];
         let batches = vec![6usize; 5];
         let full = gradient_round_sharded(
-            &Engine::new(2), &be, &mut w_a, &params, &train, &batches, 7, 2,
+            &Engine::new(2), &set, &mut w_a, &fams, &train, &batches, 7, 2,
         )
         .unwrap();
         let none_mask = gradient_round_sharded_masked(
-            &Engine::new(2), &be, &mut w_b, &params, &train, &batches, None, 7, 2,
+            &Engine::new(2), &set, &mut w_b, &fams, &train, &batches, None, 7, 2,
         )
         .unwrap();
         for (a, b) in full.iter().zip(&none_mask) {
             assert_eq!(a.loss.to_bits(), b.loss.to_bits());
             assert_eq!(a.weight, b.weight);
-            assert_eq!(a.agg.average().unwrap(), b.agg.average().unwrap());
+            assert_eq!(
+                a.family_agg(0).unwrap().average().unwrap(),
+                b.family_agg(0).unwrap().average().unwrap()
+            );
         }
         // drop devices 1 and 3: their shards (K=5 -> per-device) come back
         // empty and the others are untouched
         let mask = vec![true, false, true, false, true];
         let masked = gradient_round_sharded_masked(
-            &Engine::new(2), &be, &mut w_c, &params, &train, &batches, Some(&mask), 7, 2,
+            &Engine::new(2), &set, &mut w_c, &fams, &train, &batches, Some(&mask), 7, 2,
         )
         .unwrap();
         assert_eq!(masked.len(), 5);
         for (k, (m, f)) in masked.iter().zip(&full).enumerate() {
             if mask[k] {
-                assert_eq!(m.agg.contributions(), 1, "device {k}");
+                assert_eq!(m.family_agg(0).unwrap().contributions(), 1, "device {k}");
                 assert_eq!(m.loss.to_bits(), f.loss.to_bits(), "device {k}");
             } else {
-                assert_eq!(m.agg.contributions(), 0, "device {k}: shard must be empty");
+                assert!(m.aggs.is_empty(), "device {k}: shard must be empty");
                 assert_eq!(m.weight, 0.0);
                 assert_eq!(m.loss, 0.0);
             }
@@ -424,7 +514,7 @@ mod tests {
         let (_, mut w_d, _) = world(5, true);
         let short = [true; 3];
         assert!(gradient_round_sharded_masked(
-            &Engine::new(1), &be, &mut w_d, &params, &train, &batches, Some(&short[..]), 7, 2,
+            &Engine::new(1), &set, &mut w_d, &fams, &train, &batches, Some(&short[..]), 7, 2,
         )
         .is_err());
     }
@@ -435,15 +525,16 @@ mod tests {
         // the full per-device round of the same (seed, period)
         let (train, mut w_full, be) = world(5, true);
         let (_, mut w_sub, _) = world(5, true);
-        let params = be.init_params().unwrap();
+        let set = BackendSet::homogeneous(5, "mini_dense", &be);
+        let fams = vec![be.init_params().unwrap()];
         let batches = vec![6usize; 5];
         let full = gradient_round(
-            &Engine::new(2), &be, &mut w_full, &params, &train, &batches, 9, 4,
+            &Engine::new(2), &set, &mut w_full, &fams, &train, &batches, 9, 4,
         )
         .unwrap();
         let jobs = vec![(1usize, 6usize), (3, 6), (4, 6)];
         let sub = gradient_round_subset(
-            &Engine::new(2), &be, &mut w_sub, &params, &train, &jobs, 9, 4,
+            &Engine::new(2), &set, &mut w_sub, &fams, &train, &jobs, 9, 4,
         )
         .unwrap();
         assert_eq!(sub.len(), 3);
@@ -454,31 +545,61 @@ mod tests {
         // unsorted or out-of-range jobs are clean errors
         let (_, mut w_bad, _) = world(5, true);
         assert!(gradient_round_subset(
-            &Engine::new(1), &be, &mut w_bad, &params, &train, &[(3, 4), (1, 4)], 9, 4,
+            &Engine::new(1), &set, &mut w_bad, &fams, &train, &[(3, 4), (1, 4)], 9, 4,
         )
         .is_err());
         assert!(gradient_round_subset(
-            &Engine::new(1), &be, &mut w_bad, &params, &train, &[(5, 4)], 9, 4,
+            &Engine::new(1), &set, &mut w_bad, &fams, &train, &[(5, 4)], 9, 4,
         )
         .is_err());
         // empty subset is a no-op
         let out = gradient_round_subset(
-            &Engine::new(1), &be, &mut w_bad, &params, &train, &[], 9, 4,
+            &Engine::new(1), &set, &mut w_bad, &fams, &train, &[], 9, 4,
         )
         .unwrap();
         assert!(out.is_empty());
     }
 
     #[test]
+    fn zero_batches_clamp_to_one_never_empty() {
+        // backends reject empty batches outright (coordinator/backend.rs),
+        // so the rounds' `.max(1)` clamp is what guarantees a plan with a
+        // zero entry still dispatches a real step instead of erroring
+        let (train, mut workers, be) = world(3, false);
+        let set = BackendSet::homogeneous(3, "mini_dense", &be);
+        let fams = vec![be.init_params().unwrap()];
+        let batches = vec![0usize, 4, 0];
+        let out = gradient_round(
+            &Engine::new(2), &set, &mut workers, &fams, &train, &batches, 5, 1,
+        )
+        .unwrap();
+        assert_eq!(out.len(), 3);
+        for (k, o) in out.iter().enumerate() {
+            assert!(o.weight >= 1.0, "device {k}: weight {}", o.weight);
+            assert!(o.loss.is_finite(), "device {k}");
+        }
+        let (_, mut workers, _) = world(3, false);
+        let shards = gradient_round_sharded(
+            &Engine::new(2), &set, &mut workers, &fams, &train, &batches, 5, 1,
+        )
+        .unwrap();
+        for s in &shards {
+            assert!(s.weight >= 1.0);
+            assert!(s.loss.is_finite());
+        }
+    }
+
+    #[test]
     fn individual_round_keeps_local_params() {
         let (train, mut workers, be) = world(3, false);
-        let params = be.init_params().unwrap();
+        let set = BackendSet::homogeneous(3, "mini_dense", &be);
+        let fams = vec![be.init_params().unwrap()];
         let batches = vec![4usize; 3];
         individual_round(
             &Engine::new(2),
-            &be,
+            &set,
             &mut workers,
-            &params,
+            &fams,
             &train,
             &batches,
             0.1,
@@ -488,8 +609,109 @@ mod tests {
         .unwrap();
         for w in &workers {
             let local = w.local_params.as_ref().unwrap();
-            assert_eq!(local.len(), params.len());
-            assert_ne!(local, &params);
+            assert_eq!(local.len(), fams[0].len());
+            assert_ne!(local, &fams[0]);
         }
+    }
+
+    /// Mixed two-family fleet: shards carry per-family aggregators tagged
+    /// with their family id, each family's fold matches a homogeneous
+    /// reference round over just its devices, and merging a shard into
+    /// the wrong family's accumulator is rejected.
+    #[test]
+    fn mixed_fleet_sharded_round_splits_families() {
+        let k = 6;
+        let cfg = SynthConfig { dim: 12, ..Default::default() };
+        let train = generate(&cfg, 40 * k, 1);
+        let dense = HostBackend::for_model("mini_dense", 12, 10, 2).unwrap();
+        let res = HostBackend::for_model("mini_res", 12, 10, 2).unwrap();
+        // devices 0,2,4 -> dense (family 0); 1,3,5 -> res (family 1)
+        let assign: Vec<usize> = (0..k).map(|id| id % 2).collect();
+        let set = BackendSet::new(
+            vec![("mini_dense".into(), &dense as &dyn Backend), ("mini_res".into(), &res)],
+            assign.clone(),
+        )
+        .unwrap();
+        let fams = set.init_all().unwrap();
+        let mk_workers = || -> Vec<Worker> {
+            (0..k)
+                .map(|id| {
+                    let idx: Vec<usize> = (id * 40..(id + 1) * 40).collect();
+                    Worker::new(id, DeviceData::new(idx, Pcg::seeded(id as u64)), None)
+                })
+                .collect()
+        };
+        let batches = vec![6usize; k];
+        let mut workers = mk_workers();
+        let shards = gradient_round_sharded(
+            &Engine::new(2), &set, &mut workers, &fams, &train, &batches, 7, 2,
+        )
+        .unwrap();
+        // per-device shards at K=6: each carries exactly its device's family
+        assert_eq!(shards.len(), k);
+        for (dev, s) in shards.iter().enumerate() {
+            assert_eq!(s.aggs.len(), 1, "device {dev}");
+            assert_eq!(s.aggs[0].0, assign[dev], "device {dev}");
+            assert_eq!(s.aggs[0].1.family(), assign[dev] as u32);
+        }
+        // per-family server accumulators: merging works family-by-family...
+        let mut acc0 = Aggregator::for_family(set.family_params(0), 0);
+        let mut acc1 = Aggregator::for_family(set.family_params(1), 1);
+        for s in &shards {
+            for (f, a) in &s.aggs {
+                match *f {
+                    0 => acc0.merge(a).unwrap(),
+                    _ => acc1.merge(a).unwrap(),
+                }
+            }
+        }
+        assert_eq!(acc0.contributions(), 3);
+        assert_eq!(acc1.contributions(), 3);
+        // ...and cross-family merging is a clear error
+        let err = acc0.merge(&shards[1].aggs[0].1).unwrap_err().to_string();
+        assert!(err.contains("cross-family"), "{err}");
+        // each family's reduce matches the per-device reference gradients
+        let mut workers = mk_workers();
+        let reference = gradient_round(
+            &Engine::new(1), &set, &mut workers, &fams, &train, &batches, 7, 2,
+        )
+        .unwrap();
+        for (f, acc) in [(0usize, acc0), (1, acc1)] {
+            let mut stream = Aggregator::for_family(set.family_params(f), f as u32);
+            for (dev, o) in reference.iter().enumerate() {
+                if assign[dev] == f {
+                    stream.add(&o.grad, o.weight).unwrap();
+                }
+            }
+            assert_eq!(acc.finish().unwrap(), stream.finish().unwrap(), "family {f}");
+        }
+        // geometry violations are caught before fan-out
+        let mut workers = mk_workers();
+        assert!(gradient_round_sharded(
+            &Engine::new(1), &set, &mut workers, &fams[..1], &train, &batches, 7, 2,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn eval_round_uses_family_globals_and_worker_scratch() {
+        let (_train, mut workers, be) = world(3, false);
+        let set = BackendSet::homogeneous(3, "mini_dense", &be);
+        let fams = vec![be.init_params().unwrap()];
+        let cfg = SynthConfig { dim: 12, ..Default::default() };
+        let test = generate(&cfg, 30, 9);
+        let out = eval_round(
+            &Engine::new(2), &set, &mut workers, &fams, &test.x, &test.y,
+        )
+        .unwrap();
+        assert_eq!(out.len(), 3);
+        // no local params: every device evaluates the family global
+        let direct = be.evaluate(&fams[0], &test.x, &test.y).unwrap();
+        for (l, a) in &out {
+            assert_eq!(l.to_bits(), direct.0.to_bits());
+            assert_eq!(a.to_bits(), direct.1.to_bits());
+        }
+        // the eval scratch landed in the worker workspaces
+        assert!(workers.iter().all(|w| w.scratch.pooled_buffers() > 0));
     }
 }

@@ -4,7 +4,9 @@
 use anyhow::Result;
 
 use crate::config::Experiment;
-use crate::coordinator::{Backend, HostBackend, PjrtBackend, Scheme, TrainLog, Trainer};
+use crate::coordinator::{
+    Backend, BackendSet, HostBackend, PjrtBackend, Scheme, TrainLog, Trainer,
+};
 use crate::data::{generate, Dataset};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg;
@@ -28,11 +30,11 @@ impl BackendKind {
     }
 }
 
-/// Build the backend for an experiment.
-pub fn make_backend(exp: &Experiment, kind: BackendKind) -> Result<Box<dyn Backend>> {
+/// Build one backend for `model` under this experiment's data geometry.
+fn build_backend(exp: &Experiment, model: &str, kind: BackendKind) -> Result<Box<dyn Backend>> {
     match kind {
         BackendKind::Host => Ok(Box::new(HostBackend::for_model(
-            &exp.model,
+            model,
             exp.synth.dim,
             exp.synth.classes,
             exp.trainer.seed,
@@ -46,9 +48,109 @@ pub fn make_backend(exp: &Experiment, kind: BackendKind) -> Result<Box<dyn Backe
                 rt.manifest.input_dim,
                 exp.synth.dim
             );
-            Ok(Box::new(PjrtBackend::new(rt, &exp.model)?))
+            Ok(Box::new(PjrtBackend::new(rt, model)?))
         }
     }
+}
+
+/// Build the (single) backend for an experiment's default model.
+pub fn make_backend(exp: &Experiment, kind: BackendKind) -> Result<Box<dyn Backend>> {
+    build_backend(exp, &exp.model, kind)
+}
+
+/// The owning form of `coordinator::BackendSet`: one boxed backend per
+/// model family plus the device → family assignment, resolved from the
+/// experiment's per-tier rules (`fleet.backends` / `--backends`).
+/// Experiments hold a `FleetBackends` and lend [`FleetBackends::set`]
+/// views to trainers, exactly as they held a `Box<dyn Backend>` and lent
+/// `as_ref()` before.
+pub struct FleetBackends {
+    boxes: Vec<Box<dyn Backend>>,
+    names: Vec<String>,
+    assign: Vec<usize>,
+}
+
+impl FleetBackends {
+    /// The one place the borrowed view is assembled — `set()` and the
+    /// build-time validation in [`make_fleet_backends`] must construct
+    /// the exact same thing or the `expect` below loses its
+    /// justification.
+    fn build_set(&self) -> Result<BackendSet<'_>> {
+        BackendSet::new(
+            self.names
+                .iter()
+                .cloned()
+                .zip(self.boxes.iter().map(|b| b.as_ref()))
+                .collect(),
+            self.assign.clone(),
+        )
+    }
+
+    /// The borrowed view a `Trainer` resolves devices through.
+    pub fn set(&self) -> BackendSet<'_> {
+        self.build_set().expect("validated when the FleetBackends was built")
+    }
+
+    /// Number of distinct model families.
+    pub fn family_count(&self) -> usize {
+        self.boxes.len()
+    }
+}
+
+/// Resolve an experiment's per-tier backend rules into an owned backend
+/// fleet. No rules = the classic homogeneous fleet on `exp.model` and
+/// `kind`; rules override their tier (a rule without an explicit backend
+/// kind inherits `kind`), uncovered tiers fall back to the default. Two
+/// tiers naming the same model must agree on the backend kind — the
+/// model is one family with one canonical backend.
+pub fn make_fleet_backends(exp: &Experiment, kind: BackendKind) -> Result<FleetBackends> {
+    anyhow::ensure!(exp.k >= 1, "fleet.k must be >= 1");
+    exp.check_backend_tiers()?;
+    // per-tier (model, kind) spec, defaulting to the experiment's model
+    let mut tier_spec: Vec<(String, BackendKind)> =
+        (0..exp.tier_count()).map(|_| (exp.model.clone(), kind)).collect();
+    for r in &exp.backends {
+        let bk = match &r.backend {
+            None => kind,
+            Some(s) => BackendKind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("bad backend {s:?} in fleet.backends"))?,
+        };
+        tier_spec[r.tier] = (r.model.clone(), bk);
+    }
+    // distinct model families in first-device order; devices assign to
+    // their tier's family
+    let mut names: Vec<String> = Vec::new();
+    let mut kinds: Vec<BackendKind> = Vec::new();
+    let mut assign = Vec::with_capacity(exp.k);
+    for id in 0..exp.k {
+        let (model, bk) = &tier_spec[exp.tier_of(id)];
+        let fam = match names.iter().position(|n| n == model) {
+            Some(f) => {
+                anyhow::ensure!(
+                    kinds[f] == *bk,
+                    "model {model:?} is assigned both {:?} and {bk:?} backends — one model \
+                     family needs one canonical backend",
+                    kinds[f]
+                );
+                f
+            }
+            None => {
+                names.push(model.clone());
+                kinds.push(*bk);
+                names.len() - 1
+            }
+        };
+        assign.push(fam);
+    }
+    let boxes = names
+        .iter()
+        .zip(&kinds)
+        .map(|(model, bk)| build_backend(exp, model, *bk))
+        .collect::<Result<Vec<_>>>()?;
+    let fleet = FleetBackends { boxes, names, assign };
+    // validate the derived set once so `set()` can never fail later
+    fleet.build_set()?;
+    Ok(fleet)
 }
 
 /// Generate this experiment's train/test datasets. The same seed is used
@@ -62,6 +164,9 @@ pub fn make_data(exp: &Experiment) -> (Dataset, Dataset) {
 }
 
 /// Run one scheme to completion (warm start optional) and return its log.
+/// Honors the experiment's per-tier backend rules — a config with
+/// `fleet.backends` runs a heterogeneous fleet; without, this is the
+/// classic single-backend path (`Trainer::new`-equivalent bitwise).
 #[allow(clippy::too_many_arguments)]
 pub fn run_scheme(
     exp: &Experiment,
@@ -71,13 +176,14 @@ pub fn run_scheme(
     warm_steps: usize,
     time_limit: Option<f64>,
 ) -> Result<TrainLog> {
-    let backend = make_backend(exp, kind)?;
+    let backends = make_fleet_backends(exp, kind)?;
     let (train, test) = make_data(exp);
     let mut rng = Pcg::seeded(exp.trainer.seed ^ 0xf1ee7);
     let fleet = exp.fleet(&mut rng);
     let mut cfg = exp.trainer.clone();
     cfg.scheme = scheme;
-    let mut tr = Trainer::new(cfg, fleet, &train, &test, exp.partition, backend.as_ref())?;
+    let mut tr =
+        Trainer::with_backends(cfg, fleet, &train, &test, exp.partition, backends.set())?;
     if warm_steps > 0 {
         tr.warm_start(warm_steps, 64, 0.05)?;
     }

@@ -5,16 +5,34 @@
 use anyhow::{bail, Result};
 
 /// Streaming weighted aggregator: server-side state for one period.
+///
+/// Heterogeneous fleets (`coordinator::fleet_backends`) aggregate one
+/// parameter space per *model family*; each aggregator carries its
+/// family tag so shards from different families can never merge — even
+/// when their parameter counts happen to coincide.
 #[derive(Clone, Debug)]
 pub struct Aggregator {
     acc: Vec<f64>,
     total_weight: f64,
     contributions: usize,
+    /// parameter-space tag (0 for homogeneous fleets)
+    family: u32,
 }
 
 impl Aggregator {
     pub fn new(p: usize) -> Self {
-        Aggregator { acc: vec![0f64; p], total_weight: 0.0, contributions: 0 }
+        Aggregator::for_family(p, 0)
+    }
+
+    /// An aggregator for one model family's parameter space. `merge` and
+    /// `reduce_shards` reject mixing across family tags.
+    pub fn for_family(p: usize, family: u32) -> Self {
+        Aggregator { acc: vec![0f64; p], total_weight: 0.0, contributions: 0, family }
+    }
+
+    /// The parameter-space tag this aggregator accepts shards from.
+    pub fn family(&self) -> u32 {
+        self.family
     }
 
     /// Clear for the next period, keeping the f64 accumulator allocation —
@@ -74,6 +92,14 @@ impl Aggregator {
     /// have used per shard; cross-shard grouping differs only by f64
     /// addition reassociation (exact for integer-valued contributions).
     pub fn merge(&mut self, other: &Aggregator) -> Result<()> {
+        if other.family != self.family {
+            bail!(
+                "cross-family shard merge: family {} into family {} (heterogeneous fleets \
+                 aggregate one parameter space per model family)",
+                other.family,
+                self.family
+            );
+        }
         if other.acc.len() != self.acc.len() {
             bail!("shard length {} != {}", other.acc.len(), self.acc.len());
         }
@@ -183,6 +209,27 @@ mod tests {
         let b = Aggregator::new(2);
         assert!(a.merge(&b).is_err());
         assert!(Aggregator::reduce_shards(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn merge_rejects_cross_family_shards() {
+        // same parameter count, different model family: still rejected
+        let mut a = Aggregator::for_family(4, 0);
+        let mut b = Aggregator::for_family(4, 1);
+        b.add(&[1.0; 4], 2.0).unwrap();
+        let err = a.merge(&b).unwrap_err().to_string();
+        assert!(err.contains("cross-family"), "{err}");
+        assert!(Aggregator::reduce_shards(vec![
+            Aggregator::for_family(4, 0),
+            Aggregator::for_family(4, 1),
+        ])
+        .is_err());
+        // same family merges fine and keeps the tag
+        let mut c = Aggregator::for_family(4, 1);
+        c.merge(&b).unwrap();
+        assert_eq!(c.family(), 1);
+        assert_eq!(c.contributions(), 1);
+        assert_eq!(Aggregator::new(4).family(), 0);
     }
 
     #[test]

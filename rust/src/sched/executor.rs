@@ -4,7 +4,8 @@
 //! scheduler turns the plan's per-device nominal finish times plus the
 //! straggler perturbations into completion events, drains the queue
 //! according to the round policy, and folds the surviving contributions
-//! into the caller's server-side [`Aggregator`]. All simulated-time
+//! into the caller's per-family server-side [`Aggregator`]s (one per
+//! model family of the fleet's `BackendSet`). All simulated-time
 //! arithmetic stays in here and is returned as `RoundReport::duration`;
 //! the trainer owns the `SimClock` and is the only place that advances it.
 //!
@@ -20,7 +21,7 @@ use anyhow::Result;
 
 use super::policy::RoundPolicy;
 use super::queue::{Event, EventQueue};
-use crate::coordinator::backend::Backend;
+use crate::coordinator::fleet_backends::BackendSet;
 use crate::coordinator::scheme::Plan;
 use crate::coordinator::worker::Worker;
 use crate::data::Dataset;
@@ -142,31 +143,40 @@ impl RoundScheduler {
     /// Execute one gradient-exchange period under the configured policy.
     /// `period` is the round's RNG/staleness coordinate (the trainer's
     /// `server.period` before the post-round increment), `now` the current
-    /// simulated time, and `agg` the caller's reset server accumulator.
+    /// simulated time, and `aggs` the caller's reset server accumulators —
+    /// one per model family (`BackendSet` order), exactly one for a
+    /// homogeneous fleet.
     #[allow(clippy::too_many_arguments)]
     pub fn gradient_period(
         &mut self,
         engine: &Engine,
-        backend: &dyn Backend,
+        backends: &BackendSet<'_>,
         workers: &mut [Worker],
-        params: &[f32],
+        params: &[Vec<f32>],
         train: &Dataset,
         plan: &Plan,
         period: u64,
         now: f64,
-        agg: &mut Aggregator,
+        aggs: &mut [Aggregator],
     ) -> Result<RoundReport> {
         debug_assert_eq!(workers.len(), self.busy.len(), "fleet size changed under scheduler");
+        if aggs.len() != backends.family_count() {
+            anyhow::bail!(
+                "{} server accumulators for {} model families",
+                aggs.len(),
+                backends.family_count()
+            );
+        }
         match self.policy {
             RoundPolicy::Sync => {
-                self.barrier_period(engine, backend, workers, params, train, plan, period, agg)
+                self.barrier_period(engine, backends, workers, params, train, plan, period, aggs)
             }
             RoundPolicy::Deadline { factor } => self.deadline_period(
-                factor, engine, backend, workers, params, train, plan, period, agg,
+                factor, engine, backends, workers, params, train, plan, period, aggs,
             ),
             RoundPolicy::Async { alpha, beta, quorum } => self.async_period(
-                alpha, beta, quorum, engine, backend, workers, params, train, plan, period, now,
-                agg,
+                alpha, beta, quorum, engine, backends, workers, params, train, plan, period, now,
+                aggs,
             ),
         }
     }
@@ -182,13 +192,13 @@ impl RoundScheduler {
     fn barrier_period(
         &mut self,
         engine: &Engine,
-        backend: &dyn Backend,
+        backends: &BackendSet<'_>,
         workers: &mut [Worker],
-        params: &[f32],
+        params: &[Vec<f32>],
         train: &Dataset,
         plan: &Plan,
         period: u64,
-        agg: &mut Aggregator,
+        aggs: &mut [Aggregator],
     ) -> Result<RoundReport> {
         let k = workers.len();
         let mut queue: EventQueue<()> = EventQueue::new();
@@ -213,7 +223,7 @@ impl RoundScheduler {
         }
         let mask_opt = if dropped > 0 { Some(&mask[..]) } else { None };
         let (loss_acc, w_acc, reduce_secs) = self.run_masked(
-            engine, backend, workers, params, train, plan, mask_opt, period, agg,
+            engine, backends, workers, params, train, plan, mask_opt, period, aggs,
         )?;
         let planned: usize = plan.batches.iter().sum();
         Ok(RoundReport {
@@ -224,7 +234,7 @@ impl RoundScheduler {
             dropped,
             late: 0,
             stale_mean: 0.0,
-            updated: agg.contributions() > 0,
+            updated: aggs.iter().any(|a| a.contributions() > 0),
             reduce_secs,
         })
     }
@@ -241,13 +251,13 @@ impl RoundScheduler {
         &mut self,
         factor: f64,
         engine: &Engine,
-        backend: &dyn Backend,
+        backends: &BackendSet<'_>,
         workers: &mut [Worker],
-        params: &[f32],
+        params: &[Vec<f32>],
         train: &Dataset,
         plan: &Plan,
         period: u64,
-        agg: &mut Aggregator,
+        aggs: &mut [Aggregator],
     ) -> Result<RoundReport> {
         let k = workers.len();
         let deadline = plan.t_up * factor;
@@ -283,7 +293,7 @@ impl RoundScheduler {
         }
         let mask_opt = if arrived == k { None } else { Some(&mask[..]) };
         let (loss_acc, w_acc, reduce_secs) = self.run_masked(
-            engine, backend, workers, params, train, plan, mask_opt, period, agg,
+            engine, backends, workers, params, train, plan, mask_opt, period, aggs,
         )?;
         let planned: usize = plan.batches.iter().sum();
         Ok(RoundReport {
@@ -294,7 +304,7 @@ impl RoundScheduler {
             dropped,
             late,
             stale_mean: 0.0,
-            updated: agg.contributions() > 0,
+            updated: aggs.iter().any(|a| a.contributions() > 0),
             reduce_secs,
         })
     }
@@ -310,14 +320,14 @@ impl RoundScheduler {
         beta: f64,
         quorum: f64,
         engine: &Engine,
-        backend: &dyn Backend,
+        backends: &BackendSet<'_>,
         workers: &mut [Worker],
-        params: &[f32],
+        params: &[Vec<f32>],
         train: &Dataset,
         plan: &Plan,
         period: u64,
         now: f64,
-        agg: &mut Aggregator,
+        aggs: &mut [Aggregator],
     ) -> Result<RoundReport> {
         let k = workers.len();
         // 1. dispatch idle devices (device order; a dropped device loses
@@ -339,7 +349,7 @@ impl RoundScheduler {
         }
         if !jobs.is_empty() {
             let outcomes = exec::gradient_round_subset(
-                engine, backend, workers, params, train, &jobs, self.seed, period,
+                engine, backends, workers, params, train, &jobs, self.seed, period,
             )?;
             for ((&(dev, batch), &at), o) in jobs.iter().zip(&arrivals).zip(outcomes) {
                 self.busy[dev] = true;
@@ -376,7 +386,8 @@ impl RoundScheduler {
         while self.inflight.peek_time().is_some_and(|t| t <= t_close) {
             popped.push(self.inflight.pop().expect("peeked"));
         }
-        // 3. apply in arrival order with staleness-discounted weights
+        // 3. apply in arrival order with staleness-discounted weights,
+        //    each gradient into its device's family accumulator
         let t0 = Instant::now();
         let mut loss_acc = 0f64;
         let mut w_acc = 0f64;
@@ -385,7 +396,7 @@ impl RoundScheduler {
             self.busy[e.device] = false;
             let s = period - e.payload.period;
             let w = e.payload.batch as f64;
-            agg.add_stale(&e.payload.grad, w, s, alpha, beta)?;
+            aggs[backends.family_of(e.device)].add_stale(&e.payload.grad, w, s, alpha, beta)?;
             loss_acc += e.payload.loss * w;
             w_acc += w;
             stale_acc += s as f64 * w;
@@ -409,25 +420,27 @@ impl RoundScheduler {
     }
 
     /// Shared barrier/deadline execution tail: the sharded gradient round
-    /// over the (possibly masked) fleet, merged into `agg` in device order
-    /// — the exact fold the legacy synchronous path used, so a `None` mask
-    /// reproduces it bitwise.
+    /// over the (possibly masked) fleet, merged into the per-family server
+    /// accumulators in device order — the exact fold the legacy
+    /// synchronous path used, so a `None` mask on a homogeneous fleet
+    /// reproduces it bitwise. Family tags are checked on every merge, so
+    /// a shard can never land in the wrong family's accumulator.
     #[allow(clippy::too_many_arguments)]
     fn run_masked(
         &self,
         engine: &Engine,
-        backend: &dyn Backend,
+        backends: &BackendSet<'_>,
         workers: &mut [Worker],
-        params: &[f32],
+        params: &[Vec<f32>],
         train: &Dataset,
         plan: &Plan,
         mask: Option<&[bool]>,
         period: u64,
-        agg: &mut Aggregator,
+        aggs: &mut [Aggregator],
     ) -> Result<(f64, f64, f64)> {
         let shards = exec::gradient_round_sharded_masked(
             engine,
-            backend,
+            backends,
             workers,
             params,
             train,
@@ -440,7 +453,9 @@ impl RoundScheduler {
         let mut loss_acc = 0f64;
         let mut w_acc = 0f64;
         for s in &shards {
-            agg.merge(&s.agg)?;
+            for (f, a) in &s.aggs {
+                aggs[*f].merge(a)?;
+            }
             loss_acc += s.loss;
             w_acc += s.weight;
         }

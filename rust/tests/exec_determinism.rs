@@ -7,7 +7,9 @@
 //! keeps the invariant because shard boundaries are a pure function of the
 //! fleet size K (see `exec::agg_shard_size`), never of the thread count.
 
-use feel::coordinator::{Backend, HostBackend, Scheme, TrainLog, Trainer, TrainerConfig};
+use feel::coordinator::{
+    Backend, BackendSet, HostBackend, Scheme, TrainLog, Trainer, TrainerConfig,
+};
 use feel::data::{generate, DeviceData, Partition, SynthConfig};
 use feel::device::{paper_cpu_fleet, StragglerModel};
 use feel::exec::{agg_shard_size, gradient_round_sharded, Engine};
@@ -110,7 +112,8 @@ fn sharded_gradient_round_thread_invariant() {
     let cfg = SynthConfig { dim: 12, ..Default::default() };
     let train = generate(&cfg, 20 * k, 1);
     let be = HostBackend::for_model("mini_dense", 12, 10, 2).unwrap();
-    let params = be.init_params().unwrap();
+    let set = BackendSet::homogeneous(k, "mini_dense", &be);
+    let fams = vec![be.init_params().unwrap()];
     let batches = vec![4usize; k];
 
     let run = |threads: usize| {
@@ -122,9 +125,9 @@ fn sharded_gradient_round_thread_invariant() {
             .collect();
         let shards = gradient_round_sharded(
             &Engine::new(threads),
-            &be,
+            &set,
             &mut workers,
-            &params,
+            &fams,
             &train,
             &batches,
             11,
@@ -138,10 +141,12 @@ fn sharded_gradient_round_thread_invariant() {
             loss += s.loss;
             weight += s.weight;
         }
-        let global = Aggregator::reduce_shards(shards.into_iter().map(|s| s.agg).collect())
-            .unwrap()
-            .finish()
-            .unwrap();
+        let global = Aggregator::reduce_shards(
+            shards.into_iter().flat_map(|s| s.aggs.into_iter().map(|(_, a)| a)).collect(),
+        )
+        .unwrap()
+        .finish()
+        .unwrap();
         (global, loss.to_bits(), weight.to_bits())
     };
 
@@ -299,6 +304,72 @@ fn async_identical_at_1_2_8_threads() {
     }
     // stale gradients were applied, so the staleness path is covered
     assert!(base.records.iter().any(|r| r.stale_mean > 0.0));
+}
+
+/// Heterogeneous-fleet form of the invariant: a K = 40 fleet split across
+/// two host model families (multi-device shards that mix families inside
+/// one chunk) must stay bitwise thread-invariant under all three round
+/// policies. The per-device backend resolution and the per-family shard
+/// split are pure functions of the device id, so nothing about thread
+/// scheduling can leak in.
+fn run_mixed_with_threads(
+    policy: RoundPolicy,
+    straggler: StragglerModel,
+    threads: usize,
+    periods: usize,
+) -> TrainLog {
+    let k = 40;
+    let cfg = SynthConfig { dim: 12, ..Default::default() };
+    let train = generate(&cfg, 20 * k, 1);
+    let test = generate(&cfg, 200, 1);
+    let mut rng = Pcg::seeded(2);
+    let fleet = paper_cpu_fleet(k, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+    let dense = HostBackend::for_model("mini_dense", 12, 10, 3).unwrap();
+    let res = HostBackend::for_model("mini_res", 12, 10, 3).unwrap();
+    // tier-0 devices (id % 3 == 0) run mini_dense, tiers 1/2 run
+    // mini_res — the worked two-tier example from the README
+    let set = BackendSet::new(
+        vec![
+            ("mini_dense".into(), &dense as &dyn Backend),
+            ("mini_res".into(), &res as &dyn Backend),
+        ],
+        (0..k).map(|id| usize::from(id % 3 != 0)).collect(),
+    )
+    .unwrap();
+    let tc = TrainerConfig {
+        policy,
+        straggler,
+        threads,
+        b_max: 8,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let mut tr = Trainer::with_backends(tc, fleet, &train, &test, Partition::Iid, set).unwrap();
+    tr.run(periods).unwrap();
+    tr.log.clone()
+}
+
+#[test]
+fn mixed_fleet_k40_identical_at_1_2_8_threads_all_policies() {
+    let sm = StragglerModel::new(0.5, 0.1).unwrap();
+    for policy in [
+        RoundPolicy::Sync,
+        RoundPolicy::Deadline { factor: 1.25 },
+        RoundPolicy::Async { alpha: 0.6, beta: 0.5, quorum: 0.5 },
+    ] {
+        let base = run_mixed_with_threads(policy, sm, 1, 4);
+        for t in [2usize, 8] {
+            let par = run_mixed_with_threads(policy, sm, t, 4);
+            assert_policy_bitwise_equal(&base, &par, &format!("mixed {policy:?} t={t}"));
+        }
+        // the straggler fired, so partial-participation folds (empty and
+        // mixed-family shards) are actually exercised
+        assert!(
+            base.records.iter().any(|r| r.dropped > 0),
+            "{policy:?}: no dropouts"
+        );
+        assert!(base.records.iter().all(|r| r.t_period > 0.0));
+    }
 }
 
 /// Seeded-jitter regression: the straggler draws are a pure function of
