@@ -1,0 +1,119 @@
+//! Hierarchical-topology bench: a C × tau sweep at K = 120. Each cell is
+//! an edge server on an even share of the band running the proposed
+//! per-period optimization over its own device slice; the cloud
+//! FedAvg-merges the edge models every tau edge rounds. The sweep tracks
+//! what the topology buys and costs on the *simulated* time axis (cells
+//! barrier on the slowest cell at every cloud round) next to the learning
+//! outcome, so later PRs (cross-cell interference, handover, client
+//! sampling) have a baseline to move.
+//!
+//! Built through the config layer (`topology.cells` / `topology.tau` →
+//! `run_hier_scheme`), so this bench smoke-tests the exact path
+//! `feel train --cells C --tau N` takes. Emits a `BENCH_hier.json`
+//! baseline next to the Cargo.toml, beside the other `BENCH_*.json`
+//! files.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::time::Instant;
+
+use feel::config::Experiment;
+use feel::coordinator::Scheme;
+use feel::exp::common::{run_hier_scheme, BackendKind};
+use feel::util::json::{num, obj, s, Json};
+
+const K: usize = 120;
+const DIM: usize = 16;
+
+struct Run {
+    sim_secs_per_period: f64,
+    final_loss: f64,
+    cloud_rounds: usize,
+    wall_secs: f64,
+}
+
+fn run(cells: usize, tau: usize, periods: usize) -> Run {
+    let mut exp = Experiment::default();
+    exp.k = K;
+    exp.model = "mini_res".into();
+    exp.synth.dim = DIM;
+    exp.train_n = 16 * K;
+    exp.test_n = 128;
+    exp.cells = cells;
+    exp.tau = tau;
+    exp.trainer.b_max = 16;
+    exp.trainer.eval_every = 0;
+    exp.trainer.scheme = Scheme::Proposed;
+    let t0 = Instant::now();
+    let out = run_hier_scheme(&exp, Scheme::Proposed, BackendKind::Host, periods, 0).unwrap();
+    Run {
+        // the hierarchy makespan (slowest cell after the final barrier),
+        // not the merged log's last record — the speedup column depends
+        // on comparing like with like across C
+        sim_secs_per_period: out.sim_time / periods.max(1) as f64,
+        final_loss: out.log.final_loss().unwrap_or(f64::NAN),
+        cloud_rounds: out.cloud_rounds,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("FEEL_BENCH_QUICK").is_ok();
+    let periods = if quick { 4 } else { 12 };
+    let cells_sweep: &[usize] = if quick { &[1, 3] } else { &[1, 3, 6] };
+    let taus: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+
+    println!("\n== hierarchical topology (K = {K}, {periods} periods) ==");
+    println!(
+        "{:>6} {:>5} {:>14} {:>10} {:>12} {:>10}",
+        "cells", "tau", "sim s/period", "vs flat", "cloud rounds", "loss"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut flat_spp = f64::NAN;
+    for &cells in cells_sweep {
+        for &tau in taus {
+            if cells == 1 && tau != 1 {
+                continue; // tau is a no-op without a second cell
+            }
+            let r = run(cells, tau, periods);
+            if cells == 1 && tau == 1 {
+                flat_spp = r.sim_secs_per_period;
+            }
+            println!(
+                "{:>6} {:>5} {:>14.4} {:>9.2}x {:>12} {:>10.4}",
+                cells,
+                tau,
+                r.sim_secs_per_period,
+                flat_spp / r.sim_secs_per_period,
+                r.cloud_rounds,
+                r.final_loss
+            );
+            rows.push(obj(vec![
+                ("cells", num(cells as f64)),
+                ("tau", num(tau as f64)),
+                ("sim_secs_per_period", num(r.sim_secs_per_period)),
+                ("speedup_vs_flat", num(flat_spp / r.sim_secs_per_period)),
+                ("cloud_rounds", num(r.cloud_rounds as f64)),
+                ("final_train_loss", num(r.final_loss)),
+                ("wall_secs", num(r.wall_secs)),
+            ]));
+        }
+    }
+
+    let out = obj(vec![
+        ("bench", s("hier")),
+        ("scheme", s("proposed")),
+        ("model", s("mini_res")),
+        ("k", num(K as f64)),
+        ("dim", num(DIM as f64)),
+        ("quick", Json::Bool(quick)),
+        ("periods", num(periods as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_hier.json";
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("\nbaseline -> {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -21,11 +21,13 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{parse_backends_spec, parse_policy, parse_scheme, Config, Experiment};
+use crate::config::{
+    parse_backends_spec, parse_cell_policies_spec, parse_policy, parse_scheme, Config, Experiment,
+};
 use crate::coordinator::Trainer;
 use crate::device::{paper_profiles, StragglerModel};
 use crate::sched::RoundPolicy;
-use crate::exp::common::{make_data, make_fleet_backends, BackendKind};
+use crate::exp::common::{make_data, make_fleet_backends, run_hier_scheme, BackendKind};
 use crate::exp::{fig2, fig3, fig45, table2};
 use crate::metrics::Recorder;
 use crate::opt;
@@ -102,7 +104,16 @@ COMMANDS:
                          --async-alpha (default 0.6) / --async-beta (default 0.5)
               --jitter F  --dropout F   straggler model: per-device latency
                          jitter amplitude and per-period failure probability
-              --k N  --partition iid|noniid  --seed N  --out results/
+              --cells C  --tau N   hierarchical topology: C cells, each an
+                         edge server on an even share of the band with its
+                         own contiguous device slice, data shard, and
+                         scheduler; a cloud aggregator FedAvg-merges the
+                         edge models (sample-count weighted) every N edge
+                         rounds. C=1 (default) is the flat trainer
+              --cell-policies name,name,...   per-cell round policies
+                         (one per cell; default: --policy everywhere)
+              --k N  --partition iid|noniid|dirichlet:alpha  --seed N
+              --out results/
               --threads N (0 = all cores; results identical at any value)
   optimize    solve one period's joint batchsize + slot allocation
               --k N  --batch B  --gpu  --seed N
@@ -168,6 +179,17 @@ fn experiment_from_args(args: &Args) -> Result<Experiment> {
     // re-validate: --k/--gpu/--backends overrides can change the fleet's
     // tier shape after the config-file check ran
     exp.check_backend_tiers()?;
+    if let Some(v) = args.get("cells") {
+        exp.cells = v.parse().context("--cells")?;
+    }
+    if let Some(v) = args.get("tau") {
+        exp.tau = v.parse().context("--tau")?;
+    }
+    if let Some(spec) = args.get("cell-policies") {
+        exp.cell_policies = parse_cell_policies_spec(spec)?;
+    }
+    // same re-validation story for the topology knobs
+    exp.check_topology()?;
     if let Some(t) = args.get("threads") {
         exp.trainer.threads = t.parse().context("--threads")?;
     }
@@ -225,6 +247,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let periods = args.usize_or("periods", exp.periods)?;
     let kind = backend_kind(args)?;
     let rec = Recorder::new(&out_dir(args), &format!("train_{}", exp.name))?;
+    if exp.cells > 1 {
+        return cmd_train_hier(args, &exp, periods, kind, &rec);
+    }
 
     let backends = make_fleet_backends(&exp, kind)?;
     let set = backends.set();
@@ -266,6 +291,50 @@ fn cmd_train(args: &Args) -> Result<()> {
         log.total_time(),
         log.final_loss().unwrap_or(f64::NAN),
         log.final_acc().map(|a| format!("{:.3}", a)).unwrap_or("n/a".into()),
+        rec.dir().display()
+    );
+    Ok(())
+}
+
+/// The hierarchical form of `train`: C concurrent cells under a cloud
+/// aggregator (`hier/`), driven through `exp::common::run_hier_scheme` —
+/// the same path the benches take.
+fn cmd_train_hier(
+    args: &Args,
+    exp: &Experiment,
+    periods: usize,
+    kind: BackendKind,
+    rec: &Recorder,
+) -> Result<()> {
+    let policies = exp
+        .resolved_cell_policies()
+        .iter()
+        .map(|p| p.name().to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    println!(
+        "training hierarchical on {:?}: K={} over {} cells, tau={}, scheme={}, \
+         policies=[{}], {:?}, {} periods, {} threads",
+        kind,
+        exp.k,
+        exp.cells,
+        exp.tau,
+        exp.trainer.scheme.name(),
+        policies,
+        exp.partition,
+        periods,
+        crate::util::threads::resolve(exp.trainer.threads),
+    );
+    let warm = args.usize_or("warm", 0)?;
+    let run = run_hier_scheme(exp, exp.trainer.scheme, kind, periods, warm)?;
+    rec.csv("train_log", &run.log.to_csv())?;
+    println!(
+        "done: {} cells x {} periods, {} cloud rounds, sim time {:.1}s, final loss {:.4} -> {}",
+        run.cells,
+        periods,
+        run.cloud_rounds,
+        run.sim_time,
+        run.log.final_loss().unwrap_or(f64::NAN),
         rec.dir().display()
     );
     Ok(())
@@ -487,6 +556,45 @@ mod tests {
         assert!(experiment_from_args(&a).is_err());
         crate::util::threads::set_global_threads(0);
         assert!(HELP.contains("--backends tier:model[:backend]"));
+    }
+
+    #[test]
+    fn topology_flags_plumb_into_experiment() {
+        let a = Args::parse(&argv("train --k 12 --cells 3 --tau 4")).unwrap();
+        let exp = experiment_from_args(&a).unwrap();
+        assert_eq!((exp.cells, exp.tau), (3, 4));
+        let a = Args::parse(&argv(
+            "train --k 12 --cells 3 --cell-policies sync,deadline,async",
+        ))
+        .unwrap();
+        let exp = experiment_from_args(&a).unwrap();
+        assert_eq!(exp.cell_policies.len(), 3);
+        assert_eq!(exp.cell_policies[1], RoundPolicy::Deadline { factor: 1.25 });
+        // validation fires on the CLI surface too
+        let a = Args::parse(&argv("train --k 2 --cells 3")).unwrap();
+        let err = experiment_from_args(&a).unwrap_err().to_string();
+        assert!(err.contains("every cell needs a device"), "{err}");
+        // topology knobs without a multi-cell run are errors, not no-ops
+        let a = Args::parse(&argv("train --tau 4")).unwrap();
+        assert!(experiment_from_args(&a).is_err());
+        let a = Args::parse(&argv("train --cell-policies sync")).unwrap();
+        assert!(experiment_from_args(&a).is_err());
+        let a = Args::parse(&argv("train --k 12 --cells 3 --cell-policies sync,fifo,async"))
+            .unwrap();
+        assert!(experiment_from_args(&a).is_err());
+        crate::util::threads::set_global_threads(0);
+        assert!(HELP.contains("--cells C  --tau N"));
+        assert!(HELP.contains("--cell-policies"));
+    }
+
+    #[test]
+    fn dirichlet_partition_flag() {
+        let a = Args::parse(&argv("train --partition dirichlet:0.3")).unwrap();
+        let exp = experiment_from_args(&a).unwrap();
+        assert_eq!(exp.partition, crate::data::Partition::Dirichlet { alpha: 0.3 });
+        let a = Args::parse(&argv("train --partition dirichlet:bad")).unwrap();
+        assert!(experiment_from_args(&a).is_err());
+        crate::util::threads::set_global_threads(0);
     }
 
     #[test]

@@ -55,7 +55,10 @@ impl Sbc {
         let mut mags: Vec<f32> = acc.iter().map(|v| v.abs()).collect();
         let kth = {
             let idx = p - k;
-            mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: a NaN gradient term (diverged training) must not
+            // panic the compressor mid-round; identical ordering for
+            // normal values (magnitudes are never -0.0)
+            mags.select_nth_unstable_by(idx, |a, b| a.total_cmp(b));
             mags[idx]
         };
         let mut pos_sum = 0f64;
@@ -151,11 +154,26 @@ mod tests {
         let g = grads(1000, 3);
         let msg = sbc.encode(&g);
         let mut mags: Vec<f32> = g.iter().map(|v| v.abs()).collect();
-        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        mags.sort_by(|a, b| b.total_cmp(a));
         let kth = mags[msg.entries.len() - 1];
         for &(i, _) in &msg.entries {
             assert!(g[i as usize].abs() >= kth * (1.0 - 1e-6));
         }
+    }
+
+    #[test]
+    fn encode_survives_nan_gradient_terms() {
+        // regression: the top-k threshold selection compared magnitudes
+        // with partial_cmp().unwrap(), which panicked the moment a
+        // diverged gradient carried a NaN term; under the total order a
+        // NaN magnitude sorts above +inf and (failing every >= test) is
+        // simply never selected
+        let mut sbc = Sbc::new(0.01, 1000);
+        let mut g = grads(1000, 5);
+        g[17] = f32::NAN;
+        let msg = sbc.encode(&g);
+        assert!(!msg.entries.is_empty());
+        assert!(msg.entries.iter().all(|&(i, _)| i != 17));
     }
 
     #[test]

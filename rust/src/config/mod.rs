@@ -4,6 +4,7 @@ pub mod schema;
 pub mod toml;
 
 pub use schema::{
-    parse_backends_spec, parse_policy, parse_scheme, Experiment, TierBackend, SCHEME_NAMES,
+    parse_backends_spec, parse_cell_policies_spec, parse_policy, parse_scheme, Experiment,
+    TierBackend, SCHEME_NAMES,
 };
 pub use toml::{Config, Value};

@@ -53,6 +53,17 @@ pub struct Experiment {
     pub trainer: TrainerConfig,
     /// per-tier backend rules (empty = homogeneous fleet on `model`)
     pub backends: Vec<TierBackend>,
+    /// hierarchical topology: cells C (`topology.cells` / `--cells`;
+    /// 1 = the flat single-cell trainer)
+    pub cells: usize,
+    /// cloud cadence tau: edge rounds per cloud merge (`topology.tau` /
+    /// `--tau`)
+    pub tau: usize,
+    /// per-cell round-policy overrides (`topology.policies` /
+    /// `--cell-policies`; empty = every cell uses `train.policy`). A name
+    /// matching the base policy inherits its knobs; any other name gets
+    /// that policy's defaults.
+    pub cell_policies: Vec<RoundPolicy>,
 }
 
 impl Default for Experiment {
@@ -75,6 +86,9 @@ impl Default for Experiment {
             gpu_module: GpuModule::new(0.110, 2.4e-3, 24.0, 2.0e9, 1.0e13),
             trainer: TrainerConfig::default(),
             backends: Vec::new(),
+            cells: 1,
+            tau: 1,
+            cell_policies: Vec::new(),
         }
     }
 }
@@ -128,6 +142,12 @@ impl Experiment {
             e.backends = parse_backend_rules(v)?;
             e.check_backend_tiers()?;
         }
+        e.cells = c.usize_or("topology.cells", e.cells);
+        e.tau = c.usize_or("topology.tau", e.tau);
+        if let Some(v) = c.get("topology.policies") {
+            e.cell_policies = parse_cell_policies(v)?;
+        }
+        e.check_topology()?;
         Ok(e)
     }
 
@@ -179,23 +199,106 @@ impl Experiment {
         Ok(())
     }
 
+    /// Validate the hierarchical-topology knobs against the fleet shape.
+    /// Call after any mutation of `cells`, `tau`, `cell_policies`, or `k`
+    /// (the CLI does, after applying flag overrides). Per house style a
+    /// knob that cannot take effect is an error, not a no-op: `tau` or
+    /// per-cell policies on a single-cell run would silently describe a
+    /// different experiment than the one that runs.
+    pub fn check_topology(&self) -> Result<()> {
+        if self.cells == 0 {
+            bail!("topology.cells must be >= 1");
+        }
+        if self.tau == 0 {
+            bail!("topology.tau must be >= 1");
+        }
+        if self.cells > self.k {
+            bail!(
+                "topology.cells = {} exceeds fleet.k = {}: every cell needs a device",
+                self.cells,
+                self.k
+            );
+        }
+        if self.cells == 1 {
+            if self.tau != 1 {
+                bail!("topology.tau applies to multi-cell runs (topology.cells > 1)");
+            }
+            if !self.cell_policies.is_empty() {
+                bail!("topology.policies applies to multi-cell runs (topology.cells > 1)");
+            }
+        }
+        if !self.cell_policies.is_empty() && self.cell_policies.len() != self.cells {
+            bail!(
+                "topology.policies lists {} policies for {} cells (one per cell, or none)",
+                self.cell_policies.len(),
+                self.cells
+            );
+        }
+        for p in &self.cell_policies {
+            p.validate()?;
+        }
+        // per-cell tier coverage: each cell re-derives its tiers from its
+        // own (smaller) device slice, so a backend rule that is valid for
+        // the flat fleet can name a tier no device of the smallest cell
+        // occupies — catch that here, with the cell split named, instead
+        // of deep inside the per-cell backend resolution
+        if self.cells > 1 && !self.backends.is_empty() {
+            let smallest = self.k / self.cells;
+            let occupied = self.tier_count().min(smallest);
+            for r in &self.backends {
+                if r.tier >= occupied {
+                    bail!(
+                        "fleet.backends tier {} has no devices once the fleet splits into {} \
+                         cells (smallest cell: {} devices)",
+                        r.tier,
+                        self.cells,
+                        smallest
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The per-cell round policies a hierarchical run uses: the overrides
+    /// with base-policy knob inheritance (a cell naming the base policy
+    /// gets its configured knobs, not the parse defaults), or the base
+    /// policy for every cell when no overrides are set.
+    pub fn resolved_cell_policies(&self) -> Vec<RoundPolicy> {
+        if self.cell_policies.is_empty() {
+            return vec![self.trainer.policy; self.cells];
+        }
+        self.cell_policies
+            .iter()
+            .map(|p| {
+                if p.name() == self.trainer.policy.name() {
+                    self.trainer.policy
+                } else {
+                    *p
+                }
+            })
+            .collect()
+    }
+
     /// Build the device fleet this experiment describes.
     pub fn fleet(&self, rng: &mut Pcg) -> Vec<Device> {
+        self.fleet_with(self.k, self.cell, rng)
+    }
+
+    /// Build a fleet of `k` devices under an explicit wireless `cell`
+    /// config — the per-cell form `hier::CellTopology` drives with each
+    /// cell's bandwidth budget. `fleet()` delegates here, so one RNG
+    /// stream drawing cell after cell reproduces the flat fleet when the
+    /// topology has a single cell.
+    pub fn fleet_with(&self, k: usize, cell: CellConfig, rng: &mut Pcg) -> Vec<Device> {
         if self.gpu {
-            paper_gpu_fleet(
-                self.k,
-                self.gpu_module,
-                self.cell,
-                self.shadow_sigma_db,
-                self.shadow_rho,
-                rng,
-            )
+            paper_gpu_fleet(k, self.gpu_module, cell, self.shadow_sigma_db, self.shadow_rho, rng)
         } else {
             paper_cpu_fleet(
-                self.k,
+                k,
                 self.cycles_per_sample,
                 self.cycles_per_update,
-                self.cell,
+                cell,
                 self.shadow_sigma_db,
                 self.shadow_rho,
                 rng,
@@ -287,6 +390,34 @@ pub fn parse_backends_spec(spec: &str) -> Result<Vec<TierBackend>> {
         });
     }
     Ok(rules)
+}
+
+/// Parse the `topology.policies` config value: an array of round-policy
+/// names, one per cell (e.g. `["sync", "deadline", "async"]`).
+pub fn parse_cell_policies(v: &Value) -> Result<Vec<RoundPolicy>> {
+    let Some(arr) = v.as_arr() else {
+        bail!("topology.policies wants an array of policy names ({POLICY_NAMES})");
+    };
+    arr.iter()
+        .map(|item| match item.as_str() {
+            Some(s) => parse_policy(s),
+            None => bail!("topology.policies entries want policy-name strings ({POLICY_NAMES})"),
+        })
+        .collect()
+}
+
+/// Parse the CLI `--cell-policies` shorthand: comma-separated policy
+/// names, one per cell, e.g. `sync,deadline,async`.
+pub fn parse_cell_policies_spec(spec: &str) -> Result<Vec<RoundPolicy>> {
+    spec.split(',')
+        .map(|part| {
+            let part = part.trim();
+            if part.is_empty() {
+                bail!("--cell-policies has an empty entry (format: name,name,...)");
+            }
+            parse_policy(part)
+        })
+        .collect()
 }
 
 /// Resolve `train.policy` and its knobs (`train.deadline_factor`,
@@ -505,5 +636,119 @@ backends = [{tier = 0, model = "mini_dense"}, {tier = 1, model = "mini_res", bac
         assert_eq!(e.fleet(&mut rng).len(), 6);
         e.gpu = true;
         assert_eq!(e.fleet(&mut rng).len(), 6);
+    }
+
+    #[test]
+    fn fleet_with_matches_flat_fleet_for_one_cell() {
+        // one RNG stream, one cell covering the fleet: identical devices
+        let e = Experiment::default();
+        let mut a = Pcg::seeded(4);
+        let mut b = Pcg::seeded(4);
+        let flat = e.fleet(&mut a);
+        let cell = e.fleet_with(e.k, e.cell.split_bandwidth(1), &mut b);
+        assert_eq!(flat.len(), cell.len());
+        for (x, y) in flat.iter().zip(&cell) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.compute, y.compute);
+            assert_eq!(x.link.dist_m.to_bits(), y.link.dist_m.to_bits());
+        }
+    }
+
+    #[test]
+    fn dirichlet_partition_from_config_and_defaults() {
+        let c = Config::parse("[data]\npartition = \"dirichlet:0.3\"").unwrap();
+        let e = Experiment::from_config(&c).unwrap();
+        assert_eq!(e.partition, Partition::Dirichlet { alpha: 0.3 });
+        let c = Config::parse("[data]\npartition = \"dirichlet\"").unwrap();
+        let e = Experiment::from_config(&c).unwrap();
+        assert_eq!(e.partition, Partition::Dirichlet { alpha: 0.5 });
+        let c = Config::parse("[data]\npartition = \"dirichlet:-2\"").unwrap();
+        assert!(Experiment::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn topology_keys_parse_and_validate() {
+        // defaults: flat single cell
+        let e = Experiment::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!((e.cells, e.tau), (1, 1));
+        assert!(e.cell_policies.is_empty());
+        let src = r#"
+[fleet]
+k = 12
+[topology]
+cells = 3
+tau = 4
+policies = ["sync", "deadline", "async"]
+"#;
+        let e = Experiment::from_config(&Config::parse(src).unwrap()).unwrap();
+        assert_eq!((e.cells, e.tau), (3, 4));
+        assert_eq!(e.cell_policies.len(), 3);
+        assert_eq!(e.cell_policies[0], RoundPolicy::Sync);
+        assert_eq!(e.cell_policies[1], RoundPolicy::Deadline { factor: 1.25 });
+        assert!(matches!(e.cell_policies[2], RoundPolicy::Async { .. }));
+        // resolution: a cell naming the base policy inherits its knobs
+        let src = r#"
+[fleet]
+k = 6
+[train]
+policy = "deadline"
+deadline_factor = 1.7
+[topology]
+cells = 2
+policies = ["deadline", "sync"]
+"#;
+        let e = Experiment::from_config(&Config::parse(src).unwrap()).unwrap();
+        let resolved = e.resolved_cell_policies();
+        assert_eq!(resolved[0], RoundPolicy::Deadline { factor: 1.7 });
+        assert_eq!(resolved[1], RoundPolicy::Sync);
+        // no overrides: every cell runs the base policy
+        let src = "[fleet]\nk = 6\n[topology]\ncells = 3";
+        let e = Experiment::from_config(&Config::parse(src).unwrap()).unwrap();
+        assert_eq!(e.resolved_cell_policies(), vec![RoundPolicy::Sync; 3]);
+    }
+
+    fn topo_err(src: &str) -> String {
+        Experiment::from_config(&Config::parse(src).unwrap())
+            .unwrap_err()
+            .to_string()
+    }
+
+    #[test]
+    fn topology_validation_rejects_bad_shapes() {
+        assert!(topo_err("[topology]\ncells = 0").contains("cells must be >= 1"));
+        assert!(topo_err("[topology]\ncells = 2\ntau = 0").contains("tau must be >= 1"));
+        // more cells than devices
+        let err = topo_err("[fleet]\nk = 2\n[topology]\ncells = 3");
+        assert!(err.contains("every cell needs a device"), "{err}");
+        // topology knobs without a multi-cell run are errors, not no-ops
+        assert!(topo_err("[topology]\ntau = 4").contains("multi-cell"));
+        assert!(topo_err("[topology]\npolicies = [\"sync\"]").contains("multi-cell"));
+        // policy-list shape and contents
+        let src = "[fleet]\nk = 6\n[topology]\ncells = 3\npolicies = [\"sync\", \"async\"]";
+        assert!(topo_err(src).contains("one per cell"));
+        let src = "[fleet]\nk = 6\n[topology]\ncells = 2\npolicies = [\"fifo\", \"sync\"]";
+        assert!(topo_err(src).contains("fifo"));
+        let src = "[fleet]\nk = 6\n[topology]\ncells = 2\npolicies = [7, 8]";
+        assert!(topo_err(src).contains("policy-name"));
+        let src = "[fleet]\nk = 6\n[topology]\ncells = 2\npolicies = \"sync\"";
+        assert!(topo_err(src).contains("array"));
+        // a backend rule valid for the flat fleet can starve once the
+        // fleet splits into cells: k = 4 occupies tier 2 flat, but each
+        // 2-device cell only occupies tiers 0-1
+        let src = "[fleet]\nk = 4\nbackends = [{tier = 2, model = \"mini_dense\"}]\n\
+                   [topology]\ncells = 2";
+        let err = topo_err(src);
+        assert!(err.contains("splits into 2"), "{err}");
+        // ...and the same rule is fine once every cell reaches the tier
+        let src = "[fleet]\nk = 6\nbackends = [{tier = 2, model = \"mini_dense\"}]\n\
+                   [topology]\ncells = 2";
+        assert!(Experiment::from_config(&Config::parse(src).unwrap()).is_ok());
+        // the CLI shorthand parses to the same overrides
+        let cli = parse_cell_policies_spec("sync,deadline,async").unwrap();
+        assert_eq!(cli.len(), 3);
+        assert_eq!(cli[0], RoundPolicy::Sync);
+        assert!(parse_cell_policies_spec("").is_err());
+        assert!(parse_cell_policies_spec("sync,,async").is_err());
+        assert!(parse_cell_policies_spec("sync,fifo").is_err());
     }
 }

@@ -117,6 +117,12 @@ pub struct PeriodRecord {
     /// batch-weighted mean staleness of the applied gradients (async; 0
     /// for barrier/deadline rounds)
     pub stale_mean: f64,
+    /// cell this record's trainer serves (hier runs; 0 for flat trainers)
+    pub cell: usize,
+    /// whether a cross-cell cloud merge closed this period (`hier/`
+    /// stamps it on the last record of every tau-block; always false for
+    /// flat single-cell runs)
+    pub cloud: bool,
 }
 
 /// Wall-clock accounting of the coordinator's *serial* sections, summed
@@ -210,11 +216,11 @@ impl TrainLog {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "period,sim_time,t_period,b_total,train_loss,lr,test_loss,test_acc,efficiency,\
-             applied,dropped,late,stale_mean\n",
+             applied,dropped,late,stale_mean,cell,cloud\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{:.6},{:.6},{},{:.6},{:.5},{},{},{:.6},{},{},{},{:.3}\n",
+                "{},{:.6},{:.6},{},{:.6},{:.5},{},{},{:.6},{},{},{},{:.3},{},{}\n",
                 r.period,
                 r.sim_time,
                 r.t_period,
@@ -228,6 +234,8 @@ impl TrainLog {
                 r.dropped,
                 r.late,
                 r.stale_mean,
+                r.cell,
+                u8::from(r.cloud),
             ));
         }
         out
@@ -260,6 +268,9 @@ pub struct Trainer<'a> {
     sched: RoundScheduler,
     /// coordinator-thread eval scratch (global-model evaluation path)
     eval_scratch: Workspace,
+    /// which cell of a hierarchical topology this trainer serves (stamped
+    /// into every `PeriodRecord`; 0 for flat single-cell runs)
+    cell_id: usize,
     pub log: TrainLog,
 }
 
@@ -372,6 +383,7 @@ impl<'a> Trainer<'a> {
             aggs,
             sched,
             eval_scratch: Workspace::new(),
+            cell_id: 0,
             log: TrainLog::default(),
         })
     }
@@ -379,6 +391,38 @@ impl<'a> Trainer<'a> {
     /// Worker threads the per-device fan-out uses.
     pub fn threads(&self) -> usize {
         self.engine.threads()
+    }
+
+    /// Tag this trainer as cell `c` of a hierarchical topology: every
+    /// subsequent `PeriodRecord` carries the id (`hier::HierTrainer` sets
+    /// it once at construction; flat trainers stay at 0).
+    pub fn set_cell_id(&mut self, c: usize) {
+        self.cell_id = c;
+    }
+
+    pub fn cell_id(&self) -> usize {
+        self.cell_id
+    }
+
+    /// The per-device backend registry this trainer resolves through —
+    /// the cloud aggregator walks it to pair up model families across
+    /// cells by name.
+    pub fn backend_set(&self) -> &BackendSet<'a> {
+        &self.backends
+    }
+
+    /// Total training samples across this trainer's device shards — the
+    /// FedAvg weight of this cell's edge model in the cloud merge.
+    pub fn total_samples(&self) -> usize {
+        self.workers.iter().map(|w| w.shard_len()).sum()
+    }
+
+    /// Advance the simulated clock to the absolute time `t` (>= now): the
+    /// cloud-barrier hook — after a cross-cell merge every cell resumes
+    /// from the slowest cell's clock, so the next period's records start
+    /// from the shared synchronization point.
+    pub fn sync_clock_to(&mut self, t: f64) {
+        self.clock.advance_to(t);
     }
 
     /// Warm-start: train every family's global model centrally for
@@ -586,6 +630,8 @@ impl<'a> Trainer<'a> {
             dropped: report.dropped,
             late: report.late,
             stale_mean: report.stale_mean,
+            cell: self.cell_id,
+            cloud: false,
         });
         self.log.wall.total_secs += t_step.elapsed().as_secs_f64();
         Ok(())
@@ -924,9 +970,13 @@ mod tests {
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 6);
         assert!(lines[0].starts_with("period,"));
-        assert!(lines[0].ends_with(",applied,dropped,late,stale_mean"));
-        assert_eq!(lines[0].split(',').count(), 13);
-        assert_eq!(lines[1].split(',').count(), 13);
+        assert!(lines[0].ends_with(",applied,dropped,late,stale_mean,cell,cloud"));
+        assert_eq!(lines[0].split(',').count(), 15);
+        assert_eq!(lines[1].split(',').count(), 15);
+        // flat runs: cell 0, no cloud markers
+        for line in &lines[1..] {
+            assert!(line.ends_with(",0,0"), "{line}");
+        }
     }
 
     #[test]

@@ -4,6 +4,21 @@
 use crate::data::synthetic::Dataset;
 use crate::util::rng::Pcg;
 
+/// Total lexicographic order on feature rows via `f32::total_cmp`.
+/// `<[f32] as PartialOrd>::partial_cmp(..).unwrap()` panics the moment a
+/// row carries a NaN (a corrupt reading, an upstream overflow); this
+/// order sorts NaN rows deterministically instead, so sort/dedup passes
+/// over sampled batches survive them.
+pub fn row_cmp(a: &[f32], b: &[f32]) -> std::cmp::Ordering {
+    for (x, y) in a.iter().zip(b) {
+        let o = x.total_cmp(y);
+        if o != std::cmp::Ordering::Equal {
+            return o;
+        }
+    }
+    a.len().cmp(&b.len())
+}
+
 /// A device's local shard + sampler state.
 #[derive(Clone, Debug)]
 pub struct DeviceData {
@@ -80,9 +95,45 @@ mod tests {
         let mut dd = DeviceData::new((0..50).collect(), Pcg::seeded(3));
         let (x, _) = dd.sample(&ds, 50);
         let mut rows: Vec<&[f32]> = x.chunks(4).collect();
-        rows.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rows.sort_by(|a, b| row_cmp(a, b));
         rows.dedup();
         assert_eq!(rows.len(), 50);
+    }
+
+    #[test]
+    fn nan_rows_sort_without_panicking() {
+        // regression: the old `partial_cmp(..).unwrap()` comparator
+        // panicked on the first NaN row; `row_cmp` is a total order
+        let mut ds = generate(&SynthConfig { dim: 4, ..Default::default() }, 40, 1);
+        // poison one feature of row 3 and all of row 7
+        ds.x[3 * 4 + 1] = f32::NAN;
+        for v in ds.x[7 * 4..8 * 4].iter_mut() {
+            *v = f32::NAN;
+        }
+        let mut dd = DeviceData::new((0..20).collect(), Pcg::seeded(8));
+        let (x, _) = dd.sample(&ds, 20);
+        let mut rows: Vec<&[f32]> = x.chunks(4).collect();
+        rows.sort_by(|a, b| row_cmp(a, b));
+        rows.dedup_by(|a, b| row_cmp(a, b) == std::cmp::Ordering::Equal);
+        // all 20 sampled rows are distinct, NaN rows included
+        assert_eq!(rows.len(), 20);
+        // and the result is actually ordered under the total order
+        for w in rows.windows(2) {
+            assert_ne!(row_cmp(w[0], w[1]), std::cmp::Ordering::Greater);
+        }
+    }
+
+    #[test]
+    fn row_cmp_total_order_on_nans() {
+        use std::cmp::Ordering;
+        let nan = f32::NAN;
+        assert_eq!(row_cmp(&[1.0, nan], &[1.0, nan]), Ordering::Equal);
+        assert_eq!(row_cmp(&[1.0], &[1.0, 2.0]), Ordering::Less);
+        // total_cmp: every NaN has a defined place (positive NaN sorts
+        // above +inf), so comparisons never panic and stay antisymmetric
+        let a = [nan, 0.0];
+        let b = [1.0, 0.0];
+        assert_eq!(row_cmp(&a, &b), row_cmp(&b, &a).reverse());
     }
 
     #[test]

@@ -2,24 +2,41 @@
 //!
 //! * IID — shuffle all samples, split into K equal parts;
 //! * non-IID (pathological) — sort by label, split into 2K shards of size
-//!   N/(2K), give each device two shards (most devices see only two digits).
+//!   N/(2K), give each device two shards (most devices see only two digits);
+//! * Dirichlet(α) — per-class device shares drawn from Dir(α) (Hsu et al.
+//!   style label skew): α → 0 approaches one-class devices, α → ∞
+//!   approaches IID. The knob the hierarchical topology uses to control
+//!   per-cell data skew.
 
 use crate::data::synthetic::Dataset;
 use crate::util::rng::Pcg;
 
 /// Partition kind.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Partition {
     Iid,
     NonIid,
+    /// Label-Dirichlet skew: for every class, device shares ~ Dir(alpha).
+    Dirichlet { alpha: f64 },
 }
 
 impl Partition {
+    /// Parse a partition name: `iid`, `noniid`/`non-iid`/`non_iid`, or
+    /// `dirichlet[:alpha]` (alpha defaults to 0.5; must be finite and
+    /// positive).
     pub fn parse(s: &str) -> Option<Partition> {
         match s {
             "iid" => Some(Partition::Iid),
             "noniid" | "non-iid" | "non_iid" => Some(Partition::NonIid),
-            _ => None,
+            _ => {
+                let rest = s.strip_prefix("dirichlet")?;
+                let alpha = match rest.strip_prefix(':') {
+                    Some(a) => a.parse::<f64>().ok()?,
+                    None if rest.is_empty() => 0.5,
+                    None => return None,
+                };
+                (alpha.is_finite() && alpha > 0.0).then_some(Partition::Dirichlet { alpha })
+            }
         }
     }
 }
@@ -49,7 +66,63 @@ pub fn partition(ds: &Dataset, k: usize, kind: Partition, rng: &mut Pcg) -> Vec<
                 })
                 .collect()
         }
+        Partition::Dirichlet { alpha } => dirichlet_partition(ds, k, alpha, rng),
     }
+}
+
+/// Label-Dirichlet partition: every class's samples are split across the
+/// K devices proportionally to a Dir(alpha) draw (cumulative rounding, so
+/// coverage is exact and deterministic given the RNG). Devices left with
+/// fewer than one sample are topped up from the largest shard — the
+/// `DeviceData` sampler requires a non-empty shard on every device.
+fn dirichlet_partition(ds: &Dataset, k: usize, alpha: f64, rng: &mut Pcg) -> Vec<Vec<usize>> {
+    assert!(alpha.is_finite() && alpha > 0.0, "dirichlet alpha must be positive, got {alpha}");
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.classes];
+    for i in 0..ds.len() {
+        by_class[ds.y[i] as usize].push(i);
+    }
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for class_idx in by_class.iter_mut() {
+        if class_idx.is_empty() {
+            continue;
+        }
+        rng.shuffle(class_idx);
+        let mut w: Vec<f64> = (0..k).map(|_| rng.gamma(alpha)).collect();
+        let total: f64 = w.iter().sum();
+        if !(total > 0.0 && total.is_finite()) {
+            // a tiny alpha can underflow every gamma draw to 0: degrade to
+            // an even split instead of a 0/0 share
+            w = vec![1.0; k];
+        }
+        let total: f64 = w.iter().sum();
+        let n = class_idx.len();
+        let mut start = 0usize;
+        let mut cum = 0f64;
+        for (d, &wd) in w.iter().enumerate() {
+            cum += wd;
+            let end = if d + 1 == k {
+                n
+            } else {
+                (((cum / total) * n as f64).round() as usize).clamp(start, n)
+            };
+            out[d].extend_from_slice(&class_idx[start..end]);
+            start = end;
+        }
+    }
+    // non-empty-shard guarantee: move one sample at a time from the
+    // currently-largest shard (ties broken by highest device id — a
+    // deterministic rule, not an RNG draw)
+    for d in 0..k {
+        while out[d].is_empty() {
+            let donor = (0..k)
+                .filter(|&j| j != d && out[j].len() > 1)
+                .max_by_key(|&j| out[j].len())
+                .expect("ds.len() >= 2K guarantees a donor shard");
+            let s = out[donor].pop().expect("donor shard is non-empty");
+            out[d].push(s);
+        }
+    }
+    out
 }
 
 fn chunk_even(idx: &[usize], parts: usize) -> Vec<Vec<usize>> {
@@ -64,6 +137,16 @@ fn chunk_even(idx: &[usize], parts: usize) -> Vec<Vec<usize>> {
         off += sz;
     }
     out
+}
+
+/// Even split sizes for `n` items over `parts` buckets (first buckets take
+/// the remainder) — the same arithmetic `chunk_even` uses, exported for
+/// callers that only need the shape (e.g. `hier::CellTopology`).
+pub fn split_sizes(n: usize, parts: usize) -> Vec<usize> {
+    assert!(parts >= 1, "split into zero parts");
+    let base = n / parts;
+    let rem = n % parts;
+    (0..parts).map(|p| base + usize::from(p < rem)).collect()
 }
 
 /// Number of distinct labels a device sees (non-IID diagnostics).
@@ -88,7 +171,11 @@ mod tests {
     fn covers_all_samples_disjointly() {
         let ds = ds();
         let mut rng = Pcg::seeded(1);
-        for kind in [Partition::Iid, Partition::NonIid] {
+        for kind in [
+            Partition::Iid,
+            Partition::NonIid,
+            Partition::Dirichlet { alpha: 0.3 },
+        ] {
             let parts = partition(&ds, 12, kind, &mut rng);
             let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
             all.sort_unstable();
@@ -104,6 +191,14 @@ mod tests {
         for p in &parts {
             assert_eq!(p.len(), 200);
         }
+    }
+
+    #[test]
+    fn split_sizes_shape() {
+        assert_eq!(split_sizes(10, 3), vec![4, 3, 3]);
+        assert_eq!(split_sizes(9, 3), vec![3, 3, 3]);
+        assert_eq!(split_sizes(2, 4), vec![1, 1, 0, 0]);
+        assert_eq!(split_sizes(0, 2), vec![0, 0]);
     }
 
     #[test]
@@ -136,18 +231,76 @@ mod tests {
         assert!(avg < 4.0, "avg diversity {avg}");
     }
 
+    /// The fraction of a shard taken by its most-common label: ~1/classes
+    /// under IID, approaching 1 as alpha -> 0.
+    fn max_label_frac(ds: &Dataset, part: &[usize]) -> f64 {
+        let mut counts = vec![0usize; ds.classes];
+        for &i in part {
+            counts[ds.y[i] as usize] += 1;
+        }
+        *counts.iter().max().unwrap() as f64 / part.len().max(1) as f64
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_label_skew() {
+        let ds = ds();
+        // small alpha: strongly skewed shards (each dominated by few labels)
+        let mut rng = Pcg::seeded(6);
+        let skewed = partition(&ds, 12, Partition::Dirichlet { alpha: 0.1 }, &mut rng);
+        let skew: f64 =
+            skewed.iter().map(|p| max_label_frac(&ds, p)).sum::<f64>() / skewed.len() as f64;
+        // large alpha: near-uniform label mix, like IID
+        let mut rng = Pcg::seeded(6);
+        let flat = partition(&ds, 12, Partition::Dirichlet { alpha: 100.0 }, &mut rng);
+        let uniform: f64 =
+            flat.iter().map(|p| max_label_frac(&ds, p)).sum::<f64>() / flat.len() as f64;
+        assert!(skew > 0.35, "alpha 0.1 mean max-label share {skew}");
+        assert!(uniform < 0.2, "alpha 100 mean max-label share {uniform}");
+        assert!(skew > 1.5 * uniform, "{skew} vs {uniform}");
+        // skewed shards also lose label diversity relative to IID's 10/10
+        let avg_div: f64 = skewed
+            .iter()
+            .map(|p| label_diversity(&ds, p) as f64)
+            .sum::<f64>()
+            / skewed.len() as f64;
+        assert!(avg_div < 8.0, "alpha 0.1 avg diversity {avg_div}");
+    }
+
+    #[test]
+    fn dirichlet_every_shard_non_empty_at_extreme_alpha() {
+        let ds = ds();
+        let mut rng = Pcg::seeded(7);
+        let parts = partition(&ds, 24, Partition::Dirichlet { alpha: 0.01 }, &mut rng);
+        assert_eq!(parts.len(), 24);
+        for (d, p) in parts.iter().enumerate() {
+            assert!(!p.is_empty(), "device {d} got an empty shard");
+        }
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, ds.len());
+    }
+
     #[test]
     fn deterministic_given_seed() {
         let ds = ds();
-        let a = partition(&ds, 6, Partition::NonIid, &mut Pcg::seeded(9));
-        let b = partition(&ds, 6, Partition::NonIid, &mut Pcg::seeded(9));
-        assert_eq!(a, b);
+        for kind in [Partition::NonIid, Partition::Dirichlet { alpha: 0.3 }] {
+            let a = partition(&ds, 6, kind, &mut Pcg::seeded(9));
+            let b = partition(&ds, 6, kind, &mut Pcg::seeded(9));
+            assert_eq!(a, b, "{kind:?}");
+        }
     }
 
     #[test]
     fn parse_kind() {
         assert_eq!(Partition::parse("iid"), Some(Partition::Iid));
         assert_eq!(Partition::parse("non-iid"), Some(Partition::NonIid));
+        assert_eq!(Partition::parse("dirichlet:0.3"), Some(Partition::Dirichlet { alpha: 0.3 }));
+        assert_eq!(Partition::parse("dirichlet"), Some(Partition::Dirichlet { alpha: 0.5 }));
+        assert_eq!(Partition::parse("dirichlet:"), None);
+        assert_eq!(Partition::parse("dirichlet:x"), None);
+        assert_eq!(Partition::parse("dirichlet:-1"), None);
+        assert_eq!(Partition::parse("dirichlet:0"), None);
+        assert_eq!(Partition::parse("dirichlet:nan"), None);
+        assert_eq!(Partition::parse("dirichletx"), None);
         assert_eq!(Partition::parse("x"), None);
     }
 }

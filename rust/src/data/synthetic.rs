@@ -44,6 +44,15 @@ impl Dataset {
         }
         (x, y)
     }
+
+    /// A new dataset holding the selected rows, in the given order — the
+    /// per-cell slice the hierarchical topology hands each edge server.
+    /// Selecting `0..len` in order reproduces the dataset bitwise (the
+    /// flat-trainer degenerate case of `hier::CellTopology`).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let (x, y) = self.gather(idx);
+        Dataset { x, y, dim: self.dim, classes: self.classes }
+    }
 }
 
 /// Generation parameters.
@@ -240,5 +249,22 @@ mod tests {
         assert_eq!(x.len(), 3 * 8);
         assert_eq!(y, vec![ds.y[3], ds.y[10], ds.y[49]]);
         assert_eq!(&x[8..16], ds.row(10));
+    }
+
+    #[test]
+    fn subset_rows_and_identity() {
+        let cfg = SynthConfig { dim: 8, ..Default::default() };
+        let ds = generate(&cfg, 50, 4);
+        let sub = ds.subset(&[10, 3]);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.row(0), ds.row(10));
+        assert_eq!(sub.row(1), ds.row(3));
+        assert_eq!(sub.y, vec![ds.y[10], ds.y[3]]);
+        assert_eq!((sub.dim, sub.classes), (ds.dim, ds.classes));
+        // the in-order full subset is the dataset, bitwise
+        let all: Vec<usize> = (0..ds.len()).collect();
+        let full = ds.subset(&all);
+        assert_eq!(full.x, ds.x);
+        assert_eq!(full.y, ds.y);
     }
 }

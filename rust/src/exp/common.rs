@@ -1,13 +1,16 @@
 //! Shared wiring for the paper-experiment drivers: build the world
-//! (dataset + fleet + backend) from an `Experiment` and run one scheme.
+//! (dataset + fleet + backend) from an `Experiment` and run one scheme —
+//! flat single-cell or hierarchical (`topology.cells` > 1).
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::Experiment;
 use crate::coordinator::{
     Backend, BackendSet, HostBackend, PjrtBackend, Scheme, TrainLog, Trainer,
 };
 use crate::data::{generate, Dataset};
+use crate::device::Device;
+use crate::hier::{CellTopology, CellWorld, HierConfig, HierTrainer};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg;
 
@@ -161,6 +164,119 @@ pub fn make_data(exp: &Experiment) -> (Dataset, Dataset) {
     let train = generate(&exp.synth, exp.train_n, seed);
     let test = generate(&exp.synth, exp.test_n, seed);
     (train, test)
+}
+
+/// The owned world of a hierarchical experiment: per-cell fleets, data
+/// shards, and backend registries, plus the shared test set. Trainers
+/// borrow from it (`HierWorld::cell_worlds`), exactly as flat experiments
+/// hold a `FleetBackends`/`Dataset` and lend views to a `Trainer`.
+pub struct HierWorld {
+    pub topo: CellTopology,
+    pub fleets: Vec<Vec<Device>>,
+    pub cell_train: Vec<Dataset>,
+    pub test: Dataset,
+    backends: Vec<FleetBackends>,
+}
+
+impl HierWorld {
+    /// Borrowed per-cell views for `HierTrainer::new`, in cell order.
+    pub fn cell_worlds(&self) -> Vec<CellWorld<'_>> {
+        self.fleets
+            .iter()
+            .zip(&self.cell_train)
+            .zip(&self.backends)
+            .map(|((fleet, train), fb)| CellWorld {
+                fleet: fleet.clone(),
+                backends: fb.set(),
+                train,
+            })
+            .collect()
+    }
+}
+
+/// Build a hierarchical world from an experiment: split the fleet into
+/// `exp.cells` contiguous cells on even bandwidth budgets
+/// (`CellTopology`), split the dataset across cells by the experiment's
+/// partition kind, and resolve each cell's backend registry from the
+/// per-tier rules (tiers are cell-local: a cell's device `j` sits in
+/// tier `j % 3`, the same shape `paper_cpu_fleet` gives the flat run).
+/// One cell reproduces the flat world bitwise: the same fleet RNG stream,
+/// the whole band, the dataset in natural order.
+pub fn make_hier_world(exp: &Experiment, kind: BackendKind) -> Result<HierWorld> {
+    let topo = CellTopology::new(exp.k, exp.cells, exp.tau, exp.cell)?;
+    let (train, test) = make_data(exp);
+    let mut drng = Pcg::seeded(exp.trainer.seed ^ 0xce11_da7a);
+    let cell_train: Vec<Dataset> = topo
+        .split_data(&train, exp.partition, &mut drng)
+        .iter()
+        .map(|idx| train.subset(idx))
+        .collect();
+    let mut frng = Pcg::seeded(exp.trainer.seed ^ 0xf1ee7);
+    let mut fleets = Vec::with_capacity(topo.cells());
+    let mut backends = Vec::with_capacity(topo.cells());
+    for c in 0..topo.cells() {
+        let kc = topo.size(c);
+        anyhow::ensure!(
+            cell_train[c].len() >= 2 * kc,
+            "cell {c} got {} samples for {} devices — raise data.train_n or the \
+             partition's alpha",
+            cell_train[c].len(),
+            kc
+        );
+        fleets.push(exp.fleet_with(kc, topo.config(c), &mut frng));
+        let mut cell_exp = exp.clone();
+        cell_exp.k = kc;
+        let fb = make_fleet_backends(&cell_exp, kind)
+            .with_context(|| format!("resolving cell {c}'s backend rules (cell fleet k = {kc})"))?;
+        backends.push(fb);
+    }
+    Ok(HierWorld { topo, fleets, cell_train, test, backends })
+}
+
+/// What a hierarchical run produced, beyond the merged log.
+pub struct HierRun {
+    /// all cells' records interleaved period-major (see
+    /// `HierTrainer::merged_log`)
+    pub log: TrainLog,
+    pub cells: usize,
+    pub tau: usize,
+    pub cloud_rounds: usize,
+    /// simulated seconds at the end of the run: the slowest cell's clock
+    /// after the final cloud barrier — the hierarchy's makespan. NOT the
+    /// merged log's last record (that is the last *cell's* pre-barrier
+    /// time, which understates a run whose slowest cell sits elsewhere).
+    pub sim_time: f64,
+}
+
+/// Run one scheme through the hierarchical topology the experiment
+/// describes (`topology.cells` cells, cloud merges every `topology.tau`
+/// edge rounds). The `topology.cells = 1` degenerate case reproduces
+/// [`run_scheme`] record-for-record.
+pub fn run_hier_scheme(
+    exp: &Experiment,
+    scheme: Scheme,
+    kind: BackendKind,
+    periods: usize,
+    warm_steps: usize,
+) -> Result<HierRun> {
+    let world = make_hier_world(exp, kind)?;
+    let mut cfg = exp.trainer.clone();
+    cfg.scheme = scheme;
+    // tau flows from the topology (one source of truth), the per-cell
+    // policies from the experiment's resolved overrides
+    let hc = HierConfig { tau: world.topo.tau(), policies: exp.resolved_cell_policies() };
+    let mut tr = HierTrainer::new(cfg, hc, world.cell_worlds(), &world.test, exp.partition)?;
+    if warm_steps > 0 {
+        tr.warm_start(warm_steps, 64, 0.05)?;
+    }
+    tr.run(periods)?;
+    Ok(HierRun {
+        log: tr.merged_log(),
+        cells: tr.cell_count(),
+        tau: tr.tau(),
+        cloud_rounds: tr.cloud_rounds(),
+        sim_time: tr.sim_time(),
+    })
 }
 
 /// Run one scheme to completion (warm start optional) and return its log.

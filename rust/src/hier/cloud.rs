@@ -1,0 +1,219 @@
+//! Cloud-tier aggregation: FedAvg over the per-cell edge models.
+//!
+//! Every `tau` edge rounds (Wang et al., arXiv:1804.05271 — the
+//! edge→cloud frequency is itself a resource/accuracy knob) the cloud
+//! pulls each cell's per-family global parameters, averages them weighted
+//! by the cell's training-sample count, and pushes the merged model back
+//! to every member cell. Families pair up across cells **by model-family
+//! name** — cells may have different tier mixes, so the same model can sit
+//! at different family indices in different cells — and the merge walks
+//! cells in fixed cell order with f64 accumulation (`grad::Aggregator`),
+//! so a C-cell reduce is independent of which threads ran the cells.
+//!
+//! A family owned by a single cell stands untouched: FedAvg of one model
+//! is that model, exactly — which also makes the C = 1 degenerate case a
+//! bitwise no-op.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::Trainer;
+use crate::grad::Aggregator;
+
+/// Cloud-tier state: the merge cadence bookkeeping. The merged parameters
+/// themselves live in the cells' servers — the cloud is a reducer, not a
+/// third parameter store.
+#[derive(Debug, Default)]
+pub struct CloudAggregator {
+    rounds: usize,
+}
+
+impl CloudAggregator {
+    pub fn new() -> CloudAggregator {
+        CloudAggregator::default()
+    }
+
+    /// Completed cloud rounds (merge calls).
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// One cloud round: sample-count-weighted FedAvg of every model
+    /// family shared by two or more cells, written back to all member
+    /// cells. Returns how many families were actually merged (0 for a
+    /// single cell or fully-disjoint families).
+    pub fn merge(&mut self, cells: &mut [Trainer<'_>]) -> Result<usize> {
+        self.rounds += 1;
+        if cells.len() < 2 {
+            return Ok(0);
+        }
+        // family names in first-cell, first-family order — a pure
+        // function of the topology, never of execution order
+        let mut names: Vec<String> = Vec::new();
+        for tr in cells.iter() {
+            let bs = tr.backend_set();
+            for f in 0..bs.family_count() {
+                let name = bs.family_name(f);
+                if !names.iter().any(|n| n == name) {
+                    names.push(name.to_string());
+                }
+            }
+        }
+        let mut merged = 0usize;
+        for name in &names {
+            // member (cell, family-index) pairs in fixed cell order
+            let members: Vec<(usize, usize)> = cells
+                .iter()
+                .enumerate()
+                .filter_map(|(c, tr)| {
+                    let bs = tr.backend_set();
+                    (0..bs.family_count())
+                        .find(|&f| bs.family_name(f) == name)
+                        .map(|f| (c, f))
+                })
+                .collect();
+            if members.len() < 2 {
+                // one owner: FedAvg of a single model is that model
+                continue;
+            }
+            let (c0, f0) = members[0];
+            let p = cells[c0].server.family_params(f0).len();
+            let mut agg = Aggregator::new(p);
+            for &(c, f) in &members {
+                let params = cells[c].server.family_params(f);
+                if params.len() != p {
+                    bail!(
+                        "cloud merge: family {name:?} has {} parameters in cell {c0} but {} \
+                         in cell {c} — one family name must mean one model geometry",
+                        p,
+                        params.len()
+                    );
+                }
+                agg.add(params, cells[c].total_samples() as f64)?;
+            }
+            let global = agg.finish()?;
+            for &(c, f) in &members {
+                cells[c].server.set_family_params(f, global.clone());
+            }
+            merged += 1;
+        }
+        Ok(merged)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::HostBackend;
+    use crate::coordinator::{Trainer, TrainerConfig};
+    use crate::data::synthetic::{generate, SynthConfig};
+    use crate::data::Partition;
+    use crate::device::paper_cpu_fleet;
+    use crate::util::rng::Pcg;
+    use crate::wireless::CellConfig;
+
+    fn cell_trainer<'a>(
+        train: &'a crate::data::Dataset,
+        test: &'a crate::data::Dataset,
+        be: &'a HostBackend,
+        k: usize,
+        seed: u64,
+    ) -> Trainer<'a> {
+        let mut rng = Pcg::seeded(seed);
+        let fleet = paper_cpu_fleet(k, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+        let cfg = TrainerConfig { seed, eval_every: 0, ..Default::default() };
+        Trainer::new(cfg, fleet, train, test, Partition::Iid, be).unwrap()
+    }
+
+    fn named_cell_trainer<'a>(
+        name: &str,
+        be: &'a HostBackend,
+        train: &'a crate::data::Dataset,
+        test: &'a crate::data::Dataset,
+        seed: u64,
+    ) -> Trainer<'a> {
+        let set = crate::coordinator::BackendSet::homogeneous(2, name, be);
+        let mut rng = Pcg::seeded(seed);
+        let fleet = paper_cpu_fleet(2, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+        let tc = TrainerConfig { seed, eval_every: 0, ..Default::default() };
+        Trainer::with_backends(tc, fleet, train, test, Partition::Iid, set).unwrap()
+    }
+
+    #[test]
+    fn merge_is_sample_weighted_fedavg() {
+        let cfg = SynthConfig { dim: 8, ..Default::default() };
+        // cell 0: 2 devices x 50 samples; cell 1: 2 devices x 100 samples
+        let train_a = generate(&cfg, 100, 1);
+        let train_b = generate(&cfg, 200, 1);
+        let test = generate(&cfg, 40, 1);
+        let be = HostBackend::for_model("mini_dense", 8, 10, 3).unwrap();
+        let mut cells = vec![
+            cell_trainer(&train_a, &test, &be, 2, 1),
+            cell_trainer(&train_b, &test, &be, 2, 2),
+        ];
+        assert_eq!(cells[0].total_samples(), 100);
+        assert_eq!(cells[1].total_samples(), 200);
+        let p = cells[0].server.p();
+        cells[0].server.set_family_params(0, vec![3.0; p]);
+        cells[1].server.set_family_params(0, vec![6.0; p]);
+        let mut cloud = CloudAggregator::new();
+        let merged = cloud.merge(&mut cells).unwrap();
+        assert_eq!(merged, 1);
+        assert_eq!(cloud.rounds(), 1);
+        // (3 * 100 + 6 * 200) / 300 = 5.0, pushed to both cells
+        for tr in &cells {
+            for &v in tr.server.params() {
+                assert_eq!(v, 5.0);
+            }
+        }
+    }
+
+    #[test]
+    fn single_cell_merge_is_a_noop() {
+        let cfg = SynthConfig { dim: 8, ..Default::default() };
+        let train = generate(&cfg, 100, 1);
+        let test = generate(&cfg, 40, 1);
+        let be = HostBackend::for_model("mini_dense", 8, 10, 3).unwrap();
+        let mut cells = vec![cell_trainer(&train, &test, &be, 2, 1)];
+        let before = cells[0].server.params().to_vec();
+        let mut cloud = CloudAggregator::new();
+        assert_eq!(cloud.merge(&mut cells).unwrap(), 0);
+        assert_eq!(cells[0].server.params(), &before[..]);
+        // the cadence counter still advances: a cloud round happened,
+        // it just had nothing to consolidate
+        assert_eq!(cloud.rounds(), 1);
+    }
+
+    #[test]
+    fn disjoint_families_stand_and_shared_names_must_agree_on_geometry() {
+        let cfg = SynthConfig { dim: 8, ..Default::default() };
+        let train = generate(&cfg, 100, 1);
+        let test = generate(&cfg, 40, 1);
+        let dense = HostBackend::for_model("mini_dense", 8, 10, 3).unwrap();
+        let res = HostBackend::for_model("mini_res", 8, 10, 3).unwrap();
+        // cells on *different* (disjointly-named) model families: each
+        // family has one owner, so nothing merges and both models stand
+        let mut cells = vec![
+            named_cell_trainer("mini_dense", &dense, &train, &test, 1),
+            named_cell_trainer("mini_res", &res, &train, &test, 2),
+        ];
+        let before0 = cells[0].server.params().to_vec();
+        let before1 = cells[1].server.params().to_vec();
+        let mut cloud = CloudAggregator::new();
+        assert_eq!(cloud.merge(&mut cells).unwrap(), 0);
+        assert_eq!(cells[0].server.params(), &before0[..]);
+        assert_eq!(cells[1].server.params(), &before1[..]);
+        // same family name over different parameter geometries: the merge
+        // must fail loudly, never average across parameter spaces
+        let mut cells = vec![
+            named_cell_trainer("shared", &dense, &train, &test, 1),
+            named_cell_trainer("shared", &res, &train, &test, 2),
+        ];
+        assert_ne!(
+            cells[0].server.p(),
+            cells[1].server.p(),
+            "test premise: the two mini models differ in parameter count"
+        );
+        let err = cloud.merge(&mut cells).unwrap_err().to_string();
+        assert!(err.contains("one family name"), "{err}");
+    }
+}

@@ -1,0 +1,35 @@
+//! Hierarchical multi-cell FEEL: client → edge → cloud.
+//!
+//! The paper optimizes one cell; the production north star is many cells
+//! — each with its own edge server, wireless budget, and scheduler —
+//! feeding a cloud aggregator (Wang et al., arXiv:1804.05271 make the
+//! edge→cloud cadence `tau` a first-class resource/accuracy knob; Qin et
+//! al., arXiv:2005.05265 frame multi-cell coordination as *the* open
+//! wireless-FL system problem). This subsystem is that scale seam:
+//!
+//! * [`CellTopology`] — partitions the fleet into C contiguous cells,
+//!   each with an even TDMA bandwidth budget and its own data shard
+//!   (cell-level `Partition`, so `dirichlet:alpha` controls per-cell
+//!   skew);
+//! * [`HierTrainer`] — one flat `Trainer` per cell (its own per-period
+//!   batchsize/bandwidth optimization, round policy, straggler model,
+//!   clock), run concurrently on the `exec::Engine` in blocks of `tau`
+//!   edge rounds;
+//! * [`CloudAggregator`] — sample-count-weighted FedAvg of the per-cell
+//!   edge models at every block boundary, paired by model-family name so
+//!   it composes with heterogeneous `BackendSet` fleets.
+//!
+//! Determinism contract: cells are independent between cloud rounds and
+//! every cross-cell reduction (clock barrier, cloud merge, hierarchy
+//! eval) runs in fixed cell order on the coordinator thread, so C-cell
+//! runs are bitwise thread-invariant; the C = 1, tau = 1 degenerate case
+//! reproduces the flat `Trainer` bitwise. Both are pinned by
+//! `tests/exec_determinism.rs`.
+
+pub mod cloud;
+pub mod topology;
+pub mod trainer;
+
+pub use cloud::CloudAggregator;
+pub use topology::CellTopology;
+pub use trainer::{CellWorld, HierConfig, HierTrainer};

@@ -1,0 +1,192 @@
+//! Cell topology: how a fleet of K devices, the system bandwidth, and the
+//! global dataset are partitioned across C cells.
+//!
+//! Devices split into contiguous blocks (cell c owns global device ids
+//! `[offset(c), offset(c) + size(c))`, first cells take the remainder),
+//! so a cell's local device id `j` maps to global id `offset(c) + j` and
+//! the paper's tier assignment (`id % 3`) keeps the same shape inside
+//! every cell. Each cell runs its own base station on an even share of
+//! the system band ([`CellConfig::split_bandwidth`] — the per-cell TDMA
+//! budget) and owns its own slice of the dataset, split at the cell
+//! level by the same `Partition` kind the devices use inside a cell —
+//! `dirichlet:alpha` makes the per-cell skew controllable.
+//!
+//! Degenerate case (the compatibility contract `tests/exec_determinism.rs`
+//! pins): C = 1 owns every device, the whole band (`x / 1.0` is exact),
+//! and the dataset in natural order — no RNG is consumed — so a one-cell
+//! hierarchy reproduces the flat `Trainer` bitwise.
+
+use anyhow::{bail, Result};
+
+use crate::data::partition::split_sizes;
+use crate::data::{partition, Dataset, Partition};
+use crate::util::rng::Pcg;
+use crate::wireless::CellConfig;
+
+/// Partition of the fleet, the band, and (via [`CellTopology::split_data`])
+/// the dataset across C cells.
+#[derive(Clone, Debug)]
+pub struct CellTopology {
+    sizes: Vec<usize>,
+    offsets: Vec<usize>,
+    configs: Vec<CellConfig>,
+    tau: usize,
+}
+
+impl CellTopology {
+    /// `k` devices over `cells` cells, cloud merges every `tau` edge
+    /// rounds, each cell on an even share of `base`'s bandwidth.
+    pub fn new(k: usize, cells: usize, tau: usize, base: CellConfig) -> Result<CellTopology> {
+        if cells == 0 {
+            bail!("topology needs at least one cell");
+        }
+        if tau == 0 {
+            bail!("cloud cadence tau must be >= 1");
+        }
+        if k < cells {
+            bail!("{cells} cells for {k} devices: every cell needs at least one device");
+        }
+        let sizes = split_sizes(k, cells);
+        let mut offsets = Vec::with_capacity(cells);
+        let mut off = 0usize;
+        for &s in &sizes {
+            offsets.push(off);
+            off += s;
+        }
+        let configs = (0..cells).map(|_| base.split_bandwidth(cells)).collect();
+        Ok(CellTopology { sizes, offsets, configs, tau })
+    }
+
+    /// Number of cells C.
+    pub fn cells(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Total fleet size K.
+    pub fn k(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+
+    /// Cloud aggregation cadence: edge rounds per cloud merge.
+    pub fn tau(&self) -> usize {
+        self.tau
+    }
+
+    /// Devices in cell `c`.
+    pub fn size(&self, c: usize) -> usize {
+        self.sizes[c]
+    }
+
+    /// Global device id of cell `c`'s first device.
+    pub fn offset(&self, c: usize) -> usize {
+        self.offsets[c]
+    }
+
+    /// The cell a global device id belongs to.
+    pub fn cell_of(&self, device: usize) -> usize {
+        assert!(device < self.k(), "device {device} outside the {}-device fleet", self.k());
+        // contiguous blocks: the last offset at or below `device`
+        self.offsets
+            .iter()
+            .rposition(|&off| off <= device)
+            .expect("offset 0 always matches")
+    }
+
+    /// Cell `c`'s wireless configuration (its TDMA bandwidth budget).
+    pub fn config(&self, c: usize) -> CellConfig {
+        self.configs[c]
+    }
+
+    /// Split the dataset across cells: per-cell sample indices into `ds`,
+    /// by the same partition kinds devices use within a cell. One cell
+    /// gets `0..len` in natural order without consuming the RNG — the
+    /// flat-trainer degenerate case.
+    pub fn split_data(&self, ds: &Dataset, kind: Partition, rng: &mut Pcg) -> Vec<Vec<usize>> {
+        if self.cells() == 1 {
+            return vec![(0..ds.len()).collect()];
+        }
+        partition(ds, self.cells(), kind, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SynthConfig};
+
+    #[test]
+    fn contiguous_cover_with_remainder_up_front() {
+        let t = CellTopology::new(11, 3, 2, CellConfig::default()).unwrap();
+        assert_eq!(t.cells(), 3);
+        assert_eq!(t.k(), 11);
+        assert_eq!(t.tau(), 2);
+        assert_eq!((t.size(0), t.size(1), t.size(2)), (4, 4, 3));
+        assert_eq!((t.offset(0), t.offset(1), t.offset(2)), (0, 4, 8));
+        // cell_of is the inverse of the block layout
+        for c in 0..t.cells() {
+            for j in 0..t.size(c) {
+                assert_eq!(t.cell_of(t.offset(c) + j), c, "cell {c} local {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        let cc = CellConfig::default();
+        assert!(CellTopology::new(4, 0, 1, cc).is_err());
+        assert!(CellTopology::new(4, 1, 0, cc).is_err());
+        assert!(CellTopology::new(2, 3, 1, cc).is_err());
+        assert!(CellTopology::new(3, 3, 1, cc).is_ok());
+    }
+
+    #[test]
+    #[should_panic]
+    fn cell_of_out_of_range_panics() {
+        let t = CellTopology::new(6, 2, 1, CellConfig::default()).unwrap();
+        t.cell_of(6);
+    }
+
+    #[test]
+    fn bandwidth_budget_split_evenly() {
+        let base = CellConfig::default();
+        let t = CellTopology::new(12, 4, 1, base).unwrap();
+        for c in 0..4 {
+            assert_eq!(t.config(c).bandwidth_hz, base.bandwidth_hz / 4.0);
+        }
+        // one cell keeps the whole band, bitwise
+        let t1 = CellTopology::new(12, 1, 1, base).unwrap();
+        assert_eq!(t1.config(0).bandwidth_hz.to_bits(), base.bandwidth_hz.to_bits());
+    }
+
+    #[test]
+    fn split_data_single_cell_is_identity_order() {
+        let ds = generate(&SynthConfig { dim: 8, ..Default::default() }, 120, 3);
+        let t = CellTopology::new(6, 1, 1, CellConfig::default()).unwrap();
+        let mut rng = Pcg::seeded(9);
+        let before = rng.clone();
+        let idx = t.split_data(&ds, Partition::Iid, &mut rng);
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx[0], (0..120).collect::<Vec<_>>());
+        // no RNG consumed: the degenerate case cannot perturb anything
+        let mut a = before;
+        assert_eq!(a.next_u64(), rng.next_u64());
+    }
+
+    #[test]
+    fn split_data_multi_cell_covers_disjointly() {
+        let ds = generate(&SynthConfig { dim: 8, ..Default::default() }, 600, 3);
+        let t = CellTopology::new(12, 3, 1, CellConfig::default()).unwrap();
+        for kind in [
+            Partition::Iid,
+            Partition::NonIid,
+            Partition::Dirichlet { alpha: 0.3 },
+        ] {
+            let mut rng = Pcg::seeded(4);
+            let idx = t.split_data(&ds, kind, &mut rng);
+            assert_eq!(idx.len(), 3, "{kind:?}");
+            let mut all: Vec<usize> = idx.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..600).collect::<Vec<_>>(), "{kind:?}");
+        }
+    }
+}

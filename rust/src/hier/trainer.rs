@@ -1,0 +1,376 @@
+//! The hierarchical training loop: C concurrent cell trainers under one
+//! cloud aggregator.
+//!
+//! Each cell is a full flat [`Trainer`] — its own fleet slice, dataset
+//! shard, TDMA bandwidth budget, per-period batchsize/bandwidth
+//! optimization (`opt/`), round policy (`sched/`), clock, and per-family
+//! edge model. `HierTrainer` runs the cells **concurrently on the
+//! existing `exec::Engine`** in blocks of `tau` edge rounds; at every
+//! block boundary the cells barrier on the slowest cell's simulated
+//! clock and the cloud FedAvg-merges their edge models (sample-count
+//! weighted, per family name — see `hier::cloud`).
+//!
+//! Determinism: cells are fully independent between cloud rounds (their
+//! RNG streams derive from per-cell seeds `base_seed ^ c * STRIDE`, and
+//! each cell inherits the flat trainer's bitwise thread-invariance), and
+//! every cross-cell reduction — the clock barrier's `max` fold and the
+//! cloud merge — runs on the coordinator thread in fixed cell order. So a
+//! C-cell run is bitwise thread-invariant, and the C = 1, tau = 1 case
+//! reproduces the flat `Trainer` bitwise (`tests/exec_determinism.rs`
+//! pins both).
+
+use anyhow::{bail, Result};
+
+use super::cloud::CloudAggregator;
+use crate::coordinator::{BackendSet, TrainLog, Trainer, TrainerConfig, WallStats};
+use crate::data::{Dataset, Partition};
+use crate::device::Device;
+use crate::exec::Engine;
+use crate::sched::RoundPolicy;
+
+/// Per-cell seed separation: cell c trains under seed
+/// `base ^ (c * STRIDE)` (an odd multiplier, so distinct cells never
+/// collide; cell 0 keeps the base seed exactly — the degenerate-case
+/// anchor).
+const CELL_SEED_STRIDE: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// One cell's world: its device slice, backend registry, and data shard.
+/// Built by hand in tests or by `exp::common::make_hier_world` from an
+/// `Experiment`.
+pub struct CellWorld<'a> {
+    pub fleet: Vec<Device>,
+    pub backends: BackendSet<'a>,
+    pub train: &'a Dataset,
+}
+
+/// Hierarchy knobs on top of the per-cell [`TrainerConfig`].
+#[derive(Clone, Debug)]
+pub struct HierConfig {
+    /// cloud cadence: edge rounds per cloud merge (>= 1)
+    pub tau: usize,
+    /// per-cell round-policy overrides, one per cell in cell order
+    /// (empty = every cell closes rounds with the base config's policy)
+    pub policies: Vec<RoundPolicy>,
+}
+
+impl Default for HierConfig {
+    fn default() -> Self {
+        HierConfig { tau: 1, policies: Vec::new() }
+    }
+}
+
+/// C cell trainers plus the cloud tier above them.
+pub struct HierTrainer<'a> {
+    cells: Vec<Trainer<'a>>,
+    /// outer fan-out: cells run concurrently, one engine item per cell
+    engine: Engine,
+    tau: usize,
+    cloud: CloudAggregator,
+}
+
+impl<'a> HierTrainer<'a> {
+    /// Build the hierarchy: cell `c` trains under `base` with its seed
+    /// offset by the cell id, its policy optionally overridden by
+    /// `hc.policies[c]`, and an even share of the worker threads.
+    pub fn new(
+        base: TrainerConfig,
+        hc: HierConfig,
+        worlds: Vec<CellWorld<'a>>,
+        test: &'a Dataset,
+        kind: Partition,
+    ) -> Result<HierTrainer<'a>> {
+        if worlds.is_empty() {
+            bail!("hierarchical trainer needs at least one cell");
+        }
+        if hc.tau == 0 {
+            bail!("cloud cadence tau must be >= 1");
+        }
+        if !hc.policies.is_empty() && hc.policies.len() != worlds.len() {
+            bail!(
+                "{} per-cell policies for {} cells (give one per cell, or none)",
+                hc.policies.len(),
+                worlds.len()
+            );
+        }
+        let engine = Engine::new(base.threads);
+        // split the thread budget across concurrent cells (wall-clock
+        // only: numerics are thread-invariant at every level)
+        let inner_threads = (engine.threads() / worlds.len()).max(1);
+        let mut cells = Vec::with_capacity(worlds.len());
+        for (c, w) in worlds.into_iter().enumerate() {
+            let mut cfg = base.clone();
+            cfg.seed = base.seed ^ (c as u64).wrapping_mul(CELL_SEED_STRIDE);
+            if let Some(p) = hc.policies.get(c) {
+                cfg.policy = *p;
+            }
+            cfg.threads = inner_threads;
+            let mut tr = Trainer::with_backends(cfg, w.fleet, w.train, test, kind, w.backends)?;
+            tr.set_cell_id(c);
+            cells.push(tr);
+        }
+        Ok(HierTrainer { cells, engine, tau: hc.tau, cloud: CloudAggregator::new() })
+    }
+
+    /// Number of cells C.
+    pub fn cell_count(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Cell `c`'s trainer (its log, server state, fleet).
+    pub fn cell(&self, c: usize) -> &Trainer<'a> {
+        &self.cells[c]
+    }
+
+    /// Cloud cadence (edge rounds per cloud merge).
+    pub fn tau(&self) -> usize {
+        self.tau
+    }
+
+    /// Completed cloud rounds.
+    pub fn cloud_rounds(&self) -> usize {
+        self.cloud.rounds()
+    }
+
+    /// Worker threads of the outer cell fan-out.
+    pub fn threads(&self) -> usize {
+        self.engine.threads()
+    }
+
+    /// Simulated seconds: the slowest cell's clock (all cells agree right
+    /// after a cloud barrier).
+    pub fn sim_time(&self) -> f64 {
+        self.cells.iter().map(|c| c.sim_time()).fold(0.0, f64::max)
+    }
+
+    /// Warm-start every cell's edge model (serial, fixed cell order).
+    pub fn warm_start(&mut self, steps: usize, b: usize, lr: f32) -> Result<()> {
+        for tr in &mut self.cells {
+            tr.warm_start(steps, b, lr)?;
+        }
+        Ok(())
+    }
+
+    /// Run `periods` edge rounds per cell in blocks of `tau`: cells
+    /// execute each block concurrently, then barrier on the slowest
+    /// cell's clock and cloud-merge. A trailing partial block (periods
+    /// not a multiple of tau) still ends with a merge, so every `run`
+    /// leaves the system cloud-consistent.
+    pub fn run(&mut self, periods: usize) -> Result<()> {
+        let mut left = periods;
+        while left > 0 {
+            let block = left.min(self.tau);
+            // one engine item per cell; each cell's own engine still fans
+            // its device steps out on its scoped threads inside
+            self.engine.run_mut(&mut self.cells, |_, tr| {
+                tr.run(block)?;
+                Ok(())
+            })?;
+            self.cloud_round()?;
+            left -= block;
+        }
+        Ok(())
+    }
+
+    /// One cloud synchronization point: barrier every cell's clock on the
+    /// slowest cell (edge→cloud backhaul is priced at zero for now — the
+    /// latency seam a later PR fills), then FedAvg the edge models. The
+    /// cloud marker lands on the last record of the block; single-cell
+    /// topologies skip both the barrier and the marker, keeping the
+    /// degenerate case bitwise-flat.
+    fn cloud_round(&mut self) -> Result<()> {
+        if self.cells.len() > 1 {
+            let t_cloud = self.cells.iter().map(|c| c.sim_time()).fold(0.0, f64::max);
+            for tr in &mut self.cells {
+                tr.sync_clock_to(t_cloud);
+            }
+        }
+        self.cloud.merge(&mut self.cells)?;
+        if self.cells.len() > 1 {
+            for tr in &mut self.cells {
+                if let Some(r) = tr.log.records.last_mut() {
+                    r.cloud = true;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Sample-count-weighted mean of the per-cell evaluations — right
+    /// after a cloud round the shared families hold identical merged
+    /// parameters, so this is the cloud model's test performance. Fixed
+    /// cell order, f64 accumulation: deterministic like every other
+    /// cross-cell reduction.
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        let mut loss = 0f64;
+        let mut acc = 0f64;
+        let mut weight = 0f64;
+        for tr in &mut self.cells {
+            let w = tr.total_samples() as f64;
+            let (l, a) = tr.evaluate()?;
+            loss += l * w;
+            acc += a * w;
+            weight += w;
+        }
+        Ok((loss / weight, acc / weight))
+    }
+
+    /// One log over the whole hierarchy: every cell's records interleaved
+    /// period-major (period 1 of every cell, then period 2, ...), each
+    /// stamped with its cell id, wall stats summed. A one-cell hierarchy
+    /// returns exactly its cell's log.
+    pub fn merged_log(&self) -> TrainLog {
+        let periods = self.cells.iter().map(|c| c.log.records.len()).max().unwrap_or(0);
+        let mut records = Vec::with_capacity(periods * self.cells.len());
+        for p in 0..periods {
+            for tr in &self.cells {
+                if let Some(r) = tr.log.records.get(p) {
+                    records.push(*r);
+                }
+            }
+        }
+        let mut wall = WallStats::default();
+        for tr in &self.cells {
+            wall.solver_secs += tr.log.wall.solver_secs;
+            wall.reduce_secs += tr.log.wall.reduce_secs;
+            wall.total_secs += tr.log.wall.total_secs;
+        }
+        TrainLog { records, wall }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::HostBackend;
+    use crate::data::synthetic::{generate, SynthConfig};
+    use crate::device::paper_cpu_fleet;
+    use crate::util::rng::Pcg;
+    use crate::wireless::CellConfig;
+
+    const DIM: usize = 12;
+
+    fn world<'a>(train: &'a Dataset, be: &'a HostBackend, k: usize, seed: u64) -> CellWorld<'a> {
+        let mut rng = Pcg::seeded(seed);
+        let cell = CellConfig::default().split_bandwidth(2);
+        CellWorld {
+            fleet: paper_cpu_fleet(k, 7e7, 1e8, cell, 4.0, 0.5, &mut rng),
+            backends: BackendSet::homogeneous(k, "mini_res", be),
+            train,
+        }
+    }
+
+    fn two_cell_setup() -> (Dataset, Dataset, Dataset, HostBackend) {
+        let cfg = SynthConfig { dim: DIM, ..Default::default() };
+        let a = generate(&cfg, 160, 1);
+        let b = generate(&cfg, 240, 2);
+        let test = generate(&cfg, 80, 3);
+        let be = HostBackend::for_model("mini_res", DIM, 10, 3).unwrap();
+        (a, b, test, be)
+    }
+
+    #[test]
+    fn two_cells_learn_and_share_the_merged_model() {
+        let (a, b, test, be) = two_cell_setup();
+        let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
+        let base = TrainerConfig { eval_every: 0, ..Default::default() };
+        let hc = HierConfig { tau: 2, policies: Vec::new() };
+        let mut hier = HierTrainer::new(base, hc, worlds, &test, Partition::Iid).unwrap();
+        assert_eq!(hier.cell_count(), 2);
+        hier.run(6).unwrap();
+        // 6 periods / tau 2 -> 3 cloud rounds
+        assert_eq!(hier.cloud_rounds(), 3);
+        // after the final merge both cells hold the same edge model
+        assert_eq!(hier.cell(0).server.params(), hier.cell(1).server.params());
+        // and the barrier left both clocks on the cloud's time axis
+        assert_eq!(hier.cell(0).sim_time().to_bits(), hier.cell(1).sim_time().to_bits());
+        // the hierarchy learns
+        let log = hier.merged_log();
+        assert_eq!(log.records.len(), 12);
+        let first = log.records[0].train_loss + log.records[1].train_loss;
+        let last = log.records[10].train_loss + log.records[11].train_loss;
+        assert!(last < first, "loss {first} -> {last}");
+        // eval is sane
+        let (loss, acc) = hier.evaluate().unwrap();
+        assert!(loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn merged_log_interleaves_cells_and_marks_cloud_rounds() {
+        let (a, b, test, be) = two_cell_setup();
+        let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
+        let base = TrainerConfig { eval_every: 0, ..Default::default() };
+        let hc = HierConfig { tau: 2, policies: Vec::new() };
+        let mut hier = HierTrainer::new(base, hc, worlds, &test, Partition::Iid).unwrap();
+        hier.run(5).unwrap(); // blocks of 2, 2, 1 -> merges after 2, 4, 5
+        let log = hier.merged_log();
+        assert_eq!(log.records.len(), 10);
+        for (i, r) in log.records.iter().enumerate() {
+            assert_eq!(r.cell, i % 2, "record {i}");
+            assert_eq!(r.period, i / 2 + 1, "record {i}");
+            let marked = matches!(r.period, 2 | 4 | 5);
+            assert_eq!(r.cloud, marked, "record {i} (period {})", r.period);
+        }
+        // per-cell sim_time is monotone even across cloud barriers
+        for c in 0..2 {
+            let times: Vec<f64> =
+                log.records.iter().filter(|r| r.cell == c).map(|r| r.sim_time).collect();
+            for w in times.windows(2) {
+                assert!(w[1] > w[0], "cell {c}: {} -> {}", w[0], w[1]);
+            }
+        }
+        // the CSV carries the new columns through
+        let csv = log.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 11);
+        assert!(lines[1].ends_with(",0,0"), "{}", lines[1]);
+        assert!(lines[2].ends_with(",1,0"), "{}", lines[2]);
+        assert!(lines[3].ends_with(",0,1"), "{}", lines[3]);
+        assert!(lines[4].ends_with(",1,1"), "{}", lines[4]);
+    }
+
+    #[test]
+    fn per_cell_policies_apply_and_validate() {
+        let (a, b, test, be) = two_cell_setup();
+        // wrong policy count is rejected
+        let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
+        let base = TrainerConfig { eval_every: 0, ..Default::default() };
+        let hc = HierConfig { tau: 1, policies: vec![RoundPolicy::Sync] };
+        let err = HierTrainer::new(base.clone(), hc, worlds, &test, Partition::Iid)
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(err.contains("per-cell policies"), "{err}");
+        // tau 0 is rejected
+        let worlds = vec![world(&a, &be, 2, 10)];
+        let hc = HierConfig { tau: 0, policies: Vec::new() };
+        assert!(HierTrainer::new(base.clone(), hc, worlds, &test, Partition::Iid).is_err());
+        // no cells is rejected
+        let hc = HierConfig::default();
+        assert!(HierTrainer::new(base.clone(), hc, Vec::new(), &test, Partition::Iid).is_err());
+        // a mixed-policy hierarchy runs: cell 0 sync, cell 1 deadline
+        let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
+        let hc = HierConfig {
+            tau: 2,
+            policies: vec![RoundPolicy::Sync, RoundPolicy::Deadline { factor: 1.5 }],
+        };
+        let mut hier = HierTrainer::new(base, hc, worlds, &test, Partition::Iid).unwrap();
+        assert_eq!(hier.cell(0).policy(), RoundPolicy::Sync);
+        assert_eq!(hier.cell(1).policy(), RoundPolicy::Deadline { factor: 1.5 });
+        hier.run(2).unwrap();
+        assert_eq!(hier.merged_log().records.len(), 4);
+    }
+
+    #[test]
+    fn warm_start_warms_every_cell() {
+        let (a, b, test, be) = two_cell_setup();
+        let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
+        let base = TrainerConfig { eval_every: 0, ..Default::default() };
+        let mut hier = HierTrainer::new(base, HierConfig::default(), worlds, &test, Partition::Iid)
+            .unwrap();
+        let (cold, _) = hier.evaluate().unwrap();
+        hier.warm_start(40, 32, 0.05).unwrap();
+        let (warm, _) = hier.evaluate().unwrap();
+        assert!(warm < cold, "{cold} -> {warm}");
+    }
+}

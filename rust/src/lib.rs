@@ -27,6 +27,7 @@ pub mod device;
 pub mod exec;
 pub mod exp;
 pub mod grad;
+pub mod hier;
 pub mod metrics;
 pub mod opt;
 pub mod runtime;

@@ -182,7 +182,9 @@ pub fn quantize(batches: &[f64], inst: &Instance) -> Vec<usize> {
     order.sort_by(|&a, &b| {
         let fa = batches[a] - batches[a].floor();
         let fb = batches[b] - batches[b].floor();
-        fb.partial_cmp(&fa).unwrap()
+        // total order (no NaN panic); fractional parts are never -0.0,
+        // so normal values order exactly as before
+        fb.total_cmp(&fa)
     });
     let mut i = 0;
     while have < target && i < 10 * out.len() {

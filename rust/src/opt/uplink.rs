@@ -288,7 +288,7 @@ mod tests {
         // instead check global correlation:
         let mut speed_order: Vec<usize> = (0..6).collect();
         speed_order.sort_by(|&a, &b| {
-            inst.devices[a].speed.partial_cmp(&inst.devices[b].speed).unwrap()
+            inst.devices[a].speed.total_cmp(&inst.devices[b].speed)
         });
         let slowest = &sol.batches[speed_order[0]];
         let fastest = &sol.batches[*speed_order.last().unwrap()];

@@ -43,6 +43,18 @@ impl CellConfig {
     pub fn noise_watt(&self) -> f64 {
         dbm_to_watt(self.noise_dbm_per_hz) * self.bandwidth_hz
     }
+
+    /// The per-cell TDMA bandwidth budget of a `cells`-cell topology: the
+    /// system band divided evenly, everything else (powers, radius, noise
+    /// density) unchanged. One cell gets the whole band back bitwise
+    /// (`x / 1.0 == x` exactly), which the flat-trainer degenerate case
+    /// of `hier::CellTopology` relies on. Cross-cell interference is out
+    /// of scope here — orthogonal bands make cells independent, and the
+    /// reuse-1 interference model is the seam a later PR fills.
+    pub fn split_bandwidth(&self, cells: usize) -> CellConfig {
+        assert!(cells >= 1, "bandwidth split over zero cells");
+        CellConfig { bandwidth_hz: self.bandwidth_hz / cells as f64, ..*self }
+    }
 }
 
 /// `PL [dB] = 128.1 + 37.6 log10(d [km])` (3GPP macro, as in the paper).
@@ -132,6 +144,22 @@ mod tests {
         let snr = mean_snr_ul(&cfg, 200.0);
         let snr_db = 10.0 * snr.log10();
         assert!(snr_db > -10.0 && snr_db < 40.0, "edge SNR {snr_db} dB");
+    }
+
+    #[test]
+    fn split_bandwidth_budget() {
+        let cfg = CellConfig::default();
+        // one cell: the whole band, bitwise (the hier degenerate case)
+        let one = cfg.split_bandwidth(1);
+        assert_eq!(one.bandwidth_hz.to_bits(), cfg.bandwidth_hz.to_bits());
+        // C cells: an even budget; powers and geometry untouched
+        let c4 = cfg.split_bandwidth(4);
+        assert_eq!(c4.bandwidth_hz, cfg.bandwidth_hz / 4.0);
+        assert_eq!(c4.p_ul_dbm, cfg.p_ul_dbm);
+        assert_eq!(c4.radius_m, cfg.radius_m);
+        assert_eq!(c4.noise_dbm_per_hz, cfg.noise_dbm_per_hz);
+        // noise power scales with the band (same density)
+        assert!((c4.noise_watt() - cfg.noise_watt() / 4.0).abs() < 1e-25);
     }
 
     #[test]

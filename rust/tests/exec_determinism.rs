@@ -14,6 +14,7 @@ use feel::data::{generate, DeviceData, Partition, SynthConfig};
 use feel::device::{paper_cpu_fleet, StragglerModel};
 use feel::exec::{agg_shard_size, gradient_round_sharded, Engine};
 use feel::grad::Aggregator;
+use feel::hier::{CellWorld, HierConfig, HierTrainer};
 use feel::sched::RoundPolicy;
 use feel::util::rng::Pcg;
 use feel::wireless::CellConfig;
@@ -370,6 +371,128 @@ fn mixed_fleet_k40_identical_at_1_2_8_threads_all_policies() {
         );
         assert!(base.records.iter().all(|r| r.t_period > 0.0));
     }
+}
+
+/// The hierarchical degenerate case: one cell at cloud cadence tau = 1
+/// must reproduce the flat `Trainer` bitwise — same records, no cell ids,
+/// no cloud markers. The whole hier/ compatibility story rests on this:
+/// cell 0 keeps the base seed, the single cell owns the whole band and
+/// the dataset in natural order, and a single-member cloud merge is a
+/// no-op (FedAvg of one model is that model).
+#[test]
+fn hier_single_cell_tau1_reproduces_flat_trainer_bitwise() {
+    let cfg = SynthConfig { dim: 24, ..Default::default() };
+    let train = generate(&cfg, 800, 1);
+    let test = generate(&cfg, 200, 1);
+    let be = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+    for (policy, straggler) in [
+        (RoundPolicy::Sync, StragglerModel::none()),
+        (
+            RoundPolicy::Deadline { factor: 1.25 },
+            StragglerModel::new(0.5, 0.1).unwrap(),
+        ),
+    ] {
+        let tc = TrainerConfig { policy, straggler, eval_every: 4, ..Default::default() };
+        let mut rng = Pcg::seeded(2);
+        let fleet = paper_cpu_fleet(4, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+        let mut flat = Trainer::new(tc.clone(), fleet.clone(), &train, &test, Partition::Iid, &be)
+            .unwrap();
+        flat.run(8).unwrap();
+        let world = CellWorld {
+            fleet,
+            backends: BackendSet::homogeneous(4, "mini_res", &be),
+            train: &train,
+        };
+        let mut hier = HierTrainer::new(
+            tc,
+            HierConfig { tau: 1, policies: Vec::new() },
+            vec![world],
+            &test,
+            Partition::Iid,
+        )
+        .unwrap();
+        hier.run(8).unwrap();
+        assert_eq!(hier.cloud_rounds(), 8);
+        let log = hier.merged_log();
+        assert_policy_bitwise_equal(&flat.log, &log, &format!("hier degenerate {policy:?}"));
+        for r in &log.records {
+            assert_eq!(r.cell, 0);
+            assert!(!r.cloud, "a one-cell topology must not mark cloud merges");
+        }
+    }
+}
+
+/// The hierarchical form of the thread-invariance contract: K = 120 over
+/// three cells running *different* round policies (sync / deadline /
+/// async) with stragglers active, cloud-merged every tau = 2 rounds, must
+/// produce a bitwise-identical merged log at 1/2/8 threads. Cells are
+/// independent between cloud rounds and every cross-cell reduction runs
+/// in fixed cell order on the coordinator thread, so neither the outer
+/// (cell) nor the inner (device) fan-out can leak scheduling into
+/// results.
+fn run_hier_k120(threads: usize) -> TrainLog {
+    let k_cell = 40;
+    let cfg = SynthConfig { dim: 12, ..Default::default() };
+    let train = generate(&cfg, 20 * 3 * k_cell, 1);
+    let test = generate(&cfg, 200, 1);
+    let be = HostBackend::for_model("mini_res", 12, 10, 3).unwrap();
+    // contiguous 800-sample shard per cell
+    let cell_train: Vec<_> = (0..3)
+        .map(|c| train.subset(&(c * 800..(c + 1) * 800).collect::<Vec<_>>()))
+        .collect();
+    let mut rng = Pcg::seeded(2);
+    let cell_cfg = CellConfig::default().split_bandwidth(3);
+    let worlds: Vec<CellWorld> = cell_train
+        .iter()
+        .map(|tr| CellWorld {
+            fleet: paper_cpu_fleet(k_cell, 7e7, 1e8, cell_cfg, 4.0, 0.5, &mut rng),
+            backends: BackendSet::homogeneous(k_cell, "mini_res", &be),
+            train: tr,
+        })
+        .collect();
+    let tc = TrainerConfig {
+        threads,
+        b_max: 8,
+        eval_every: 0,
+        straggler: StragglerModel::new(0.5, 0.1).unwrap(),
+        ..Default::default()
+    };
+    let hc = HierConfig {
+        tau: 2,
+        policies: vec![
+            RoundPolicy::Sync,
+            RoundPolicy::Deadline { factor: 1.25 },
+            RoundPolicy::Async { alpha: 0.6, beta: 0.5, quorum: 0.5 },
+        ],
+    };
+    let mut hier = HierTrainer::new(tc, hc, worlds, &test, Partition::Iid).unwrap();
+    hier.run(4).unwrap();
+    hier.merged_log()
+}
+
+#[test]
+fn hier_k120_c3_mixed_policies_identical_at_1_2_8_threads() {
+    let base = run_hier_k120(1);
+    for t in [2usize, 8] {
+        let par = run_hier_k120(t);
+        assert_policy_bitwise_equal(&base, &par, &format!("hier k120 t={t}"));
+        // the hierarchy columns are part of the contract too
+        for (x, y) in base.records.iter().zip(&par.records) {
+            assert_eq!(x.cell, y.cell, "p{} cell", x.period);
+            assert_eq!(x.cloud, y.cloud, "p{} cloud", x.period);
+        }
+    }
+    // sanity: 3 cells x 4 periods interleaved period-major, the straggler
+    // fired, and the tau = 2 cadence marked periods 2 and 4 in every cell
+    assert_eq!(base.records.len(), 12);
+    for (i, r) in base.records.iter().enumerate() {
+        assert_eq!(r.cell, i % 3, "record {i}");
+        assert_eq!(r.period, i / 3 + 1, "record {i}");
+    }
+    assert!(base.records.iter().any(|r| r.dropped > 0));
+    let marked: Vec<usize> =
+        base.records.iter().filter(|r| r.cloud).map(|r| r.period).collect();
+    assert_eq!(marked, vec![2, 2, 2, 4, 4, 4]);
 }
 
 /// Seeded-jitter regression: the straggler draws are a pure function of
