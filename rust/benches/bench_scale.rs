@@ -1,0 +1,147 @@
+//! Million-device scale bench: per-round client sampling over a lazy
+//! columnar fleet. A `FleetSpec` holds O(1) state no matter what K says;
+//! each round draws a Bernoulli(frac) participant set from the
+//! counter-derived sampler (geometric skip-sampling, O(sampled) work),
+//! materializes ONLY the sampled devices, steps their links on per-device
+//! counter-derived streams, and solves the paper's joint batchsize + slot
+//! allocation over the sampled sub-problem — the exact per-round work the
+//! sampled trainer does, minus the gradient math that is already covered
+//! by the other benches.
+//!
+//! The headline row: K = 1,000,000 at sample_frac = 1e-4 must land within
+//! ~2x of the K = 100 full-participation round — the round cost is a
+//! function of the SAMPLED count, not the fleet size. Emits
+//! `BENCH_scale.json` next to the Cargo.toml, beside the other
+//! `BENCH_*.json` baselines.
+
+use std::time::Instant;
+
+use feel::coordinator::TrainerConfig;
+use feel::device::{ClientSampler, FleetSpec};
+use feel::opt;
+use feel::opt::types::Instance;
+use feel::util::json::{num, obj, s, Json};
+use feel::util::rng::Pcg;
+use feel::wireless::{CellConfig, PeriodRates};
+
+/// Stream tag for the bench's per-device link draws (participation-indexed
+/// Gauss-Markov shadowing, like the sampled trainer's).
+const LINK_TAG: u64 = 0xbe9c_11ab_ca5e_0001;
+
+const SEED: u64 = 42;
+
+struct RoundCost {
+    sampled: usize,
+    b_total: f64,
+    efficiency: f64,
+    wall_secs: f64,
+}
+
+/// One sampled round: draw the participant set, materialize it, step its
+/// links, solve the allocation. Everything touched is O(sampled).
+fn sampled_round(spec: &FleetSpec, frac: f64, period: u64) -> RoundCost {
+    let tc = TrainerConfig::default();
+    let s_bits = tc.wire_ratio * tc.quant_bits as f64 * 570_000.0;
+    let t0 = Instant::now();
+    let ids: Vec<usize> = if frac < 1.0 {
+        ClientSampler::devices(SEED, frac).unwrap().sample(period, spec.k())
+    } else {
+        (0..spec.k()).collect()
+    };
+    let mut devices: Vec<_> = ids.iter().map(|&id| spec.materialize(id)).collect();
+    let rates: Vec<PeriodRates> = devices
+        .iter_mut()
+        .map(|d| {
+            let mut rng = Pcg::for_device(SEED ^ LINK_TAG, period, d.id as u64);
+            d.link.step(&mut rng)
+        })
+        .collect();
+    let inst = Instance::from_fleet(
+        &devices,
+        &rates,
+        tc.b_max as f64,
+        s_bits,
+        tc.frame_ul,
+        tc.frame_dl,
+        tc.xi_init,
+    )
+    .unwrap();
+    let sol = opt::solve(&inst, 1e-9).unwrap();
+    RoundCost {
+        sampled: ids.len(),
+        // Horvitz-Thompson estimate of the full-fleet batch total: the
+        // sampled sum reweighted by the inverse inclusion probability
+        b_total: sol.solution.b_total / frac,
+        efficiency: sol.efficiency,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("FEEL_BENCH_QUICK").is_ok();
+    let rounds = if quick { 3 } else { 8 };
+    // (K, sample_frac): ~100 sampled devices per round at every scale
+    let sweep: &[(usize, f64)] = if quick {
+        &[(100, 1.0), (10_000, 0.01), (1_000_000, 1e-4)]
+    } else {
+        &[(100, 1.0), (10_000, 0.01), (100_000, 1e-3), (1_000_000, 1e-4)]
+    };
+
+    println!("\n== O(sampled) rounds over a lazy fleet ({rounds} rounds each) ==");
+    println!(
+        "{:>9} {:>11} {:>9} {:>12} {:>12} {:>10}",
+        "K", "frac", "sampled", "ms/round", "vs K=100", "B* (HT)"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut base_ms = f64::NAN;
+    for &(k, frac) in sweep {
+        let spec = FleetSpec::cpu(k, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, SEED);
+        let mut wall = 0f64;
+        let mut sampled = 0usize;
+        let mut b_total = 0f64;
+        let mut eff = 0f64;
+        for r in 0..rounds {
+            let c = sampled_round(&spec, frac, r as u64);
+            wall += c.wall_secs;
+            sampled += c.sampled;
+            b_total += c.b_total;
+            eff += c.efficiency;
+        }
+        let ms = wall / rounds as f64 * 1e3;
+        if k == 100 {
+            base_ms = ms;
+        }
+        println!(
+            "{:>9} {:>11} {:>9} {:>12.3} {:>11.2}x {:>10.0}",
+            k,
+            frac,
+            sampled / rounds,
+            ms,
+            ms / base_ms,
+            b_total / rounds as f64
+        );
+        rows.push(obj(vec![
+            ("k", num(k as f64)),
+            ("sample_frac", num(frac)),
+            ("mean_sampled", num(sampled as f64 / rounds as f64)),
+            ("ms_per_round", num(ms)),
+            ("vs_k100_full", num(ms / base_ms)),
+            ("ht_b_total", num(b_total / rounds as f64)),
+            ("mean_efficiency", num(eff / rounds as f64)),
+        ]));
+    }
+
+    let out = obj(vec![
+        ("bench", s("scale")),
+        ("quick", Json::Bool(quick)),
+        ("rounds", num(rounds as f64)),
+        ("seed", num(SEED as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_scale.json";
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("\nbaseline -> {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -112,6 +112,17 @@ COMMANDS:
                          rounds. C=1 (default) is the flat trainer
               --cell-policies name,name,...   per-cell round policies
                          (one per cell; default: --policy everywhere)
+              --sample-frac F   per-round client sampling: each gradient
+                         round draws a Bernoulli(F) device subset from a
+                         counter-derived stream and reweights by 1/F
+                         (Horvitz-Thompson), so the sampled estimate is
+                         unbiased for the full round. 1.0 (default) is
+                         full participation, bitwise-identical to the
+                         unsampled trainer. Gradient-exchange schemes only
+              --cell-frac F   per-block cell sampling for hierarchical
+                         runs: each tau-block runs a Bernoulli(F) subset
+                         of cells; the cloud merge reweights by 1/F and
+                         pushes the merged model to every cell
               --k N  --partition iid|noniid|dirichlet:alpha  --seed N
               --out results/
               --threads N (0 = all cores; results identical at any value)
@@ -188,7 +199,9 @@ fn experiment_from_args(args: &Args) -> Result<Experiment> {
     if let Some(spec) = args.get("cell-policies") {
         exp.cell_policies = parse_cell_policies_spec(spec)?;
     }
-    // same re-validation story for the topology knobs
+    exp.trainer.sample_frac = args.f64_or("sample-frac", exp.trainer.sample_frac)?;
+    exp.cell_frac = args.f64_or("cell-frac", exp.cell_frac)?;
+    // same re-validation story for the topology + sampling knobs
     exp.check_topology()?;
     if let Some(t) = args.get("threads") {
         exp.trainer.threads = t.parse().context("--threads")?;
@@ -585,6 +598,28 @@ mod tests {
         crate::util::threads::set_global_threads(0);
         assert!(HELP.contains("--cells C  --tau N"));
         assert!(HELP.contains("--cell-policies"));
+    }
+
+    #[test]
+    fn sampling_flags_plumb_into_experiment() {
+        let a = Args::parse(&argv("train --k 12 --sample-frac 0.25")).unwrap();
+        let exp = experiment_from_args(&a).unwrap();
+        assert_eq!(exp.trainer.sample_frac, 0.25);
+        let a = Args::parse(&argv("train --k 12 --cells 2 --cell-frac 0.5")).unwrap();
+        let exp = experiment_from_args(&a).unwrap();
+        assert_eq!(exp.cell_frac, 0.5);
+        // validation fires on the CLI surface too
+        let a = Args::parse(&argv("train --sample-frac 0")).unwrap();
+        assert!(experiment_from_args(&a).is_err());
+        let a = Args::parse(&argv("train --sample-frac 1.5")).unwrap();
+        assert!(experiment_from_args(&a).is_err());
+        // cell sampling on a flat run is an error, not a no-op
+        let a = Args::parse(&argv("train --cell-frac 0.5")).unwrap();
+        let err = experiment_from_args(&a).unwrap_err().to_string();
+        assert!(err.contains("multi-cell"), "{err}");
+        crate::util::threads::set_global_threads(0);
+        assert!(HELP.contains("--sample-frac"));
+        assert!(HELP.contains("--cell-frac"));
     }
 
     #[test]

@@ -64,6 +64,9 @@ pub struct Experiment {
     /// matching the base policy inherits its knobs; any other name gets
     /// that policy's defaults.
     pub cell_policies: Vec<RoundPolicy>,
+    /// per-block cell sampling fraction (`topology.cell_frac` /
+    /// `--cell-frac`; 1.0 = every cell runs every tau-block)
+    pub cell_frac: f64,
 }
 
 impl Default for Experiment {
@@ -89,6 +92,7 @@ impl Default for Experiment {
             cells: 1,
             tau: 1,
             cell_policies: Vec::new(),
+            cell_frac: 1.0,
         }
     }
 }
@@ -138,6 +142,7 @@ impl Experiment {
             c.f64_or("fleet.jitter", t.straggler.jitter),
             c.f64_or("fleet.dropout", t.straggler.dropout),
         )?;
+        t.sample_frac = c.f64_or("fleet.sample_frac", t.sample_frac);
         if let Some(v) = c.get("fleet.backends") {
             e.backends = parse_backend_rules(v)?;
             e.check_backend_tiers()?;
@@ -147,6 +152,7 @@ impl Experiment {
         if let Some(v) = c.get("topology.policies") {
             e.cell_policies = parse_cell_policies(v)?;
         }
+        e.cell_frac = c.f64_or("topology.cell_frac", e.cell_frac);
         e.check_topology()?;
         Ok(e)
     }
@@ -219,12 +225,21 @@ impl Experiment {
                 self.k
             );
         }
+        if !(self.trainer.sample_frac > 0.0 && self.trainer.sample_frac <= 1.0) {
+            bail!("fleet.sample_frac must be in (0, 1], got {}", self.trainer.sample_frac);
+        }
+        if !(self.cell_frac > 0.0 && self.cell_frac <= 1.0) {
+            bail!("topology.cell_frac must be in (0, 1], got {}", self.cell_frac);
+        }
         if self.cells == 1 {
             if self.tau != 1 {
                 bail!("topology.tau applies to multi-cell runs (topology.cells > 1)");
             }
             if !self.cell_policies.is_empty() {
                 bail!("topology.policies applies to multi-cell runs (topology.cells > 1)");
+            }
+            if self.cell_frac != 1.0 {
+                bail!("topology.cell_frac applies to multi-cell runs (topology.cells > 1)");
             }
         }
         if !self.cell_policies.is_empty() && self.cell_policies.len() != self.cells {
@@ -705,6 +720,28 @@ policies = ["deadline", "sync"]
         let src = "[fleet]\nk = 6\n[topology]\ncells = 3";
         let e = Experiment::from_config(&Config::parse(src).unwrap()).unwrap();
         assert_eq!(e.resolved_cell_policies(), vec![RoundPolicy::Sync; 3]);
+    }
+
+    #[test]
+    fn sampling_keys_parse_and_validate() {
+        // defaults: full participation at both levels
+        let e = Experiment::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(e.trainer.sample_frac, 1.0);
+        assert_eq!(e.cell_frac, 1.0);
+        let src = "[fleet]\nk = 12\nsample_frac = 0.25\n[topology]\ncells = 2\ncell_frac = 0.5";
+        let e = Experiment::from_config(&Config::parse(src).unwrap()).unwrap();
+        assert_eq!(e.trainer.sample_frac, 0.25);
+        assert_eq!(e.cell_frac, 0.5);
+        // out-of-range fractions fail at parse time
+        assert!(topo_err("[fleet]\nsample_frac = 0.0").contains("sample_frac"));
+        assert!(topo_err("[fleet]\nsample_frac = 1.5").contains("sample_frac"));
+        let src = "[fleet]\nk = 6\n[topology]\ncells = 2\ncell_frac = 0.0";
+        assert!(topo_err(src).contains("cell_frac"));
+        let src = "[fleet]\nk = 6\n[topology]\ncells = 2\ncell_frac = 2.0";
+        assert!(topo_err(src).contains("cell_frac"));
+        // cell sampling on a flat run is an error, not a no-op
+        let err = topo_err("[topology]\ncell_frac = 0.5");
+        assert!(err.contains("multi-cell"), "{err}");
     }
 
     fn topo_err(src: &str) -> String {

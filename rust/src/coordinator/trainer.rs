@@ -24,7 +24,7 @@ use super::worker::Worker;
 use super::xi::XiEstimator;
 use crate::compress::Sbc;
 use crate::data::{partition, Dataset, DeviceData, Partition};
-use crate::device::{Device, StragglerModel};
+use crate::device::{ClientSampler, Device, StragglerModel};
 use crate::exec::{self, Engine};
 use crate::grad::Aggregator;
 use crate::opt::types::Instance;
@@ -32,6 +32,13 @@ use crate::runtime::hostmodel::Workspace;
 use crate::sched::{RoundPolicy, RoundReport, RoundScheduler};
 use crate::util::rng::Pcg;
 use crate::wireless::PeriodRates;
+
+/// Stream tag for sampled-mode link evolution: each sampled device's
+/// channel draw comes from its own `(seed ^ TAG, period, device)`
+/// counter-derived stream instead of the trainer's sequential RNG, so a
+/// round's draws cost O(sampled) and never depend on which other devices
+/// were drawn.
+const SAMPLED_LINK_TAG: u64 = 0x11ab_ca5e_11ab_ca5e;
 
 /// Trainer configuration (see config/ for the file-based form).
 #[derive(Clone, Debug)]
@@ -69,6 +76,12 @@ pub struct TrainerConfig {
     /// per-device latency jitter + dropout injected into round scheduling
     /// (`StragglerModel::none()` = the paper's deterministic latencies)
     pub straggler: StragglerModel,
+    /// per-round client sampling fraction in (0, 1]: each period draws an
+    /// independent Bernoulli(frac) participant set from a counter-derived
+    /// stream and plans/executes over that subset only. 1.0 routes the
+    /// legacy full-participation path bitwise. Gradient-exchange schemes
+    /// only.
+    pub sample_frac: f64,
 }
 
 impl Default for TrainerConfig {
@@ -90,6 +103,7 @@ impl Default for TrainerConfig {
             threads: 0,
             policy: RoundPolicy::Sync,
             straggler: StragglerModel::none(),
+            sample_frac: 1.0,
         }
     }
 }
@@ -266,6 +280,12 @@ pub struct Trainer<'a> {
     /// round-policy scheduler: event queue, straggler injection, deadline
     /// carry ledger, async in-flight work
     sched: RoundScheduler,
+    /// per-round participant sampler (`None` = full participation — the
+    /// legacy path, untouched down to the RNG draw order)
+    sampler: Option<ClientSampler>,
+    /// per-period link-rate scratch, reused across periods so the channel
+    /// draw allocates nothing after the first round
+    rates_scratch: Vec<PeriodRates>,
     /// coordinator-thread eval scratch (global-model evaluation path)
     eval_scratch: Workspace,
     /// which cell of a hierarchical topology this trainer serves (stamped
@@ -366,6 +386,23 @@ impl<'a> Trainer<'a> {
         // revalidate pub-field structs that may not have come through the
         // checked constructors
         StragglerModel::new(cfg.straggler.jitter, cfg.straggler.dropout)?;
+        // client sampling rides the gradient-aggregation path too: a
+        // sampled round reweights the aggregate by the inclusion
+        // probability, which has no analogue for the local-training schemes
+        if cfg.sample_frac < 1.0 && !cfg.scheme.exchanges_gradients() {
+            bail!(
+                "client sampling (sample_frac {}) requires a gradient-exchange scheme, got {:?}",
+                cfg.sample_frac,
+                cfg.scheme.name()
+            );
+        }
+        let sampler = if cfg.sample_frac < 1.0 {
+            Some(ClientSampler::devices(cfg.seed, cfg.sample_frac)?)
+        } else if cfg.sample_frac == 1.0 {
+            None
+        } else {
+            bail!("sample_frac must be in (0, 1], got {}", cfg.sample_frac);
+        };
         let sched = RoundScheduler::new(cfg.policy, cfg.straggler, fleet.len(), cfg.seed)?;
         Ok(Trainer {
             cfg,
@@ -382,6 +419,8 @@ impl<'a> Trainer<'a> {
             last_train_loss: None,
             aggs,
             sched,
+            sampler,
+            rates_scratch: Vec::new(),
             eval_scratch: Workspace::new(),
             cell_id: 0,
             log: TrainLog::default(),
@@ -486,21 +525,30 @@ impl<'a> Trainer<'a> {
 
     /// eta = O(sqrt(B)) scaling (paper §III-A, refs [36][37]) for an
     /// aggregated batch of `b`; capped at 1x base so whole-shard schemes
-    /// (gradient/model FL) don't blow up.
+    /// (gradient/model FL) don't blow up. A sampled round scales the
+    /// applied batch by the inverse inclusion probability first — the
+    /// Horvitz–Thompson estimate of the batch the full fleet would have
+    /// contributed — so the step size stays unbiased for the
+    /// full-participation schedule. `b / 1.0 == b` bitwise, so the
+    /// unsampled path is untouched.
     fn lr_for_batch(&self, b: usize) -> f64 {
+        let b_est = b as f64 / self.cfg.sample_frac;
         self.cfg.base_lr
-            * (b as f64 / (self.fleet.len() * self.cfg.b_max) as f64)
+            * (b_est / (self.fleet.len() * self.cfg.b_max) as f64)
                 .sqrt()
                 .min(1.0)
     }
 
-    /// This period's optimizer instance from fresh channel draws.
+    /// This period's optimizer instance from fresh channel draws. The
+    /// rate buffer is trainer-owned scratch, reused across periods.
     fn period_instance(&mut self) -> Result<Instance> {
-        let rates: Vec<PeriodRates> = {
+        let mut rates = std::mem::take(&mut self.rates_scratch);
+        rates.clear();
+        {
             let rng = &mut self.rng;
-            self.fleet.iter_mut().map(|d| d.link.step(rng)).collect()
-        };
-        Instance::from_fleet(
+            rates.extend(self.fleet.iter_mut().map(|d| d.link.step(rng)));
+        }
+        let inst = Instance::from_fleet(
             &self.fleet,
             &rates,
             self.cfg.b_max as f64,
@@ -508,7 +556,38 @@ impl<'a> Trainer<'a> {
             self.cfg.frame_ul,
             self.cfg.frame_dl,
             self.xi.value(),
-        )
+        );
+        self.rates_scratch = rates;
+        inst
+    }
+
+    /// Sampled-round optimizer instance: O(sampled) channel draws keyed by
+    /// `(seed, period, device)` counter-derived streams, so each device's
+    /// link evolution is independent of which other devices were drawn and
+    /// of thread count. Only sampled devices' Gauss–Markov shadow state
+    /// advances — link evolution is participation-indexed in sampled mode
+    /// (a deliberate modeling choice: O(K) per-round work would defeat the
+    /// point of sampling).
+    fn sampled_period_instance(&mut self, ids: &[usize]) -> Result<Instance> {
+        let period = self.server.period as u64;
+        let mut rates = std::mem::take(&mut self.rates_scratch);
+        rates.clear();
+        for &g in ids {
+            let mut lrng = Pcg::for_device(self.cfg.seed ^ SAMPLED_LINK_TAG, period, g as u64);
+            rates.push(self.fleet[g].link.step(&mut lrng));
+        }
+        let inst = Instance::from_fleet_ids(
+            &self.fleet,
+            ids,
+            &rates,
+            self.cfg.b_max as f64,
+            self.grad_wire_bits(),
+            self.cfg.frame_ul,
+            self.cfg.frame_dl,
+            self.xi.value(),
+        );
+        self.rates_scratch = rates;
+        inst
     }
 
     /// Run `periods` training periods; returns the log.
@@ -538,19 +617,51 @@ impl<'a> Trainer<'a> {
     /// [`SimClock`] only, so every policy shares one comparable time axis.
     pub fn step_period(&mut self) -> Result<()> {
         let t_step = Instant::now();
-        let inst = self.period_instance()?;
-        let shard_sizes: Vec<usize> = self.workers.iter().map(|w| w.shard_len()).collect();
-        let mut plan = plan_period(
-            self.cfg.scheme,
-            &inst,
-            &shard_sizes,
-            self.param_wire_bits(),
-            self.cfg.eps,
-            &mut self.rng,
-        )?;
+        // draw this period's participants first (counter-derived stream —
+        // consumes nothing from the trainer RNG, so the unsampled path is
+        // untouched down to the draw order)
+        let sampled: Option<Vec<usize>> = self
+            .sampler
+            .map(|s| s.sample(self.server.period as u64, self.fleet.len()));
+        let (inst, mut plan) = match &sampled {
+            Some(ids) => {
+                // O(sampled): instance, shard sizes, and the optimizer all
+                // see the sampled subset only; the plan is then scattered
+                // back to global device indexing for execution
+                let inst = self.sampled_period_instance(ids)?;
+                let shard_sizes: Vec<usize> =
+                    ids.iter().map(|&g| self.workers[g].shard_len()).collect();
+                let splan = plan_period(
+                    self.cfg.scheme,
+                    &inst,
+                    &shard_sizes,
+                    self.param_wire_bits(),
+                    self.cfg.eps,
+                    &mut self.rng,
+                )?;
+                (inst, scatter_plan(splan, ids, self.fleet.len()))
+            }
+            None => {
+                let inst = self.period_instance()?;
+                let shard_sizes: Vec<usize> =
+                    self.workers.iter().map(|w| w.shard_len()).collect();
+                let plan = plan_period(
+                    self.cfg.scheme,
+                    &inst,
+                    &shard_sizes,
+                    self.param_wire_bits(),
+                    self.cfg.eps,
+                    &mut self.rng,
+                )?;
+                (inst, plan)
+            }
+        };
         // deadline policy: fold batches deferred by last period's misses
         // back into this period's plan (no-op otherwise)
-        self.sched.apply_carry(&mut plan, &inst);
+        match &sampled {
+            Some(ids) => self.sched.apply_carry_sampled(&mut plan, &inst, ids),
+            None => self.sched.apply_carry(&mut plan, &inst),
+        }
         self.log.wall.solver_secs += t_step.elapsed().as_secs_f64();
         let b_total: usize = plan.batches.iter().sum();
 
@@ -559,7 +670,7 @@ impl<'a> Trainer<'a> {
             // closes, from the batch that actually entered the update —
             // a deadline/async round may apply far less than the plan
             Scheme::Proposed | Scheme::GradientFl | Scheme::Fixed { .. } => {
-                self.gradient_period(&plan)?
+                self.gradient_period(&plan, sampled.as_deref())?
             }
             Scheme::ModelFl { local_batch } => {
                 // local steps see batch `local_batch`, not the plan's shard
@@ -649,7 +760,11 @@ impl<'a> Trainer<'a> {
     /// total aggregated batch), which equals the planned total under a
     /// clean sync barrier but shrinks with every dropped or deferred
     /// contribution.
-    fn gradient_period(&mut self, plan: &Plan) -> Result<(RoundReport, f64)> {
+    fn gradient_period(
+        &mut self,
+        plan: &Plan,
+        participants: Option<&[usize]>,
+    ) -> Result<(RoundReport, f64)> {
         for agg in &mut self.aggs {
             agg.reset();
         }
@@ -662,6 +777,7 @@ impl<'a> Trainer<'a> {
             plan,
             self.server.period as u64,
             self.clock.now(),
+            participants,
             &mut self.aggs,
         )?;
         self.log.wall.reduce_secs += report.reduce_secs;
@@ -806,6 +922,30 @@ impl<'a> Trainer<'a> {
     /// The round policy this trainer closes periods with.
     pub fn policy(&self) -> RoundPolicy {
         self.sched.policy()
+    }
+}
+
+/// Scatter a plan solved over the sampled subset (`splan.batches[i]`
+/// belongs to global device `ids[i]`) back to global device indexing:
+/// unsampled devices get batch 0 / finish 0.0 and are never dispatched
+/// (the scheduler's participant list keeps them out of the round — the
+/// executors clamp batches to >= 1, so masking is load-bearing, not just
+/// an optimization). Scalar fields carry over unchanged.
+fn scatter_plan(splan: Plan, ids: &[usize], k: usize) -> Plan {
+    debug_assert_eq!(splan.batches.len(), ids.len());
+    let mut batches = vec![0usize; k];
+    let mut finish = vec![0f64; k];
+    for (i, &g) in ids.iter().enumerate() {
+        batches[g] = splan.batches[i];
+        finish[g] = splan.finish[i];
+    }
+    Plan {
+        batches,
+        t_period: splan.t_period,
+        t_up: splan.t_up,
+        t_down: splan.t_down,
+        finish,
+        predicted_efficiency: splan.predicted_efficiency,
     }
 }
 
@@ -1076,6 +1216,62 @@ mod tests {
         assert_eq!(log.records[4].applied, 1);
         for w in log.records.windows(2) {
             assert!(w[1].sim_time > w[0].sim_time);
+        }
+    }
+
+    #[test]
+    fn sampling_rejects_bad_fractions_and_local_training_schemes() {
+        let (train, test, fleet) = tiny_world();
+        let be = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+        for bad in [0.0, -0.25, 1.5, f64::NAN] {
+            let cfg = TrainerConfig { sample_frac: bad, ..Default::default() };
+            let r = Trainer::new(cfg, fleet.clone(), &train, &test, Partition::Iid, &be);
+            assert!(r.is_err(), "sample_frac {bad} must be rejected");
+        }
+        // the HT reweighting has no analogue for local-training schemes
+        let cfg = TrainerConfig {
+            scheme: Scheme::ModelFl { local_batch: 32 },
+            sample_frac: 0.5,
+            ..Default::default()
+        };
+        let err = Trainer::new(cfg, fleet.clone(), &train, &test, Partition::Iid, &be)
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(err.contains("gradient-exchange"), "{err}");
+    }
+
+    #[test]
+    fn sampled_rounds_run_subsets_and_learn_under_every_policy() {
+        let (train, test, fleet) = tiny_world();
+        let be = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+        for policy in [
+            RoundPolicy::Sync,
+            RoundPolicy::Deadline { factor: 1.5 },
+            RoundPolicy::Async { alpha: 0.6, beta: 0.5, quorum: 0.5 },
+        ] {
+            let cfg = TrainerConfig {
+                sample_frac: 0.6,
+                policy,
+                eval_every: 0,
+                ..Default::default()
+            };
+            let mut tr =
+                Trainer::new(cfg, fleet.clone(), &train, &test, Partition::Iid, &be).unwrap();
+            tr.run(12).unwrap();
+            assert_eq!(tr.log.records.len(), 12, "{policy:?}");
+            // Bernoulli(0.6) over K = 4 must leave someone out sometimes
+            assert!(
+                tr.log.records.iter().any(|r| r.applied < 4),
+                "{policy:?}: no round ran a strict subset"
+            );
+            for r in &tr.log.records {
+                assert!(r.applied <= 4, "{policy:?}");
+                assert!(r.t_period > 0.0, "{policy:?}");
+            }
+            let l0 = tr.log.records[0].train_loss;
+            let l1 = tr.log.records.last().unwrap().train_loss;
+            assert!(l1 < l0 * 1.2, "{policy:?}: loss {l0} -> {l1}");
         }
     }
 

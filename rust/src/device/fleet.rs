@@ -91,6 +91,117 @@ pub fn paper_cpu_fleet(
         .collect()
 }
 
+/// Stream tag for [`FleetSpec`] materialization: keeps the lazy fleet's
+/// per-device draws off every other counter-derived stream family.
+const FLEET_SPEC_TAG: u64 = 0xf1ee_75ec_0000_00aa;
+
+/// Compute layout of a lazy fleet: the paper's CPU tiers or one shared
+/// GPU profile.
+#[derive(Clone, Copy, Debug)]
+enum FleetKind {
+    Cpu { cycles_per_sample: f64, cycles_per_update: f64 },
+    Gpu(GpuModule),
+}
+
+/// O(1)-memory columnar fleet description: tier layout + cell geometry +
+/// shadowing parameters + a seed. Where [`paper_cpu_fleet`] eagerly builds
+/// `Vec<Device>` (per-device position and shadowing state up front, from
+/// one *sequential* RNG), a `FleetSpec` materializes a [`Device`] on
+/// demand from a counter-derived per-device stream — so device `id` is a
+/// pure function of `(spec, id)`, independent of which other ids were
+/// materialized, in what order, or at what period. That makes a
+/// million-device fleet representable in a few dozen bytes, with only the
+/// round's *sampled* devices ever existing as state.
+///
+/// The two constructions are distinct RNG-stream families: an eager
+/// fleet's sequential draws cannot be skipped to (a Box–Muller normal
+/// consumes a variable number of raws), so `FleetSpec` does not reproduce
+/// `paper_cpu_fleet` device-for-device — it reproduces *itself*, which is
+/// the property the lazy path needs (`materialize(id)` is bitwise what
+/// `materialize_all()[id]` builds).
+#[derive(Clone, Copy, Debug)]
+pub struct FleetSpec {
+    k: usize,
+    kind: FleetKind,
+    cell: CellConfig,
+    shadow_sigma_db: f64,
+    shadow_rho: f64,
+    seed: u64,
+}
+
+impl FleetSpec {
+    /// The paper's CPU fleet layout (§VI-B tiers), lazily.
+    pub fn cpu(
+        k: usize,
+        cycles_per_sample: f64,
+        cycles_per_update: f64,
+        cell: CellConfig,
+        shadow_sigma_db: f64,
+        shadow_rho: f64,
+        seed: u64,
+    ) -> FleetSpec {
+        FleetSpec {
+            k,
+            kind: FleetKind::Cpu { cycles_per_sample, cycles_per_update },
+            cell,
+            shadow_sigma_db,
+            shadow_rho,
+            seed,
+        }
+    }
+
+    /// The paper's GPU fleet layout (§VI-D, identical modules), lazily.
+    pub fn gpu(
+        k: usize,
+        gpu: GpuModule,
+        cell: CellConfig,
+        shadow_sigma_db: f64,
+        shadow_rho: f64,
+        seed: u64,
+    ) -> FleetSpec {
+        FleetSpec { k, kind: FleetKind::Gpu(gpu), cell, shadow_sigma_db, shadow_rho, seed }
+    }
+
+    /// Fleet size this spec describes (no state of that size exists).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Device `id`'s compute module — pure tier arithmetic, no RNG.
+    pub fn compute_of(&self, id: usize) -> Compute {
+        match self.kind {
+            FleetKind::Cpu { cycles_per_sample, cycles_per_update } => {
+                let tiers: [f64; CPU_TIER_COUNT] = [0.7e9, 1.4e9, 2.1e9];
+                Compute::Cpu(CpuModule::new(
+                    tiers[id % tiers.len()],
+                    cycles_per_sample,
+                    cycles_per_update,
+                ))
+            }
+            FleetKind::Gpu(g) => Compute::Gpu(g),
+        }
+    }
+
+    /// Materialize device `id` from its counter-derived stream. Bitwise
+    /// identical no matter when or in what order ids are materialized.
+    pub fn materialize(&self, id: usize) -> Device {
+        assert!(id < self.k, "device {id} outside fleet of {}", self.k);
+        let mut rng = Pcg::for_device(self.seed ^ FLEET_SPEC_TAG, 0, id as u64);
+        Device {
+            id,
+            compute: self.compute_of(id),
+            link: DeviceLink::sample(self.cell, self.shadow_sigma_db, self.shadow_rho, &mut rng),
+        }
+    }
+
+    /// Eager twin: the whole fleet as `materialize` would build it id by
+    /// id (the lazy-vs-eager equivalence test hinges on this being a plain
+    /// map over `materialize`).
+    pub fn materialize_all(&self) -> Vec<Device> {
+        (0..self.k).map(|id| self.materialize(id)).collect()
+    }
+}
+
 /// The paper's GPU fleet (§VI-D): K identical GTX-1080-Ti-like devices.
 pub fn paper_gpu_fleet(
     k: usize,
@@ -143,6 +254,56 @@ mod tests {
             assert!((g.grad_latency(b) - (b / v + off)).abs() < 1e-12, "b={b}");
         }
         assert_eq!(g.batch_floor(), 32.0);
+    }
+
+    #[test]
+    fn lazy_materialization_matches_eager_bitwise_per_id() {
+        let spec = FleetSpec::cpu(32, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, 11);
+        let eager = spec.materialize_all();
+        assert_eq!(eager.len(), 32);
+        // materialize out of order, repeatedly: every field of every
+        // device must be bitwise what the eager pass built
+        for &id in &[31usize, 0, 17, 17, 5] {
+            let d = spec.materialize(id);
+            let e = &eager[id];
+            assert_eq!(d.id, e.id);
+            assert_eq!(d.compute, e.compute);
+            assert_eq!(d.link.dist_m.to_bits(), e.link.dist_m.to_bits(), "id {id}");
+            let (a, b) = (d.link.current(), e.link.current());
+            assert_eq!(a.ul_bps.to_bits(), b.ul_bps.to_bits(), "id {id}");
+            assert_eq!(a.dl_bps.to_bits(), b.dl_bps.to_bits(), "id {id}");
+        }
+    }
+
+    #[test]
+    fn spec_is_o1_memory_and_keeps_tier_layout() {
+        // the whole point: a million-device fleet is a value, not a Vec
+        assert!(std::mem::size_of::<FleetSpec>() <= 160);
+        let spec = FleetSpec::cpu(1_000_000, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, 3);
+        assert_eq!(spec.k(), 1_000_000);
+        // tier arithmetic matches the eager constructor's `id % 3` layout
+        for id in [0usize, 1, 2, 999_999] {
+            let Compute::Cpu(c) = spec.compute_of(id) else { panic!("cpu spec") };
+            let tiers = [0.7e9, 1.4e9, 2.1e9];
+            assert_eq!(c.freq_hz, tiers[id % 3], "id {id}");
+        }
+        // distinct devices land at distinct positions
+        let a = spec.materialize(12).link.dist_m;
+        let b = spec.materialize(999_999).link.dist_m;
+        assert!((a - b).abs() > 1e-9);
+        // and distinct seeds decorrelate the same device
+        let other = FleetSpec::cpu(1_000_000, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, 4);
+        let (x, y) = (spec.materialize(12), other.materialize(12));
+        assert_ne!(x.link.dist_m.to_bits(), y.link.dist_m.to_bits());
+    }
+
+    #[test]
+    fn gpu_spec_materializes_identical_modules() {
+        let gpu = GpuModule::new(0.1, 0.002, 32.0, 1e9, 1e13);
+        let spec = FleetSpec::gpu(6, gpu, CellConfig::default(), 0.0, 0.0, 9);
+        for d in spec.materialize_all() {
+            assert_eq!(d.compute, Compute::Gpu(gpu));
+        }
     }
 
     #[test]

@@ -4,9 +4,11 @@
 pub mod cpu;
 pub mod fleet;
 pub mod gpu;
+pub mod sampling;
 pub mod straggler;
 
 pub use cpu::CpuModule;
-pub use fleet::{paper_cpu_fleet, paper_gpu_fleet, Compute, Device, CPU_TIER_COUNT};
+pub use fleet::{paper_cpu_fleet, paper_gpu_fleet, Compute, Device, FleetSpec, CPU_TIER_COUNT};
 pub use gpu::{paper_profiles, GpuModule};
+pub use sampling::ClientSampler;
 pub use straggler::{Perturbation, StragglerModel};

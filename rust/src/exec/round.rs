@@ -304,7 +304,10 @@ pub fn model_fl_round(
     check_fleet_geometry(backends, workers.len(), params)?;
     engine.run_mut(workers, |k, w| {
         let backend = backends.for_device(k);
-        let mut local = params[backends.family_of(k)].clone();
+        // the working copy of the globals comes from the worker's pool,
+        // and every superseded parameter buffer goes back to it — the
+        // local-epoch loop stops churning p-sized allocations
+        let mut local = w.scratch.copy_of(params[backends.family_of(k)].as_slice());
         let n = w.shard_len();
         let steps = n.div_ceil(local_batch).max(1);
         let mut rng = Pcg::for_device(seed, period, k as u64);
@@ -315,7 +318,8 @@ pub fn model_fl_round(
                 .train_step_ws(&local, &x, &y, &mut w.scratch)
                 .with_context(|| format!("device {k} local step"))?;
             last_loss = s.loss;
-            local = backend.apply_update(&local, &s.grads, lr)?;
+            let next = backend.apply_update(&local, &s.grads, lr)?;
+            w.scratch.recycle(std::mem::replace(&mut local, next));
         }
         Ok(LocalFitOutcome { params: local, weight: n as f64, loss: last_loss as f64 })
     })
@@ -338,18 +342,22 @@ pub fn individual_round(
     check_round_geometry(backends, workers.len(), params, batches.len())?;
     engine.run_mut(workers, |k, w| {
         let backend = backends.for_device(k);
-        let mut local = w
-            .local_params
-            .take()
-            .unwrap_or_else(|| params[backends.family_of(k)].clone());
+        // first touch draws the family-global copy from the worker's pool;
+        // thereafter the kept local model is updated and its predecessor
+        // buffer recycled instead of dropped
+        let local = match w.local_params.take() {
+            Some(v) => v,
+            None => w.scratch.copy_of(params[backends.family_of(k)].as_slice()),
+        };
         let b = batches[k].max(1);
         let mut rng = Pcg::for_device(seed, period, k as u64);
         let (x, y) = w.data.sample_with(train, b, &mut rng);
         let s = backend
             .train_step_ws(&local, &x, &y, &mut w.scratch)
             .with_context(|| format!("device {k} individual step"))?;
-        local = backend.apply_update(&local, &s.grads, lr)?;
-        w.local_params = Some(local);
+        let next = backend.apply_update(&local, &s.grads, lr)?;
+        w.scratch.recycle(local);
+        w.local_params = Some(next);
         Ok(LocalStepOutcome { weight: b as f64, loss: s.loss as f64 })
     })
 }

@@ -179,18 +179,29 @@ pub struct HierWorld {
 }
 
 impl HierWorld {
-    /// Borrowed per-cell views for `HierTrainer::new`, in cell order.
-    pub fn cell_worlds(&self) -> Vec<CellWorld<'_>> {
-        self.fleets
-            .iter()
+    /// Drain the per-cell fleets out of the world so `cell_worlds` can
+    /// hand them to the trainer without a deep clone. Split from
+    /// `cell_worlds` so the `&mut self` borrow ends before the trainer
+    /// starts borrowing `&self` views.
+    pub fn take_fleets(&mut self) -> Vec<Vec<Device>> {
+        std::mem::take(&mut self.fleets)
+    }
+
+    /// Per-cell views for `HierTrainer::new`, in cell order: borrowed
+    /// data/backends, with ownership of the (taken) fleets moved in.
+    pub fn cell_worlds(&self, fleets: Vec<Vec<Device>>) -> Result<Vec<CellWorld<'_>>> {
+        anyhow::ensure!(
+            fleets.len() == self.cell_train.len(),
+            "{} fleets for {} cells (did take_fleets run twice?)",
+            fleets.len(),
+            self.cell_train.len()
+        );
+        Ok(fleets
+            .into_iter()
             .zip(&self.cell_train)
             .zip(&self.backends)
-            .map(|((fleet, train), fb)| CellWorld {
-                fleet: fleet.clone(),
-                backends: fb.set(),
-                train,
-            })
-            .collect()
+            .map(|((fleet, train), fb)| CellWorld { fleet, backends: fb.set(), train })
+            .collect())
     }
 }
 
@@ -259,13 +270,19 @@ pub fn run_hier_scheme(
     periods: usize,
     warm_steps: usize,
 ) -> Result<HierRun> {
-    let world = make_hier_world(exp, kind)?;
+    let mut world = make_hier_world(exp, kind)?;
+    let fleets = world.take_fleets();
     let mut cfg = exp.trainer.clone();
     cfg.scheme = scheme;
     // tau flows from the topology (one source of truth), the per-cell
-    // policies from the experiment's resolved overrides
-    let hc = HierConfig { tau: world.topo.tau(), policies: exp.resolved_cell_policies() };
-    let mut tr = HierTrainer::new(cfg, hc, world.cell_worlds(), &world.test, exp.partition)?;
+    // policies and sampling fraction from the experiment's overrides
+    let hc = HierConfig {
+        tau: world.topo.tau(),
+        policies: exp.resolved_cell_policies(),
+        cell_frac: exp.cell_frac,
+    };
+    let worlds = world.cell_worlds(fleets)?;
+    let mut tr = HierTrainer::new(cfg, hc, worlds, &world.test, exp.partition)?;
     if warm_steps > 0 {
         tr.warm_start(warm_steps, 64, 0.05)?;
     }

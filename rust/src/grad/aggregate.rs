@@ -64,6 +64,26 @@ impl Aggregator {
         self.contributions
     }
 
+    /// Add a contribution drawn under partial participation: the weight is
+    /// scaled by the Horvitz–Thompson factor `1 / inclusion_prob`, so the
+    /// accumulated *sum* is an unbiased estimate of the full-participation
+    /// sum. Under uniform inclusion the factor cancels in [`average`]
+    /// (`Aggregator::average`) — the correction matters wherever absolute
+    /// totals leave the aggregator (cloud merges, effective-batch
+    /// accounting). `inclusion_prob = 1.0` reproduces [`add`]
+    /// (`Aggregator::add`) bitwise.
+    pub fn add_inverse_prob(
+        &mut self,
+        grad: &[f32],
+        weight: f64,
+        inclusion_prob: f64,
+    ) -> Result<()> {
+        if !(inclusion_prob > 0.0 && inclusion_prob <= 1.0) {
+            bail!("inclusion probability must be in (0, 1], got {inclusion_prob}");
+        }
+        self.add(grad, weight / inclusion_prob)
+    }
+
     /// Staleness-aware add (async rounds, see `sched/`): the gradient
     /// enters eq. 1 with its batch weight discounted by the polynomial
     /// decay `alpha / (1 + s)^beta` ([`staleness_factor`]). At staleness 0
@@ -196,6 +216,26 @@ mod tests {
         assert!(a.add(&[1.0], 0.0).is_err());
         assert!(a.add(&[1.0], -2.0).is_err());
         assert!(a.add(&[1.0], f64::NAN).is_err());
+    }
+
+    #[test]
+    fn inverse_prob_scales_weight_and_full_prob_is_identity() {
+        let g = vec![2.0f32, -4.0];
+        let mut a = Aggregator::new(2);
+        a.add_inverse_prob(&g, 3.0, 0.25).unwrap();
+        let mut b = Aggregator::new(2);
+        b.add(&g, 12.0).unwrap();
+        assert_eq!(a.average().unwrap(), b.average().unwrap());
+        // probability 1.0 divides by exactly 1.0: bitwise add()
+        let mut c = Aggregator::new(2);
+        c.add_inverse_prob(&g, 3.0, 1.0).unwrap();
+        let mut d = Aggregator::new(2);
+        d.add(&g, 3.0).unwrap();
+        assert_eq!(c.average().unwrap(), d.average().unwrap());
+        // out-of-range probabilities are rejected
+        for p in [0.0, -0.5, 1.5, f64::NAN] {
+            assert!(a.add_inverse_prob(&g, 3.0, p).is_err(), "prob {p}");
+        }
     }
 
     #[test]

@@ -98,6 +98,82 @@ impl CloudAggregator {
         }
         Ok(merged)
     }
+
+    /// A cloud round over a sampled cell subset: only `active` cells
+    /// contribute, each weighted by `samples / frac` (Horvitz–Thompson —
+    /// the uniform 1/frac cancels in the self-normalized average, but
+    /// keeping it makes the estimator's unbiasedness explicit and the
+    /// `frac == 1.0` case bitwise-identical to `merge`). The merged model
+    /// is pushed back to **every** member cell, active or not, so the
+    /// fleet leaves each cloud round consistent. A family whose owners
+    /// were all unsampled this block stands untouched.
+    pub fn merge_sampled(
+        &mut self,
+        cells: &mut [Trainer<'_>],
+        active: &[bool],
+        frac: f64,
+    ) -> Result<usize> {
+        if active.len() != cells.len() {
+            bail!("active mask covers {} cells but the fleet has {}", active.len(), cells.len());
+        }
+        self.rounds += 1;
+        if cells.len() < 2 {
+            return Ok(0);
+        }
+        let mut names: Vec<String> = Vec::new();
+        for tr in cells.iter() {
+            let bs = tr.backend_set();
+            for f in 0..bs.family_count() {
+                let name = bs.family_name(f);
+                if !names.iter().any(|n| n == name) {
+                    names.push(name.to_string());
+                }
+            }
+        }
+        let mut merged = 0usize;
+        for name in &names {
+            let members: Vec<(usize, usize)> = cells
+                .iter()
+                .enumerate()
+                .filter_map(|(c, tr)| {
+                    let bs = tr.backend_set();
+                    (0..bs.family_count())
+                        .find(|&f| bs.family_name(f) == name)
+                        .map(|f| (c, f))
+                })
+                .collect();
+            if members.len() < 2 {
+                continue;
+            }
+            let (c0, f0) = members[0];
+            let p = cells[c0].server.family_params(f0).len();
+            let mut agg = Aggregator::new(p);
+            for &(c, f) in &members {
+                let params = cells[c].server.family_params(f);
+                if params.len() != p {
+                    bail!(
+                        "cloud merge: family {name:?} has {} parameters in cell {c0} but {} \
+                         in cell {c} — one family name must mean one model geometry",
+                        p,
+                        params.len()
+                    );
+                }
+                if active[c] {
+                    agg.add_inverse_prob(params, cells[c].total_samples() as f64, frac)?;
+                }
+            }
+            if agg.contributions() == 0 {
+                // every owner sat this block out: the family stands
+                continue;
+            }
+            let global = agg.finish()?;
+            for &(c, f) in &members {
+                cells[c].server.set_family_params(f, global.clone());
+            }
+            merged += 1;
+        }
+        Ok(merged)
+    }
 }
 
 #[cfg(test)]
@@ -165,6 +241,51 @@ mod tests {
                 assert_eq!(v, 5.0);
             }
         }
+    }
+
+    #[test]
+    fn sampled_merge_reweights_active_cells_and_pushes_to_all() {
+        let cfg = SynthConfig { dim: 8, ..Default::default() };
+        let train_a = generate(&cfg, 100, 1);
+        let train_b = generate(&cfg, 200, 1);
+        let test = generate(&cfg, 40, 1);
+        let be = HostBackend::for_model("mini_dense", 8, 10, 3).unwrap();
+        let mut cells = vec![
+            cell_trainer(&train_a, &test, &be, 2, 1),
+            cell_trainer(&train_b, &test, &be, 2, 2),
+        ];
+        let p = cells[0].server.p();
+        let mut cloud = CloudAggregator::new();
+        // both cells active: the uniform 1/frac cancels, so the result is
+        // the plain sample-weighted FedAvg — (3*100 + 6*200)/300 = 5.0
+        cells[0].server.set_family_params(0, vec![3.0; p]);
+        cells[1].server.set_family_params(0, vec![6.0; p]);
+        assert_eq!(cloud.merge_sampled(&mut cells, &[true, true], 0.5).unwrap(), 1);
+        for tr in &cells {
+            for &v in tr.server.params() {
+                assert_eq!(v, 5.0);
+            }
+        }
+        // only cell 1 active: its model IS the round's estimate, and the
+        // push lands on the inactive cell too
+        cells[0].server.set_family_params(0, vec![3.0; p]);
+        cells[1].server.set_family_params(0, vec![6.0; p]);
+        assert_eq!(cloud.merge_sampled(&mut cells, &[false, true], 0.5).unwrap(), 1);
+        for tr in &cells {
+            for &v in tr.server.params() {
+                assert_eq!(v, 6.0);
+            }
+        }
+        // no cell active: the family stands untouched
+        cells[0].server.set_family_params(0, vec![3.0; p]);
+        cells[1].server.set_family_params(0, vec![6.0; p]);
+        assert_eq!(cloud.merge_sampled(&mut cells, &[false, false], 0.5).unwrap(), 0);
+        assert_eq!(cells[0].server.params()[0], 3.0);
+        assert_eq!(cells[1].server.params()[0], 6.0);
+        // the mask must cover the fleet
+        let err = cloud.merge_sampled(&mut cells, &[true], 0.5).unwrap_err().to_string();
+        assert!(err.contains("active mask"), "{err}");
+        assert_eq!(cloud.rounds(), 3);
     }
 
     #[test]

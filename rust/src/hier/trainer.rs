@@ -24,7 +24,7 @@ use anyhow::{bail, Result};
 use super::cloud::CloudAggregator;
 use crate::coordinator::{BackendSet, TrainLog, Trainer, TrainerConfig, WallStats};
 use crate::data::{Dataset, Partition};
-use crate::device::Device;
+use crate::device::{ClientSampler, Device};
 use crate::exec::Engine;
 use crate::sched::RoundPolicy;
 
@@ -51,11 +51,18 @@ pub struct HierConfig {
     /// per-cell round-policy overrides, one per cell in cell order
     /// (empty = every cell closes rounds with the base config's policy)
     pub policies: Vec<RoundPolicy>,
+    /// per-block cell sampling fraction in (0, 1]: each tau-block draws a
+    /// Bernoulli(frac) subset of cells from a counter-derived stream (the
+    /// block index is the period coordinate); only sampled cells run the
+    /// block, and the cloud merge reweights them by the inverse inclusion
+    /// probability. 1.0 = every cell every block — the legacy path,
+    /// bitwise.
+    pub cell_frac: f64,
 }
 
 impl Default for HierConfig {
     fn default() -> Self {
-        HierConfig { tau: 1, policies: Vec::new() }
+        HierConfig { tau: 1, policies: Vec::new(), cell_frac: 1.0 }
     }
 }
 
@@ -66,6 +73,11 @@ pub struct HierTrainer<'a> {
     engine: Engine,
     tau: usize,
     cloud: CloudAggregator,
+    /// per-block cell sampler (`None` = every cell every block)
+    sampler: Option<ClientSampler>,
+    cell_frac: f64,
+    /// completed tau-blocks — the cell sampler's period coordinate
+    blocks: u64,
 }
 
 impl<'a> HierTrainer<'a> {
@@ -92,6 +104,16 @@ impl<'a> HierTrainer<'a> {
                 worlds.len()
             );
         }
+        let sampler = if hc.cell_frac < 1.0 {
+            if worlds.len() < 2 {
+                bail!("cell_frac < 1.0 needs at least two cells to sample from");
+            }
+            Some(ClientSampler::cells(base.seed, hc.cell_frac)?)
+        } else if hc.cell_frac == 1.0 {
+            None
+        } else {
+            bail!("cell_frac must be in (0, 1], got {}", hc.cell_frac);
+        };
         let engine = Engine::new(base.threads);
         // split the thread budget across concurrent cells (wall-clock
         // only: numerics are thread-invariant at every level)
@@ -108,7 +130,15 @@ impl<'a> HierTrainer<'a> {
             tr.set_cell_id(c);
             cells.push(tr);
         }
-        Ok(HierTrainer { cells, engine, tau: hc.tau, cloud: CloudAggregator::new() })
+        Ok(HierTrainer {
+            cells,
+            engine,
+            tau: hc.tau,
+            cloud: CloudAggregator::new(),
+            sampler,
+            cell_frac: hc.cell_frac,
+            blocks: 0,
+        })
     }
 
     /// Number of cells C.
@@ -159,13 +189,28 @@ impl<'a> HierTrainer<'a> {
         let mut left = periods;
         while left > 0 {
             let block = left.min(self.tau);
+            // cell sampling draws per tau-block from a counter-derived
+            // stream: the block index is the period coordinate, so the
+            // active set is a pure function of (seed, block) — order-free
+            // and thread-invariant like everything else
+            let active: Option<Vec<bool>> = self.sampler.map(|s| {
+                let ids = s.sample(self.blocks, self.cells.len());
+                let mut member = vec![false; self.cells.len()];
+                ids.into_iter().for_each(|c| member[c] = true);
+                member
+            });
+            self.blocks += 1;
             // one engine item per cell; each cell's own engine still fans
             // its device steps out on its scoped threads inside
-            self.engine.run_mut(&mut self.cells, |_, tr| {
+            let member = active.as_deref();
+            self.engine.run_mut(&mut self.cells, |c, tr| {
+                if member.is_some_and(|m| !m[c]) {
+                    return Ok(()); // sat out this block: clock and log untouched
+                }
                 tr.run(block)?;
                 Ok(())
             })?;
-            self.cloud_round()?;
+            self.cloud_round(active.as_deref())?;
             left -= block;
         }
         Ok(())
@@ -176,17 +221,27 @@ impl<'a> HierTrainer<'a> {
     /// latency seam a later PR fills), then FedAvg the edge models. The
     /// cloud marker lands on the last record of the block; single-cell
     /// topologies skip both the barrier and the marker, keeping the
-    /// degenerate case bitwise-flat.
-    fn cloud_round(&mut self) -> Result<()> {
+    /// degenerate case bitwise-flat. With cell sampling, only active
+    /// cells contribute (inverse-probability reweighted) but the merged
+    /// model is pushed to every member cell; inactive cells' clocks sat
+    /// at the last barrier, so the max over all cells equals the max
+    /// over active cells and the barrier needs no masking.
+    fn cloud_round(&mut self, active: Option<&[bool]>) -> Result<()> {
         if self.cells.len() > 1 {
             let t_cloud = self.cells.iter().map(|c| c.sim_time()).fold(0.0, f64::max);
             for tr in &mut self.cells {
                 tr.sync_clock_to(t_cloud);
             }
         }
-        self.cloud.merge(&mut self.cells)?;
+        match active {
+            Some(mask) => self.cloud.merge_sampled(&mut self.cells, mask, self.cell_frac)?,
+            None => self.cloud.merge(&mut self.cells)?,
+        };
         if self.cells.len() > 1 {
-            for tr in &mut self.cells {
+            for (c, tr) in self.cells.iter_mut().enumerate() {
+                if active.is_some_and(|m| !m[c]) {
+                    continue; // no record was produced this block
+                }
                 if let Some(r) = tr.log.records.last_mut() {
                     r.cloud = true;
                 }
@@ -273,7 +328,7 @@ mod tests {
         let (a, b, test, be) = two_cell_setup();
         let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
         let base = TrainerConfig { eval_every: 0, ..Default::default() };
-        let hc = HierConfig { tau: 2, policies: Vec::new() };
+        let hc = HierConfig { tau: 2, ..Default::default() };
         let mut hier = HierTrainer::new(base, hc, worlds, &test, Partition::Iid).unwrap();
         assert_eq!(hier.cell_count(), 2);
         hier.run(6).unwrap();
@@ -300,7 +355,7 @@ mod tests {
         let (a, b, test, be) = two_cell_setup();
         let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
         let base = TrainerConfig { eval_every: 0, ..Default::default() };
-        let hc = HierConfig { tau: 2, policies: Vec::new() };
+        let hc = HierConfig { tau: 2, ..Default::default() };
         let mut hier = HierTrainer::new(base, hc, worlds, &test, Partition::Iid).unwrap();
         hier.run(5).unwrap(); // blocks of 2, 2, 1 -> merges after 2, 4, 5
         let log = hier.merged_log();
@@ -335,7 +390,7 @@ mod tests {
         // wrong policy count is rejected
         let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
         let base = TrainerConfig { eval_every: 0, ..Default::default() };
-        let hc = HierConfig { tau: 1, policies: vec![RoundPolicy::Sync] };
+        let hc = HierConfig { policies: vec![RoundPolicy::Sync], ..Default::default() };
         let err = HierTrainer::new(base.clone(), hc, worlds, &test, Partition::Iid)
             .err()
             .unwrap()
@@ -343,7 +398,7 @@ mod tests {
         assert!(err.contains("per-cell policies"), "{err}");
         // tau 0 is rejected
         let worlds = vec![world(&a, &be, 2, 10)];
-        let hc = HierConfig { tau: 0, policies: Vec::new() };
+        let hc = HierConfig { tau: 0, ..Default::default() };
         assert!(HierTrainer::new(base.clone(), hc, worlds, &test, Partition::Iid).is_err());
         // no cells is rejected
         let hc = HierConfig::default();
@@ -353,12 +408,52 @@ mod tests {
         let hc = HierConfig {
             tau: 2,
             policies: vec![RoundPolicy::Sync, RoundPolicy::Deadline { factor: 1.5 }],
+            ..Default::default()
         };
         let mut hier = HierTrainer::new(base, hc, worlds, &test, Partition::Iid).unwrap();
         assert_eq!(hier.cell(0).policy(), RoundPolicy::Sync);
         assert_eq!(hier.cell(1).policy(), RoundPolicy::Deadline { factor: 1.5 });
         hier.run(2).unwrap();
         assert_eq!(hier.merged_log().records.len(), 4);
+    }
+
+    #[test]
+    fn cell_sampling_runs_subsets_and_stays_cloud_consistent() {
+        let (a, b, test, be) = two_cell_setup();
+        // cell_frac out of range is rejected
+        let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
+        let base = TrainerConfig { eval_every: 0, ..Default::default() };
+        let hc = HierConfig { cell_frac: 0.0, ..Default::default() };
+        assert!(HierTrainer::new(base.clone(), hc, worlds, &test, Partition::Iid).is_err());
+        // sampling a single-cell topology is a config error, not a no-op
+        let worlds = vec![world(&a, &be, 2, 10)];
+        let hc = HierConfig { cell_frac: 0.5, ..Default::default() };
+        let err = HierTrainer::new(base.clone(), hc, worlds, &test, Partition::Iid)
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(err.contains("at least two cells"), "{err}");
+        // a sampled two-cell hierarchy runs: some blocks skip a cell, so
+        // the per-cell logs go ragged, but every merge still leaves the
+        // shared family identical across cells
+        let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
+        let hc = HierConfig { tau: 1, cell_frac: 0.5, ..Default::default() };
+        let mut hier = HierTrainer::new(base, hc, worlds, &test, Partition::Iid).unwrap();
+        hier.run(8).unwrap();
+        assert_eq!(hier.cloud_rounds(), 8);
+        assert_eq!(hier.cell(0).server.params(), hier.cell(1).server.params());
+        let n0 = hier.cell(0).log.records.len();
+        let n1 = hier.cell(1).log.records.len();
+        assert!(n0 <= 8 && n1 <= 8);
+        assert!(n0 + n1 > 0, "sampler never picked any cell in 8 blocks");
+        assert!(n0 < 8 || n1 < 8, "frac 0.5 never skipped a cell in 8 blocks");
+        // the merged log stays coherent with ragged per-cell records
+        let log = hier.merged_log();
+        assert_eq!(log.records.len(), n0 + n1);
+        // eval after the final merge is sane
+        let (loss, acc) = hier.evaluate().unwrap();
+        assert!(loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
     }
 
     #[test]

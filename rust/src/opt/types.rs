@@ -79,6 +79,50 @@ impl Instance {
         Ok(inst)
     }
 
+    /// Build from a *sampled subset* of a fleet: `ids[i]` is the global
+    /// device index the instance's device `i` describes, `rates[i]` its
+    /// rates. The optimizer then allocates batches and TDMA band over the
+    /// participants only — absent devices consume neither compute nor
+    /// slots. Identity mapping over the whole fleet reproduces
+    /// [`Instance::from_fleet`] bitwise (same per-device arithmetic, same
+    /// order).
+    pub fn from_fleet_ids(
+        fleet: &[Device],
+        ids: &[usize],
+        rates: &[PeriodRates],
+        b_max: f64,
+        s_bits: f64,
+        frame_ul: f64,
+        frame_dl: f64,
+        xi: f64,
+    ) -> Result<Instance> {
+        if ids.is_empty() || ids.len() != rates.len() {
+            bail!("sampled ids/rates mismatch: {} vs {}", ids.len(), rates.len());
+        }
+        let devices = ids
+            .iter()
+            .zip(rates)
+            .map(|(&g, r)| {
+                let d = fleet
+                    .get(g)
+                    .ok_or_else(|| anyhow::anyhow!("sampled id {g} outside fleet"))?;
+                let (speed, offset) = d.compute.affine();
+                Ok(DeviceInst {
+                    speed,
+                    offset,
+                    b_min: d.compute.batch_floor(),
+                    b_max,
+                    rate_ul: r.ul_bps,
+                    rate_dl: r.dl_bps,
+                    update_lat: d.compute.update_latency(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let inst = Instance { devices, s_bits, frame_ul, frame_dl, xi };
+        inst.validate()?;
+        Ok(inst)
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.devices.is_empty() {
             bail!("no devices");
@@ -243,6 +287,41 @@ mod tests {
         let rho = inst.rho();
         assert!((rho.iter().sum::<f64>() - 1.0).abs() < 1e-12);
         assert!(rho.iter().all(|&r| r > 0.0));
+    }
+
+    #[test]
+    fn subset_instance_matches_full_rows_and_guards_ids() {
+        use crate::device::paper_cpu_fleet;
+        use crate::util::rng::Pcg;
+        use crate::wireless::CellConfig;
+        let mut rng = Pcg::seeded(3);
+        let mut fleet = paper_cpu_fleet(5, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+        let rates: Vec<_> = {
+            let r = &mut rng;
+            fleet.iter_mut().map(|d| d.link.step(r)).collect()
+        };
+        let full = Instance::from_fleet(&fleet, &rates, 128.0, 1e5, 0.01, 0.01, 0.05).unwrap();
+        let subset = |ids: &[usize], rs: &[PeriodRates]| {
+            Instance::from_fleet_ids(&fleet, ids, rs, 128.0, 1e5, 0.01, 0.01, 0.05)
+        };
+        // identity mapping: bitwise the full constructor
+        let ids: Vec<usize> = (0..5).collect();
+        let ident = subset(&ids, &rates).unwrap();
+        for (a, b) in full.devices.iter().zip(&ident.devices) {
+            assert_eq!(a.speed.to_bits(), b.speed.to_bits());
+            assert_eq!(a.rate_ul.to_bits(), b.rate_ul.to_bits());
+            assert_eq!(a.update_lat.to_bits(), b.update_lat.to_bits());
+        }
+        // a strict subset picks exactly the named devices' compute rows
+        let sub_rates = [rates[1], rates[4]];
+        let sub = subset(&[1, 4], &sub_rates).unwrap();
+        assert_eq!(sub.k(), 2);
+        assert_eq!(sub.devices[0].speed.to_bits(), full.devices[1].speed.to_bits());
+        assert_eq!(sub.devices[1].speed.to_bits(), full.devices[4].speed.to_bits());
+        // empty, mismatched, and out-of-range id sets are rejected
+        assert!(subset(&[], &[]).is_err());
+        assert!(subset(&[0, 1], &sub_rates[..1]).is_err());
+        assert!(subset(&[9], &sub_rates[..1]).is_err());
     }
 
     #[test]

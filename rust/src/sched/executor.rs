@@ -66,6 +66,16 @@ pub struct RoundReport {
     pub reduce_secs: f64,
 }
 
+/// Visit each participating device id: the sampled subset when one is
+/// given (`device::ClientSampler` output — strictly ascending), the whole
+/// fleet otherwise. Keeps the full-participation path allocation-free.
+fn for_each_participant(k: usize, participants: Option<&[usize]>, mut f: impl FnMut(usize)) {
+    match participants {
+        Some(ids) => ids.iter().for_each(|&d| f(d)),
+        None => (0..k).for_each(&mut f),
+    }
+}
+
 /// Policy-driven round scheduler. Owns the cross-period event queue (async
 /// in-flight work), per-device busy flags, and the deadline carry ledger.
 pub struct RoundScheduler {
@@ -140,12 +150,43 @@ impl RoundScheduler {
         }
     }
 
+    /// Sampled-round form of [`RoundScheduler::apply_carry`]: `plan` is
+    /// global-indexed (zeros outside the sample) while `inst.devices[i]`
+    /// describes global device `ids[i]` — the optimizer solved over the
+    /// participants only. Carry owned by devices *outside* this round's
+    /// sample stays in the ledger until they are drawn again.
+    pub fn apply_carry_sampled(&mut self, plan: &mut Plan, inst: &Instance, ids: &[usize]) {
+        let RoundPolicy::Deadline { factor } = self.policy else {
+            return;
+        };
+        let deadline = plan.t_up * factor;
+        for (i, &g) in ids.iter().enumerate() {
+            let c = &mut self.carry[g];
+            if *c == 0 {
+                continue;
+            }
+            let d = &inst.devices[i];
+            let cap = (d.b_max.floor() as usize).max(plan.batches[g]);
+            let headroom = ((deadline - plan.finish[g]).max(0.0) * d.speed).floor() as usize;
+            let grown = (plan.batches[g] + (*c).min(headroom)).min(cap);
+            let added = grown - plan.batches[g];
+            if added > 0 {
+                plan.batches[g] = grown;
+                plan.finish[g] += added as f64 / d.speed;
+            }
+            *c = 0;
+        }
+    }
+
     /// Execute one gradient-exchange period under the configured policy.
     /// `period` is the round's RNG/staleness coordinate (the trainer's
     /// `server.period` before the post-round increment), `now` the current
     /// simulated time, and `aggs` the caller's reset server accumulators —
     /// one per model family (`BackendSet` order), exactly one for a
-    /// homogeneous fleet.
+    /// homogeneous fleet. `participants` restricts the round to a sampled
+    /// subset of device ids (strictly ascending, as produced by
+    /// `device::ClientSampler`); `None` is the legacy full-participation
+    /// path and stays bitwise-identical to it.
     #[allow(clippy::too_many_arguments)]
     pub fn gradient_period(
         &mut self,
@@ -157,6 +198,7 @@ impl RoundScheduler {
         plan: &Plan,
         period: u64,
         now: f64,
+        participants: Option<&[usize]>,
         aggs: &mut [Aggregator],
     ) -> Result<RoundReport> {
         debug_assert_eq!(workers.len(), self.busy.len(), "fleet size changed under scheduler");
@@ -167,15 +209,50 @@ impl RoundScheduler {
                 backends.family_count()
             );
         }
-        match self.policy {
-            RoundPolicy::Sync => {
-                self.barrier_period(engine, backends, workers, params, train, plan, period, aggs)
+        if let Some(ids) = participants {
+            let k = workers.len();
+            let ascending = ids.windows(2).all(|w| w[0] < w[1]);
+            if ids.is_empty() || !ascending || ids.last().is_some_and(|&d| d >= k) {
+                anyhow::bail!("participant ids must be non-empty, ascending, and < fleet size");
             }
+        }
+        match self.policy {
+            RoundPolicy::Sync => self.barrier_period(
+                engine,
+                backends,
+                workers,
+                params,
+                train,
+                plan,
+                period,
+                participants,
+                aggs,
+            ),
             RoundPolicy::Deadline { factor } => self.deadline_period(
-                factor, engine, backends, workers, params, train, plan, period, aggs,
+                factor,
+                engine,
+                backends,
+                workers,
+                params,
+                train,
+                plan,
+                period,
+                participants,
+                aggs,
             ),
             RoundPolicy::Async { alpha, beta, quorum } => self.async_period(
-                alpha, beta, quorum, engine, backends, workers, params, train, plan, period, now,
+                alpha,
+                beta,
+                quorum,
+                engine,
+                backends,
+                workers,
+                params,
+                train,
+                plan,
+                period,
+                now,
+                participants,
                 aggs,
             ),
         }
@@ -198,21 +275,28 @@ impl RoundScheduler {
         train: &Dataset,
         plan: &Plan,
         period: u64,
+        participants: Option<&[usize]>,
         aggs: &mut [Aggregator],
     ) -> Result<RoundReport> {
         let k = workers.len();
+        let m = participants.map_or(k, <[usize]>::len);
         let mut queue: EventQueue<()> = EventQueue::new();
-        let mut mask = vec![true; k];
+        // full participation starts all-true (a `None` mask if nobody
+        // drops); a sampled round starts all-false and admits participants
+        let mut mask = vec![participants.is_none(); k];
         let mut dropped = 0usize;
-        for d in 0..k {
-            let pert = self.straggler.sample(self.seed, period, d as u64);
+        let straggler = &self.straggler;
+        let seed = self.seed;
+        for_each_participant(k, participants, |d| {
+            let pert = straggler.sample(seed, period, d as u64);
             if pert.dropped {
                 mask[d] = false;
                 dropped += 1;
             } else {
+                mask[d] = true;
                 queue.push(plan.finish[d] * pert.slowdown, d, ());
             }
-        }
+        });
         // the fold below is commutative, so the queue's total order buys
         // no extra determinism here — sync runs on the queue so all three
         // policies share one event representation (and one code path to
@@ -221,7 +305,7 @@ impl RoundScheduler {
         while let Some(e) = queue.pop() {
             barrier = barrier.max(e.time);
         }
-        let mask_opt = if dropped > 0 { Some(&mask[..]) } else { None };
+        let mask_opt = if participants.is_some() || dropped > 0 { Some(&mask[..]) } else { None };
         let (loss_acc, w_acc, reduce_secs) = self.run_masked(
             engine, backends, workers, params, train, plan, mask_opt, period, aggs,
         )?;
@@ -230,7 +314,7 @@ impl RoundScheduler {
             duration: barrier + plan.t_down,
             train_loss: if w_acc > 0.0 { loss_acc / w_acc } else { f64::NAN },
             b_effective: if dropped == 0 { planned } else { w_acc as usize },
-            applied: k - dropped,
+            applied: m - dropped,
             dropped,
             late: 0,
             stale_mean: 0.0,
@@ -257,21 +341,25 @@ impl RoundScheduler {
         train: &Dataset,
         plan: &Plan,
         period: u64,
+        participants: Option<&[usize]>,
         aggs: &mut [Aggregator],
     ) -> Result<RoundReport> {
         let k = workers.len();
+        let m = participants.map_or(k, <[usize]>::len);
         let deadline = plan.t_up * factor;
         let mut queue: EventQueue<()> = EventQueue::new();
         let mut mask = vec![false; k];
         let mut dropped = 0usize;
-        for d in 0..k {
-            let pert = self.straggler.sample(self.seed, period, d as u64);
+        let straggler = &self.straggler;
+        let seed = self.seed;
+        for_each_participant(k, participants, |d| {
+            let pert = straggler.sample(seed, period, d as u64);
             if pert.dropped {
                 dropped += 1;
             } else {
                 queue.push(plan.finish[d] * pert.slowdown, d, ());
             }
-        }
+        });
         let mut late = 0usize;
         let mut arrived = 0usize;
         let mut t_close = 0f64;
@@ -291,7 +379,8 @@ impl RoundScheduler {
         if late > 0 {
             t_close = deadline;
         }
-        let mask_opt = if arrived == k { None } else { Some(&mask[..]) };
+        let all_in = participants.is_none() && arrived == k;
+        let mask_opt = if all_in { None } else { Some(&mask[..]) };
         let (loss_acc, w_acc, reduce_secs) = self.run_masked(
             engine, backends, workers, params, train, plan, mask_opt, period, aggs,
         )?;
@@ -299,7 +388,7 @@ impl RoundScheduler {
         Ok(RoundReport {
             duration: t_close + plan.t_down,
             train_loss: if w_acc > 0.0 { loss_acc / w_acc } else { f64::NAN },
-            b_effective: if arrived == k { planned } else { w_acc as usize },
+            b_effective: if arrived == m { planned } else { w_acc as usize },
             applied: arrived,
             dropped,
             late,
@@ -327,26 +416,33 @@ impl RoundScheduler {
         plan: &Plan,
         period: u64,
         now: f64,
+        participants: Option<&[usize]>,
         aggs: &mut [Aggregator],
     ) -> Result<RoundReport> {
         let k = workers.len();
+        let m = participants.map_or(k, <[usize]>::len);
         // 1. dispatch idle devices (device order; a dropped device loses
-        //    this period's work and is re-dispatched next period)
+        //    this period's work and is re-dispatched next period — sampled
+        //    rounds only dispatch this round's draw, but a busy device that
+        //    fell out of the sample still completes and lands stale)
         let mut jobs: Vec<(usize, usize)> = Vec::new();
         let mut arrivals: Vec<f64> = Vec::new();
         let mut dropped = 0usize;
-        for d in 0..k {
-            if self.busy[d] {
-                continue;
+        let busy = &self.busy;
+        let straggler = &self.straggler;
+        let seed = self.seed;
+        for_each_participant(k, participants, |d| {
+            if busy[d] {
+                return;
             }
-            let pert = self.straggler.sample(self.seed, period, d as u64);
+            let pert = straggler.sample(seed, period, d as u64);
             if pert.dropped {
                 dropped += 1;
-                continue;
+                return;
             }
             jobs.push((d, plan.batches[d].max(1)));
             arrivals.push(now + plan.finish[d] * pert.slowdown);
-        }
+        });
         if !jobs.is_empty() {
             let outcomes = exec::gradient_round_subset(
                 engine, backends, workers, params, train, &jobs, self.seed, period,
@@ -373,7 +469,7 @@ impl RoundScheduler {
                 reduce_secs: 0.0,
             });
         }
-        let need = ((quorum * k as f64).ceil() as usize).clamp(1, k).min(self.inflight.len());
+        let need = ((quorum * m as f64).ceil() as usize).clamp(1, m).min(self.inflight.len());
         let mut popped: Vec<Event<Pending>> = Vec::with_capacity(need);
         for _ in 0..need {
             popped.push(self.inflight.pop().expect("queue length checked"));

@@ -405,7 +405,7 @@ fn hier_single_cell_tau1_reproduces_flat_trainer_bitwise() {
         };
         let mut hier = HierTrainer::new(
             tc,
-            HierConfig { tau: 1, policies: Vec::new() },
+            HierConfig { tau: 1, ..Default::default() },
             vec![world],
             &test,
             Partition::Iid,
@@ -464,6 +464,7 @@ fn run_hier_k120(threads: usize) -> TrainLog {
             RoundPolicy::Deadline { factor: 1.25 },
             RoundPolicy::Async { alpha: 0.6, beta: 0.5, quorum: 0.5 },
         ],
+        ..Default::default()
     };
     let mut hier = HierTrainer::new(tc, hc, worlds, &test, Partition::Iid).unwrap();
     hier.run(4).unwrap();
@@ -493,6 +494,92 @@ fn hier_k120_c3_mixed_policies_identical_at_1_2_8_threads() {
     let marked: Vec<usize> =
         base.records.iter().filter(|r| r.cloud).map(|r| r.period).collect();
     assert_eq!(marked, vec![2, 2, 2, 4, 4, 4]);
+}
+
+/// Full participation through the sampling-aware code path must be the
+/// legacy trainer, bitwise, under every round policy: `sample_frac = 1.0`
+/// disables the sampler (no `Option` detour changes a single float), so
+/// the refactor that threaded participant sets through the planner,
+/// scheduler, and aggregator is pinned as a pure extension.
+fn run_policy_with_frac(
+    policy: RoundPolicy,
+    straggler: StragglerModel,
+    sample_frac: f64,
+    threads: usize,
+    periods: usize,
+) -> TrainLog {
+    let cfg = SynthConfig { dim: 24, ..Default::default() };
+    let train = generate(&cfg, 800, 1);
+    let test = generate(&cfg, 200, 1);
+    let mut rng = Pcg::seeded(2);
+    let fleet = paper_cpu_fleet(4, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+    let be = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+    let tc = TrainerConfig {
+        policy,
+        straggler,
+        sample_frac,
+        threads,
+        eval_every: 4,
+        ..Default::default()
+    };
+    let mut tr = Trainer::new(tc, fleet, &train, &test, Partition::Iid, &be).unwrap();
+    tr.run(periods).unwrap();
+    tr.log.clone()
+}
+
+#[test]
+fn sample_frac_one_reproduces_unsampled_trainer_bitwise_all_policies() {
+    let sm = StragglerModel::new(0.5, 0.1).unwrap();
+    for policy in [
+        RoundPolicy::Sync,
+        RoundPolicy::Deadline { factor: 1.25 },
+        RoundPolicy::Async { alpha: 0.6, beta: 0.5, quorum: 0.5 },
+    ] {
+        let legacy = run_policy_with_threads(policy, sm, 1, 8);
+        let sampled = run_policy_with_frac(policy, sm, 1.0, 1, 8);
+        assert_policy_bitwise_equal(&legacy, &sampled, &format!("frac=1.0 {policy:?}"));
+    }
+}
+
+/// Sampled rounds keep the thread-invariance contract: at K = 200 with a
+/// quarter of the fleet participating per round, the participant draw is
+/// counter-derived (a pure function of seed and period), the sampled
+/// sub-problem is planned in fixed id order, and the scheduler masks
+/// non-participants deterministically — so 1/2/8 threads agree bitwise.
+#[test]
+fn sampled_k200_identical_at_1_2_8_threads() {
+    let k = 200;
+    let run = |threads: usize| -> TrainLog {
+        let cfg = SynthConfig { dim: 12, ..Default::default() };
+        let train = generate(&cfg, 8 * k, 1);
+        let test = generate(&cfg, 200, 1);
+        let mut rng = Pcg::seeded(2);
+        let fleet = paper_cpu_fleet(k, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+        let be = HostBackend::for_model("mini_dense", 12, 10, 3).unwrap();
+        let tc = TrainerConfig {
+            sample_frac: 0.25,
+            straggler: StragglerModel::new(0.5, 0.1).unwrap(),
+            threads,
+            b_max: 8,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let mut tr = Trainer::new(tc, fleet, &train, &test, Partition::Iid, &be).unwrap();
+        tr.run(6).unwrap();
+        tr.log.clone()
+    };
+    let base = run(1);
+    for t in [2usize, 8] {
+        let par = run(t);
+        assert_policy_bitwise_equal(&base, &par, &format!("sampled k200 t={t}"));
+    }
+    // roughly a quarter of the fleet closed each round — never all of it —
+    // so the equality covers the genuinely sampled path
+    for r in &base.records {
+        assert!(r.applied < k, "p{}: {} applied", r.period, r.applied);
+        assert!(r.applied > 0, "p{}: empty round", r.period);
+    }
+    assert!(base.records[5].train_loss < base.records[0].train_loss);
 }
 
 /// Seeded-jitter regression: the straggler draws are a pure function of
