@@ -1,0 +1,167 @@
+//! Fault-injection bench: what does robustness cost, and what does it
+//! buy? Two sweeps over the host backend:
+//!
+//! 1. The headline corruption matrix — 10% NaN-corrupted payloads under
+//!    every quarantine policy. `off` accepts the poison and the loss
+//!    diverges to NaN; `reject` and `clip` finish finite and keep
+//!    learning. The same claim `tests/fault_injection.rs` pins.
+//! 2. The full fault stack (crash windows + corruption + reject
+//!    quarantine + stragglers) under sync, deadline, and async round
+//!    policies — per-round wall overhead vs the clean run.
+//!
+//! Emits `BENCH_fault.json` beside the Cargo.toml like the other
+//! `BENCH_*.json` baselines. `FEEL_BENCH_QUICK=1` shrinks the sweep for
+//! CI smoke runs.
+
+use std::time::Instant;
+
+use feel::coordinator::{HostBackend, Trainer, TrainerConfig};
+use feel::data::{generate, Partition, SynthConfig};
+use feel::device::{paper_cpu_fleet, StragglerModel};
+use feel::fault::FaultPlan;
+use feel::grad::{GradGuard, Quarantine};
+use feel::sched::RoundPolicy;
+use feel::util::json::{num, obj, s, Json};
+use feel::util::rng::Pcg;
+use feel::wireless::CellConfig;
+
+const SEED: u64 = 42;
+
+struct RunStats {
+    final_loss: f64,
+    crashed: usize,
+    corrupt: usize,
+    quarantined: usize,
+    ms_per_period: f64,
+}
+
+fn run_one(
+    k: usize,
+    periods: usize,
+    policy: RoundPolicy,
+    straggler: StragglerModel,
+    fault: FaultPlan,
+    guard: GradGuard,
+) -> RunStats {
+    let cfg = SynthConfig { dim: 12, ..Default::default() };
+    let train = generate(&cfg, 20 * k, 1);
+    let test = generate(&cfg, 200, 1);
+    let mut rng = Pcg::seeded(SEED);
+    let fleet = paper_cpu_fleet(k, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+    let be = HostBackend::for_model("mini_dense", 12, 10, 3).unwrap();
+    let tc = TrainerConfig {
+        policy,
+        straggler,
+        fault,
+        guard,
+        b_max: 8,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let mut tr = Trainer::new(tc, fleet, &train, &test, Partition::Iid, &be).unwrap();
+    let t0 = Instant::now();
+    tr.run(periods).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    RunStats {
+        final_loss: tr.log.records.last().map(|r| r.train_loss).unwrap_or(f64::NAN),
+        crashed: tr.log.records.iter().map(|r| r.crashed).sum(),
+        corrupt: tr.log.records.iter().map(|r| r.corrupt).sum(),
+        quarantined: tr.log.records.iter().map(|r| r.quarantined).sum(),
+        ms_per_period: wall / periods as f64 * 1e3,
+    }
+}
+
+fn loss_cell(loss: f64) -> Json {
+    if loss.is_finite() {
+        num(loss)
+    } else {
+        Json::Null
+    }
+}
+
+fn main() {
+    let quick = std::env::var("FEEL_BENCH_QUICK").is_ok();
+    let (k, periods) = if quick { (12, 8) } else { (24, 16) };
+    let mut rows: Vec<Json> = Vec::new();
+
+    println!("\n== 10% NaN corruption x quarantine policy (K={k}, {periods} periods) ==");
+    println!(
+        "{:>8} {:>12} {:>9} {:>12} {:>10}",
+        "policy", "final_loss", "corrupt", "quarantined", "ms/period"
+    );
+    let corrupt = FaultPlan::new(0.0, 1, 0.1, 0.0, 0.0).unwrap();
+    for policy in [Quarantine::Off, Quarantine::Reject, Quarantine::Clip] {
+        let guard = match policy {
+            Quarantine::Off => GradGuard::off(),
+            p => GradGuard::new(p, f64::INFINITY).unwrap(),
+        };
+        let st = run_one(k, periods, RoundPolicy::Sync, StragglerModel::none(), corrupt, guard);
+        println!(
+            "{:>8} {:>12.4} {:>9} {:>12} {:>10.2}",
+            policy.name(),
+            st.final_loss,
+            st.corrupt,
+            st.quarantined,
+            st.ms_per_period
+        );
+        rows.push(obj(vec![
+            ("sweep", s("corruption_matrix")),
+            ("quarantine", s(policy.name())),
+            ("corrupt_rate", num(0.1)),
+            ("final_loss", loss_cell(st.final_loss)),
+            ("finite", Json::Bool(st.final_loss.is_finite())),
+            ("corrupt_total", num(st.corrupt as f64)),
+            ("quarantined_total", num(st.quarantined as f64)),
+            ("ms_per_period", num(st.ms_per_period)),
+        ]));
+    }
+
+    println!("\n== full fault stack vs clean run, per round policy ==");
+    println!(
+        "{:>10} {:>9} {:>12} {:>9} {:>12} {:>10}",
+        "policy", "faults", "final_loss", "crashed", "quarantined", "ms/period"
+    );
+    let stack = FaultPlan::new(0.1, 2, 0.05, 0.0, 0.0).unwrap();
+    let sm = StragglerModel::new(0.5, 0.1).unwrap();
+    for (name, policy) in [
+        ("sync", RoundPolicy::Sync),
+        ("deadline", RoundPolicy::Deadline { factor: 1.25 }),
+        ("async", RoundPolicy::Async { alpha: 0.6, beta: 0.5, quorum: 0.5 }),
+    ] {
+        for (faulty, fault, guard) in [
+            (false, FaultPlan::none(), GradGuard::off()),
+            (true, stack, GradGuard::new(Quarantine::Reject, f64::INFINITY).unwrap()),
+        ] {
+            let st = run_one(k, periods, policy, sm, fault, guard);
+            println!(
+                "{:>10} {:>9} {:>12.4} {:>9} {:>12} {:>10.2}",
+                name, faulty, st.final_loss, st.crashed, st.quarantined, st.ms_per_period
+            );
+            rows.push(obj(vec![
+                ("sweep", s("fault_stack")),
+                ("policy", s(name)),
+                ("faults", Json::Bool(faulty)),
+                ("final_loss", loss_cell(st.final_loss)),
+                ("finite", Json::Bool(st.final_loss.is_finite())),
+                ("crashed_total", num(st.crashed as f64)),
+                ("corrupt_total", num(st.corrupt as f64)),
+                ("quarantined_total", num(st.quarantined as f64)),
+                ("ms_per_period", num(st.ms_per_period)),
+            ]));
+        }
+    }
+
+    let out = obj(vec![
+        ("bench", s("fault")),
+        ("quick", Json::Bool(quick)),
+        ("k", num(k as f64)),
+        ("periods", num(periods as f64)),
+        ("seed", num(SEED as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_fault.json";
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("\nbaseline -> {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

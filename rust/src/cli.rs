@@ -26,8 +26,12 @@ use crate::config::{
 };
 use crate::coordinator::Trainer;
 use crate::device::{paper_profiles, StragglerModel};
+use crate::fault::FaultPlan;
+use crate::grad::{GradGuard, Quarantine, QUARANTINE_NAMES};
 use crate::sched::RoundPolicy;
-use crate::exp::common::{make_data, make_fleet_backends, run_hier_scheme, BackendKind};
+use crate::exp::common::{
+    make_data, make_fleet_backends, run_hier_scheme_checkpointed, BackendKind,
+};
 use crate::exp::{fig2, fig3, fig45, table2};
 use crate::metrics::Recorder;
 use crate::opt;
@@ -123,6 +127,30 @@ COMMANDS:
                          runs: each tau-block runs a Bernoulli(F) subset
                          of cells; the cloud merge reweights by 1/F and
                          pushes the merged model to every cell
+              --crash-rate F  --crash-len N   seeded fault injection:
+                         each period each device crashes with prob F,
+                         staying down 1..=N periods (uniform) and
+                         rejoining cold (carry ledger wiped) or warm
+              --corrupt-rate F  --corrupt-noise A   corrupt a device's
+                         gradient upload with prob F per period: NaN/Inf
+                         terms, or noise at amplitude A x payload RMS
+                         when A > 0
+              --outage-rate F   hierarchical cell outage: each tau-block
+                         each cell goes dark with prob F — it neither
+                         contributes to nor receives that cloud merge,
+                         rejoining later with its stale edge model
+              --quarantine off|reject|clip|abort   server-side screening
+                         of non-finite / norm-outlier gradients; counts
+                         land in the crashed/corrupt/quarantined CSV
+                         columns. --max-norm F bounds the L2 norm
+                         (detection-only when the policy is off)
+              --checkpoint FILE  --checkpoint-every N   save the full
+                         trainer state (versioned + checksummed) every N
+                         periods (hier: every N tau-blocks) and at run
+                         end
+              --resume FILE   restore state from a checkpoint and keep
+                         training — bitwise-identical continuation of
+                         the interrupted run
               --k N  --partition iid|noniid|dirichlet:alpha  --seed N
               --out results/
               --threads N (0 = all cores; results identical at any value)
@@ -201,7 +229,32 @@ fn experiment_from_args(args: &Args) -> Result<Experiment> {
     }
     exp.trainer.sample_frac = args.f64_or("sample-frac", exp.trainer.sample_frac)?;
     exp.cell_frac = args.f64_or("cell-frac", exp.cell_frac)?;
-    // same re-validation story for the topology + sampling knobs
+    // fault-injection knobs: a knob for a fault class whose rate is zero
+    // is a mistake, not a no-op (mirrors the config-file check)
+    let crash_rate = args.f64_or("crash-rate", exp.trainer.fault.crash_rate)?;
+    if args.get("crash-len").is_some() && crash_rate <= 0.0 {
+        bail!("--crash-len needs --crash-rate > 0 to take effect");
+    }
+    let corrupt_rate = args.f64_or("corrupt-rate", exp.trainer.fault.corrupt_rate)?;
+    if args.get("corrupt-noise").is_some() && corrupt_rate <= 0.0 {
+        bail!("--corrupt-noise needs --corrupt-rate > 0 to take effect");
+    }
+    exp.trainer.fault = FaultPlan::new(
+        crash_rate,
+        args.usize_or("crash-len", exp.trainer.fault.crash_len as usize)? as u64,
+        corrupt_rate,
+        args.f64_or("corrupt-noise", exp.trainer.fault.corrupt_noise)?,
+        args.f64_or("outage-rate", exp.trainer.fault.outage_rate)?,
+    )?;
+    let q_policy = match args.get("quarantine") {
+        Some(q) => Quarantine::parse(q).ok_or_else(|| {
+            anyhow::anyhow!("bad --quarantine {q:?} (accepted: {QUARANTINE_NAMES})")
+        })?,
+        None => exp.trainer.guard.policy,
+    };
+    exp.trainer.guard =
+        GradGuard::new(q_policy, args.f64_or("max-norm", exp.trainer.guard.max_norm)?)?;
+    // same re-validation story for the topology + sampling + fault knobs
     exp.check_topology()?;
     if let Some(t) = args.get("threads") {
         exp.trainer.threads = t.parse().context("--threads")?;
@@ -255,6 +308,17 @@ fn out_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get("out").unwrap_or("results"))
 }
 
+/// Resolve the checkpoint/resume flags shared by the flat and
+/// hierarchical train paths: (save cadence, save path, resume path).
+fn checkpoint_flags(args: &Args) -> Result<(usize, Option<PathBuf>, Option<PathBuf>)> {
+    let every = args.usize_or("checkpoint-every", 0)?;
+    let ckpt = args.get("checkpoint").map(PathBuf::from);
+    if every > 0 && ckpt.is_none() {
+        bail!("--checkpoint-every needs --checkpoint <file> to write to");
+    }
+    Ok((every, ckpt, args.get("resume").map(PathBuf::from)))
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let exp = experiment_from_args(args)?;
     let periods = args.usize_or("periods", exp.periods)?;
@@ -291,11 +355,26 @@ fn cmd_train(args: &Args) -> Result<()> {
         exp.partition,
         set,
     )?;
+    let (every, ckpt, resume) = checkpoint_flags(args)?;
     let warm = args.usize_or("warm", 0)?;
-    if warm > 0 {
-        tr.warm_start(warm, 64, 0.05)?;
+    match &resume {
+        // a resumed run's model state comes from the checkpoint — warm
+        // starting again would train past it
+        Some(path) => tr.resume_from(path)?,
+        None if warm > 0 => tr.warm_start(warm, 64, 0.05)?,
+        None => {}
     }
-    tr.run(periods)?;
+    match &ckpt {
+        Some(path) => {
+            tr.run_checkpointed(periods, every, path)?;
+            // always leave a final snapshot so the run is resumable even
+            // when periods is not a multiple of the cadence
+            tr.save_checkpoint(path)?;
+        }
+        None => {
+            tr.run(periods)?;
+        }
+    }
     let log = &tr.log;
     rec.csv("train_log", &log.to_csv())?;
     println!(
@@ -339,7 +418,17 @@ fn cmd_train_hier(
         crate::util::threads::resolve(exp.trainer.threads),
     );
     let warm = args.usize_or("warm", 0)?;
-    let run = run_hier_scheme(exp, exp.trainer.scheme, kind, periods, warm)?;
+    let (every, ckpt, resume) = checkpoint_flags(args)?;
+    let run = run_hier_scheme_checkpointed(
+        exp,
+        exp.trainer.scheme,
+        kind,
+        periods,
+        warm,
+        every,
+        ckpt.as_deref(),
+        resume.as_deref(),
+    )?;
     rec.csv("train_log", &run.log.to_csv())?;
     println!(
         "done: {} cells x {} periods, {} cloud rounds, sim time {:.1}s, final loss {:.4} -> {}",
@@ -620,6 +709,55 @@ mod tests {
         crate::util::threads::set_global_threads(0);
         assert!(HELP.contains("--sample-frac"));
         assert!(HELP.contains("--cell-frac"));
+    }
+
+    #[test]
+    fn fault_flags_plumb_into_experiment() {
+        let a = Args::parse(&argv(
+            "train --crash-rate 0.05 --crash-len 3 --corrupt-rate 0.1 --corrupt-noise 2.0 \
+             --quarantine reject --max-norm 50.0",
+        ))
+        .unwrap();
+        let exp = experiment_from_args(&a).unwrap();
+        assert_eq!(exp.trainer.fault.crash_rate, 0.05);
+        assert_eq!(exp.trainer.fault.crash_len, 3);
+        assert_eq!(exp.trainer.fault.corrupt_rate, 0.1);
+        assert_eq!(exp.trainer.fault.corrupt_noise, 2.0);
+        assert_eq!(exp.trainer.guard.policy, Quarantine::Reject);
+        assert_eq!(exp.trainer.guard.max_norm, 50.0);
+        // a fault knob whose gate is off is an error, not a no-op
+        let a = Args::parse(&argv("train --crash-len 3")).unwrap();
+        let err = experiment_from_args(&a).unwrap_err().to_string();
+        assert!(err.contains("--crash-rate > 0"), "{err}");
+        let a = Args::parse(&argv("train --corrupt-noise 1.0")).unwrap();
+        let err = experiment_from_args(&a).unwrap_err().to_string();
+        assert!(err.contains("--corrupt-rate > 0"), "{err}");
+        let a = Args::parse(&argv("train --quarantine firewall")).unwrap();
+        let err = experiment_from_args(&a).unwrap_err().to_string();
+        assert!(err.contains("off | reject | clip | abort"), "{err}");
+        // cell outage needs a multi-cell topology
+        let a = Args::parse(&argv("train --outage-rate 0.1")).unwrap();
+        let err = experiment_from_args(&a).unwrap_err().to_string();
+        assert!(err.contains("multi-cell"), "{err}");
+        let a = Args::parse(&argv("train --k 12 --cells 2 --outage-rate 0.1")).unwrap();
+        let exp = experiment_from_args(&a).unwrap();
+        assert_eq!(exp.trainer.fault.outage_rate, 0.1);
+        crate::util::threads::set_global_threads(0);
+        assert!(HELP.contains("--crash-rate"));
+        assert!(HELP.contains("--quarantine off|reject|clip|abort"));
+    }
+
+    #[test]
+    fn checkpoint_flags_validate() {
+        let a = Args::parse(&argv("train --checkpoint /tmp/c.ckpt")).unwrap();
+        let (every, ckpt, resume) = checkpoint_flags(&a).unwrap();
+        assert_eq!(every, 0);
+        assert!(ckpt.is_some() && resume.is_none());
+        let a = Args::parse(&argv("train --checkpoint-every 5")).unwrap();
+        let err = checkpoint_flags(&a).unwrap_err().to_string();
+        assert!(err.contains("--checkpoint"), "{err}");
+        assert!(HELP.contains("--checkpoint FILE"));
+        assert!(HELP.contains("--resume FILE"));
     }
 
     #[test]

@@ -113,6 +113,26 @@ impl Sbc {
     pub fn residual_norm(&self) -> f64 {
         self.residual.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
     }
+
+    /// The error-feedback residual, for checkpoint serialization —
+    /// device-local state that must survive a resume for bitwise replay.
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    /// Restore a checkpointed residual (length must match the parameter
+    /// space this compressor was built for).
+    pub fn restore_residual(&mut self, residual: Vec<f32>) -> anyhow::Result<()> {
+        if residual.len() != self.residual.len() {
+            anyhow::bail!(
+                "residual length {} != {} (checkpoint from a different model?)",
+                residual.len(),
+                self.residual.len()
+            );
+        }
+        self.residual = residual;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

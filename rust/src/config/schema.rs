@@ -9,6 +9,8 @@ use crate::data::{Partition, SynthConfig};
 use crate::device::{
     paper_cpu_fleet, paper_gpu_fleet, Device, GpuModule, StragglerModel, CPU_TIER_COUNT,
 };
+use crate::fault::FaultPlan;
+use crate::grad::{GradGuard, Quarantine, QUARANTINE_NAMES};
 use crate::opt::BatchPolicy;
 use crate::sched::{RoundPolicy, POLICY_NAMES};
 use crate::util::rng::Pcg;
@@ -143,6 +145,8 @@ impl Experiment {
             c.f64_or("fleet.dropout", t.straggler.dropout),
         )?;
         t.sample_frac = c.f64_or("fleet.sample_frac", t.sample_frac);
+        t.fault = parse_fault_config(c)?;
+        t.guard = parse_guard_config(c)?;
         if let Some(v) = c.get("fleet.backends") {
             e.backends = parse_backend_rules(v)?;
             e.check_backend_tiers()?;
@@ -240,6 +244,9 @@ impl Experiment {
             }
             if self.cell_frac != 1.0 {
                 bail!("topology.cell_frac applies to multi-cell runs (topology.cells > 1)");
+            }
+            if self.trainer.fault.outage_active() {
+                bail!("fault.outage_rate applies to multi-cell runs (topology.cells > 1)");
             }
         }
         if !self.cell_policies.is_empty() && self.cell_policies.len() != self.cells {
@@ -462,6 +469,47 @@ fn parse_policy_config(c: &Config) -> Result<RoundPolicy> {
     }
     p.validate()?;
     Ok(p)
+}
+
+/// Resolve the `[fault]` table (`fault.crash_rate`, `fault.crash_len`,
+/// `fault.corrupt_rate`, `fault.corrupt_noise`, `fault.outage_rate`),
+/// validating at parse time instead of deep inside the trainer. A knob
+/// for a fault class whose rate is zero is a mistake, not a no-op —
+/// silently ignoring `fault.crash_len` with no crash rate would run a
+/// different experiment than the config describes.
+fn parse_fault_config(c: &Config) -> Result<FaultPlan> {
+    let crash_rate = c.f64_or("fault.crash_rate", 0.0);
+    if c.get("fault.crash_len").is_some() && crash_rate <= 0.0 {
+        bail!("fault.crash_len needs fault.crash_rate > 0 to take effect");
+    }
+    let crash_len = c.usize_or("fault.crash_len", 1) as u64;
+    let corrupt_rate = c.f64_or("fault.corrupt_rate", 0.0);
+    if c.get("fault.corrupt_noise").is_some() && corrupt_rate <= 0.0 {
+        bail!("fault.corrupt_noise needs fault.corrupt_rate > 0 to take effect");
+    }
+    let corrupt_noise = c.f64_or("fault.corrupt_noise", 0.0);
+    let outage_rate = c.f64_or("fault.outage_rate", 0.0);
+    FaultPlan::new(crash_rate, crash_len, corrupt_rate, corrupt_noise, outage_rate)
+}
+
+/// Resolve the gradient-quarantine knobs (`fault.quarantine`,
+/// `fault.max_norm`). `max_norm` without a policy is deliberate
+/// observability, not a dead knob: an `off` guard with a finite bound
+/// counts norm outliers in the log without altering aggregation.
+fn parse_guard_config(c: &Config) -> Result<GradGuard> {
+    let policy = match c.get("fault.quarantine") {
+        None => Quarantine::Off,
+        Some(v) => {
+            let Some(s) = v.as_str() else {
+                bail!("fault.quarantine wants a policy-name string ({QUARANTINE_NAMES})");
+            };
+            Quarantine::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("unknown fault.quarantine {s:?} (accepted: {QUARANTINE_NAMES})")
+            })?
+        }
+    };
+    let max_norm = c.f64_or("fault.max_norm", f64::INFINITY);
+    GradGuard::new(policy, max_norm)
 }
 
 #[cfg(test)]
@@ -748,6 +796,59 @@ policies = ["deadline", "sync"]
         Experiment::from_config(&Config::parse(src).unwrap())
             .unwrap_err()
             .to_string()
+    }
+
+    #[test]
+    fn fault_keys_parse_and_validate() {
+        // defaults: no faults, quarantine off
+        let e = Experiment::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(e.trainer.fault, FaultPlan::none());
+        assert_eq!(e.trainer.guard, GradGuard::off());
+        // the full table parses into the trainer config
+        let src = r#"
+[fleet]
+k = 6
+[fault]
+crash_rate = 0.05
+crash_len = 3
+corrupt_rate = 0.1
+corrupt_noise = 2.0
+quarantine = "reject"
+max_norm = 50.0
+"#;
+        let e = Experiment::from_config(&Config::parse(src).unwrap()).unwrap();
+        assert_eq!(e.trainer.fault.crash_rate, 0.05);
+        assert_eq!(e.trainer.fault.crash_len, 3);
+        assert_eq!(e.trainer.fault.corrupt_rate, 0.1);
+        assert_eq!(e.trainer.fault.corrupt_noise, 2.0);
+        assert_eq!(e.trainer.guard.policy, Quarantine::Reject);
+        assert_eq!(e.trainer.guard.max_norm, 50.0);
+        // a knob for a fault class whose rate is zero is an error
+        let err = topo_err("[fault]\ncrash_len = 3");
+        assert!(err.contains("crash_rate > 0"), "{err}");
+        let err = topo_err("[fault]\ncorrupt_noise = 2.0");
+        assert!(err.contains("corrupt_rate > 0"), "{err}");
+        // rates are range-checked at parse time
+        assert!(topo_err("[fault]\ncrash_rate = 1.5").contains("[0, 1)"));
+        assert!(topo_err("[fault]\ncorrupt_rate = -0.1").contains("[0, 1)"));
+        assert!(topo_err("[fault]\ncrash_rate = 0.1\ncrash_len = 0").contains(">= 1"));
+        // quarantine names are validated with the accepted list printed
+        let err = topo_err("[fault]\nquarantine = \"fifo\"");
+        assert!(err.contains("off | reject | clip | abort"), "{err}");
+        let err = topo_err("[fault]\nquarantine = 7");
+        assert!(err.contains("policy-name"), "{err}");
+        assert!(topo_err("[fault]\nmax_norm = 0.0").contains("> 0"));
+        // max_norm alone is detection-only observability, not an error
+        let e = Experiment::from_config(&Config::parse("[fault]\nmax_norm = 9.0").unwrap());
+        let e = e.unwrap();
+        assert_eq!(e.trainer.guard.policy, Quarantine::Off);
+        assert!(e.trainer.guard.checks_norm());
+        // cell outage needs a multi-cell topology
+        let err = topo_err("[fault]\noutage_rate = 0.2");
+        assert!(err.contains("multi-cell"), "{err}");
+        let src = "[fleet]\nk = 6\n[fault]\noutage_rate = 0.2\n[topology]\ncells = 2";
+        let e = Experiment::from_config(&Config::parse(src).unwrap()).unwrap();
+        assert_eq!(e.trainer.fault.outage_rate, 0.2);
     }
 
     #[test]

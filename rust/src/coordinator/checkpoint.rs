@@ -1,0 +1,393 @@
+//! Versioned checkpoint file format for [`Trainer`](super::Trainer) and
+//! `hier::HierTrainer` resume.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic    8 bytes  b"FEELCKPT"
+//! version  u32      bumped on any payload layout change
+//! kind     u8       0 = flat trainer, 1 = hierarchical
+//! len      u64      payload length in bytes
+//! payload  len bytes
+//! checksum u64      FNV-1a over everything above
+//! ```
+//!
+//! The payload itself is a flat field stream written by [`ByteWriter`]
+//! and parsed by [`ByteReader`] — no self-describing framing, so the
+//! writer and reader must agree field-for-field; the `version` gate and
+//! the trainer's configuration digest (first payload field) are what make
+//! a mismatched read fail loudly instead of misparse. Restore is
+//! all-or-nothing: callers parse the complete payload into locals before
+//! touching live state, so a truncated or corrupted file can never leave
+//! a trainer half-restored.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// File magic, start of every checkpoint.
+pub const MAGIC: [u8; 8] = *b"FEELCKPT";
+/// Payload layout version this build writes and reads.
+pub const VERSION: u32 = 1;
+/// `kind` byte of a flat single-cell trainer checkpoint.
+pub const KIND_FLAT: u8 = 0;
+/// `kind` byte of a hierarchical multi-cell checkpoint.
+pub const KIND_HIER: u8 = 1;
+
+fn kind_name(kind: u8) -> &'static str {
+    match kind {
+        KIND_FLAT => "flat",
+        KIND_HIER => "hierarchical",
+        _ => "unknown",
+    }
+}
+
+/// FNV-1a over a byte slice — not cryptographic, just a cheap detector
+/// for truncation and bit rot.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Frame `payload` and write it to `path` (atomic enough for our use: a
+/// partial write fails the checksum on read).
+pub fn write_file(path: &Path, kind: u8, payload: &[u8]) -> Result<()> {
+    let mut out = Vec::with_capacity(MAGIC.len() + 4 + 1 + 8 + payload.len() + 8);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    let sum = fnv1a64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    std::fs::write(path, &out)
+        .with_context(|| format!("writing checkpoint {}", path.display()))
+}
+
+/// Read and validate a checkpoint file, returning its payload. Every
+/// failure mode — missing file, bad magic, wrong version, wrong kind,
+/// truncation, bit corruption — is a structured error naming the file.
+pub fn read_file(path: &Path, expect_kind: u8) -> Result<Vec<u8>> {
+    let raw = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    const HEADER: usize = 8 + 4 + 1 + 8;
+    if raw.len() < HEADER + 8 {
+        bail!(
+            "checkpoint {} is truncated: {} bytes, the frame alone is {}",
+            path.display(),
+            raw.len(),
+            HEADER + 8
+        );
+    }
+    if raw[..8] != MAGIC {
+        bail!("{} is not a FEEL checkpoint (bad magic)", path.display());
+    }
+    let version = u32::from_le_bytes(raw[8..12].try_into().expect("4 bytes"));
+    if version != VERSION {
+        bail!(
+            "checkpoint {} is layout version {version}; this build reads version {VERSION}",
+            path.display()
+        );
+    }
+    let kind = raw[12];
+    if kind != expect_kind {
+        bail!(
+            "checkpoint {} is from a {} run, expected {}",
+            path.display(),
+            kind_name(kind),
+            kind_name(expect_kind)
+        );
+    }
+    let len = u64::from_le_bytes(raw[13..21].try_into().expect("8 bytes")) as usize;
+    if raw.len() != HEADER + len + 8 {
+        bail!(
+            "checkpoint {} is truncated or padded: header says {len}-byte payload, \
+             file holds {} payload bytes",
+            path.display(),
+            raw.len().saturating_sub(HEADER + 8)
+        );
+    }
+    let stored = u64::from_le_bytes(raw[HEADER + len..].try_into().expect("8 bytes"));
+    let computed = fnv1a64(&raw[..HEADER + len]);
+    if stored != computed {
+        bail!(
+            "checkpoint {} failed its checksum (stored {stored:#018x}, computed \
+             {computed:#018x}) — the file is corrupted",
+            path.display()
+        );
+    }
+    Ok(raw[HEADER..HEADER + len].to_vec())
+}
+
+/// Append-only payload serializer. Counterpart of [`ByteReader`]; the two
+/// must stay field-for-field symmetric.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(u8::from(v));
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// f64 by bit pattern — NaNs (a diverged loss) roundtrip exactly.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_opt_f64(&mut self, v: Option<f64>) {
+        self.put_bool(v.is_some());
+        self.put_f64(v.unwrap_or(0.0));
+    }
+
+    /// Length-prefixed f32 slice by bit pattern.
+    pub fn put_f32s(&mut self, vs: &[f32]) {
+        self.put_usize(vs.len());
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+
+    pub fn put_opt_f32s(&mut self, vs: Option<&[f32]>) {
+        self.put_bool(vs.is_some());
+        if let Some(vs) = vs {
+            self.put_f32s(vs);
+        }
+    }
+
+    /// Length-prefixed raw bytes — nests one payload (a cell trainer's)
+    /// inside another (the hierarchy's).
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.put_usize(bytes.len());
+        self.buf.extend_from_slice(bytes);
+    }
+}
+
+/// Cursor over a checkpoint payload. Every getter fails with a position-
+/// stamped error instead of panicking when the payload runs short.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let left = self.buf.len() - self.pos;
+        if n > left {
+            bail!(
+                "checkpoint payload truncated: wanted {n} bytes at offset {}, {left} left",
+                self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("checkpoint payload corrupt: bool byte {b} at offset {}", self.pos - 1),
+        }
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize> {
+        let v = self.get_u64()?;
+        usize::try_from(v)
+            .map_err(|_| anyhow::anyhow!("checkpoint payload corrupt: count {v} overflows usize"))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_opt_f64(&mut self) -> Result<Option<f64>> {
+        let present = self.get_bool()?;
+        let v = self.get_f64()?;
+        Ok(present.then_some(v))
+    }
+
+    pub fn get_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_usize()?;
+        // guard the allocation against a corrupted length prefix
+        if n > self.buf.len() {
+            bail!(
+                "checkpoint payload corrupt: f32 slice of {n} terms at offset {} but only \
+                 {} payload bytes exist",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().expect("4 bytes"))))
+            .collect())
+    }
+
+    pub fn get_opt_f32s(&mut self) -> Result<Option<Vec<f32>>> {
+        if self.get_bool()? {
+            Ok(Some(self.get_f32s()?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_usize()?;
+        self.take(n)
+    }
+
+    /// Assert the whole payload was consumed — trailing bytes mean the
+    /// writer and reader disagree on the layout.
+    pub fn expect_end(&self) -> Result<()> {
+        let left = self.buf.len() - self.pos;
+        if left > 0 {
+            bail!("checkpoint payload has {left} unread trailing bytes — layout mismatch");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("feel_ckpt_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn writer_reader_roundtrip_every_field_kind() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_bool(true);
+        w.put_u64(u64::MAX);
+        w.put_usize(42);
+        w.put_f64(f64::NAN);
+        w.put_opt_f64(None);
+        w.put_opt_f64(Some(-1.5));
+        w.put_f32s(&[1.0, f32::NEG_INFINITY, -0.0]);
+        w.put_opt_f32s(None);
+        w.put_opt_f32s(Some(&[2.5]));
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_u64().unwrap(), u64::MAX);
+        assert_eq!(r.get_usize().unwrap(), 42);
+        assert!(r.get_f64().unwrap().is_nan());
+        assert_eq!(r.get_opt_f64().unwrap(), None);
+        assert_eq!(r.get_opt_f64().unwrap(), Some(-1.5));
+        let v = r.get_f32s().unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0], 1.0);
+        assert_eq!(v[1], f32::NEG_INFINITY);
+        assert_eq!(v[2].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.get_opt_f32s().unwrap(), None);
+        assert_eq!(r.get_opt_f32s().unwrap(), Some(vec![2.5]));
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn reader_fails_loudly_on_truncation_and_trailing_bytes() {
+        let mut w = ByteWriter::new();
+        w.put_u64(5);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf[..4]);
+        let err = r.get_u64().unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        // an f32 slice with an absurd length prefix must not allocate
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::MAX / 8);
+        let buf = w.into_inner();
+        let err = ByteReader::new(&buf).get_f32s().unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+        // trailing bytes are a layout mismatch
+        let mut w = ByteWriter::new();
+        w.put_u8(1);
+        let buf = w.into_inner();
+        let r = ByteReader::new(&buf);
+        assert!(r.expect_end().is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_and_rejections() {
+        let path = temp_path("roundtrip");
+        let payload = b"some payload bytes".to_vec();
+        write_file(&path, KIND_FLAT, &payload).unwrap();
+        assert_eq!(read_file(&path, KIND_FLAT).unwrap(), payload);
+        // wrong kind
+        let err = read_file(&path, KIND_HIER).unwrap_err().to_string();
+        assert!(err.contains("flat") && err.contains("hierarchical"), "{err}");
+        // single-bit corruption in the payload fails the checksum
+        let mut raw = std::fs::read(&path).unwrap();
+        raw[25] ^= 0x01;
+        std::fs::write(&path, &raw).unwrap();
+        let err = read_file(&path, KIND_FLAT).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        // truncation is detected before the checksum is even consulted
+        write_file(&path, KIND_FLAT, &payload).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &raw[..raw.len() - 3]).unwrap();
+        let err = read_file(&path, KIND_FLAT).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        // version gate
+        let mut raw = {
+            write_file(&path, KIND_FLAT, &payload).unwrap();
+            std::fs::read(&path).unwrap()
+        };
+        raw[8..12].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &raw).unwrap();
+        let err = read_file(&path, KIND_FLAT).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        // bad magic
+        let mut raw = {
+            write_file(&path, KIND_FLAT, &payload).unwrap();
+            std::fs::read(&path).unwrap()
+        };
+        raw[0] = b'X';
+        std::fs::write(&path, &raw).unwrap();
+        let err = read_file(&path, KIND_FLAT).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -31,6 +31,15 @@ impl SimClock {
     pub fn now(&self) -> f64 {
         self.now
     }
+
+    /// Restore a checkpointed absolute time. Unlike [`SimClock::advance_to`]
+    /// this may move the clock backwards — resume replaces the whole clock,
+    /// it does not advance it — but a non-finite or negative time is still
+    /// always a corrupt checkpoint.
+    pub fn restore(&mut self, t: f64) {
+        assert!(t.is_finite() && t >= 0.0, "bad clock restore {t}");
+        self.now = t;
+    }
 }
 
 #[cfg(test)]

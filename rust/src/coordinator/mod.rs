@@ -3,6 +3,7 @@
 //! xi estimation.
 
 pub mod backend;
+pub mod checkpoint;
 pub mod clock;
 pub mod fleet_backends;
 pub mod scheme;

@@ -11,11 +11,13 @@
 //! bitwise-identical at any thread count. Simulated time advances only
 //! through [`SimClock`], from the scheduler-reported period duration.
 
+use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::backend::Backend;
+use super::checkpoint::{self, ByteReader, ByteWriter};
 use super::clock::SimClock;
 use super::fleet_backends::BackendSet;
 use super::scheme::{plan_period, Plan, Scheme};
@@ -26,10 +28,11 @@ use crate::compress::Sbc;
 use crate::data::{partition, Dataset, DeviceData, Partition};
 use crate::device::{ClientSampler, Device, StragglerModel};
 use crate::exec::{self, Engine};
-use crate::grad::Aggregator;
+use crate::fault::FaultPlan;
+use crate::grad::{Aggregator, GradGuard};
 use crate::opt::types::Instance;
 use crate::runtime::hostmodel::Workspace;
-use crate::sched::{RoundPolicy, RoundReport, RoundScheduler};
+use crate::sched::{InflightRecord, RoundPolicy, RoundReport, RoundScheduler, SchedCheckpoint};
 use crate::util::rng::Pcg;
 use crate::wireless::PeriodRates;
 
@@ -82,6 +85,14 @@ pub struct TrainerConfig {
     /// legacy full-participation path bitwise. Gradient-exchange schemes
     /// only.
     pub sample_frac: f64,
+    /// seeded fault injection: device crash windows and gradient payload
+    /// corruption (`FaultPlan::none()` = no faults, zero extra RNG draws).
+    /// Gradient-exchange schemes only.
+    pub fault: FaultPlan,
+    /// server-side gradient quarantine: what happens to non-finite or
+    /// norm-outlier contributions (`GradGuard::off()` = accept everything,
+    /// corrupt payloads still counted). Gradient-exchange schemes only.
+    pub guard: GradGuard,
 }
 
 impl Default for TrainerConfig {
@@ -104,6 +115,8 @@ impl Default for TrainerConfig {
             policy: RoundPolicy::Sync,
             straggler: StragglerModel::none(),
             sample_frac: 1.0,
+            fault: FaultPlan::none(),
+            guard: GradGuard::off(),
         }
     }
 }
@@ -137,6 +150,12 @@ pub struct PeriodRecord {
     /// stamps it on the last record of every tau-block; always false for
     /// flat single-cell runs)
     pub cloud: bool,
+    /// devices unreachable this period (fault-injected crash windows)
+    pub crashed: usize,
+    /// contributions whose payload was detected corrupt this period
+    pub corrupt: usize,
+    /// corrupt contributions the quarantine rejected or clipped
+    pub quarantined: usize,
 }
 
 /// Wall-clock accounting of the coordinator's *serial* sections, summed
@@ -226,15 +245,16 @@ impl TrainLog {
             .map(|r| r.sim_time)
     }
 
-    /// CSV dump (header + one row per period).
+    /// CSV dump (header + one row per period). New columns are only ever
+    /// appended on the right, so index-based readers of older dumps stand.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "period,sim_time,t_period,b_total,train_loss,lr,test_loss,test_acc,efficiency,\
-             applied,dropped,late,stale_mean,cell,cloud\n",
+             applied,dropped,late,stale_mean,cell,cloud,crashed,corrupt,quarantined\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{:.6},{:.6},{},{:.6},{:.5},{},{},{:.6},{},{},{},{:.3},{},{}\n",
+                "{},{:.6},{:.6},{},{:.6},{:.5},{},{},{:.6},{},{},{},{:.3},{},{},{},{},{}\n",
                 r.period,
                 r.sim_time,
                 r.t_period,
@@ -250,6 +270,9 @@ impl TrainLog {
                 r.stale_mean,
                 r.cell,
                 u8::from(r.cloud),
+                r.crashed,
+                r.corrupt,
+                r.quarantined,
             ));
         }
         out
@@ -383,9 +406,33 @@ impl<'a> Trainer<'a> {
                 );
             }
         }
+        // fault injection and the gradient quarantine act on the same
+        // aggregation path as the round policies above
+        if !cfg.scheme.exchanges_gradients() {
+            if cfg.fault.is_active() {
+                bail!(
+                    "fault injection requires a gradient-exchange scheme, got {:?}",
+                    cfg.scheme.name()
+                );
+            }
+            if cfg.guard.is_active() {
+                bail!(
+                    "the gradient quarantine requires a gradient-exchange scheme, got {:?}",
+                    cfg.scheme.name()
+                );
+            }
+        }
         // revalidate pub-field structs that may not have come through the
         // checked constructors
         StragglerModel::new(cfg.straggler.jitter, cfg.straggler.dropout)?;
+        FaultPlan::new(
+            cfg.fault.crash_rate,
+            cfg.fault.crash_len,
+            cfg.fault.corrupt_rate,
+            cfg.fault.corrupt_noise,
+            cfg.fault.outage_rate,
+        )?;
+        GradGuard::new(cfg.guard.policy, cfg.guard.max_norm)?;
         // client sampling rides the gradient-aggregation path too: a
         // sampled round reweights the aggregate by the inclusion
         // probability, which has no analogue for the local-training schemes
@@ -403,7 +450,14 @@ impl<'a> Trainer<'a> {
         } else {
             bail!("sample_frac must be in (0, 1], got {}", cfg.sample_frac);
         };
-        let sched = RoundScheduler::new(cfg.policy, cfg.straggler, fleet.len(), cfg.seed)?;
+        let sched = RoundScheduler::new(
+            cfg.policy,
+            cfg.straggler,
+            cfg.fault,
+            cfg.guard,
+            fleet.len(),
+            cfg.seed,
+        )?;
         Ok(Trainer {
             cfg,
             fleet,
@@ -657,10 +711,12 @@ impl<'a> Trainer<'a> {
             }
         };
         // deadline policy: fold batches deferred by last period's misses
-        // back into this period's plan (no-op otherwise)
+        // back into this period's plan (no-op otherwise; crashed devices
+        // keep their ledger entry, cold rejoins forfeit it)
+        let rng_period = self.server.period as u64;
         match &sampled {
-            Some(ids) => self.sched.apply_carry_sampled(&mut plan, &inst, ids),
-            None => self.sched.apply_carry(&mut plan, &inst),
+            Some(ids) => self.sched.apply_carry_sampled(&mut plan, &inst, ids, rng_period),
+            None => self.sched.apply_carry(&mut plan, &inst, rng_period),
         }
         self.log.wall.solver_secs += t_step.elapsed().as_secs_f64();
         let b_total: usize = plan.batches.iter().sum();
@@ -743,6 +799,9 @@ impl<'a> Trainer<'a> {
             stale_mean: report.stale_mean,
             cell: self.cell_id,
             cloud: false,
+            crashed: report.crashed,
+            corrupt: report.corrupt,
+            quarantined: report.quarantined,
         });
         self.log.wall.total_secs += t_step.elapsed().as_secs_f64();
         Ok(())
@@ -923,6 +982,353 @@ impl<'a> Trainer<'a> {
     pub fn policy(&self) -> RoundPolicy {
         self.sched.policy()
     }
+
+    /// Configuration fingerprint stamped into every checkpoint: a resumed
+    /// run must have been constructed with the same seed, fleet size,
+    /// model families, scheme, policy, straggler/sampling/fault knobs —
+    /// everything the replay depends on. `threads` is deliberately
+    /// excluded: numerics are thread-invariant, so a checkpoint written
+    /// at one thread count resumes bitwise at any other.
+    fn state_digest(&self) -> u64 {
+        use crate::coordinator::checkpoint::fnv1a64;
+        use crate::util::rng::splitmix64;
+        let c = &self.cfg;
+        let mut fields: Vec<u64> = vec![
+            c.seed,
+            self.fleet.len() as u64,
+            self.backends.family_count() as u64,
+        ];
+        for f in 0..self.backends.family_count() {
+            fields.push(self.backends.family_params(f) as u64);
+            fields.push(fnv1a64(self.backends.family_name(f).as_bytes()));
+        }
+        fields.extend([
+            fnv1a64(format!("{:?}", c.scheme).as_bytes()),
+            fnv1a64(format!("{:?}", c.policy).as_bytes()),
+            c.b_max as u64,
+            c.quant_bits as u64,
+            c.sbc_keep.map_or(u64::MAX, f64::to_bits),
+            c.wire_ratio.to_bits(),
+            c.frame_ul.to_bits(),
+            c.frame_dl.to_bits(),
+            c.base_lr.to_bits(),
+            c.xi_init.to_bits(),
+            c.xi_alpha.to_bits(),
+            c.eval_every as u64,
+            c.eps.to_bits(),
+            c.straggler.jitter.to_bits(),
+            c.straggler.dropout.to_bits(),
+            c.sample_frac.to_bits(),
+            c.fault.crash_rate.to_bits(),
+            c.fault.crash_len,
+            c.fault.corrupt_rate.to_bits(),
+            c.fault.corrupt_noise.to_bits(),
+            c.fault.outage_rate.to_bits(),
+            fnv1a64(c.guard.policy.name().as_bytes()),
+            c.guard.max_norm.to_bits(),
+            self.cell_id as u64,
+        ]);
+        fields.iter().fold(0xfee1_cdc0_dec0_ffee_u64, |h, &v| splitmix64(h ^ v))
+    }
+
+    /// Serialize the full live training state — everything `step_period`
+    /// reads or advances — as a checkpoint payload. Field order is the
+    /// layout contract with [`Trainer::restore_payload`]; any change to
+    /// either must bump `checkpoint::VERSION`.
+    pub(crate) fn checkpoint_payload(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u64(self.state_digest());
+        w.put_usize(self.server.period);
+        w.put_f64(self.clock.now());
+        let (xi_v, xi_n) = self.xi.snapshot();
+        w.put_f64(xi_v);
+        w.put_usize(xi_n);
+        let (rs, ri) = self.rng.state();
+        w.put_u64(rs);
+        w.put_u64(ri);
+        w.put_opt_f64(self.last_train_loss);
+        w.put_usize(self.backends.family_count());
+        for f in 0..self.backends.family_count() {
+            w.put_f32s(self.server.family_params(f));
+        }
+        w.put_usize(self.fleet.len());
+        for d in &self.fleet {
+            let (ul, dl) = d.link.shadow_state();
+            w.put_f64(ul);
+            w.put_f64(dl);
+        }
+        for wk in &self.workers {
+            let (s, i) = wk.data.rng_state();
+            w.put_u64(s);
+            w.put_u64(i);
+            w.put_opt_f32s(wk.sbc.as_ref().map(Sbc::residual));
+            w.put_opt_f32s(wk.local_params.as_deref());
+        }
+        let sck = self.sched.snapshot();
+        for &c in &sck.carry {
+            w.put_usize(c);
+        }
+        for &b in &sck.busy {
+            w.put_bool(b);
+        }
+        w.put_usize(sck.inflight.len());
+        for r in &sck.inflight {
+            w.put_f64(r.time);
+            w.put_usize(r.device);
+            w.put_u64(r.period);
+            w.put_usize(r.batch);
+            w.put_f64(r.loss);
+            w.put_f32s(&r.grad);
+        }
+        w.put_f64(self.log.wall.solver_secs);
+        w.put_f64(self.log.wall.reduce_secs);
+        w.put_f64(self.log.wall.total_secs);
+        w.put_usize(self.log.records.len());
+        for r in &self.log.records {
+            w.put_usize(r.period);
+            w.put_f64(r.sim_time);
+            w.put_f64(r.t_period);
+            w.put_usize(r.b_total);
+            w.put_f64(r.train_loss);
+            w.put_f64(r.lr);
+            w.put_opt_f64(r.test_loss);
+            w.put_opt_f64(r.test_acc);
+            w.put_f64(r.efficiency);
+            w.put_usize(r.applied);
+            w.put_usize(r.dropped);
+            w.put_usize(r.late);
+            w.put_f64(r.stale_mean);
+            w.put_usize(r.cell);
+            w.put_bool(r.cloud);
+            w.put_usize(r.crashed);
+            w.put_usize(r.corrupt);
+            w.put_usize(r.quarantined);
+        }
+        w.into_inner()
+    }
+
+    /// Restore a payload written by [`Trainer::checkpoint_payload`] into
+    /// this (freshly constructed, identically configured) trainer.
+    /// All-or-nothing: the complete payload is parsed and validated into
+    /// locals first, so any failure leaves the trainer exactly as it was.
+    pub(crate) fn restore_payload(&mut self, payload: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(payload);
+        let digest = r.get_u64()?;
+        let own = self.state_digest();
+        if digest != own {
+            bail!(
+                "checkpoint was produced by a different run configuration \
+                 (digest {digest:#018x}, this run {own:#018x}): seed, fleet, scheme, \
+                 policy, straggler, sampling, and fault knobs must all match"
+            );
+        }
+        let period = r.get_usize()?;
+        let now = r.get_f64()?;
+        if !now.is_finite() || now < 0.0 {
+            bail!("checkpoint corrupt: simulated clock {now}");
+        }
+        let xi_v = r.get_f64()?;
+        let xi_n = r.get_usize()?;
+        if !xi_v.is_finite() {
+            bail!("checkpoint corrupt: xi estimate {xi_v}");
+        }
+        let rng_s = r.get_u64()?;
+        let rng_i = r.get_u64()?;
+        let last_loss = r.get_opt_f64()?;
+        let nf = r.get_usize()?;
+        if nf != self.backends.family_count() {
+            bail!(
+                "checkpoint has {nf} model families, this run has {}",
+                self.backends.family_count()
+            );
+        }
+        let mut fam_params = Vec::with_capacity(nf);
+        for f in 0..nf {
+            let p = r.get_f32s()?;
+            if p.len() != self.backends.family_params(f) {
+                bail!(
+                    "checkpoint family {f} ({}) holds {} parameters, this run's model \
+                     has {}",
+                    self.backends.family_name(f),
+                    p.len(),
+                    self.backends.family_params(f)
+                );
+            }
+            fam_params.push(p);
+        }
+        let k = r.get_usize()?;
+        if k != self.fleet.len() {
+            bail!("checkpoint is for a {k}-device fleet, this run has {}", self.fleet.len());
+        }
+        let mut shadows = Vec::with_capacity(k);
+        for _ in 0..k {
+            let ul = r.get_f64()?;
+            let dl = r.get_f64()?;
+            if !ul.is_finite() || !dl.is_finite() {
+                bail!("checkpoint corrupt: non-finite shadowing state ({ul}, {dl})");
+            }
+            shadows.push((ul, dl));
+        }
+        struct WorkerState {
+            rng: (u64, u64),
+            residual: Option<Vec<f32>>,
+            local_params: Option<Vec<f32>>,
+        }
+        let mut wstates = Vec::with_capacity(k);
+        for (i, wk) in self.workers.iter().enumerate() {
+            let s = r.get_u64()?;
+            let inc = r.get_u64()?;
+            let residual = r.get_opt_f32s()?;
+            if residual.is_some() != wk.sbc.is_some() {
+                bail!(
+                    "checkpoint device {i} {} an SBC residual but this run {} a compressor",
+                    if residual.is_some() { "carries" } else { "lacks" },
+                    if wk.sbc.is_some() { "uses" } else { "does not use" }
+                );
+            }
+            if let (Some(res), Some(sbc)) = (&residual, &wk.sbc) {
+                if res.len() != sbc.residual().len() {
+                    bail!(
+                        "checkpoint device {i} residual has {} terms, this run's \
+                         compressor holds {} (checkpoint from a different model?)",
+                        res.len(),
+                        sbc.residual().len()
+                    );
+                }
+            }
+            let local_params = r.get_opt_f32s()?;
+            if let Some(lp) = &local_params {
+                let want = self.backends.device_params(i);
+                if lp.len() != want {
+                    bail!(
+                        "checkpoint device {i} local params have {} terms, its model \
+                         has {want}",
+                        lp.len()
+                    );
+                }
+            }
+            wstates.push(WorkerState { rng: (s, inc), residual, local_params });
+        }
+        let mut carry = Vec::with_capacity(k);
+        for _ in 0..k {
+            carry.push(r.get_usize()?);
+        }
+        let mut busy = Vec::with_capacity(k);
+        for _ in 0..k {
+            busy.push(r.get_bool()?);
+        }
+        let n_inflight = r.get_usize()?;
+        let mut inflight = Vec::with_capacity(n_inflight.min(k * 2));
+        for _ in 0..n_inflight {
+            let time = r.get_f64()?;
+            let device = r.get_usize()?;
+            let iperiod = r.get_u64()?;
+            let batch = r.get_usize()?;
+            let loss = r.get_f64()?;
+            let grad = r.get_f32s()?;
+            if !time.is_finite() || time < 0.0 {
+                bail!("checkpoint corrupt: in-flight event time {time}");
+            }
+            if device >= k {
+                bail!("checkpoint corrupt: in-flight device {device} of a {k}-device fleet");
+            }
+            if grad.len() != self.backends.device_params(device) {
+                bail!(
+                    "checkpoint in-flight gradient for device {device} has {} terms, \
+                     its model has {}",
+                    grad.len(),
+                    self.backends.device_params(device)
+                );
+            }
+            inflight.push(InflightRecord { time, device, period: iperiod, batch, loss, grad });
+        }
+        let wall = WallStats {
+            solver_secs: r.get_f64()?,
+            reduce_secs: r.get_f64()?,
+            total_secs: r.get_f64()?,
+        };
+        let n_records = r.get_usize()?;
+        let mut records = Vec::with_capacity(n_records.min(payload.len() / 32));
+        for _ in 0..n_records {
+            records.push(PeriodRecord {
+                period: r.get_usize()?,
+                sim_time: r.get_f64()?,
+                t_period: r.get_f64()?,
+                b_total: r.get_usize()?,
+                train_loss: r.get_f64()?,
+                lr: r.get_f64()?,
+                test_loss: r.get_opt_f64()?,
+                test_acc: r.get_opt_f64()?,
+                efficiency: r.get_f64()?,
+                applied: r.get_usize()?,
+                dropped: r.get_usize()?,
+                late: r.get_usize()?,
+                stale_mean: r.get_f64()?,
+                cell: r.get_usize()?,
+                cloud: r.get_bool()?,
+                crashed: r.get_usize()?,
+                corrupt: r.get_usize()?,
+                quarantined: r.get_usize()?,
+            });
+        }
+        r.expect_end()?;
+        // everything parsed and validated — apply
+        self.server.period = period;
+        self.clock.restore(now);
+        self.xi.restore(xi_v, xi_n);
+        self.rng = Pcg::from_state(rng_s, rng_i);
+        self.last_train_loss = last_loss;
+        for (f, p) in fam_params.into_iter().enumerate() {
+            self.server.set_family_params(f, p);
+        }
+        for (d, (ul, dl)) in self.fleet.iter_mut().zip(shadows) {
+            d.link.restore_shadow_state(ul, dl);
+        }
+        for (wk, st) in self.workers.iter_mut().zip(wstates) {
+            wk.data.restore_rng_state(st.rng.0, st.rng.1);
+            if let (Some(res), Some(sbc)) = (st.residual, &mut wk.sbc) {
+                sbc.restore_residual(res)?;
+            }
+            wk.local_params = st.local_params;
+        }
+        self.sched.restore(SchedCheckpoint { carry, busy, inflight })?;
+        self.log = TrainLog { records, wall };
+        Ok(())
+    }
+
+    /// Write the live training state to `path` as a flat checkpoint.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        checkpoint::write_file(path, checkpoint::KIND_FLAT, &self.checkpoint_payload())
+    }
+
+    /// Load a flat checkpoint from `path` into this freshly constructed
+    /// trainer. The trainer must have been built with the same
+    /// configuration the checkpoint was written under (enforced by the
+    /// digest); on any error the trainer is left untouched.
+    pub fn resume_from(&mut self, path: &Path) -> Result<()> {
+        let payload = checkpoint::read_file(path, checkpoint::KIND_FLAT)?;
+        self.restore_payload(&payload)
+            .with_context(|| format!("restoring checkpoint {}", path.display()))
+    }
+
+    /// Run `periods` training periods, writing a checkpoint to `path`
+    /// whenever the global period count hits a multiple of `every`
+    /// (`every == 0` never writes). Keyed on `server.period`, not the
+    /// loop index, so the cadence survives resume.
+    pub fn run_checkpointed(
+        &mut self,
+        periods: usize,
+        every: usize,
+        path: &Path,
+    ) -> Result<&TrainLog> {
+        for _ in 0..periods {
+            self.step_period()?;
+            if every > 0 && self.server.period % every == 0 {
+                self.save_checkpoint(path)?;
+            }
+        }
+        Ok(&self.log)
+    }
 }
 
 /// Scatter a plan solved over the sampled subset (`splan.batches[i]`
@@ -961,6 +1367,9 @@ fn barrier_report(loss: f64, plan: &Plan, k: usize, b_total: usize) -> RoundRepo
         dropped: 0,
         late: 0,
         stale_mean: 0.0,
+        crashed: 0,
+        corrupt: 0,
+        quarantined: 0,
         updated: true,
         reduce_secs: 0.0,
     }
@@ -1110,12 +1519,13 @@ mod tests {
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 6);
         assert!(lines[0].starts_with("period,"));
-        assert!(lines[0].ends_with(",applied,dropped,late,stale_mean,cell,cloud"));
-        assert_eq!(lines[0].split(',').count(), 15);
-        assert_eq!(lines[1].split(',').count(), 15);
-        // flat runs: cell 0, no cloud markers
+        assert!(lines[0]
+            .ends_with(",applied,dropped,late,stale_mean,cell,cloud,crashed,corrupt,quarantined"));
+        assert_eq!(lines[0].split(',').count(), 18);
+        assert_eq!(lines[1].split(',').count(), 18);
+        // flat fault-free runs: cell 0, no cloud markers, no fault columns
         for line in &lines[1..] {
-            assert!(line.ends_with(",0,0"), "{line}");
+            assert!(line.ends_with(",0,0,0,0,0"), "{line}");
         }
     }
 

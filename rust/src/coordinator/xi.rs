@@ -40,6 +40,20 @@ impl XiEstimator {
     pub fn observations(&self) -> usize {
         self.observations
     }
+
+    /// The EWMA registers for checkpoint serialization (the knobs
+    /// `alpha`/`floor` are config-derived and rebuilt on resume).
+    pub fn snapshot(&self) -> (f64, usize) {
+        (self.value, self.observations)
+    }
+
+    /// Restore [`XiEstimator::snapshot`] registers into a freshly
+    /// configured estimator.
+    pub fn restore(&mut self, value: f64, observations: usize) {
+        assert!(value.is_finite(), "bad xi restore {value}");
+        self.value = value;
+        self.observations = observations;
+    }
 }
 
 #[cfg(test)]

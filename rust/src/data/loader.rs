@@ -51,6 +51,16 @@ impl DeviceData {
         out
     }
 
+    /// The shard sampler's RNG registers, for checkpoint serialization.
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.state()
+    }
+
+    /// Restore checkpointed sampler registers verbatim.
+    pub fn restore_rng_state(&mut self, state: u64, inc: u64) {
+        self.rng = Pcg::from_state(state, inc);
+    }
+
     /// Same sampling, but driven by an externally-supplied RNG. The exec
     /// engine derives one per `(seed, period, device)` so batch selection
     /// is independent of execution order and thread count.

@@ -2,6 +2,8 @@
 //! (dataset + fleet + backend) from an `Experiment` and run one scheme —
 //! flat single-cell or hierarchical (`topology.cells` > 1).
 
+use std::path::Path;
+
 use anyhow::{Context, Result};
 
 use crate::config::Experiment;
@@ -270,6 +272,25 @@ pub fn run_hier_scheme(
     periods: usize,
     warm_steps: usize,
 ) -> Result<HierRun> {
+    run_hier_scheme_checkpointed(exp, scheme, kind, periods, warm_steps, 0, None, None)
+}
+
+/// [`run_hier_scheme`] with the checkpoint/resume seam exposed: save the
+/// hierarchy to `checkpoint` every `every` tau-blocks (plus a final
+/// snapshot), and/or restore state from `resume` before running. A
+/// resumed run skips the warm start — its model state comes from the
+/// checkpoint.
+#[allow(clippy::too_many_arguments)]
+pub fn run_hier_scheme_checkpointed(
+    exp: &Experiment,
+    scheme: Scheme,
+    kind: BackendKind,
+    periods: usize,
+    warm_steps: usize,
+    every: usize,
+    checkpoint: Option<&Path>,
+    resume: Option<&Path>,
+) -> Result<HierRun> {
     let mut world = make_hier_world(exp, kind)?;
     let fleets = world.take_fleets();
     let mut cfg = exp.trainer.clone();
@@ -283,10 +304,18 @@ pub fn run_hier_scheme(
     };
     let worlds = world.cell_worlds(fleets)?;
     let mut tr = HierTrainer::new(cfg, hc, worlds, &world.test, exp.partition)?;
-    if warm_steps > 0 {
-        tr.warm_start(warm_steps, 64, 0.05)?;
+    match resume {
+        Some(path) => tr.resume_from(path)?,
+        None if warm_steps > 0 => tr.warm_start(warm_steps, 64, 0.05)?,
+        None => {}
     }
-    tr.run(periods)?;
+    match checkpoint {
+        Some(path) => {
+            tr.run_checkpointed(periods, every, path)?;
+            tr.save_checkpoint(path)?;
+        }
+        None => tr.run(periods)?,
+    }
     Ok(HierRun {
         log: tr.merged_log(),
         cells: tr.cell_count(),

@@ -1,0 +1,496 @@
+//! Deterministic fault injection: device crashes, gradient payload
+//! corruption, and cell outages.
+//!
+//! The paper's learning-efficiency criterion assumes every scheduled
+//! device computes and uploads cleanly; a production FEEL fleet does
+//! not. This module injects the three failure classes a real deployment
+//! lives with — a device *crashing* (disappearing for a drawn number of
+//! rounds, then rejoining cold or warm), a device uploading a *corrupt*
+//! gradient (NaN/Inf or noise-contaminated), and a whole *cell* dropping
+//! out of the hierarchy for tau-blocks at a time — so the scheduler,
+//! quarantine (`grad::guard`), and checkpoint/resume paths have real
+//! chaos to survive.
+//!
+//! Determinism contract (same as `device/straggler.rs`): every draw
+//! comes from a counter-derived `Pcg::for_device` stream keyed by
+//! `(seed ^ TAG, period, device)`. Faults are a pure function of the run
+//! coordinates — independent of thread count and execution order — and
+//! each fault class carries its own tag, so enabling or disabling one
+//! class never shifts another's draws, nor the straggler/sampling/batch
+//! streams that share the same coordinates.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Pcg;
+
+/// Stream tag for crash draws.
+const CRASH_TAG: u64 = 0xc4a5_71fe_0bad_c0de;
+/// Stream tag for payload-corruption draws. The noise *contamination*
+/// stream reuses this tag on the high-bit device lane `device | 1 << 63`
+/// so membership draws and noise draws never collide.
+const CORRUPT_TAG: u64 = 0xbad6_4ad5_0c0a_a61e;
+/// Stream tag for hier cell-outage draws (coordinates: tau-block, cell).
+const OUTAGE_TAG: u64 = 0xce11_0074_a6ed_da4c;
+
+/// Whether a device is reachable this period.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashState {
+    /// reachable: schedules, computes, uploads as normal
+    Up,
+    /// crashed: invisible to the scheduler until period `rejoin`
+    Down {
+        /// first period the device is reachable again
+        rejoin: u64,
+        /// on rejoin the device lost local state (deadline headroom
+        /// carry is wiped); a warm rejoin keeps it
+        cold: bool,
+    },
+}
+
+impl CrashState {
+    pub fn is_down(&self) -> bool {
+        matches!(self, CrashState::Down { .. })
+    }
+}
+
+/// How a corrupt upload is mangled.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Corruption {
+    /// NaN/Inf terms injected into the payload (a diverged device)
+    NonFinite,
+    /// zero-mean noise at `scale` × payload RMS added per element (a
+    /// faulty radio / byzantine device — finite, so only a norm bound
+    /// can catch it)
+    Noise(f64),
+}
+
+/// Seeded fleet-wide fault configuration.
+///
+/// All draws are per-coordinate pure functions, so the plan itself is
+/// `Copy` state with no RNG inside — the same construction that keeps
+/// `StragglerModel` thread-invariant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// per-period per-device probability a crash *starts*, in [0, 1)
+    pub crash_rate: f64,
+    /// maximum crash duration in periods (actual length uniform in
+    /// 1..=crash_len); must be >= 1
+    pub crash_len: u64,
+    /// per-period per-device probability the upload is corrupt, in [0, 1)
+    pub corrupt_rate: f64,
+    /// noise amplitude for the `Corruption::Noise` class (multiple of
+    /// payload RMS); 0 makes every corruption `NonFinite`
+    pub corrupt_noise: f64,
+    /// per-tau-block per-cell outage probability (hier only), in [0, 1)
+    pub outage_rate: f64,
+}
+
+impl FaultPlan {
+    /// Checked constructor (config/CLI surfaces funnel through here).
+    pub fn new(
+        crash_rate: f64,
+        crash_len: u64,
+        corrupt_rate: f64,
+        corrupt_noise: f64,
+        outage_rate: f64,
+    ) -> Result<FaultPlan> {
+        for (name, rate) in [
+            ("fault.crash_rate", crash_rate),
+            ("fault.corrupt_rate", corrupt_rate),
+            ("fault.outage_rate", outage_rate),
+        ] {
+            if !(rate.is_finite() && (0.0..1.0).contains(&rate)) {
+                bail!("{name} must be in [0, 1), got {rate}");
+            }
+        }
+        if crash_len == 0 {
+            bail!("fault.crash_len must be >= 1 period, got 0");
+        }
+        if !(corrupt_noise.is_finite() && corrupt_noise >= 0.0) {
+            bail!("fault.corrupt_noise must be finite and >= 0, got {corrupt_noise}");
+        }
+        Ok(FaultPlan { crash_rate, crash_len, corrupt_rate, corrupt_noise, outage_rate })
+    }
+
+    /// No faults at all: the identity plan.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            crash_rate: 0.0,
+            crash_len: 1,
+            corrupt_rate: 0.0,
+            corrupt_noise: 0.0,
+            outage_rate: 0.0,
+        }
+    }
+
+    /// Whether any fault class can fire. An inactive plan skips RNG
+    /// entirely, so a zero-rate run is bitwise identical to one that
+    /// never constructed a plan.
+    pub fn is_active(&self) -> bool {
+        self.device_faults_active() || self.outage_active()
+    }
+
+    /// Whether per-device faults (crash or corruption) can fire — the
+    /// classes the flat round scheduler must handle.
+    pub fn device_faults_active(&self) -> bool {
+        self.crash_rate > 0.0 || self.corrupt_rate > 0.0
+    }
+
+    /// Whether hier cell outages can fire.
+    pub fn outage_active(&self) -> bool {
+        self.outage_rate > 0.0
+    }
+
+    /// The crash draw anchored at `period`: does a crash *start* here,
+    /// and if so for how long and how does the device come back. Draw
+    /// order is fixed (start uniform, length, cold coin) so future knobs
+    /// never shift earlier draws.
+    fn crash_draw(&self, seed: u64, period: u64, device: u64) -> Option<(u64, bool)> {
+        let mut rng = Pcg::for_device(seed ^ CRASH_TAG, period, device);
+        let starts = rng.f64() < self.crash_rate;
+        let len = 1 + rng.below(self.crash_len);
+        let cold = rng.f64() < 0.5;
+        if starts {
+            Some((len, cold))
+        } else {
+            None
+        }
+    }
+
+    /// Whether `device` is up or down at `period`: a pure function of
+    /// the coordinates, computed by scanning the bounded window of
+    /// possible crash starts (`crash_len` periods back). Overlapping
+    /// crashes resolve to the one holding the device down longest
+    /// (ties to the later start), so the state is well defined without
+    /// any cross-period mutable bookkeeping.
+    pub fn crash_state(&self, seed: u64, period: u64, device: u64) -> CrashState {
+        if self.crash_rate <= 0.0 {
+            return CrashState::Up;
+        }
+        let lo = period.saturating_sub(self.crash_len - 1);
+        // (rejoin, cold, start) of the governing crash
+        let mut best: Option<(u64, bool, u64)> = None;
+        for p in lo..=period {
+            if let Some((len, cold)) = self.crash_draw(seed, p, device) {
+                let rejoin = p + len;
+                if rejoin <= period {
+                    continue; // already over
+                }
+                let wins = match best {
+                    None => true,
+                    Some((br, _, bs)) => rejoin > br || (rejoin == br && p > bs),
+                };
+                if wins {
+                    best = Some((rejoin, cold, p));
+                }
+            }
+        }
+        match best {
+            None => CrashState::Up,
+            Some((rejoin, cold, _)) => CrashState::Down { rejoin, cold },
+        }
+    }
+
+    /// Convenience: is the device unreachable at `period`?
+    pub fn is_down(&self, seed: u64, period: u64, device: u64) -> bool {
+        self.crash_state(seed, period, device).is_down()
+    }
+
+    /// True exactly at the first period after a *cold* crash: the device
+    /// is back but lost local state (the deadline scheduler wipes its
+    /// headroom carry; a warm rejoin keeps it).
+    pub fn rejoined_cold(&self, seed: u64, period: u64, device: u64) -> bool {
+        if period == 0 || self.crash_rate <= 0.0 || self.is_down(seed, period, device) {
+            return false;
+        }
+        match self.crash_state(seed, period - 1, device) {
+            CrashState::Down { rejoin, cold } => rejoin == period && cold,
+            CrashState::Up => false,
+        }
+    }
+
+    /// Does `device`'s upload get corrupted this period, and how. The
+    /// class coin is drawn even when the membership coin misses, so
+    /// enabling noise corruption never shifts the membership stream.
+    pub fn corrupts(&self, seed: u64, period: u64, device: u64) -> Option<Corruption> {
+        if self.corrupt_rate <= 0.0 {
+            return None;
+        }
+        let mut rng = Pcg::for_device(seed ^ CORRUPT_TAG, period, device);
+        let hit = rng.f64() < self.corrupt_rate;
+        let noisy = rng.f64() < 0.5;
+        if !hit {
+            return None;
+        }
+        if noisy && self.corrupt_noise > 0.0 {
+            Some(Corruption::Noise(self.corrupt_noise))
+        } else {
+            Some(Corruption::NonFinite)
+        }
+    }
+
+    /// Mangle a gradient payload in place per the drawn corruption
+    /// class. Deterministic: the noise stream is keyed by the same
+    /// coordinates on the high-bit device lane, so contamination is
+    /// replayable and independent of the membership draw above.
+    pub fn contaminate(
+        &self,
+        seed: u64,
+        period: u64,
+        device: u64,
+        kind: Corruption,
+        grad: &mut [f32],
+    ) {
+        if grad.is_empty() {
+            return;
+        }
+        match kind {
+            Corruption::NonFinite => {
+                // a diverged device: NaN up front, infinities in the body
+                grad[0] = f32::NAN;
+                let n = grad.len();
+                if n > 1 {
+                    grad[n / 2] = f32::INFINITY;
+                    grad[n - 1] = f32::NEG_INFINITY;
+                }
+            }
+            Corruption::Noise(scale) => {
+                let rms = (grad.iter().map(|&g| g as f64 * g as f64).sum::<f64>()
+                    / grad.len() as f64)
+                    .sqrt();
+                let amp = scale * if rms > 0.0 { rms } else { 1.0 };
+                let mut rng =
+                    Pcg::for_device(seed ^ CORRUPT_TAG, period, device | (1u64 << 63));
+                for g in grad.iter_mut() {
+                    *g += (amp * rng.normal()) as f32;
+                }
+            }
+        }
+    }
+
+    /// Whether `cell` is out for tau-block `block` (hier topology). An
+    /// out cell misses the whole block — no local rounds, no cloud
+    /// merge — and rejoins with its stale model, exactly the PR 6
+    /// inactive-cell clock semantics.
+    pub fn cell_out(&self, seed: u64, block: u64, cell: u64) -> bool {
+        if self.outage_rate <= 0.0 {
+            return false;
+        }
+        let mut rng = Pcg::for_device(seed ^ OUTAGE_TAG, block, cell);
+        rng.f64() < self.outage_rate
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_plan_is_identity() {
+        let p = FaultPlan::none();
+        assert!(!p.is_active() && !p.device_faults_active() && !p.outage_active());
+        for d in 0..16 {
+            assert_eq!(p.crash_state(7, 3, d), CrashState::Up);
+            assert!(!p.rejoined_cold(7, 3, d));
+            assert!(p.corrupts(7, 3, d).is_none());
+            assert!(!p.cell_out(7, 3, d));
+        }
+        assert_eq!(FaultPlan::default(), FaultPlan::none());
+    }
+
+    #[test]
+    fn validates_knobs() {
+        assert!(FaultPlan::new(1.0, 1, 0.0, 0.0, 0.0).is_err());
+        assert!(FaultPlan::new(-0.1, 1, 0.0, 0.0, 0.0).is_err());
+        assert!(FaultPlan::new(f64::NAN, 1, 0.0, 0.0, 0.0).is_err());
+        assert!(FaultPlan::new(0.1, 0, 0.0, 0.0, 0.0).is_err());
+        assert!(FaultPlan::new(0.0, 1, 1.5, 0.0, 0.0).is_err());
+        assert!(FaultPlan::new(0.0, 1, 0.0, -1.0, 0.0).is_err());
+        assert!(FaultPlan::new(0.0, 1, 0.0, f64::INFINITY, 0.0).is_err());
+        assert!(FaultPlan::new(0.0, 1, 0.0, 0.0, 1.0).is_err());
+        assert!(FaultPlan::new(0.1, 3, 0.05, 2.0, 0.2).is_ok());
+    }
+
+    #[test]
+    fn crash_windows_are_contiguous_and_bounded() {
+        let plan = FaultPlan::new(0.15, 4, 0.0, 0.0, 0.0).unwrap();
+        let seed = 11u64;
+        for d in 0..64u64 {
+            let mut down_run = 0u64;
+            for period in 0..200u64 {
+                match plan.crash_state(seed, period, d) {
+                    CrashState::Down { rejoin, .. } => {
+                        assert!(rejoin > period, "rejoin {rejoin} <= period {period}");
+                        // a crash never exceeds crash_len periods past its
+                        // latest possible start
+                        assert!(rejoin <= period + plan.crash_len);
+                        down_run += 1;
+                        // the state is consistent with its own forecast:
+                        // still down strictly before rejoin (a *fresh*
+                        // crash may extend the window past it, so only
+                        // the lower bound is pinned)
+                        if rejoin > period + 1 {
+                            assert!(plan.is_down(seed, period + 1, d));
+                        }
+                    }
+                    CrashState::Up => {
+                        down_run = 0;
+                    }
+                }
+                // overlapping crashes can extend a run, but any *single*
+                // stretch between clean gaps still ends
+                assert!(down_run <= 50, "device {d} stuck down");
+            }
+        }
+    }
+
+    #[test]
+    fn crash_rate_and_rejoin_split_sane() {
+        let plan = FaultPlan::new(0.1, 3, 0.0, 0.0, 0.0).unwrap();
+        let n = 4000u64;
+        let mut down = 0usize;
+        let (mut cold, mut rejoins) = (0usize, 0usize);
+        for d in 0..n {
+            for period in 1..20u64 {
+                down += plan.is_down(1, period, d) as usize;
+                if !plan.is_down(1, period, d) && plan.is_down(1, period - 1, d) {
+                    rejoins += 1;
+                    cold += plan.rejoined_cold(1, period, d) as usize;
+                }
+            }
+        }
+        // steady-state down probability: 1 - P(no covering start) =
+        // 1 - 0.9 * (1 - 0.1*2/3) * (1 - 0.1/3) ~= 0.188
+        let frac = down as f64 / (n as f64 * 19.0);
+        assert!((frac - 0.188).abs() < 0.03, "down fraction {frac}");
+        // cold/warm is a fair coin over rejoin events
+        let cold_frac = cold as f64 / rejoins as f64;
+        assert!((cold_frac - 0.5).abs() < 0.05, "cold fraction {cold_frac} of {rejoins}");
+    }
+
+    #[test]
+    fn rejoined_cold_only_fires_at_the_boundary() {
+        let plan = FaultPlan::new(0.2, 3, 0.0, 0.0, 0.0).unwrap();
+        for d in 0..200u64 {
+            for period in 1..40u64 {
+                if plan.rejoined_cold(5, period, d) {
+                    assert!(!plan.is_down(5, period, d));
+                    assert!(plan.is_down(5, period - 1, d));
+                }
+                // never fires mid-uptime
+                if !plan.is_down(5, period - 1, d) {
+                    assert!(!plan.rejoined_cold(5, period, d));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_replayable_and_class_split() {
+        let plan = FaultPlan::new(0.0, 1, 0.3, 2.0, 0.0).unwrap();
+        let (mut hits, mut noisy) = (0usize, 0usize);
+        for d in 0..4000u64 {
+            let a = plan.corrupts(9, 2, d);
+            assert_eq!(a, plan.corrupts(9, 2, d));
+            if let Some(kind) = a {
+                hits += 1;
+                match kind {
+                    Corruption::Noise(s) => {
+                        assert_eq!(s, 2.0);
+                        noisy += 1;
+                    }
+                    Corruption::NonFinite => {}
+                }
+            }
+        }
+        let rate = hits as f64 / 4000.0;
+        assert!((rate - 0.3).abs() < 0.03, "corrupt rate {rate}");
+        let split = noisy as f64 / hits as f64;
+        assert!((split - 0.5).abs() < 0.06, "noise split {split}");
+        // with corrupt_noise = 0 every hit is NonFinite, and the
+        // membership draws are bitwise unchanged (class coin drawn either way)
+        let hard = FaultPlan::new(0.0, 1, 0.3, 0.0, 0.0).unwrap();
+        for d in 0..4000u64 {
+            match (plan.corrupts(9, 2, d), hard.corrupts(9, 2, d)) {
+                (Some(_), Some(Corruption::NonFinite)) | (None, None) => {}
+                (a, b) => panic!("device {d}: membership shifted {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn contaminate_nonfinite_and_noise() {
+        let plan = FaultPlan::new(0.0, 1, 0.3, 2.0, 0.0).unwrap();
+        let base: Vec<f32> = (0..64).map(|i| (i as f32) * 0.1 - 3.0).collect();
+        let mut nf = base.clone();
+        plan.contaminate(9, 2, 5, Corruption::NonFinite, &mut nf);
+        assert!(nf.iter().any(|g| !g.is_finite()));
+        assert!(nf[0].is_nan());
+        // noise: finite, replayable, actually different from the original
+        let mut a = base.clone();
+        let mut b = base.clone();
+        plan.contaminate(9, 2, 5, Corruption::Noise(2.0), &mut a);
+        plan.contaminate(9, 2, 5, Corruption::Noise(2.0), &mut b);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|g| g.is_finite()));
+        assert_ne!(a, base);
+        // another device's noise stream is independent
+        let mut c = base.clone();
+        plan.contaminate(9, 2, 6, Corruption::Noise(2.0), &mut c);
+        assert_ne!(a, c);
+        // an all-zero payload still gets perturbed (RMS floor)
+        let mut z = vec![0.0f32; 16];
+        plan.contaminate(9, 2, 5, Corruption::Noise(1.0), &mut z);
+        assert!(z.iter().any(|&g| g != 0.0));
+        // empty payload is a no-op, not a panic
+        plan.contaminate(9, 2, 5, Corruption::NonFinite, &mut []);
+    }
+
+    #[test]
+    fn cell_outage_rate_and_replay() {
+        let plan = FaultPlan::new(0.0, 1, 0.0, 0.0, 0.25).unwrap();
+        let mut out = 0usize;
+        for block in 0..500u64 {
+            for cell in 0..8u64 {
+                let o = plan.cell_out(3, block, cell);
+                assert_eq!(o, plan.cell_out(3, block, cell));
+                out += o as usize;
+            }
+        }
+        let rate = out as f64 / 4000.0;
+        assert!((rate - 0.25).abs() < 0.03, "outage rate {rate}");
+    }
+
+    #[test]
+    fn fault_classes_use_disjoint_streams() {
+        // same coordinates, different tags: enabling one class must not
+        // move another's draws
+        let all = FaultPlan::new(0.2, 3, 0.2, 1.0, 0.2).unwrap();
+        let crash_only = FaultPlan::new(0.2, 3, 0.0, 0.0, 0.0).unwrap();
+        let corrupt_only = FaultPlan::new(0.0, 1, 0.2, 1.0, 0.0).unwrap();
+        let outage_only = FaultPlan::new(0.0, 1, 0.0, 0.0, 0.2).unwrap();
+        for d in 0..500u64 {
+            for period in 0..6u64 {
+                assert_eq!(
+                    all.crash_state(13, period, d),
+                    crash_only.crash_state(13, period, d)
+                );
+                assert_eq!(all.corrupts(13, period, d), corrupt_only.corrupts(13, period, d));
+                assert_eq!(all.cell_out(13, period, d), outage_only.cell_out(13, period, d));
+            }
+        }
+        // and the crash/corrupt streams are genuinely different sequences
+        let coincide = (0..500u64)
+            .filter(|&d| {
+                all.crash_draw(13, 1, d).is_some() == all.corrupts(13, 1, d).is_some()
+            })
+            .count();
+        assert!((100..400).contains(&coincide), "{coincide} coincidences in 500");
+    }
+}

@@ -4,6 +4,8 @@
 
 use anyhow::{bail, Result};
 
+use super::guard::{GradGuard, GradVerdict, Quarantine};
+
 /// Streaming weighted aggregator: server-side state for one period.
 ///
 /// Heterogeneous fleets (`coordinator::fleet_backends`) aggregate one
@@ -15,6 +17,11 @@ pub struct Aggregator {
     acc: Vec<f64>,
     total_weight: f64,
     contributions: usize,
+    /// contributions whose payload was detected corrupt (non-finite, or
+    /// over the guard's norm bound) — counted whatever the policy did
+    corrupt: usize,
+    /// corrupt contributions the guard rejected or clipped
+    quarantined: usize,
     /// parameter-space tag (0 for homogeneous fleets)
     family: u32,
 }
@@ -27,7 +34,14 @@ impl Aggregator {
     /// An aggregator for one model family's parameter space. `merge` and
     /// `reduce_shards` reject mixing across family tags.
     pub fn for_family(p: usize, family: u32) -> Self {
-        Aggregator { acc: vec![0f64; p], total_weight: 0.0, contributions: 0, family }
+        Aggregator {
+            acc: vec![0f64; p],
+            total_weight: 0.0,
+            contributions: 0,
+            corrupt: 0,
+            quarantined: 0,
+            family,
+        }
     }
 
     /// The parameter-space tag this aggregator accepts shards from.
@@ -42,9 +56,17 @@ impl Aggregator {
         self.acc.iter_mut().for_each(|a| *a = 0.0);
         self.total_weight = 0.0;
         self.contributions = 0;
+        self.corrupt = 0;
+        self.quarantined = 0;
     }
 
     /// Add one device's gradient with weight |B_k|.
+    ///
+    /// A non-finite payload is *accepted* (historical behaviour: eq. 1 is
+    /// applied verbatim) but bumps the corrupt counter so a poisoned
+    /// round is visible in the log instead of surfacing as an unexplained
+    /// NaN loss periods later. Route through [`add_guarded`]
+    /// (`Aggregator::add_guarded`) to act on corruption.
     pub fn add(&mut self, grad: &[f32], weight: f64) -> Result<()> {
         if grad.len() != self.acc.len() {
             bail!("gradient length {} != {}", grad.len(), self.acc.len());
@@ -52,8 +74,13 @@ impl Aggregator {
         if !(weight > 0.0 && weight.is_finite()) {
             bail!("non-positive weight {weight}");
         }
+        let mut finite = true;
         for (a, &g) in self.acc.iter_mut().zip(grad) {
+            finite &= g.is_finite();
             *a += weight * g as f64;
+        }
+        if !finite {
+            self.corrupt += 1;
         }
         self.total_weight += weight;
         self.contributions += 1;
@@ -62,6 +89,104 @@ impl Aggregator {
 
     pub fn contributions(&self) -> usize {
         self.contributions
+    }
+
+    /// Contributions whose payload was detected corrupt — non-finite
+    /// anywhere on the add path, plus norm outliers on the guarded path.
+    pub fn corrupt_contributions(&self) -> usize {
+        self.corrupt
+    }
+
+    /// Corrupt contributions the quarantine rejected or clipped.
+    pub fn quarantined_contributions(&self) -> usize {
+        self.quarantined
+    }
+
+    /// Screened add: apply the guard's quarantine policy to one payload.
+    ///
+    /// Verdicts are a pure function of the single payload, so guarded
+    /// adds inside sharded reduces stay order-free; with the guard off
+    /// the numerics are bitwise-identical to [`add`] (`Aggregator::add`).
+    pub fn add_guarded(
+        &mut self,
+        grad: &[f32],
+        weight: f64,
+        guard: &GradGuard,
+    ) -> Result<GradVerdict> {
+        if grad.len() != self.acc.len() {
+            bail!("gradient length {} != {}", grad.len(), self.acc.len());
+        }
+        let finite = grad.iter().all(|g| g.is_finite());
+        let outlier = finite
+            && guard.checks_norm()
+            && grad.iter().map(|&g| g as f64 * g as f64).sum::<f64>().sqrt() > guard.max_norm;
+        if finite && !outlier {
+            self.add(grad, weight)?;
+            return Ok(GradVerdict::Clean);
+        }
+        match guard.policy {
+            Quarantine::Off => {
+                // `add` bumps the corrupt counter for non-finite payloads
+                // itself; a finite norm outlier it cannot see
+                self.add(grad, weight)?;
+                if outlier {
+                    self.corrupt += 1;
+                }
+                Ok(GradVerdict::Tainted)
+            }
+            Quarantine::Abort => {
+                if finite {
+                    bail!(
+                        "quarantine=abort: gradient L2 norm exceeds bound {} \
+                         (corrupt payload in a run configured to treat corruption as a bug)",
+                        guard.max_norm
+                    );
+                }
+                bail!(
+                    "quarantine=abort: non-finite gradient payload \
+                     (corrupt payload in a run configured to treat corruption as a bug)"
+                );
+            }
+            Quarantine::Reject => {
+                self.corrupt += 1;
+                self.quarantined += 1;
+                Ok(GradVerdict::Rejected)
+            }
+            Quarantine::Clip => {
+                // sanitize a copy: zero non-finite terms, then rescale the
+                // survivor onto the norm bound if it still exceeds it
+                let mut clean: Vec<f32> =
+                    grad.iter().map(|&g| if g.is_finite() { g } else { 0.0 }).collect();
+                if guard.checks_norm() {
+                    let norm =
+                        clean.iter().map(|&g| g as f64 * g as f64).sum::<f64>().sqrt();
+                    if norm > guard.max_norm {
+                        let scale = (guard.max_norm / norm) as f32;
+                        clean.iter_mut().for_each(|g| *g *= scale);
+                    }
+                }
+                self.add(&clean, weight)?;
+                self.corrupt += 1;
+                self.quarantined += 1;
+                Ok(GradVerdict::Clipped)
+            }
+        }
+    }
+
+    /// Screened [`add_stale`] (`Aggregator::add_stale`): the staleness
+    /// discount applies to the weight exactly as on the unguarded path,
+    /// then the payload goes through the quarantine.
+    pub fn add_stale_guarded(
+        &mut self,
+        grad: &[f32],
+        weight: f64,
+        staleness: u64,
+        alpha: f64,
+        beta: f64,
+        guard: &GradGuard,
+    ) -> Result<GradVerdict> {
+        let w = (weight * staleness_factor(alpha, beta, staleness)).max(f64::MIN_POSITIVE);
+        self.add_guarded(grad, w, guard)
     }
 
     /// Add a contribution drawn under partial participation: the weight is
@@ -128,6 +253,8 @@ impl Aggregator {
         }
         self.total_weight += other.total_weight;
         self.contributions += other.contributions;
+        self.corrupt += other.corrupt;
+        self.quarantined += other.quarantined;
         Ok(())
     }
 
@@ -405,6 +532,141 @@ mod tests {
         let out = extreme.finish().unwrap();
         assert!((out[0] - 1.0).abs() < 1e-7, "{out:?}");
         assert!(out[1].abs() < 1e-7, "{out:?}");
+    }
+
+    #[test]
+    fn nan_contribution_is_counted_not_silent() {
+        // satellite: even with quarantine off, a NaN payload must be
+        // countable — numerics unchanged, counter bumped
+        let mut a = Aggregator::new(2);
+        a.add(&[1.0, 2.0], 1.0).unwrap();
+        assert_eq!(a.corrupt_contributions(), 0);
+        a.add(&[f32::NAN, 0.0], 1.0).unwrap();
+        a.add(&[0.0, f32::INFINITY], 2.0).unwrap();
+        assert_eq!(a.contributions(), 3);
+        assert_eq!(a.corrupt_contributions(), 2);
+        assert_eq!(a.quarantined_contributions(), 0);
+        assert!(a.average().unwrap()[0].is_nan());
+        // stale adds scan too
+        let mut s = Aggregator::new(1);
+        s.add_stale(&[f32::NEG_INFINITY], 1.0, 2, 0.6, 0.5).unwrap();
+        assert_eq!(s.corrupt_contributions(), 1);
+        // reset clears the new counters with everything else
+        a.reset();
+        assert_eq!(a.corrupt_contributions(), 0);
+        assert_eq!(a.quarantined_contributions(), 0);
+    }
+
+    #[test]
+    fn guarded_add_off_is_bitwise_plain_add() {
+        let g = vec![1.5f32, -2.25, f32::NAN];
+        let off = GradGuard::off();
+        let mut guarded = Aggregator::new(3);
+        let v = guarded.add_guarded(&g, 2.0, &off).unwrap();
+        assert_eq!(v, GradVerdict::Tainted);
+        let mut plain = Aggregator::new(3);
+        plain.add(&g, 2.0).unwrap();
+        assert_eq!(guarded.acc, plain.acc);
+        assert_eq!(guarded.total_weight.to_bits(), plain.total_weight.to_bits());
+        assert_eq!(guarded.corrupt_contributions(), plain.corrupt_contributions());
+        // clean payloads come back Clean under any policy
+        let clip = GradGuard::new(Quarantine::Clip, 100.0).unwrap();
+        let mut c = Aggregator::new(2);
+        assert_eq!(c.add_guarded(&[3.0, 4.0], 1.0, &clip).unwrap(), GradVerdict::Clean);
+        assert_eq!(c.corrupt_contributions(), 0);
+        // off + finite bound: norm outliers are added untouched but counted
+        let watch = GradGuard::new(Quarantine::Off, 1.0).unwrap();
+        let mut w = Aggregator::new(2);
+        assert_eq!(w.add_guarded(&[3.0, 4.0], 1.0, &watch).unwrap(), GradVerdict::Tainted);
+        assert_eq!(w.corrupt_contributions(), 1);
+        assert_eq!(w.quarantined_contributions(), 0);
+        assert_eq!(w.average().unwrap(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn guarded_reject_drops_corrupt_payloads() {
+        let guard = GradGuard::new(Quarantine::Reject, 10.0).unwrap();
+        let mut a = Aggregator::new(2);
+        assert_eq!(a.add_guarded(&[1.0, 1.0], 1.0, &guard).unwrap(), GradVerdict::Clean);
+        assert_eq!(a.add_guarded(&[f32::NAN, 1.0], 1.0, &guard).unwrap(), GradVerdict::Rejected);
+        // finite but over the norm bound: also rejected
+        assert_eq!(a.add_guarded(&[30.0, 40.0], 1.0, &guard).unwrap(), GradVerdict::Rejected);
+        assert_eq!(a.contributions(), 1);
+        assert_eq!(a.corrupt_contributions(), 2);
+        assert_eq!(a.quarantined_contributions(), 2);
+        assert_eq!(a.average().unwrap(), vec![1.0, 1.0]);
+        // length mismatch still errors before any screening
+        assert!(a.add_guarded(&[1.0], 1.0, &guard).is_err());
+    }
+
+    #[test]
+    fn guarded_clip_sanitizes_and_rescales() {
+        let guard = GradGuard::new(Quarantine::Clip, 5.0).unwrap();
+        // 3-4-5 triangle scaled by 10: norm 50, clipped back to 5
+        let mut a = Aggregator::new(2);
+        assert_eq!(a.add_guarded(&[30.0, 40.0], 1.0, &guard).unwrap(), GradVerdict::Clipped);
+        let out = a.average().unwrap();
+        assert!((out[0] - 3.0).abs() < 1e-5 && (out[1] - 4.0).abs() < 1e-5, "{out:?}");
+        assert_eq!(a.quarantined_contributions(), 1);
+        // non-finite terms are zeroed before the norm is taken
+        let mut b = Aggregator::new(3);
+        assert_eq!(
+            b.add_guarded(&[f32::INFINITY, 3.0, 4.0], 2.0, &guard).unwrap(),
+            GradVerdict::Clipped
+        );
+        let out = b.average().unwrap();
+        assert_eq!(out[0], 0.0);
+        assert!((out[1] - 3.0).abs() < 1e-5 && (out[2] - 4.0).abs() < 1e-5, "{out:?}");
+        // an all-NaN payload clips to zeros (dilutes, never poisons)
+        let mut z = Aggregator::new(2);
+        z.add_guarded(&[1.0, 1.0], 1.0, &guard).unwrap();
+        z.add_guarded(&[f32::NAN, f32::NAN], 1.0, &guard).unwrap();
+        assert_eq!(z.average().unwrap(), vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn guarded_abort_fails_loudly() {
+        let guard = GradGuard::new(Quarantine::Abort, 10.0).unwrap();
+        let mut a = Aggregator::new(2);
+        assert_eq!(a.add_guarded(&[1.0, 2.0], 1.0, &guard).unwrap(), GradVerdict::Clean);
+        let err = a.add_guarded(&[f32::NAN, 0.0], 1.0, &guard).unwrap_err().to_string();
+        assert!(err.contains("non-finite"), "{err}");
+        let err = a.add_guarded(&[30.0, 40.0], 1.0, &guard).unwrap_err().to_string();
+        assert!(err.contains("norm"), "{err}");
+        // nothing partial was applied
+        assert_eq!(a.contributions(), 1);
+        assert_eq!(a.average().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn add_stale_guarded_discounts_like_unguarded() {
+        let guard = GradGuard::new(Quarantine::Reject, 100.0).unwrap();
+        let mut a = Aggregator::new(2);
+        a.add_stale_guarded(&[4.0, 0.0], 4.0, 0, 1.0, 1.0, &guard).unwrap();
+        a.add_stale_guarded(&[0.0, 4.0], 4.0, 3, 1.0, 1.0, &guard).unwrap();
+        let mut b = Aggregator::new(2);
+        b.add_stale(&[4.0, 0.0], 4.0, 0, 1.0, 1.0).unwrap();
+        b.add_stale(&[0.0, 4.0], 4.0, 3, 1.0, 1.0).unwrap();
+        assert_eq!(a.average().unwrap(), b.average().unwrap());
+        // a stale corrupt payload is still screened
+        assert_eq!(
+            a.add_stale_guarded(&[f32::NAN, 0.0], 4.0, 1, 1.0, 1.0, &guard).unwrap(),
+            GradVerdict::Rejected
+        );
+    }
+
+    #[test]
+    fn merge_sums_corruption_counters() {
+        let guard = GradGuard::new(Quarantine::Reject, 10.0).unwrap();
+        let mut a = Aggregator::new(2);
+        a.add(&[f32::NAN, 0.0], 1.0).unwrap();
+        let mut b = Aggregator::new(2);
+        b.add_guarded(&[f32::NAN, 0.0], 1.0, &guard).unwrap();
+        b.add(&[1.0, 1.0], 1.0).unwrap();
+        a.merge(&b).unwrap();
+        assert_eq!(a.corrupt_contributions(), 2);
+        assert_eq!(a.quarantined_contributions(), 1);
+        assert_eq!(a.contributions(), 2);
     }
 
     #[test]

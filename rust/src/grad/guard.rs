@@ -1,0 +1,162 @@
+//! Gradient quarantine: server-side payload screening at the aggregation
+//! seam.
+//!
+//! A production fleet uploads what it uploads — diverged devices send
+//! NaN/Inf payloads, byzantine or faulty radios send garbage with huge
+//! norms. Today every contribution flows straight into the server
+//! accumulator; one poisoned payload turns the global model into NaN a
+//! few periods later with nothing in the log to explain it. The
+//! [`GradGuard`] closes that seam: every contribution is screened for
+//! non-finite values and (optionally) an L2-norm bound, and the
+//! configured [`Quarantine`] policy decides what happens to offenders —
+//! count-only, reject, sanitize-and-clip, or abort the round.
+//!
+//! The guard is deliberately *stateless and order-free*: verdicts are a
+//! pure function of the single payload, so screening inside sharded
+//! reduces stays bitwise thread-invariant. With the guard off, screened
+//! adds are bitwise-identical to unscreened ones — offenders are merely
+//! counted (`Aggregator::corrupt_contributions`), never altered.
+
+use anyhow::{bail, Result};
+
+/// Accepted `fault.quarantine` values (CLI/config errors print this).
+pub const QUARANTINE_NAMES: &str = "off | reject | clip | abort";
+
+/// What to do with a corrupt (non-finite or norm-outlier) contribution.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Quarantine {
+    /// accept and count — today's numerics, bitwise, but visible
+    #[default]
+    Off,
+    /// drop the contribution from the aggregate (counted as quarantined)
+    Reject,
+    /// sanitize: zero non-finite terms, rescale to the norm bound
+    Clip,
+    /// fail the round loudly — for runs where corruption means a bug
+    Abort,
+}
+
+impl Quarantine {
+    pub fn parse(s: &str) -> Option<Quarantine> {
+        match s {
+            "off" => Some(Quarantine::Off),
+            "reject" => Some(Quarantine::Reject),
+            "clip" => Some(Quarantine::Clip),
+            "abort" => Some(Quarantine::Abort),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Quarantine::Off => "off",
+            Quarantine::Reject => "reject",
+            Quarantine::Clip => "clip",
+            Quarantine::Abort => "abort",
+        }
+    }
+}
+
+/// The quarantine policy plus its detection threshold.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GradGuard {
+    pub policy: Quarantine,
+    /// L2-norm bound above which a (finite) contribution counts as an
+    /// outlier; `f64::INFINITY` disables the norm check
+    pub max_norm: f64,
+}
+
+impl Default for GradGuard {
+    fn default() -> Self {
+        GradGuard::off()
+    }
+}
+
+impl GradGuard {
+    /// No screening beyond the always-on non-finite count.
+    pub fn off() -> GradGuard {
+        GradGuard { policy: Quarantine::Off, max_norm: f64::INFINITY }
+    }
+
+    /// Checked constructor (the config/CLI surfaces funnel through here).
+    pub fn new(policy: Quarantine, max_norm: f64) -> Result<GradGuard> {
+        if !(max_norm > 0.0) {
+            bail!("quarantine norm bound must be > 0, got {max_norm}");
+        }
+        Ok(GradGuard { policy, max_norm })
+    }
+
+    /// Whether this guard can alter aggregation (reject/clip/abort). An
+    /// `Off` guard — even with a finite norm bound — only counts.
+    pub fn is_active(&self) -> bool {
+        self.policy != Quarantine::Off
+    }
+
+    /// Whether the norm screen is on at all.
+    pub fn checks_norm(&self) -> bool {
+        self.max_norm.is_finite()
+    }
+}
+
+/// What the guard decided about one contribution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradVerdict {
+    /// finite, within the norm bound: added untouched
+    Clean,
+    /// corrupt but the policy is `Off`: added untouched, counted
+    Tainted,
+    /// corrupt under `Clip`: sanitized/rescaled copy added, counted
+    Clipped,
+    /// corrupt under `Reject`: not added, counted
+    Rejected,
+}
+
+impl GradVerdict {
+    /// Did the contribution (possibly sanitized) enter the aggregate?
+    pub fn applied(&self) -> bool {
+        !matches!(self, GradVerdict::Rejected)
+    }
+
+    /// Was the payload detected corrupt (whatever the policy did)?
+    pub fn corrupt(&self) -> bool {
+        !matches!(self, GradVerdict::Clean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for q in [Quarantine::Off, Quarantine::Reject, Quarantine::Clip, Quarantine::Abort] {
+            assert_eq!(Quarantine::parse(q.name()), Some(q));
+        }
+        assert_eq!(Quarantine::parse("fifo"), None);
+        assert!(QUARANTINE_NAMES.contains("reject") && QUARANTINE_NAMES.contains("abort"));
+    }
+
+    #[test]
+    fn guard_validates_norm_bound() {
+        assert!(GradGuard::new(Quarantine::Reject, 0.0).is_err());
+        assert!(GradGuard::new(Quarantine::Reject, -1.0).is_err());
+        assert!(GradGuard::new(Quarantine::Reject, f64::NAN).is_err());
+        let g = GradGuard::new(Quarantine::Reject, 10.0).unwrap();
+        assert!(g.is_active() && g.checks_norm());
+        // infinity is a legal bound: non-finite screening only
+        let g = GradGuard::new(Quarantine::Clip, f64::INFINITY).unwrap();
+        assert!(g.is_active() && !g.checks_norm());
+        // off + finite bound = detection-only observability
+        let g = GradGuard::new(Quarantine::Off, 5.0).unwrap();
+        assert!(!g.is_active() && g.checks_norm());
+        assert_eq!(GradGuard::default(), GradGuard::off());
+    }
+
+    #[test]
+    fn verdict_predicates() {
+        assert!(GradVerdict::Clean.applied() && !GradVerdict::Clean.corrupt());
+        assert!(GradVerdict::Tainted.applied() && GradVerdict::Tainted.corrupt());
+        assert!(GradVerdict::Clipped.applied() && GradVerdict::Clipped.corrupt());
+        assert!(!GradVerdict::Rejected.applied() && GradVerdict::Rejected.corrupt());
+    }
+}

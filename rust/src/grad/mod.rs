@@ -1,5 +1,7 @@
 //! Gradient plumbing at the edge server (DESIGN.md S8).
 
 pub mod aggregate;
+pub mod guard;
 
 pub use aggregate::{aggregate, staleness_factor, Aggregator};
+pub use guard::{GradGuard, GradVerdict, Quarantine, QUARANTINE_NAMES};

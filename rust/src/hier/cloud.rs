@@ -37,6 +37,12 @@ impl CloudAggregator {
         self.rounds
     }
 
+    /// Restore the checkpointed cadence counter (the merged parameters
+    /// themselves live in the cells' servers, which restore separately).
+    pub fn restore_rounds(&mut self, rounds: usize) {
+        self.rounds = rounds;
+    }
+
     /// One cloud round: sample-count-weighted FedAvg of every model
     /// family shared by two or more cells, written back to all member
     /// cells. Returns how many families were actually merged (0 for a
@@ -113,8 +119,39 @@ impl CloudAggregator {
         active: &[bool],
         frac: f64,
     ) -> Result<usize> {
-        if active.len() != cells.len() {
-            bail!("active mask covers {} cells but the fleet has {}", active.len(), cells.len());
+        let receive = vec![true; cells.len()];
+        self.merge_guarded(cells, active, frac, &receive)
+    }
+
+    /// The general guarded cloud round: `contribute[c]` says whether cell
+    /// c's edge model enters the average (sampled out or in outage =
+    /// false), `receive[c]` whether the merged model is pushed back to
+    /// it. A cell in outage neither contributes nor receives — it keeps
+    /// its stale edge model and is merged back in, stale, when it
+    /// rejoins. Contributors are weighted `samples / frac`
+    /// (Horvitz–Thompson over the *sampling* draw; outage is not a
+    /// sampling design, so pass `frac = 1.0` when only outage gates the
+    /// round).
+    pub fn merge_guarded(
+        &mut self,
+        cells: &mut [Trainer<'_>],
+        contribute: &[bool],
+        frac: f64,
+        receive: &[bool],
+    ) -> Result<usize> {
+        if contribute.len() != cells.len() {
+            bail!(
+                "active mask covers {} cells but the fleet has {}",
+                contribute.len(),
+                cells.len()
+            );
+        }
+        if receive.len() != cells.len() {
+            bail!(
+                "receive mask covers {} cells but the fleet has {}",
+                receive.len(),
+                cells.len()
+            );
         }
         self.rounds += 1;
         if cells.len() < 2 {
@@ -158,7 +195,7 @@ impl CloudAggregator {
                         params.len()
                     );
                 }
-                if active[c] {
+                if contribute[c] {
                     agg.add_inverse_prob(params, cells[c].total_samples() as f64, frac)?;
                 }
             }
@@ -168,7 +205,9 @@ impl CloudAggregator {
             }
             let global = agg.finish()?;
             for &(c, f) in &members {
-                cells[c].server.set_family_params(f, global.clone());
+                if receive[c] {
+                    cells[c].server.set_family_params(f, global.clone());
+                }
             }
             merged += 1;
         }

@@ -19,14 +19,19 @@
 //! reproduces the flat `Trainer` bitwise (`tests/exec_determinism.rs`
 //! pins both).
 
-use anyhow::{bail, Result};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
 
 use super::cloud::CloudAggregator;
+use crate::coordinator::checkpoint::{self, ByteReader, ByteWriter};
 use crate::coordinator::{BackendSet, TrainLog, Trainer, TrainerConfig, WallStats};
 use crate::data::{Dataset, Partition};
 use crate::device::{ClientSampler, Device};
 use crate::exec::Engine;
+use crate::fault::FaultPlan;
 use crate::sched::RoundPolicy;
+use crate::util::rng::splitmix64;
 
 /// Per-cell seed separation: cell c trains under seed
 /// `base ^ (c * STRIDE)` (an odd multiplier, so distinct cells never
@@ -78,6 +83,13 @@ pub struct HierTrainer<'a> {
     cell_frac: f64,
     /// completed tau-blocks — the cell sampler's period coordinate
     blocks: u64,
+    /// hier-level fault plan: only `outage_rate` acts here (device-level
+    /// crash/corruption lives inside each cell's scheduler)
+    fault: FaultPlan,
+    /// the un-offset base seed — the outage stream's key (cell trainers
+    /// run under per-cell offset seeds; the outage draw uses the cell
+    /// index as its stream coordinate instead)
+    base_seed: u64,
 }
 
 impl<'a> HierTrainer<'a> {
@@ -114,6 +126,9 @@ impl<'a> HierTrainer<'a> {
         } else {
             bail!("cell_frac must be in (0, 1], got {}", hc.cell_frac);
         };
+        if base.fault.outage_active() && worlds.len() < 2 {
+            bail!("cell outage injection (fault.outage_rate > 0) needs at least two cells");
+        }
         let engine = Engine::new(base.threads);
         // split the thread budget across concurrent cells (wall-clock
         // only: numerics are thread-invariant at every level)
@@ -138,6 +153,8 @@ impl<'a> HierTrainer<'a> {
             sampler,
             cell_frac: hc.cell_frac,
             blocks: 0,
+            fault: base.fault,
+            base_seed: base.seed,
         })
     }
 
@@ -199,10 +216,44 @@ impl<'a> HierTrainer<'a> {
                 ids.into_iter().for_each(|c| member[c] = true);
                 member
             });
+            // cell outage draws from its own tagged stream keyed on the
+            // base seed with the cell index as the stream coordinate —
+            // sampling and outage never perturb each other's draws, and
+            // outage_rate = 0 skips the stream entirely (bitwise no-op)
+            let up: Option<Vec<bool>> = if self.fault.outage_active() {
+                Some(
+                    (0..self.cells.len())
+                        .map(|c| !self.fault.cell_out(self.base_seed, self.blocks, c as u64))
+                        .collect(),
+                )
+            } else {
+                None
+            };
+            // a cell runs the block iff it was sampled in AND its cell is
+            // up; a None mask means "no gate of that kind this run"
+            let ran: Option<Vec<bool>> = if active.is_none() && up.is_none() {
+                None
+            } else {
+                Some(
+                    (0..self.cells.len())
+                        .map(|c| {
+                            let sampled = match &active {
+                                Some(m) => m[c],
+                                None => true,
+                            };
+                            let alive = match &up {
+                                Some(m) => m[c],
+                                None => true,
+                            };
+                            sampled && alive
+                        })
+                        .collect(),
+                )
+            };
             self.blocks += 1;
             // one engine item per cell; each cell's own engine still fans
             // its device steps out on its scoped threads inside
-            let member = active.as_deref();
+            let member = ran.as_deref();
             self.engine.run_mut(&mut self.cells, |c, tr| {
                 if member.is_some_and(|m| !m[c]) {
                     return Ok(()); // sat out this block: clock and log untouched
@@ -210,7 +261,7 @@ impl<'a> HierTrainer<'a> {
                 tr.run(block)?;
                 Ok(())
             })?;
-            self.cloud_round(active.as_deref())?;
+            self.cloud_round(ran.as_deref(), up.as_deref())?;
             left -= block;
         }
         Ok(())
@@ -225,21 +276,33 @@ impl<'a> HierTrainer<'a> {
     /// cells contribute (inverse-probability reweighted) but the merged
     /// model is pushed to every member cell; inactive cells' clocks sat
     /// at the last barrier, so the max over all cells equals the max
-    /// over active cells and the barrier needs no masking.
-    fn cloud_round(&mut self, active: Option<&[bool]>) -> Result<()> {
+    /// over active cells and the barrier needs no masking. A cell in
+    /// *outage* is harsher than a sampled-out cell: it neither
+    /// contributes nor receives — its edge model goes stale and is only
+    /// folded back in after it rejoins. Its clock still barriers with
+    /// everyone else (downtime is wall time, not a time warp).
+    fn cloud_round(&mut self, ran: Option<&[bool]>, up: Option<&[bool]>) -> Result<()> {
         if self.cells.len() > 1 {
             let t_cloud = self.cells.iter().map(|c| c.sim_time()).fold(0.0, f64::max);
             for tr in &mut self.cells {
                 tr.sync_clock_to(t_cloud);
             }
         }
-        match active {
-            Some(mask) => self.cloud.merge_sampled(&mut self.cells, mask, self.cell_frac)?,
-            None => self.cloud.merge(&mut self.cells)?,
+        match (ran, up) {
+            (None, _) => self.cloud.merge(&mut self.cells)?,
+            (Some(mask), None) => {
+                self.cloud.merge_sampled(&mut self.cells, mask, self.cell_frac)?
+            }
+            (Some(mask), Some(alive)) => {
+                // reweight only for the sampling design; outage is a
+                // fault, not an inclusion probability
+                let frac = if self.sampler.is_some() { self.cell_frac } else { 1.0 };
+                self.cloud.merge_guarded(&mut self.cells, mask, frac, alive)?
+            }
         };
         if self.cells.len() > 1 {
             for (c, tr) in self.cells.iter_mut().enumerate() {
-                if active.is_some_and(|m| !m[c]) {
+                if ran.is_some_and(|m| !m[c]) {
                     continue; // no record was produced this block
                 }
                 if let Some(r) = tr.log.records.last_mut() {
@@ -290,6 +353,106 @@ impl<'a> HierTrainer<'a> {
             wall.total_secs += tr.log.wall.total_secs;
         }
         TrainLog { records, wall }
+    }
+
+    /// Digest of the hierarchy-level shape. Each nested cell payload
+    /// carries its own full configuration digest, so this only needs the
+    /// knobs that live above the cells.
+    fn hier_digest(&self) -> u64 {
+        let fields: [u64; 5] = [
+            self.cells.len() as u64,
+            self.tau as u64,
+            self.cell_frac.to_bits(),
+            self.fault.outage_rate.to_bits(),
+            self.base_seed,
+        ];
+        fields.iter().fold(0x4e1e_7a11_c10d_5eed_u64, |h, &v| splitmix64(h ^ v))
+    }
+
+    fn checkpoint_payload(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u64(self.hier_digest());
+        w.put_u64(self.blocks);
+        w.put_usize(self.cloud.rounds());
+        w.put_usize(self.cells.len());
+        for tr in &self.cells {
+            w.put_bytes(&tr.checkpoint_payload());
+        }
+        w.into_inner()
+    }
+
+    /// Write the full hierarchy state — every cell's flat-trainer payload
+    /// plus the block and cloud-round counters — as one `KIND_HIER`
+    /// checkpoint file.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        checkpoint::write_file(path, checkpoint::KIND_HIER, &self.checkpoint_payload())
+    }
+
+    /// Restore a hierarchy from [`save_checkpoint`](Self::save_checkpoint)
+    /// output. All-or-nothing like the flat resume: every cell payload is
+    /// framed and digest-checked, and if any cell fails to restore, the
+    /// cells already touched are rolled back to their pre-call state.
+    pub fn resume_from(&mut self, path: &Path) -> Result<()> {
+        let payload = checkpoint::read_file(path, checkpoint::KIND_HIER)?;
+        self.restore_payload(&payload)
+            .with_context(|| format!("restoring checkpoint {}", path.display()))
+    }
+
+    fn restore_payload(&mut self, payload: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(payload);
+        let digest = r.get_u64()?;
+        if digest != self.hier_digest() {
+            bail!(
+                "checkpoint was written by a differently-shaped hierarchy (cell count, tau, \
+                 cell_frac, outage rate, and seed must all match)"
+            );
+        }
+        let blocks = r.get_u64()?;
+        let rounds = r.get_usize()?;
+        let n = r.get_usize()?;
+        if n != self.cells.len() {
+            bail!("checkpoint holds {n} cells, this hierarchy has {}", self.cells.len());
+        }
+        let mut cell_payloads = Vec::with_capacity(n);
+        for _ in 0..n {
+            cell_payloads.push(r.get_bytes()?);
+        }
+        r.expect_end()?;
+        // capture each cell's live state first so a failure deep in one
+        // cell's payload can roll the earlier cells back — resume stays
+        // all-or-nothing across the whole hierarchy
+        let before: Vec<Vec<u8>> = self.cells.iter().map(Trainer::checkpoint_payload).collect();
+        for (c, bytes) in cell_payloads.iter().enumerate() {
+            if let Err(e) = self.cells[c].restore_payload(bytes) {
+                for (u, saved) in before.iter().enumerate().take(c) {
+                    // the rollback payload came from this very trainer a
+                    // moment ago, so it cannot fail to parse
+                    let _ = self.cells[u].restore_payload(saved);
+                }
+                return Err(e).with_context(|| format!("cell {c}"));
+            }
+        }
+        self.blocks = blocks;
+        self.cloud.restore_rounds(rounds);
+        Ok(())
+    }
+
+    /// [`run`](Self::run), saving a checkpoint every `every` tau-blocks
+    /// (the hierarchy's natural consistency points — mid-block there is
+    /// un-merged cell state). `every = 0` never saves. The cadence is
+    /// keyed on the global block counter, so a resumed run checkpoints on
+    /// the same schedule as an uninterrupted one.
+    pub fn run_checkpointed(&mut self, periods: usize, every: usize, path: &Path) -> Result<()> {
+        let mut left = periods;
+        while left > 0 {
+            let block = left.min(self.tau);
+            self.run(block)?;
+            left -= block;
+            if every > 0 && self.blocks % every as u64 == 0 {
+                self.save_checkpoint(path)?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -378,10 +541,10 @@ mod tests {
         let csv = log.to_csv();
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 11);
-        assert!(lines[1].ends_with(",0,0"), "{}", lines[1]);
-        assert!(lines[2].ends_with(",1,0"), "{}", lines[2]);
-        assert!(lines[3].ends_with(",0,1"), "{}", lines[3]);
-        assert!(lines[4].ends_with(",1,1"), "{}", lines[4]);
+        assert!(lines[1].ends_with(",0,0,0,0,0"), "{}", lines[1]);
+        assert!(lines[2].ends_with(",1,0,0,0,0"), "{}", lines[2]);
+        assert!(lines[3].ends_with(",0,1,0,0,0"), "{}", lines[3]);
+        assert!(lines[4].ends_with(",1,1,0,0,0"), "{}", lines[4]);
     }
 
     #[test]
@@ -454,6 +617,99 @@ mod tests {
         let (loss, acc) = hier.evaluate().unwrap();
         assert!(loss.is_finite());
         assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn cell_outage_skips_blocks_and_keeps_clocks_barriered() {
+        use crate::fault::FaultPlan;
+        let (a, b, test, be) = two_cell_setup();
+        // outage on a single-cell topology is a config error, not a no-op
+        let worlds = vec![world(&a, &be, 2, 10)];
+        let base = TrainerConfig {
+            eval_every: 0,
+            fault: FaultPlan::new(0.0, 1, 0.0, 0.0, 0.5).unwrap(),
+            ..Default::default()
+        };
+        let err =
+            HierTrainer::new(base.clone(), HierConfig::default(), worlds, &test, Partition::Iid)
+                .err()
+                .unwrap()
+                .to_string();
+        assert!(err.contains("at least two cells"), "{err}");
+        // with two cells and a heavy outage rate, some tau-blocks lose a
+        // cell: its log goes ragged but the run stays cloud-consistent
+        let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
+        let hc = HierConfig { tau: 1, ..Default::default() };
+        let mut hier = HierTrainer::new(base, hc, worlds, &test, Partition::Iid).unwrap();
+        hier.run(8).unwrap();
+        assert_eq!(hier.cloud_rounds(), 8);
+        let n0 = hier.cell(0).log.records.len();
+        let n1 = hier.cell(1).log.records.len();
+        assert!(n0 + n1 < 16, "outage rate 0.5 never took a cell down in 8 blocks");
+        assert!(n0 + n1 > 0, "outage rate 0.5 took every cell down in every block");
+        // outage is wall time, not a time warp: the barrier still syncs
+        // every cell's clock, down or not
+        assert_eq!(hier.cell(0).sim_time().to_bits(), hier.cell(1).sim_time().to_bits());
+        let (loss, acc) = hier.evaluate().unwrap();
+        assert!(loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+        // zero-rate outage constructs fine and gates nothing
+        let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
+        let base = TrainerConfig {
+            eval_every: 0,
+            fault: FaultPlan::new(0.0, 1, 0.0, 0.0, 0.0).unwrap(),
+            ..Default::default()
+        };
+        let hc = HierConfig { tau: 1, ..Default::default() };
+        let mut quiet = HierTrainer::new(base, hc, worlds, &test, Partition::Iid).unwrap();
+        quiet.run(3).unwrap();
+        assert_eq!(quiet.cell(0).log.records.len(), 3);
+        assert_eq!(quiet.cell(1).log.records.len(), 3);
+    }
+
+    #[test]
+    fn hier_checkpoint_roundtrips_and_rejects_mismatched_shape() {
+        let (a, b, test, be) = two_cell_setup();
+        let path = std::env::temp_dir().join(format!("feel_hier_ckpt_{}", std::process::id()));
+        let base = TrainerConfig { eval_every: 0, ..Default::default() };
+        let hc = HierConfig { tau: 2, ..Default::default() };
+        let make =
+            |worlds| HierTrainer::new(base.clone(), hc.clone(), worlds, &test, Partition::Iid);
+        // run 4 periods, checkpoint, run 4 more: the reference trace
+        let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
+        let mut full = make(worlds).unwrap();
+        full.run(4).unwrap();
+        full.save_checkpoint(&path).unwrap();
+        full.run(4).unwrap();
+        // a fresh hierarchy resumed from the checkpoint must continue
+        // bitwise-identically
+        let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
+        let mut resumed = make(worlds).unwrap();
+        resumed.resume_from(&path).unwrap();
+        resumed.run(4).unwrap();
+        assert_eq!(full.cloud_rounds(), resumed.cloud_rounds());
+        assert_eq!(full.blocks, resumed.blocks);
+        for c in 0..2 {
+            assert_eq!(full.cell(c).server.params(), resumed.cell(c).server.params(), "cell {c}");
+            assert_eq!(
+                full.cell(c).sim_time().to_bits(),
+                resumed.cell(c).sim_time().to_bits(),
+                "cell {c}"
+            );
+        }
+        assert_eq!(full.merged_log().to_csv(), resumed.merged_log().to_csv());
+        // a differently-shaped hierarchy refuses the file
+        let worlds = vec![world(&a, &be, 2, 10), world(&b, &be, 2, 11)];
+        let hc3 = HierConfig { tau: 3, ..Default::default() };
+        let mut other =
+            HierTrainer::new(base.clone(), hc3, worlds, &test, Partition::Iid).unwrap();
+        let err = other.resume_from(&path).unwrap_err().to_string();
+        assert!(err.contains("differently-shaped"), "{err}");
+        // and a flat trainer refuses the hier kind byte outright
+        let payload = checkpoint::read_file(&path, checkpoint::KIND_HIER).unwrap();
+        assert!(!payload.is_empty());
+        assert!(checkpoint::read_file(&path, checkpoint::KIND_FLAT).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

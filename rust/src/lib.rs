@@ -26,6 +26,7 @@ pub mod data;
 pub mod device;
 pub mod exec;
 pub mod exp;
+pub mod fault;
 pub mod grad;
 pub mod hier;
 pub mod metrics;

@@ -17,7 +17,7 @@
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::policy::RoundPolicy;
 use super::queue::{Event, EventQueue};
@@ -27,7 +27,8 @@ use crate::coordinator::worker::Worker;
 use crate::data::Dataset;
 use crate::device::StragglerModel;
 use crate::exec::{self, Engine};
-use crate::grad::Aggregator;
+use crate::fault::FaultPlan;
+use crate::grad::{Aggregator, GradGuard};
 use crate::opt::types::Instance;
 
 /// One buffered async contribution, computed at dispatch time against the
@@ -58,6 +59,12 @@ pub struct RoundReport {
     pub late: usize,
     /// batch-weighted mean staleness of the applied gradients (async)
     pub stale_mean: f64,
+    /// devices unreachable this period (fault-injected crash windows)
+    pub crashed: usize,
+    /// contributions whose payload was detected corrupt this period
+    pub corrupt: usize,
+    /// corrupt contributions the quarantine rejected or clipped
+    pub quarantined: usize,
     /// whether any gradient entered the aggregate (callers skip the
     /// server update otherwise)
     pub updated: bool,
@@ -76,11 +83,38 @@ fn for_each_participant(k: usize, participants: Option<&[usize]>, mut f: impl Fn
     }
 }
 
+/// One buffered in-flight contribution in serializable form — the
+/// checkpoint image of a [`Pending`] event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InflightRecord {
+    /// absolute completion time of the upload
+    pub time: f64,
+    pub device: usize,
+    /// the period the gradient was computed in (staleness anchor)
+    pub period: u64,
+    pub batch: usize,
+    pub loss: f64,
+    pub grad: Vec<f32>,
+}
+
+/// Serializable scheduler state: the cross-period pieces a resumed run
+/// must restore for bitwise replay (carry ledger, busy flags, async
+/// in-flight queue). Records are in the queue's canonical (time, device)
+/// pop order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedCheckpoint {
+    pub carry: Vec<usize>,
+    pub busy: Vec<bool>,
+    pub inflight: Vec<InflightRecord>,
+}
+
 /// Policy-driven round scheduler. Owns the cross-period event queue (async
 /// in-flight work), per-device busy flags, and the deadline carry ledger.
 pub struct RoundScheduler {
     policy: RoundPolicy,
     straggler: StragglerModel,
+    fault: FaultPlan,
+    guard: GradGuard,
     seed: u64,
     /// in-flight async contributions, keyed by absolute completion time
     inflight: EventQueue<Pending>,
@@ -94,6 +128,8 @@ impl RoundScheduler {
     pub fn new(
         policy: RoundPolicy,
         straggler: StragglerModel,
+        fault: FaultPlan,
+        guard: GradGuard,
         k: usize,
         seed: u64,
     ) -> Result<RoundScheduler> {
@@ -101,6 +137,8 @@ impl RoundScheduler {
         Ok(RoundScheduler {
             policy,
             straggler,
+            fault,
+            guard,
             seed,
             inflight: EventQueue::new(),
             busy: vec![false; k],
@@ -117,6 +155,64 @@ impl RoundScheduler {
         &self.carry
     }
 
+    /// Snapshot the cross-period state for a checkpoint. In-flight events
+    /// are emitted in the queue's (time, device) pop order, so the image
+    /// is canonical whatever the internal heap layout.
+    pub fn snapshot(&self) -> SchedCheckpoint {
+        let inflight = self
+            .inflight
+            .events_sorted()
+            .into_iter()
+            .map(|e| InflightRecord {
+                time: e.time,
+                device: e.device,
+                period: e.payload.period,
+                batch: e.payload.batch,
+                loss: e.payload.loss,
+                grad: e.payload.grad.clone(),
+            })
+            .collect();
+        SchedCheckpoint { carry: self.carry.clone(), busy: self.busy.clone(), inflight }
+    }
+
+    /// Restore a [`SchedCheckpoint`] into this scheduler, replacing the
+    /// carry ledger, busy flags, and in-flight queue wholesale.
+    pub fn restore(&mut self, ck: SchedCheckpoint) -> Result<()> {
+        if ck.carry.len() != self.carry.len() || ck.busy.len() != self.busy.len() {
+            bail!(
+                "scheduler checkpoint is for a {}-device fleet, this run has {}",
+                ck.carry.len().max(ck.busy.len()),
+                self.carry.len()
+            );
+        }
+        self.carry = ck.carry;
+        self.busy = ck.busy;
+        self.inflight.clear();
+        for r in ck.inflight {
+            self.inflight.push(
+                r.time,
+                r.device,
+                Pending { grad: r.grad, batch: r.batch, loss: r.loss, period: r.period },
+            );
+        }
+        Ok(())
+    }
+
+    /// Wipe the carry of any device rejoining from a *cold* crash this
+    /// period: a cold rejoin lost its local state, deferred batch
+    /// included. A warm rejoin keeps its ledger entry. No-op when crash
+    /// injection is off (zero RNG draws, bitwise-identical run).
+    fn wipe_cold_rejoin_carry(&mut self, period: u64) {
+        if self.fault.crash_rate <= 0.0 {
+            return;
+        }
+        for (k, c) in self.carry.iter_mut().enumerate() {
+            if *c > 0 && self.fault.rejoined_cold(self.seed, period, k as u64) {
+                *c = 0;
+            }
+        }
+    }
+
     /// Fold the deadline carry ledger into this period's plan: each
     /// deferred batch is added to its device's planned batch and the
     /// device's nominal finish time extended by the extra compute. Growth
@@ -125,9 +221,11 @@ impl RoundScheduler {
     /// device always remains able to arrive on time at nominal speed
     /// (otherwise a large carry would deterministically re-miss every
     /// period and the device would livelock out of the training run).
-    /// Carry beyond the caps is forfeited. No-op for non-deadline
-    /// policies.
-    pub fn apply_carry(&mut self, plan: &mut Plan, inst: &Instance) {
+    /// Carry beyond the caps is forfeited. A crashed device's carry stays
+    /// in the ledger until it rejoins (wiped if the rejoin is cold).
+    /// No-op for non-deadline policies.
+    pub fn apply_carry(&mut self, plan: &mut Plan, inst: &Instance, period: u64) {
+        self.wipe_cold_rejoin_carry(period);
         let RoundPolicy::Deadline { factor } = self.policy else {
             return;
         };
@@ -135,6 +233,9 @@ impl RoundScheduler {
         for (k, c) in self.carry.iter_mut().enumerate() {
             if *c == 0 {
                 continue;
+            }
+            if self.fault.crash_rate > 0.0 && self.fault.is_down(self.seed, period, k as u64) {
+                continue; // unreachable this period; ledger entry survives
             }
             let d = &inst.devices[k];
             let cap = (d.b_max.floor() as usize).max(plan.batches[k]);
@@ -155,12 +256,22 @@ impl RoundScheduler {
     /// describes global device `ids[i]` — the optimizer solved over the
     /// participants only. Carry owned by devices *outside* this round's
     /// sample stays in the ledger until they are drawn again.
-    pub fn apply_carry_sampled(&mut self, plan: &mut Plan, inst: &Instance, ids: &[usize]) {
+    pub fn apply_carry_sampled(
+        &mut self,
+        plan: &mut Plan,
+        inst: &Instance,
+        ids: &[usize],
+        period: u64,
+    ) {
+        self.wipe_cold_rejoin_carry(period);
         let RoundPolicy::Deadline { factor } = self.policy else {
             return;
         };
         let deadline = plan.t_up * factor;
         for (i, &g) in ids.iter().enumerate() {
+            if self.fault.crash_rate > 0.0 && self.fault.is_down(self.seed, period, g as u64) {
+                continue;
+            }
             let c = &mut self.carry[g];
             if *c == 0 {
                 continue;
@@ -285,13 +396,30 @@ impl RoundScheduler {
         // drops); a sampled round starts all-false and admits participants
         let mut mask = vec![participants.is_none(); k];
         let mut dropped = 0usize;
+        let mut crashed = 0usize;
+        // devices whose upload arrives corrupt: they pace the barrier like
+        // any arrival but leave the clean sharded fold — their payloads
+        // are computed, contaminated, and screened separately below.
+        // Ascending device order (the participant walk is ascending).
+        let mut corrupt_jobs: Vec<(usize, usize)> = Vec::new();
+        let fault_on = self.fault.device_faults_active();
+        let fault = &self.fault;
         let straggler = &self.straggler;
         let seed = self.seed;
         for_each_participant(k, participants, |d| {
+            if fault_on && fault.is_down(seed, period, d as u64) {
+                mask[d] = false;
+                crashed += 1;
+                return;
+            }
             let pert = straggler.sample(seed, period, d as u64);
             if pert.dropped {
                 mask[d] = false;
                 dropped += 1;
+            } else if fault_on && fault.corrupts(seed, period, d as u64).is_some() {
+                mask[d] = false;
+                corrupt_jobs.push((d, plan.batches[d].max(1)));
+                queue.push(plan.finish[d] * pert.slowdown, d, ());
             } else {
                 mask[d] = true;
                 queue.push(plan.finish[d] * pert.slowdown, d, ());
@@ -305,19 +433,28 @@ impl RoundScheduler {
         while let Some(e) = queue.pop() {
             barrier = barrier.max(e.time);
         }
-        let mask_opt = if participants.is_some() || dropped > 0 { Some(&mask[..]) } else { None };
-        let (loss_acc, w_acc, reduce_secs) = self.run_masked(
+        let excluded = dropped + crashed + corrupt_jobs.len();
+        let mask_opt = if participants.is_some() || excluded > 0 { Some(&mask[..]) } else { None };
+        let (mut loss_acc, mut w_acc, reduce_secs) = self.run_masked(
             engine, backends, workers, params, train, plan, mask_opt, period, aggs,
         )?;
+        let (c_loss, c_w, rejected) = self.apply_corrupt_jobs(
+            engine, backends, workers, params, train, &corrupt_jobs, period, aggs,
+        )?;
+        loss_acc += c_loss;
+        w_acc += c_w;
         let planned: usize = plan.batches.iter().sum();
         Ok(RoundReport {
             duration: barrier + plan.t_down,
             train_loss: if w_acc > 0.0 { loss_acc / w_acc } else { f64::NAN },
-            b_effective: if dropped == 0 { planned } else { w_acc as usize },
-            applied: m - dropped,
+            b_effective: if dropped + crashed + rejected == 0 { planned } else { w_acc as usize },
+            applied: m - dropped - crashed - rejected,
             dropped,
             late: 0,
             stale_mean: 0.0,
+            crashed,
+            corrupt: aggs.iter().map(Aggregator::corrupt_contributions).sum(),
+            quarantined: aggs.iter().map(Aggregator::quarantined_contributions).sum(),
             updated: aggs.iter().any(|a| a.contributions() > 0),
             reduce_secs,
         })
@@ -350,9 +487,16 @@ impl RoundScheduler {
         let mut queue: EventQueue<()> = EventQueue::new();
         let mut mask = vec![false; k];
         let mut dropped = 0usize;
+        let mut crashed = 0usize;
+        let fault_on = self.fault.device_faults_active();
+        let fault = &self.fault;
         let straggler = &self.straggler;
         let seed = self.seed;
         for_each_participant(k, participants, |d| {
+            if fault_on && fault.is_down(seed, period, d as u64) {
+                crashed += 1;
+                return;
+            }
             let pert = straggler.sample(seed, period, d as u64);
             if pert.dropped {
                 dropped += 1;
@@ -363,36 +507,53 @@ impl RoundScheduler {
         let mut late = 0usize;
         let mut arrived = 0usize;
         let mut t_close = 0f64;
+        // corrupt on-time arrivals pace the round like any other but are
+        // screened outside the clean fold; collected in pop order, sorted
+        // back to device order for the subset executor
+        let mut corrupt_jobs: Vec<(usize, usize)> = Vec::new();
         while let Some(e) = queue.pop() {
             if e.time <= deadline {
-                mask[e.device] = true;
                 arrived += 1;
                 t_close = t_close.max(e.time);
+                if fault_on && fault.corrupts(seed, period, e.device as u64).is_some() {
+                    corrupt_jobs.push((e.device, plan.batches[e.device].max(1)));
+                } else {
+                    mask[e.device] = true;
+                }
             } else {
                 late += 1;
                 self.carry[e.device] += plan.batches[e.device].max(1);
             }
         }
-        if dropped > 0 {
+        corrupt_jobs.sort_unstable();
+        if dropped > 0 || crashed > 0 {
             t_close = t_close.max(plan.t_up);
         }
         if late > 0 {
             t_close = deadline;
         }
-        let all_in = participants.is_none() && arrived == k;
+        let all_in = participants.is_none() && arrived == k && corrupt_jobs.is_empty();
         let mask_opt = if all_in { None } else { Some(&mask[..]) };
-        let (loss_acc, w_acc, reduce_secs) = self.run_masked(
+        let (mut loss_acc, mut w_acc, reduce_secs) = self.run_masked(
             engine, backends, workers, params, train, plan, mask_opt, period, aggs,
         )?;
+        let (c_loss, c_w, rejected) = self.apply_corrupt_jobs(
+            engine, backends, workers, params, train, &corrupt_jobs, period, aggs,
+        )?;
+        loss_acc += c_loss;
+        w_acc += c_w;
         let planned: usize = plan.batches.iter().sum();
         Ok(RoundReport {
             duration: t_close + plan.t_down,
             train_loss: if w_acc > 0.0 { loss_acc / w_acc } else { f64::NAN },
-            b_effective: if arrived == m { planned } else { w_acc as usize },
-            applied: arrived,
+            b_effective: if arrived == m && rejected == 0 { planned } else { w_acc as usize },
+            applied: arrived - rejected,
             dropped,
             late,
             stale_mean: 0.0,
+            crashed,
+            corrupt: aggs.iter().map(Aggregator::corrupt_contributions).sum(),
+            quarantined: aggs.iter().map(Aggregator::quarantined_contributions).sum(),
             updated: aggs.iter().any(|a| a.contributions() > 0),
             reduce_secs,
         })
@@ -421,6 +582,26 @@ impl RoundScheduler {
     ) -> Result<RoundReport> {
         let k = workers.len();
         let m = participants.map_or(k, <[usize]>::len);
+        // 0. crash pass: a device that is down this period loses whatever
+        //    it had in flight (the upload dies with it) and cannot be
+        //    dispatched. Counted once per down participant.
+        let mut crashed = 0usize;
+        if self.fault.crash_rate > 0.0 {
+            let fault = &self.fault;
+            let seed = self.seed;
+            let mut killed: Vec<usize> = Vec::new();
+            self.inflight.retain(|e| {
+                if fault.is_down(seed, period, e.device as u64) {
+                    killed.push(e.device);
+                    false
+                } else {
+                    true
+                }
+            });
+            for d in killed {
+                self.busy[d] = false;
+            }
+        }
         // 1. dispatch idle devices (device order; a dropped device loses
         //    this period's work and is re-dispatched next period — sampled
         //    rounds only dispatch this round's draw, but a busy device that
@@ -428,10 +609,16 @@ impl RoundScheduler {
         let mut jobs: Vec<(usize, usize)> = Vec::new();
         let mut arrivals: Vec<f64> = Vec::new();
         let mut dropped = 0usize;
+        let fault_on = self.fault.device_faults_active();
+        let fault = &self.fault;
         let busy = &self.busy;
         let straggler = &self.straggler;
         let seed = self.seed;
         for_each_participant(k, participants, |d| {
+            if fault_on && fault.is_down(seed, period, d as u64) {
+                crashed += 1;
+                return;
+            }
             if busy[d] {
                 return;
             }
@@ -447,7 +634,15 @@ impl RoundScheduler {
             let outcomes = exec::gradient_round_subset(
                 engine, backends, workers, params, train, &jobs, self.seed, period,
             )?;
-            for ((&(dev, batch), &at), o) in jobs.iter().zip(&arrivals).zip(outcomes) {
+            for ((&(dev, batch), &at), mut o) in jobs.iter().zip(&arrivals).zip(outcomes) {
+                // corruption strikes the upload as it leaves the device —
+                // at dispatch, against the dispatch period's draw — and is
+                // only *detected* when the payload reaches the aggregator
+                if fault_on {
+                    if let Some(kind) = self.fault.corrupts(self.seed, period, dev as u64) {
+                        self.fault.contaminate(self.seed, period, dev as u64, kind, &mut o.grad);
+                    }
+                }
                 self.busy[dev] = true;
                 self.inflight
                     .push(at, dev, Pending { grad: o.grad, batch, loss: o.loss, period });
@@ -455,8 +650,8 @@ impl RoundScheduler {
         }
         // 2. close the round at the quorum-th pending arrival
         if self.inflight.is_empty() {
-            // everyone dropped or nothing in flight: an idle period of the
-            // nominal length, no update
+            // everyone dropped/crashed or nothing in flight: an idle
+            // period of the nominal length, no update
             return Ok(RoundReport {
                 duration: plan.t_period,
                 train_loss: f64::NAN,
@@ -465,47 +660,86 @@ impl RoundScheduler {
                 dropped,
                 late: 0,
                 stale_mean: 0.0,
+                crashed,
+                corrupt: 0,
+                quarantined: 0,
                 updated: false,
                 reduce_secs: 0.0,
             });
         }
         let need = ((quorum * m as f64).ceil() as usize).clamp(1, m).min(self.inflight.len());
         let mut popped: Vec<Event<Pending>> = Vec::with_capacity(need);
-        for _ in 0..need {
-            popped.push(self.inflight.pop().expect("queue length checked"));
+        for i in 0..need {
+            match self.inflight.pop() {
+                Some(e) => popped.push(e),
+                None => bail!(
+                    "async close: in-flight queue exhausted after {i} of {need} quorum \
+                     arrivals (scheduler state corrupted — queue length was {} at the \
+                     quorum computation)",
+                    need
+                ),
+            }
         }
         // anything else already in by the aggregation instant joins this
         // round too (an arrival during the following downlink waits for
         // the next round: its gradient is applied against the *next*
         // update, which is exactly what its staleness count then says)
-        let t_close = popped.last().expect("need >= 1").time.max(now);
+        let t_close = match popped.last() {
+            Some(e) => e.time.max(now),
+            None => bail!(
+                "async close: quorum of {need} produced no arrivals \
+                 (scheduler state corrupted — quorum is clamped to >= 1)"
+            ),
+        };
         while self.inflight.peek_time().is_some_and(|t| t <= t_close) {
-            popped.push(self.inflight.pop().expect("peeked"));
+            match self.inflight.pop() {
+                Some(e) => popped.push(e),
+                None => bail!(
+                    "async close: in-flight queue emptied while draining arrivals \
+                     before t_close = {t_close} (peek/pop disagree — queue corrupted)"
+                ),
+            }
         }
         // 3. apply in arrival order with staleness-discounted weights,
-        //    each gradient into its device's family accumulator
+        //    each gradient through the quarantine into its device's
+        //    family accumulator
         let t0 = Instant::now();
         let mut loss_acc = 0f64;
         let mut w_acc = 0f64;
         let mut stale_acc = 0f64;
+        let mut rejected = 0usize;
         for e in &popped {
             self.busy[e.device] = false;
             let s = period - e.payload.period;
             let w = e.payload.batch as f64;
-            aggs[backends.family_of(e.device)].add_stale(&e.payload.grad, w, s, alpha, beta)?;
-            loss_acc += e.payload.loss * w;
-            w_acc += w;
-            stale_acc += s as f64 * w;
+            let verdict = aggs[backends.family_of(e.device)].add_stale_guarded(
+                &e.payload.grad,
+                w,
+                s,
+                alpha,
+                beta,
+                &self.guard,
+            )?;
+            if verdict.applied() {
+                loss_acc += e.payload.loss * w;
+                w_acc += w;
+                stale_acc += s as f64 * w;
+            } else {
+                rejected += 1;
+            }
         }
         Ok(RoundReport {
             duration: (t_close - now) + plan.t_down,
-            train_loss: loss_acc / w_acc,
+            train_loss: if w_acc > 0.0 { loss_acc / w_acc } else { f64::NAN },
             b_effective: w_acc as usize,
-            applied: popped.len(),
+            applied: popped.len() - rejected,
             dropped,
             late: 0,
-            stale_mean: stale_acc / w_acc,
-            updated: true,
+            stale_mean: if w_acc > 0.0 { stale_acc / w_acc } else { 0.0 },
+            crashed,
+            corrupt: aggs.iter().map(Aggregator::corrupt_contributions).sum(),
+            quarantined: aggs.iter().map(Aggregator::quarantined_contributions).sum(),
+            updated: aggs.iter().any(|a| a.contributions() > 0),
             reduce_secs: t0.elapsed().as_secs_f64(),
         })
     }
@@ -513,6 +747,49 @@ impl RoundScheduler {
     #[cfg(test)]
     fn carry_mut(&mut self) -> &mut Vec<usize> {
         &mut self.carry
+    }
+
+    /// Compute, contaminate, and quarantine-screen the corrupt arrivals of
+    /// a barrier/deadline round. `jobs` is `(device, batch)` in strictly
+    /// ascending device order (the subset executor's contract). Returns
+    /// the loss/weight mass of the contributions the guard let through and
+    /// the count it rejected; detection counters land in the family
+    /// accumulators themselves.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_corrupt_jobs(
+        &self,
+        engine: &Engine,
+        backends: &BackendSet<'_>,
+        workers: &mut [Worker],
+        params: &[Vec<f32>],
+        train: &Dataset,
+        jobs: &[(usize, usize)],
+        period: u64,
+        aggs: &mut [Aggregator],
+    ) -> Result<(f64, f64, usize)> {
+        if jobs.is_empty() {
+            return Ok((0.0, 0.0, 0));
+        }
+        let outcomes = exec::gradient_round_subset(
+            engine, backends, workers, params, train, jobs, self.seed, period,
+        )?;
+        let mut loss_acc = 0f64;
+        let mut w_acc = 0f64;
+        let mut rejected = 0usize;
+        for (&(d, batch), mut o) in jobs.iter().zip(outcomes) {
+            if let Some(kind) = self.fault.corrupts(self.seed, period, d as u64) {
+                self.fault.contaminate(self.seed, period, d as u64, kind, &mut o.grad);
+            }
+            let w = batch as f64;
+            let verdict = aggs[backends.family_of(d)].add_guarded(&o.grad, w, &self.guard)?;
+            if verdict.applied() {
+                loss_acc += o.loss * w;
+                w_acc += w;
+            } else {
+                rejected += 1;
+            }
+        }
+        Ok((loss_acc, w_acc, rejected))
     }
 
     /// Shared barrier/deadline execution tail: the sharded gradient round
@@ -576,14 +853,26 @@ mod tests {
         }
     }
 
+    fn sched_for(policy: RoundPolicy, k: usize) -> RoundScheduler {
+        RoundScheduler::new(
+            policy,
+            StragglerModel::none(),
+            FaultPlan::none(),
+            GradGuard::off(),
+            k,
+            7,
+        )
+        .unwrap()
+    }
+
     #[test]
     fn apply_carry_grows_batches_and_finish_then_clears() {
         let inst = test_instance(3);
         let policy = RoundPolicy::Deadline { factor: 1.25 };
-        let mut sched = RoundScheduler::new(policy, StragglerModel::none(), 3, 7).unwrap();
+        let mut sched = sched_for(policy, 3);
         let mut plan = plan_for(&inst);
         sched.carry_mut()[1] = 6;
-        sched.apply_carry(&mut plan, &inst);
+        sched.apply_carry(&mut plan, &inst, 0);
         assert_eq!(plan.batches, vec![10, 16, 10]);
         // finish extends by exactly the extra compute time
         let extra = 6.0 / inst.devices[1].speed;
@@ -600,31 +889,53 @@ mod tests {
         // re-miss every period (livelock)
         let inst = test_instance(2); // device 0: speed 20, b_max 128
         let policy = RoundPolicy::Deadline { factor: 1.25 };
-        let mut sched = RoundScheduler::new(policy, StragglerModel::none(), 2, 7).unwrap();
+        let mut sched = sched_for(policy, 2);
         let mut plan = plan_for(&inst); // t_up 1.0, finish 0.9 -> headroom 0.35s = 7 samples
         sched.carry_mut()[0] = 10_000;
-        sched.apply_carry(&mut plan, &inst);
+        sched.apply_carry(&mut plan, &inst, 0);
         assert_eq!(plan.batches[0], 17, "carry must cap at the deadline headroom");
         assert!(plan.finish[0] <= plan.t_up * 1.25);
         assert_eq!(sched.carried(), &[0, 0], "excess carry is forfeited");
         // with a loose deadline the batch ceiling binds instead
         let policy = RoundPolicy::Deadline { factor: 10.0 };
-        let mut sched = RoundScheduler::new(policy, StragglerModel::none(), 2, 7).unwrap();
+        let mut sched = sched_for(policy, 2);
         let mut plan = plan_for(&inst);
         sched.carry_mut()[0] = 10_000;
-        sched.apply_carry(&mut plan, &inst);
+        sched.apply_carry(&mut plan, &inst, 0);
         assert_eq!(plan.batches[0], 128, "loose deadline: cap at floor(b_max)");
     }
 
     #[test]
     fn apply_carry_noop_for_non_deadline_policies() {
         let inst = test_instance(2);
-        let mut sched =
-            RoundScheduler::new(RoundPolicy::Sync, StragglerModel::none(), 2, 7).unwrap();
+        let mut sched = sched_for(RoundPolicy::Sync, 2);
         let mut plan = plan_for(&inst);
         sched.carry_mut()[0] = 6;
-        sched.apply_carry(&mut plan, &inst);
+        sched.apply_carry(&mut plan, &inst, 0);
         assert_eq!(plan.batches[0], 10);
         assert_eq!(sched.carried(), &[6, 0]);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_scheduler_state() {
+        let mut sched = sched_for(RoundPolicy::Sync, 3);
+        sched.carry_mut()[2] = 4;
+        sched.busy[1] = true;
+        let p1 = Pending { grad: vec![1.0, -2.0], batch: 8, loss: 0.5, period: 3 };
+        sched.inflight.push(2.5, 1, p1);
+        sched.inflight.push(1.0, 0, Pending { grad: vec![0.25], batch: 4, loss: 0.1, period: 2 });
+        let ck = sched.snapshot();
+        assert_eq!(ck.carry, vec![0, 0, 4]);
+        assert_eq!(ck.busy, vec![false, true, false]);
+        // canonical (time, device) order regardless of push order
+        assert_eq!(ck.inflight[0].device, 0);
+        assert_eq!(ck.inflight[1].device, 1);
+        let mut fresh = sched_for(RoundPolicy::Sync, 3);
+        fresh.restore(ck.clone()).unwrap();
+        assert_eq!(fresh.snapshot(), ck);
+        // fleet-size mismatch is a structured error, not a panic
+        let mut wrong = sched_for(RoundPolicy::Sync, 2);
+        let err = wrong.restore(ck).unwrap_err().to_string();
+        assert!(err.contains("3-device fleet"), "{err}");
     }
 }

@@ -38,6 +38,6 @@ pub mod executor;
 pub mod policy;
 pub mod queue;
 
-pub use executor::{RoundReport, RoundScheduler};
+pub use executor::{InflightRecord, RoundReport, RoundScheduler, SchedCheckpoint};
 pub use policy::{RoundPolicy, POLICY_NAMES};
 pub use queue::{Event, EventQueue};

@@ -92,6 +92,23 @@ impl<P> EventQueue<P> {
     pub fn clear(&mut self) {
         self.heap.clear();
     }
+
+    /// All pending events in pop order (time, then device) without
+    /// draining the queue — checkpoint serialization walks this so the
+    /// on-disk order is canonical whatever the internal heap layout.
+    pub fn events_sorted(&self) -> Vec<&Event<P>> {
+        let mut evs: Vec<&Event<P>> = self.heap.iter().map(|e| &e.0).collect();
+        evs.sort_by(|a, b| a.time.total_cmp(&b.time).then_with(|| a.device.cmp(&b.device)));
+        evs
+    }
+
+    /// Keep only the events satisfying `keep` (fault injection cancels
+    /// the in-flight work of crashed devices). Rebuilds the heap; the
+    /// (time, device) total order of survivors is unchanged.
+    pub fn retain<F: FnMut(&Event<P>) -> bool>(&mut self, mut keep: F) {
+        let drained = std::mem::take(&mut self.heap);
+        self.heap = drained.into_iter().filter(|e| keep(&e.0)).collect();
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +150,36 @@ mod tests {
         assert_eq!(q.peek_time(), Some(4.0));
         q.clear();
         assert_eq!(q.peek_time(), None);
+    }
+
+    #[test]
+    fn events_sorted_matches_pop_order() {
+        let mut q = EventQueue::new();
+        for (t, d) in [(3.0, 0), (1.0, 4), (1.0, 2), (0.5, 7)] {
+            q.push(t, d, ());
+        }
+        let sorted: Vec<(f64, usize)> =
+            q.events_sorted().iter().map(|e| (e.time, e.device)).collect();
+        let popped: Vec<(f64, usize)> =
+            std::iter::from_fn(|| q.pop()).map(|e| (e.time, e.device)).collect();
+        assert_eq!(sorted, popped);
+        assert_eq!(sorted, vec![(0.5, 7), (1.0, 2), (1.0, 4), (3.0, 0)]);
+    }
+
+    #[test]
+    fn retain_filters_and_keeps_order() {
+        let mut q = EventQueue::new();
+        for (t, d) in [(3.0, 0), (1.0, 4), (2.0, 2), (0.5, 7)] {
+            q.push(t, d, ());
+        }
+        q.retain(|e| e.device != 4 && e.device != 7);
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.device).collect();
+        assert_eq!(order, vec![2, 0]);
+        // retaining nothing empties the queue
+        let mut q2: EventQueue<()> = EventQueue::new();
+        q2.push(1.0, 1, ());
+        q2.retain(|_| false);
+        assert!(q2.is_empty());
     }
 
     #[test]

@@ -41,6 +41,17 @@ impl ShadowingProcess {
     pub fn gain(&self) -> f64 {
         10f64.powf(self.state_db / 10.0)
     }
+
+    /// The raw dB state, for checkpoint serialization.
+    pub fn state_db(&self) -> f64 {
+        self.state_db
+    }
+
+    /// Restore a checkpointed dB state verbatim.
+    pub fn restore_state_db(&mut self, state_db: f64) {
+        assert!(state_db.is_finite(), "bad shadowing restore {state_db}");
+        self.state_db = state_db;
+    }
 }
 
 /// Draw one Rayleigh power realization |h|^2 ~ Exp(1).

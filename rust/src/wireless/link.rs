@@ -59,6 +59,17 @@ impl DeviceLink {
         self.rates_with_gains(self.shadow_ul.gain(), self.shadow_dl.gain())
     }
 
+    /// The (uplink, downlink) shadowing states in dB, for checkpoints.
+    pub fn shadow_state(&self) -> (f64, f64) {
+        (self.shadow_ul.state_db(), self.shadow_dl.state_db())
+    }
+
+    /// Restore checkpointed shadowing states verbatim.
+    pub fn restore_shadow_state(&mut self, ul_db: f64, dl_db: f64) {
+        self.shadow_ul.restore_state_db(ul_db);
+        self.shadow_dl.restore_state_db(dl_db);
+    }
+
     fn rates_with_gains(&self, g_ul: f64, g_dl: f64) -> PeriodRates {
         let w = self.cfg.bandwidth_hz;
         PeriodRates {

@@ -1,0 +1,255 @@
+//! Fault-injection invariants, end to end. Faults are drawn from their
+//! own counter-derived PCG streams (tagged with CRASH/CORRUPT/OUTAGE
+//! constants), so (1) a zero-rate plan is a bitwise no-op, (2) enabling
+//! one fault class never shifts another class's draws, and (3) runs with
+//! crashes, corruption, quarantine, stragglers, and sampling all active
+//! stay bitwise thread-invariant. The headline robustness claim is
+//! pinned too: at 10% payload corruption an unguarded run diverges to
+//! NaN while `quarantine = reject` keeps training.
+
+use feel::coordinator::{TrainLog, Trainer, TrainerConfig};
+use feel::data::{generate, Partition, SynthConfig};
+use feel::device::{paper_cpu_fleet, StragglerModel};
+use feel::fault::FaultPlan;
+use feel::grad::{GradGuard, Quarantine};
+use feel::sched::RoundPolicy;
+use feel::util::rng::Pcg;
+use feel::wireless::CellConfig;
+
+fn run_flat(
+    policy: RoundPolicy,
+    straggler: StragglerModel,
+    sample_frac: f64,
+    fault: FaultPlan,
+    guard: GradGuard,
+    threads: usize,
+    periods: usize,
+) -> TrainLog {
+    let cfg = SynthConfig { dim: 24, ..Default::default() };
+    let train = generate(&cfg, 800, 1);
+    let test = generate(&cfg, 200, 1);
+    let mut rng = Pcg::seeded(2);
+    let fleet = paper_cpu_fleet(4, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+    let be = feel::coordinator::HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+    let tc = TrainerConfig {
+        policy,
+        straggler,
+        sample_frac,
+        fault,
+        guard,
+        threads,
+        eval_every: 4,
+        ..Default::default()
+    };
+    let mut tr = Trainer::new(tc, fleet, &train, &test, Partition::Iid, &be).unwrap();
+    tr.run(periods).unwrap();
+    tr.log.clone()
+}
+
+fn assert_logs_equal(a: &TrainLog, b: &TrainLog, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: period count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        let p = x.period;
+        assert_eq!(x.period, y.period, "{label} p{p}");
+        assert_eq!(x.b_total, y.b_total, "{label} p{p}: b_total");
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{label} p{p}: train_loss {} vs {}",
+            x.train_loss,
+            y.train_loss
+        );
+        assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits(), "{label} p{p}: sim_time");
+        assert_eq!(x.t_period.to_bits(), y.t_period.to_bits(), "{label} p{p}: t_period");
+        assert_eq!(x.lr.to_bits(), y.lr.to_bits(), "{label} p{p}: lr");
+        assert_eq!(
+            x.test_loss.map(f64::to_bits),
+            y.test_loss.map(f64::to_bits),
+            "{label} p{p}: test_loss"
+        );
+        assert_eq!(x.applied, y.applied, "{label} p{p}: applied");
+        assert_eq!(x.dropped, y.dropped, "{label} p{p}: dropped");
+        assert_eq!(x.late, y.late, "{label} p{p}: late");
+        assert_eq!(
+            x.stale_mean.to_bits(),
+            y.stale_mean.to_bits(),
+            "{label} p{p}: stale_mean"
+        );
+        assert_eq!(x.crashed, y.crashed, "{label} p{p}: crashed");
+        assert_eq!(x.corrupt, y.corrupt, "{label} p{p}: corrupt");
+        assert_eq!(x.quarantined, y.quarantined, "{label} p{p}: quarantined");
+    }
+}
+
+/// A plan with every rate at zero must never touch an RNG stream: the
+/// run is bitwise the no-plan run under all three round policies, with
+/// stragglers and client sampling active. An armed-but-idle quarantine
+/// (reject, no norm bound, clean payloads) is pinned as a no-op too.
+#[test]
+fn zero_rate_fault_plan_is_bitwise_noop_all_policies() {
+    let sm = StragglerModel::new(0.5, 0.1).unwrap();
+    let zero = FaultPlan::new(0.0, 1, 0.0, 0.0, 0.0).unwrap();
+    for policy in [
+        RoundPolicy::Sync,
+        RoundPolicy::Deadline { factor: 1.25 },
+        RoundPolicy::Async { alpha: 0.6, beta: 0.5, quorum: 0.5 },
+    ] {
+        let base = run_flat(policy, sm, 0.5, FaultPlan::none(), GradGuard::off(), 1, 8);
+        let zeroed = run_flat(policy, sm, 0.5, zero, GradGuard::off(), 1, 8);
+        assert_logs_equal(&base, &zeroed, &format!("zero-rate {policy:?}"));
+        let armed = GradGuard::new(Quarantine::Reject, f64::INFINITY).unwrap();
+        let guarded = run_flat(policy, sm, 0.5, FaultPlan::none(), armed, 1, 8);
+        assert_logs_equal(&base, &guarded, &format!("idle guard {policy:?}"));
+    }
+}
+
+/// Each fault class draws from its own tagged stream: toggling the other
+/// classes on or off cannot move a single draw. Verified over a
+/// (period, device) grid against single-class plans, plus the cell-outage
+/// grid, with every class confirmed to actually fire inside the grid.
+#[test]
+fn fault_streams_are_isolated_per_class() {
+    let seed = 7u64;
+    let both = FaultPlan::new(0.2, 2, 0.2, 1.0, 0.3).unwrap();
+    let crash_only = FaultPlan::new(0.2, 2, 0.0, 0.0, 0.0).unwrap();
+    let corrupt_only = FaultPlan::new(0.0, 1, 0.2, 1.0, 0.0).unwrap();
+    let outage_only = FaultPlan::new(0.0, 1, 0.0, 0.0, 0.3).unwrap();
+    for period in 0..64u64 {
+        for device in 0..16u64 {
+            assert_eq!(
+                both.crash_state(seed, period, device),
+                crash_only.crash_state(seed, period, device),
+                "crash draw moved at ({period}, {device})"
+            );
+            assert_eq!(
+                both.corrupts(seed, period, device),
+                corrupt_only.corrupts(seed, period, device),
+                "corrupt draw moved at ({period}, {device})"
+            );
+        }
+    }
+    for block in 0..64u64 {
+        for cell in 0..8u64 {
+            assert_eq!(
+                both.cell_out(seed, block, cell),
+                outage_only.cell_out(seed, block, cell),
+                "outage draw moved at ({block}, {cell})"
+            );
+        }
+    }
+    // the equalities are not vacuous: every class fires inside the grid
+    assert!((0..64u64).any(|p| (0..16u64).any(|d| both.is_down(seed, p, d))));
+    assert!((0..64u64).any(|p| (0..16u64).any(|d| both.corrupts(seed, p, d).is_some())));
+    assert!((0..64u64).any(|b| (0..8u64).any(|c| both.cell_out(seed, b, c))));
+}
+
+/// The full robustness stack — K = 200 with client sampling, stragglers,
+/// crash windows, NaN corruption, and the reject quarantine all active —
+/// keeps the engine's core invariant: bitwise-identical logs (including
+/// the crashed/corrupt/quarantined columns) at 1, 2, and 8 threads.
+#[test]
+fn faulty_sampled_k200_identical_at_1_2_8_threads() {
+    let k = 200;
+    let run = |threads: usize| -> TrainLog {
+        let cfg = SynthConfig { dim: 12, ..Default::default() };
+        let train = generate(&cfg, 8 * k, 1);
+        let test = generate(&cfg, 200, 1);
+        let mut rng = Pcg::seeded(2);
+        let fleet = paper_cpu_fleet(k, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+        let be = feel::coordinator::HostBackend::for_model("mini_dense", 12, 10, 3).unwrap();
+        let tc = TrainerConfig {
+            sample_frac: 0.25,
+            straggler: StragglerModel::new(0.5, 0.1).unwrap(),
+            fault: FaultPlan::new(0.1, 2, 0.05, 0.0, 0.0).unwrap(),
+            guard: GradGuard::new(Quarantine::Reject, f64::INFINITY).unwrap(),
+            threads,
+            b_max: 8,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let mut tr = Trainer::new(tc, fleet, &train, &test, Partition::Iid, &be).unwrap();
+        tr.run(6).unwrap();
+        tr.log.clone()
+    };
+    let base = run(1);
+    for t in [2usize, 8] {
+        let par = run(t);
+        assert_logs_equal(&base, &par, &format!("faulty k200 t={t}"));
+    }
+    // every fault path actually fired, so the equality covers them all
+    assert!(base.records.iter().any(|r| r.crashed > 0), "no crashes drawn");
+    assert!(base.records.iter().any(|r| r.corrupt > 0), "no corruption drawn");
+    assert!(base.records.iter().any(|r| r.quarantined > 0), "nothing quarantined");
+    assert!(base.records.iter().any(|r| r.dropped > 0), "no straggler dropouts");
+    assert!(base.records.iter().all(|r| r.train_loss.is_finite()));
+}
+
+/// The headline robustness claim from the issue: at 10% NaN corruption an
+/// unguarded run accepts the poisoned payloads and diverges to NaN, while
+/// the same run under `quarantine = reject` stays finite and keeps
+/// learning. Both runs share the seed, so they see identical draws.
+#[test]
+fn quarantine_reject_survives_corruption_that_sinks_unguarded_run() {
+    let k = 12;
+    let run = |guard: GradGuard| -> TrainLog {
+        let cfg = SynthConfig { dim: 12, ..Default::default() };
+        let train = generate(&cfg, 20 * k, 1);
+        let test = generate(&cfg, 200, 1);
+        let mut rng = Pcg::seeded(2);
+        let fleet = paper_cpu_fleet(k, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+        let be = feel::coordinator::HostBackend::for_model("mini_dense", 12, 10, 3).unwrap();
+        let tc = TrainerConfig {
+            fault: FaultPlan::new(0.0, 1, 0.1, 0.0, 0.0).unwrap(),
+            guard,
+            b_max: 8,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let mut tr = Trainer::new(tc, fleet, &train, &test, Partition::Iid, &be).unwrap();
+        tr.run(12).unwrap();
+        tr.log.clone()
+    };
+    let unguarded = run(GradGuard::off());
+    let last = unguarded.records.last().unwrap();
+    assert!(
+        !last.train_loss.is_finite(),
+        "unguarded run stayed finite at {}",
+        last.train_loss
+    );
+    // the acceptance was not silent: the corrupt column saw the payloads
+    assert!(unguarded.records.iter().any(|r| r.corrupt > 0));
+    assert!(unguarded.records.iter().all(|r| r.quarantined == 0));
+
+    let guarded = run(GradGuard::new(Quarantine::Reject, f64::INFINITY).unwrap());
+    for r in &guarded.records {
+        assert!(r.train_loss.is_finite(), "p{}: guarded loss {}", r.period, r.train_loss);
+    }
+    let (first, final_) =
+        (guarded.records[0].train_loss, guarded.records.last().unwrap().train_loss);
+    assert!(final_ < first, "guarded run did not learn: {first} -> {final_}");
+    // under reject every detected payload is quarantined, none applied
+    let corrupt: usize = guarded.records.iter().map(|r| r.corrupt).sum();
+    let quarantined: usize = guarded.records.iter().map(|r| r.quarantined).sum();
+    assert!(corrupt > 0, "corruption never fired");
+    assert_eq!(corrupt, quarantined);
+}
+
+/// Crash windows that empty out entire rounds must not wedge the
+/// trainer: every period still logs a record, and a light crash rate
+/// leaves the run learning through the churn.
+#[test]
+fn crash_heavy_rounds_survive_and_light_crash_still_learns() {
+    let sm = StragglerModel::none();
+    // heavy: most periods lose the whole 4-device fleet
+    let heavy = FaultPlan::new(0.9, 2, 0.0, 0.0, 0.0).unwrap();
+    let log = run_flat(RoundPolicy::Sync, sm, 1.0, heavy, GradGuard::off(), 1, 12);
+    assert_eq!(log.records.len(), 12);
+    assert!(log.records.iter().any(|r| r.crashed == 4), "no fully-crashed round");
+    // light: crashes fire but training still makes progress
+    let light = FaultPlan::new(0.15, 2, 0.0, 0.0, 0.0).unwrap();
+    let log = run_flat(RoundPolicy::Sync, sm, 1.0, light, GradGuard::off(), 1, 16);
+    assert!(log.records.iter().any(|r| r.crashed > 0), "no crashes drawn");
+    let (first, last) =
+        (log.records[0].train_loss, log.records.last().unwrap().train_loss);
+    assert!(last < first, "light-crash run did not learn: {first} -> {last}");
+}
