@@ -6,6 +6,7 @@
 //!   channel      — dump channel-rate statistics for a sampled fleet
 //!   fit-gpu      — profile + fit the GPU training function
 //!   experiment   — regenerate a paper table/figure: fig2 fig3 table2 fig4 fig5
+//!   report       — summarize a --metrics-out JSONL dump into a table
 //!
 //! Common flags: --config <path>, --out <dir>, --backend host|pjrt,
 //! --periods N, --k N, --scheme NAME, --partition iid|noniid, --seed N,
@@ -30,7 +31,7 @@ use crate::fault::FaultPlan;
 use crate::grad::{GradGuard, Quarantine, QUARANTINE_NAMES};
 use crate::sched::RoundPolicy;
 use crate::exp::common::{
-    make_data, make_fleet_backends, run_hier_scheme_checkpointed, BackendKind,
+    make_data, make_fleet_backends, run_hier_scheme_traced, BackendKind,
 };
 use crate::exp::{fig2, fig3, fig45, table2};
 use crate::metrics::Recorder;
@@ -151,6 +152,18 @@ COMMANDS:
               --resume FILE   restore state from a checkpoint and keep
                          training — bitwise-identical continuation of
                          the interrupted run
+              --trace FILE   write the run's event trace as Chrome
+                         trace-event JSON (open in chrome://tracing or
+                         https://ui.perfetto.dev): one process lane per
+                         cell plus a cloud lane, one thread row per
+                         device, spans for rounds and instants for
+                         crashes/drops/deadline misses/quarantine
+                         verdicts/cloud merges. Timestamps are simulated
+                         seconds — traces are byte-identical across
+                         thread counts and repeat runs
+              --metrics-out FILE   write per-period counter/gauge/
+                         histogram snapshots as JSONL; summarize with
+                         `feel report <file>`
               --k N  --partition iid|noniid|dirichlet:alpha  --seed N
               --out results/
               --threads N (0 = all cores; results identical at any value)
@@ -163,6 +176,9 @@ COMMANDS:
   experiment  regenerate a paper table/figure: fig2 | fig3 | table2 | fig4 | fig5
               --k N  --periods N  --warm N  --backend host|pjrt
               --time-budget SECONDS  --train-n N  --out results/
+  report      summarize a --metrics-out JSONL dump: counter totals, last
+              gauges, p50/p95/max per histogram
+              feel report <metrics.jsonl>   (or --in <file>)
   help        this text
 ";
 
@@ -180,6 +196,7 @@ pub fn run(args: Args) -> Result<()> {
         "channel" => cmd_channel(&args),
         "fit-gpu" => cmd_fit_gpu(&args),
         "experiment" => cmd_experiment(&args),
+        "report" => cmd_report(&args),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
             Ok(())
@@ -319,6 +336,20 @@ fn checkpoint_flags(args: &Args) -> Result<(usize, Option<PathBuf>, Option<PathB
     Ok((every, ckpt, args.get("resume").map(PathBuf::from)))
 }
 
+/// Resolve the observability flags shared by the flat and hierarchical
+/// train paths: (trace path, metrics path). Either one turns tracing on.
+fn obs_flags(args: &Args) -> (Option<PathBuf>, Option<PathBuf>) {
+    (args.get("trace").map(PathBuf::from), args.get("metrics-out").map(PathBuf::from))
+}
+
+/// Write an observability artifact (trace JSON / metrics JSONL) to disk.
+fn write_obs_file(path: &Path, content: &str, what: &str) -> Result<()> {
+    std::fs::write(path, content)
+        .with_context(|| format!("writing {what} {}", path.display()))?;
+    println!("{what} -> {}", path.display());
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let exp = experiment_from_args(args)?;
     let periods = args.usize_or("periods", exp.periods)?;
@@ -356,6 +387,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         set,
     )?;
     let (every, ckpt, resume) = checkpoint_flags(args)?;
+    let (trace, metrics_out) = obs_flags(args);
+    if trace.is_some() || metrics_out.is_some() {
+        tr.enable_obs();
+    }
     let warm = args.usize_or("warm", 0)?;
     match &resume {
         // a resumed run's model state comes from the checkpoint — warm
@@ -374,6 +409,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         None => {
             tr.run(periods)?;
         }
+    }
+    if let Some(path) = &trace {
+        write_obs_file(path, &tr.export_trace(), "trace")?;
+    }
+    if let Some(path) = &metrics_out {
+        write_obs_file(path, &tr.export_metrics(), "metrics")?;
     }
     let log = &tr.log;
     rec.csv("train_log", &log.to_csv())?;
@@ -419,7 +460,8 @@ fn cmd_train_hier(
     );
     let warm = args.usize_or("warm", 0)?;
     let (every, ckpt, resume) = checkpoint_flags(args)?;
-    let run = run_hier_scheme_checkpointed(
+    let (trace, metrics_out) = obs_flags(args);
+    let run = run_hier_scheme_traced(
         exp,
         exp.trainer.scheme,
         kind,
@@ -428,7 +470,14 @@ fn cmd_train_hier(
         every,
         ckpt.as_deref(),
         resume.as_deref(),
+        trace.is_some() || metrics_out.is_some(),
     )?;
+    if let (Some(path), Some(content)) = (&trace, &run.trace) {
+        write_obs_file(path, content, "trace")?;
+    }
+    if let (Some(path), Some(content)) = (&metrics_out, &run.metrics) {
+        write_obs_file(path, content, "metrics")?;
+    }
     rec.csv("train_log", &run.log.to_csv())?;
     println!(
         "done: {} cells x {} periods, {} cloud rounds, sim time {:.1}s, final loss {:.4} -> {}",
@@ -555,6 +604,18 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         }
         other => bail!("unknown experiment {other:?}"),
     }
+}
+
+/// Summarize a `--metrics-out` JSONL dump into a per-run table (counter
+/// totals, last gauges, p50/p95/max per histogram).
+fn cmd_report(args: &Args) -> Result<()> {
+    let path = args
+        .get("in")
+        .or_else(|| args.positional.first().map(|s| s.as_str()))
+        .ok_or_else(|| anyhow::anyhow!("report wants a metrics JSONL path (or --in <file>)"))?;
+    let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    print!("{}", crate::obs::summarize_jsonl(&src)?);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -758,6 +819,44 @@ mod tests {
         assert!(err.contains("--checkpoint"), "{err}");
         assert!(HELP.contains("--checkpoint FILE"));
         assert!(HELP.contains("--resume FILE"));
+    }
+
+    #[test]
+    fn obs_flags_resolve_and_are_documented() {
+        let a = Args::parse(&argv("train --trace /tmp/t.json --metrics-out /tmp/m.jsonl"))
+            .unwrap();
+        let (trace, metrics) = obs_flags(&a);
+        assert_eq!(trace.as_deref(), Some(Path::new("/tmp/t.json")));
+        assert_eq!(metrics.as_deref(), Some(Path::new("/tmp/m.jsonl")));
+        let (trace, metrics) = obs_flags(&Args::parse(&argv("train")).unwrap());
+        assert!(trace.is_none() && metrics.is_none());
+        assert!(HELP.contains("--trace FILE"));
+        assert!(HELP.contains("--metrics-out FILE"));
+        assert!(HELP.contains("report"));
+    }
+
+    #[test]
+    fn report_command_validates_input() {
+        // no path at all
+        let a = Args::parse(&argv("report")).unwrap();
+        let err = run(a).unwrap_err().to_string();
+        assert!(err.contains("metrics JSONL"), "{err}");
+        // missing file
+        let a = Args::parse(&argv("report /nonexistent/metrics.jsonl")).unwrap();
+        assert!(run(a).is_err());
+        // a real dump summarizes
+        let mut m = crate::obs::MetricsRegistry::default();
+        m.inc("round.applied", 3);
+        m.observe("round.duration", 0.5);
+        m.snapshot(1, 0);
+        let path = std::env::temp_dir().join(format!("feel_report_{}.jsonl", std::process::id()));
+        std::fs::write(&path, m.to_jsonl()).unwrap();
+        let a = Args::parse(&argv(&format!("report {}", path.display()))).unwrap();
+        run(a).unwrap();
+        // --in form too
+        let a = Args::parse(&argv(&format!("report --in {}", path.display()))).unwrap();
+        run(a).unwrap();
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::device::{ClientSampler, Device, StragglerModel};
 use crate::exec::{self, Engine};
 use crate::fault::FaultPlan;
 use crate::grad::{Aggregator, GradGuard};
+use crate::obs::ObsSink;
 use crate::opt::types::Instance;
 use crate::runtime::hostmodel::Workspace;
 use crate::sched::{InflightRecord, RoundPolicy, RoundReport, RoundScheduler, SchedCheckpoint};
@@ -314,6 +315,10 @@ pub struct Trainer<'a> {
     /// which cell of a hierarchical topology this trainer serves (stamped
     /// into every `PeriodRecord`; 0 for flat single-cell runs)
     cell_id: usize,
+    /// structured tracing + metrics sink (disabled by default — off-path
+    /// runs are bitwise-identical to an uninstrumented build). Not part
+    /// of the checkpoint payload: a resumed run restarts its trace.
+    obs: ObsSink,
     pub log: TrainLog,
 }
 
@@ -477,6 +482,7 @@ impl<'a> Trainer<'a> {
             rates_scratch: Vec::new(),
             eval_scratch: Workspace::new(),
             cell_id: 0,
+            obs: ObsSink::disabled(),
             log: TrainLog::default(),
         })
     }
@@ -495,6 +501,35 @@ impl<'a> Trainer<'a> {
 
     pub fn cell_id(&self) -> usize {
         self.cell_id
+    }
+
+    /// Turn on structured tracing + metrics for this trainer. Events are
+    /// stamped with the trainer's cell id as their trace process lane, so
+    /// call this *after* [`Trainer::set_cell_id`]. Enabling consumes no
+    /// RNG draws and changes no numerics — the produced `TrainLog` is
+    /// bitwise-identical to a disabled run's.
+    pub fn enable_obs(&mut self) {
+        self.obs = ObsSink::enabled(self.cell_id);
+    }
+
+    /// The trainer's observability sink (disabled sinks report nothing).
+    pub fn obs(&self) -> &ObsSink {
+        &self.obs
+    }
+
+    pub fn obs_mut(&mut self) -> &mut ObsSink {
+        &mut self.obs
+    }
+
+    /// Render the collected trace as Chrome trace-event JSON (empty event
+    /// list when tracing was never enabled). Flat runs have no cloud lane.
+    pub fn export_trace(&self) -> String {
+        crate::obs::chrome_trace(self.obs.events(), None)
+    }
+
+    /// Per-period metrics snapshots as JSONL (empty when disabled).
+    pub fn export_metrics(&self) -> String {
+        self.obs.to_jsonl()
     }
 
     /// The per-device backend registry this trainer resolves through —
@@ -769,7 +804,8 @@ impl<'a> Trainer<'a> {
         // event-queue style: the clock jumps to the period's absolute end
         // time (`now + dt` — the same addition `advance` performs, so the
         // sync path stays bitwise)
-        let t_end = self.clock.now() + report.duration;
+        let t_start = self.clock.now();
+        let t_end = t_start + report.duration;
         self.clock.advance_to(t_end);
         self.server.period += 1;
         let period = self.server.period;
@@ -803,6 +839,31 @@ impl<'a> Trainer<'a> {
             corrupt: report.corrupt,
             quarantined: report.quarantined,
         });
+        // observability: one span per period on the coordinator lane, the
+        // round counters, and a per-period metrics snapshot. Everything
+        // here derives from simulated-time quantities only — never wall
+        // clock — so an enabled trace is deterministic across thread
+        // counts and repeat runs.
+        if self.obs.is_enabled() {
+            self.obs.span_arg(
+                "period",
+                "round",
+                0,
+                t_start,
+                report.duration,
+                &[("b_total", b_total as f64), ("applied", report.applied as f64)],
+            );
+            self.obs.inc("round.applied", report.applied as u64);
+            self.obs.inc("round.dropped", report.dropped as u64);
+            self.obs.inc("round.late", report.late as u64);
+            self.obs.inc("fault.crashed", report.crashed as u64);
+            self.obs.inc("fault.corrupt", report.corrupt as u64);
+            self.obs.inc("agg.quarantined", report.quarantined as u64);
+            self.obs.observe("round.duration", report.duration);
+            self.obs.gauge("train.loss", train_loss);
+            self.obs.gauge("sim.time", t_end);
+            self.obs.snapshot(period as u64);
+        }
         self.log.wall.total_secs += t_step.elapsed().as_secs_f64();
         Ok(())
     }
@@ -838,6 +899,7 @@ impl<'a> Trainer<'a> {
             self.clock.now(),
             participants,
             &mut self.aggs,
+            &mut self.obs,
         )?;
         self.log.wall.reduce_secs += report.reduce_secs;
         let lr = self.lr_for_batch(report.b_effective);
@@ -1308,7 +1370,12 @@ impl<'a> Trainer<'a> {
     pub fn resume_from(&mut self, path: &Path) -> Result<()> {
         let payload = checkpoint::read_file(path, checkpoint::KIND_FLAT)?;
         self.restore_payload(&payload)
-            .with_context(|| format!("restoring checkpoint {}", path.display()))
+            .with_context(|| format!("restoring checkpoint {}", path.display()))?;
+        // stamped at the restored clock: the trace shows where in
+        // simulated time the run picked back up
+        self.obs.instant("ckpt_restore", "ckpt", 0, self.clock.now());
+        self.obs.inc("ckpt.restores", 1);
+        Ok(())
     }
 
     /// Run `periods` training periods, writing a checkpoint to `path`
@@ -1325,6 +1392,8 @@ impl<'a> Trainer<'a> {
             self.step_period()?;
             if every > 0 && self.server.period % every == 0 {
                 self.save_checkpoint(path)?;
+                self.obs.instant("ckpt_save", "ckpt", 0, self.clock.now());
+                self.obs.inc("ckpt.saves", 1);
             }
         }
         Ok(&self.log)
@@ -1527,6 +1596,71 @@ mod tests {
         for line in &lines[1..] {
             assert!(line.ends_with(",0,0,0,0,0"), "{line}");
         }
+    }
+
+    #[test]
+    fn csv_header_is_golden() {
+        // the exact column names and order are a compatibility contract
+        // with index-based readers of older dumps: new columns are only
+        // ever appended on the right, never inserted or renamed. Any
+        // change here must be a deliberate format bump.
+        let header = TrainLog::default().to_csv();
+        assert_eq!(
+            header,
+            "period,sim_time,t_period,b_total,train_loss,lr,test_loss,test_acc,\
+             efficiency,applied,dropped,late,stale_mean,cell,cloud,crashed,\
+             corrupt,quarantined\n"
+        );
+        let cols: Vec<&str> = header.trim().split(',').collect();
+        assert_eq!(
+            cols,
+            [
+                "period",
+                "sim_time",
+                "t_period",
+                "b_total",
+                "train_loss",
+                "lr",
+                "test_loss",
+                "test_acc",
+                "efficiency",
+                "applied",
+                "dropped",
+                "late",
+                "stale_mean",
+                "cell",
+                "cloud",
+                "crashed",
+                "corrupt",
+                "quarantined"
+            ]
+        );
+    }
+
+    #[test]
+    fn obs_traces_periods_and_snapshots_metrics() {
+        let (train, test, fleet) = tiny_world();
+        let be = HostBackend::for_model("mini_res", 24, 10, 3).unwrap();
+        let cfg = TrainerConfig { eval_every: 0, ..Default::default() };
+        let mut tr = Trainer::new(cfg, fleet, &train, &test, Partition::Iid, &be).unwrap();
+        tr.enable_obs();
+        tr.run(4).unwrap();
+        // one period span per round on the coordinator lane, plus the
+        // per-device round spans from the executor
+        let periods =
+            tr.obs().events().iter().filter(|e| e.name == "period").count();
+        assert_eq!(periods, 4);
+        assert!(tr.obs().events().iter().any(|e| e.name == "round"));
+        let trace = tr.export_trace();
+        assert!(crate::util::json::Json::parse(&trace).is_ok(), "{trace}");
+        // one metrics snapshot per period, all applied under a clean
+        // sync barrier
+        let jsonl = tr.export_metrics();
+        assert_eq!(jsonl.lines().count(), 4);
+        let m = tr.obs().metrics().unwrap();
+        assert_eq!(m.counter("round.applied"), 16);
+        assert_eq!(m.counter("round.dropped"), 0);
+        assert_eq!(m.hist("round.duration").unwrap().total(), 4);
     }
 
     #[test]

@@ -259,6 +259,11 @@ pub struct HierRun {
     /// merged log's last record (that is the last *cell's* pre-barrier
     /// time, which understates a run whose slowest cell sits elsewhere).
     pub sim_time: f64,
+    /// Chrome trace-event JSON of the whole hierarchy (only when the run
+    /// was traced — see [`run_hier_scheme_traced`])
+    pub trace: Option<String>,
+    /// per-period metrics snapshots as JSONL (only when traced)
+    pub metrics: Option<String>,
 }
 
 /// Run one scheme through the hierarchical topology the experiment
@@ -291,6 +296,25 @@ pub fn run_hier_scheme_checkpointed(
     checkpoint: Option<&Path>,
     resume: Option<&Path>,
 ) -> Result<HierRun> {
+    run_hier_scheme_traced(exp, scheme, kind, periods, warm_steps, every, checkpoint, resume, false)
+}
+
+/// [`run_hier_scheme_checkpointed`] with observability: when `obs` is
+/// set, every cell's trainer and the cloud tier record trace events and
+/// metrics, returned on the `HierRun`. The training numerics are
+/// bitwise-identical either way.
+#[allow(clippy::too_many_arguments)]
+pub fn run_hier_scheme_traced(
+    exp: &Experiment,
+    scheme: Scheme,
+    kind: BackendKind,
+    periods: usize,
+    warm_steps: usize,
+    every: usize,
+    checkpoint: Option<&Path>,
+    resume: Option<&Path>,
+    obs: bool,
+) -> Result<HierRun> {
     let mut world = make_hier_world(exp, kind)?;
     let fleets = world.take_fleets();
     let mut cfg = exp.trainer.clone();
@@ -304,6 +328,9 @@ pub fn run_hier_scheme_checkpointed(
     };
     let worlds = world.cell_worlds(fleets)?;
     let mut tr = HierTrainer::new(cfg, hc, worlds, &world.test, exp.partition)?;
+    if obs {
+        tr.enable_obs();
+    }
     match resume {
         Some(path) => tr.resume_from(path)?,
         None if warm_steps > 0 => tr.warm_start(warm_steps, 64, 0.05)?,
@@ -322,6 +349,8 @@ pub fn run_hier_scheme_checkpointed(
         tau: tr.tau(),
         cloud_rounds: tr.cloud_rounds(),
         sim_time: tr.sim_time(),
+        trace: obs.then(|| tr.export_trace()),
+        metrics: obs.then(|| tr.export_metrics()),
     })
 }
 

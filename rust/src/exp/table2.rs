@@ -70,19 +70,19 @@ pub fn run_cell(
         }
     };
     let (t_ind, _) = time_of(&logs[0].1);
-    Ok(logs
-        .iter()
-        .map(|(name, log)| {
-            let (t, reached) = time_of(log);
-            Table2Row {
-                scheme: name,
-                test_acc: log.final_acc().unwrap_or(f64::NAN),
-                speedup: speedup(t_ind, t),
-                reached_target: reached,
-                sim_time: log.total_time(),
-            }
-        })
-        .collect())
+    let mut rows = Vec::with_capacity(logs.len());
+    for entry in &logs {
+        let (name, log) = (entry.0, &entry.1);
+        let (t, reached) = time_of(log);
+        rows.push(Table2Row {
+            scheme: name,
+            test_acc: log.final_acc().unwrap_or(f64::NAN),
+            speedup: speedup(t_ind, t)?,
+            reached_target: reached,
+            sim_time: log.total_time(),
+        });
+    }
+    Ok(rows)
 }
 
 /// Full Table II: both partitions for one K.

@@ -64,6 +64,16 @@ pub enum Corruption {
     Noise(f64),
 }
 
+impl Corruption {
+    /// Stable name for trace events and metrics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Corruption::NonFinite => "non_finite",
+            Corruption::Noise(_) => "noise",
+        }
+    }
+}
+
 /// Seeded fleet-wide fault configuration.
 ///
 /// All draws are per-coordinate pure functions, so the plan itself is

@@ -121,6 +121,16 @@ impl GradVerdict {
     pub fn corrupt(&self) -> bool {
         !matches!(self, GradVerdict::Clean)
     }
+
+    /// Stable name for trace events and metrics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            GradVerdict::Clean => "clean",
+            GradVerdict::Tainted => "tainted",
+            GradVerdict::Clipped => "clipped",
+            GradVerdict::Rejected => "rejected",
+        }
+    }
 }
 
 #[cfg(test)]

@@ -30,6 +30,7 @@ use crate::data::{Dataset, Partition};
 use crate::device::{ClientSampler, Device};
 use crate::exec::Engine;
 use crate::fault::FaultPlan;
+use crate::obs::{self, ObsSink, Snap, TraceEvent};
 use crate::sched::RoundPolicy;
 use crate::util::rng::splitmix64;
 
@@ -90,6 +91,10 @@ pub struct HierTrainer<'a> {
     /// run under per-cell offset seeds; the outage draw uses the cell
     /// index as its stream coordinate instead)
     base_seed: u64,
+    /// cloud-tier observability sink (trace lane C = one past the last
+    /// cell; disabled by default). Cell-level events live in each cell
+    /// trainer's own sink and are merged at export time.
+    obs: ObsSink,
 }
 
 impl<'a> HierTrainer<'a> {
@@ -155,6 +160,7 @@ impl<'a> HierTrainer<'a> {
             blocks: 0,
             fault: base.fault,
             base_seed: base.seed,
+            obs: ObsSink::disabled(),
         })
     }
 
@@ -181,6 +187,42 @@ impl<'a> HierTrainer<'a> {
     /// Worker threads of the outer cell fan-out.
     pub fn threads(&self) -> usize {
         self.engine.threads()
+    }
+
+    /// Turn on structured tracing + metrics for the whole hierarchy:
+    /// every cell's trainer records onto its own sink (trace process lane
+    /// = cell id) and the cloud tier records onto lane C. Like the flat
+    /// trainer's `enable_obs`, this consumes no RNG draws and changes no
+    /// numerics.
+    pub fn enable_obs(&mut self) {
+        self.obs = ObsSink::enabled(self.cells.len());
+        for tr in &mut self.cells {
+            tr.enable_obs();
+        }
+    }
+
+    /// Render the hierarchy-wide trace as Chrome trace-event JSON: cell
+    /// events merged in fixed cell order (then stably sorted by
+    /// timestamp), cloud events on the lane past the last cell.
+    pub fn export_trace(&self) -> String {
+        let mut parts: Vec<Vec<TraceEvent>> =
+            self.cells.iter().map(|c| c.obs().events().to_vec()).collect();
+        parts.push(self.obs.events().to_vec());
+        let merged = obs::merge_traces(parts);
+        obs::chrome_trace(&merged, Some(self.cells.len()))
+    }
+
+    /// Every cell's per-period metrics snapshots plus the cloud tier's
+    /// per-block snapshots, as one JSONL stream ordered by (period, cell).
+    pub fn export_metrics(&self) -> String {
+        let mut parts: Vec<&[Snap]> = self.cells.iter().map(|c| c.obs().snaps()).collect();
+        parts.push(self.obs.snaps());
+        obs::merge_snaps(&parts)
+    }
+
+    /// The cloud tier's observability sink.
+    pub fn obs(&self) -> &ObsSink {
+        &self.obs
     }
 
     /// Simulated seconds: the slowest cell's clock (all cells agree right
@@ -229,6 +271,17 @@ impl<'a> HierTrainer<'a> {
             } else {
                 None
             };
+            // trace cell outages on the affected cell's own lane at its
+            // current simulated time (the block it is about to sit out)
+            if let Some(alive) = &up {
+                for c in 0..self.cells.len() {
+                    if !alive[c] {
+                        let t = self.cells[c].sim_time();
+                        self.cells[c].obs_mut().instant("cell_outage", "fault", 0, t);
+                        self.obs.inc("fault.cell_outages", 1);
+                    }
+                }
+            }
             // a cell runs the block iff it was sampled in AND its cell is
             // up; a None mask means "no gate of that kind this run"
             let ran: Option<Vec<bool>> = if active.is_none() && up.is_none() {
@@ -282,8 +335,8 @@ impl<'a> HierTrainer<'a> {
     /// folded back in after it rejoins. Its clock still barriers with
     /// everyone else (downtime is wall time, not a time warp).
     fn cloud_round(&mut self, ran: Option<&[bool]>, up: Option<&[bool]>) -> Result<()> {
+        let t_cloud = self.cells.iter().map(|c| c.sim_time()).fold(0.0, f64::max);
         if self.cells.len() > 1 {
-            let t_cloud = self.cells.iter().map(|c| c.sim_time()).fold(0.0, f64::max);
             for tr in &mut self.cells {
                 tr.sync_clock_to(t_cloud);
             }
@@ -309,6 +362,25 @@ impl<'a> HierTrainer<'a> {
                     r.cloud = true;
                 }
             }
+        }
+        // cloud-lane trace: one merge instant per tau-block at the
+        // barrier time, plus a per-block metrics snapshot (`blocks` was
+        // already bumped for this block, so snapshots are 1-based)
+        if self.obs.is_enabled() {
+            let merged = match ran {
+                None => self.cells.len(),
+                Some(mask) => mask.iter().filter(|&&m| m).count(),
+            };
+            self.obs.instant_arg(
+                "cloud_merge",
+                "cloud",
+                0,
+                t_cloud,
+                &[("cells", merged as f64)],
+            );
+            self.obs.inc("cloud.merges", 1);
+            self.obs.gauge("sim.time", t_cloud);
+            self.obs.snapshot(self.blocks);
         }
         Ok(())
     }
@@ -395,7 +467,11 @@ impl<'a> HierTrainer<'a> {
     pub fn resume_from(&mut self, path: &Path) -> Result<()> {
         let payload = checkpoint::read_file(path, checkpoint::KIND_HIER)?;
         self.restore_payload(&payload)
-            .with_context(|| format!("restoring checkpoint {}", path.display()))
+            .with_context(|| format!("restoring checkpoint {}", path.display()))?;
+        let t = self.sim_time();
+        self.obs.instant("ckpt_restore", "ckpt", 0, t);
+        self.obs.inc("ckpt.restores", 1);
+        Ok(())
     }
 
     fn restore_payload(&mut self, payload: &[u8]) -> Result<()> {
@@ -450,6 +526,9 @@ impl<'a> HierTrainer<'a> {
             left -= block;
             if every > 0 && self.blocks % every as u64 == 0 {
                 self.save_checkpoint(path)?;
+                let t = self.sim_time();
+                self.obs.instant("ckpt_save", "ckpt", 0, t);
+                self.obs.inc("ckpt.saves", 1);
             }
         }
         Ok(())

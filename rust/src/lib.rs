@@ -30,6 +30,7 @@ pub mod fault;
 pub mod grad;
 pub mod hier;
 pub mod metrics;
+pub mod obs;
 pub mod opt;
 pub mod runtime;
 pub mod sched;

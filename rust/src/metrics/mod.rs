@@ -6,16 +6,32 @@ pub use recorder::Recorder;
 
 /// Training speedup of `scheme_time` relative to `baseline_time` for
 /// reaching the same loss target (Table II's metric): higher is faster.
-pub fn speedup(baseline_time: f64, scheme_time: f64) -> f64 {
-    assert!(baseline_time > 0.0 && scheme_time > 0.0);
-    baseline_time / scheme_time
+/// Non-positive (or NaN) times are a structured error, not a panic — a
+/// scheme that never reached the target reports a time of 0 upstream of
+/// some callers, and that should surface as a diagnosable message.
+pub fn speedup(baseline_time: f64, scheme_time: f64) -> anyhow::Result<f64> {
+    let bad = |t: f64| t.is_nan() || t <= 0.0;
+    if bad(baseline_time) || bad(scheme_time) {
+        anyhow::bail!(
+            "speedup needs positive times, got baseline {baseline_time} vs scheme {scheme_time}"
+        );
+    }
+    Ok(baseline_time / scheme_time)
 }
 
 #[cfg(test)]
 mod tests {
     #[test]
     fn speedup_ratio() {
-        assert_eq!(super::speedup(10.0, 5.0), 2.0);
-        assert_eq!(super::speedup(5.0, 10.0), 0.5);
+        assert_eq!(super::speedup(10.0, 5.0).unwrap(), 2.0);
+        assert_eq!(super::speedup(5.0, 10.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn speedup_rejects_non_positive_times() {
+        for (b, t) in [(0.0, 1.0), (1.0, 0.0), (-1.0, 1.0), (f64::NAN, 1.0)] {
+            let err = super::speedup(b, t).unwrap_err().to_string();
+            assert!(err.contains("positive times"), "{err}");
+        }
     }
 }

@@ -69,4 +69,37 @@ mod tests {
         assert_eq!(log, "hello\nworld\n");
         std::fs::remove_dir_all(&tmp).ok();
     }
+
+    #[test]
+    fn metrics_snapshot_round_trip() {
+        // record → snapshot → serialize through the Recorder → parse back:
+        // the values that went in come back out.
+        let mut m = crate::obs::MetricsRegistry::default();
+        m.inc("round.applied", 4);
+        m.gauge("train.loss", 0.5);
+        m.observe("round.duration", 1.25);
+        m.snapshot(3, 0);
+
+        let tmp = std::env::temp_dir().join(format!("feel_rec_rt_{}", std::process::id()));
+        let r = Recorder::new(&tmp, "unit").unwrap();
+        let path = r.dir().join("metrics.jsonl");
+        std::fs::write(&path, m.to_jsonl()).unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let line = text.lines().next().unwrap();
+        let v = Json::parse(line).unwrap();
+        assert_eq!(v.get("period").unwrap().as_usize(), Some(3));
+        assert_eq!(
+            v.get("counters").unwrap().get("round.applied").unwrap().as_f64(),
+            Some(4.0)
+        );
+        assert_eq!(
+            v.get("gauges").unwrap().get("train.loss").unwrap().as_f64(),
+            Some(0.5)
+        );
+        let h = v.get("hists").unwrap().get("round.duration").unwrap();
+        assert_eq!(h.get("total").unwrap().as_f64(), Some(1.0));
+        assert_eq!(h.get("sum").unwrap().as_f64(), Some(1.25));
+        std::fs::remove_dir_all(&tmp).ok();
+    }
 }

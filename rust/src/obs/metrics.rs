@@ -1,0 +1,514 @@
+//! Metrics registry: named counters, gauges, and fixed-bucket histograms.
+//!
+//! Counters and gauges are cumulative over a run; histograms use validated
+//! strictly-ascending bucket bounds plus an implicit +inf overflow bucket.
+//! `MetricsRegistry::snapshot` freezes the registry into one JSONL line per
+//! `(period, cell)`; `summarize_jsonl` is the `feel report` backend that
+//! turns a JSONL dump back into a per-run table (totals per counter,
+//! p50/p95/max per histogram).
+//!
+//! Wall-clock derived values (e.g. `wall.solver_secs`) may flow into the
+//! metrics JSONL — it is a measurement artifact, not a byte-pinned one. The
+//! *trace* path must stay byte-identical across thread counts, so only
+//! simulated-time quantities ever reach the tracer (`obs::trace`).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::{num, obj, Json};
+
+/// Exponentially-spaced bucket upper bounds: `start * factor^i`.
+pub fn exponential_bounds(start: f64, factor: f64, count: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(count);
+    let mut b = start;
+    for _ in 0..count {
+        out.push(b);
+        b *= factor;
+    }
+    out
+}
+
+/// Default histogram bounds: 26 doubling buckets from 1e-3 (~1e-3 .. ~3.4e4)
+/// — wide enough for simulated seconds, staleness counts, and batch tallies.
+fn default_bounds() -> Vec<f64> {
+    exponential_bounds(1e-3, 2.0, 26)
+}
+
+fn jnum(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Fixed-bucket histogram: `counts[i]` tallies observations with
+/// `v <= bounds[i]` (first matching bucket); `counts[bounds.len()]` is the
+/// +inf overflow bucket.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Bounds must be non-empty, finite, and strictly ascending (the
+    /// overflow bucket is implicit — never pass +inf).
+    pub fn new(bounds: Vec<f64>) -> Result<Histogram> {
+        if bounds.is_empty() {
+            bail!("histogram needs at least one bucket bound");
+        }
+        if bounds.iter().any(|b| !b.is_finite()) {
+            bail!("histogram bounds must be finite (the overflow bucket is implicit)");
+        }
+        for w in bounds.windows(2) {
+            if w[0] >= w[1] {
+                bail!(
+                    "histogram bounds must be strictly ascending: {} then {}",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+        let n = bounds.len() + 1;
+        Ok(Histogram {
+            bounds,
+            counts: vec![0; n],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        })
+    }
+
+    pub fn exponential(start: f64, factor: f64, count: usize) -> Result<Histogram> {
+        Histogram::new(exponential_bounds(start, factor, count))
+    }
+
+    /// Record one observation. NaN is rejected (returns `false`) rather
+    /// than silently poisoning `sum`/`min`/`max`.
+    pub fn record(&mut self, v: f64) -> bool {
+        if v.is_nan() {
+            return false;
+        }
+        let i = self
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        true
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Observed extrema; 0.0 on an empty histogram.
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Upper bound of the bucket holding the `q`-quantile rank
+    /// (`rank = ceil(q * total)`, clamped to `[1, total]`); the overflow
+    /// bucket reports the observed max. 0.0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.max
+                };
+            }
+        }
+        self.max
+    }
+
+    fn stats_json(&self) -> Json {
+        if self.total == 0 {
+            return obj(vec![("total", num(0.0))]);
+        }
+        obj(vec![
+            ("total", num(self.total as f64)),
+            ("sum", jnum(self.sum)),
+            ("min", jnum(self.min)),
+            ("max", jnum(self.max)),
+            ("p50", jnum(self.quantile(0.5))),
+            ("p95", jnum(self.quantile(0.95))),
+        ])
+    }
+}
+
+/// One frozen JSONL line: the cumulative registry state after `period` on
+/// `cell`.
+#[derive(Clone, Debug)]
+pub struct Snap {
+    pub period: u64,
+    pub cell: usize,
+    pub line: String,
+}
+
+/// Named counters, gauges, and histograms plus the per-period snapshot log.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, Histogram>,
+    snaps: Vec<Snap>,
+}
+
+impl MetricsRegistry {
+    pub fn inc(&mut self, name: &'static str, by: u64) {
+        *self.counters.entry(name).or_insert(0) += by;
+    }
+
+    pub fn gauge(&mut self, name: &'static str, v: f64) {
+        self.gauges.insert(name, v);
+    }
+
+    /// Record into `name`'s histogram, creating it with the default
+    /// exponential buckets on first touch. NaN observations are dropped.
+    pub fn observe(&mut self, name: &'static str, v: f64) {
+        self.hists
+            .entry(name)
+            .or_insert_with(|| Histogram::new(default_bounds()).expect("default bounds are valid"))
+            .record(v);
+    }
+
+    /// Pre-register `name` with custom buckets (before any `observe`).
+    pub fn register_hist(&mut self, name: &'static str, hist: Histogram) {
+        self.hists.insert(name, hist);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// Freeze the cumulative state into one JSONL line.
+    pub fn snapshot(&mut self, period: u64, cell: usize) {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, v)| (k.to_string(), num(*v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges
+                .iter()
+                .map(|(k, v)| (k.to_string(), jnum(*v)))
+                .collect(),
+        );
+        let hists = Json::Obj(
+            self.hists
+                .iter()
+                .map(|(k, h)| (k.to_string(), h.stats_json()))
+                .collect(),
+        );
+        let line = obj(vec![
+            ("period", num(period as f64)),
+            ("cell", num(cell as f64)),
+            ("counters", counters),
+            ("gauges", gauges),
+            ("hists", hists),
+        ])
+        .to_string();
+        self.snaps.push(Snap { period, cell, line });
+    }
+
+    pub fn snaps(&self) -> &[Snap] {
+        &self.snaps
+    }
+
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for snap in &self.snaps {
+            out.push_str(&snap.line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Merge per-cell snapshot streams into one JSONL document ordered by
+/// `(period, cell)`. `sort_by_key` is stable, so the merged stream is a
+/// pure function of the inputs.
+pub fn merge_snaps(parts: &[&[Snap]]) -> String {
+    let mut all: Vec<&Snap> = parts.iter().flat_map(|p| p.iter()).collect();
+    all.sort_by_key(|snap| (snap.period, snap.cell));
+    let mut out = String::new();
+    for snap in all {
+        out.push_str(&snap.line);
+        out.push('\n');
+    }
+    out
+}
+
+/// `feel report` backend: summarize a metrics JSONL dump into a per-run
+/// table. Snapshots are cumulative, so totals come from each cell's *last*
+/// snapshot; counters are summed across cells, gauges and histograms are
+/// listed per cell when more than one is present.
+pub fn summarize_jsonl(src: &str) -> Result<String> {
+    let mut last: BTreeMap<usize, Json> = BTreeMap::new();
+    let mut n = 0usize;
+    for (i, line) in src.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| anyhow!("metrics line {}: {e}", i + 1))?;
+        let cell = v
+            .get("cell")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("metrics line {}: missing cell", i + 1))?;
+        last.insert(cell, v);
+        n += 1;
+    }
+    if last.is_empty() {
+        bail!("no metric snapshots found");
+    }
+    let multi = last.len() > 1;
+    let label = |name: &str, cell: usize| {
+        if multi {
+            format!("{name}[cell {cell}]")
+        } else {
+            name.to_string()
+        }
+    };
+
+    let mut out = String::new();
+    let _ = writeln!(out, "observability report — {n} snapshots, {} cell(s)", last.len());
+
+    let mut totals: BTreeMap<String, f64> = BTreeMap::new();
+    for v in last.values() {
+        if let Some(cs) = v.get("counters").and_then(Json::as_obj) {
+            for (k, c) in cs {
+                *totals.entry(k.clone()).or_insert(0.0) += c.as_f64().unwrap_or(0.0);
+            }
+        }
+    }
+    if !totals.is_empty() {
+        let _ = writeln!(out, "\ncounters (totals):");
+        for (k, v) in &totals {
+            let _ = writeln!(out, "  {k:<32} {v:>12.0}");
+        }
+    }
+
+    let mut wrote_gauge_header = false;
+    for (cell, v) in &last {
+        if let Some(gs) = v.get("gauges").and_then(Json::as_obj) {
+            for (k, g) in gs {
+                if !wrote_gauge_header {
+                    let _ = writeln!(out, "\ngauges (last snapshot):");
+                    wrote_gauge_header = true;
+                }
+                let name = label(k, *cell);
+                match g.as_f64() {
+                    Some(x) => {
+                        let _ = writeln!(out, "  {name:<32} {x:>14.6}");
+                    }
+                    None => {
+                        let _ = writeln!(out, "  {name:<32} {:>14}", "nan");
+                    }
+                }
+            }
+        }
+    }
+
+    let mut wrote_hist_header = false;
+    for (cell, v) in &last {
+        if let Some(hs) = v.get("hists").and_then(Json::as_obj) {
+            for (k, h) in hs {
+                if !wrote_hist_header {
+                    let _ = writeln!(out, "\nhistograms (count / p50 / p95 / max):");
+                    wrote_hist_header = true;
+                }
+                let name = label(k, *cell);
+                let total = h.get("total").and_then(Json::as_f64).unwrap_or(0.0);
+                let p50 = h.get("p50").and_then(Json::as_f64).unwrap_or(0.0);
+                let p95 = h.get("p95").and_then(Json::as_f64).unwrap_or(0.0);
+                let max = h.get("max").and_then(Json::as_f64).unwrap_or(0.0);
+                let _ = writeln!(
+                    out,
+                    "  {name:<32} {total:>8.0} {p50:>12.6} {p95:>12.6} {max:>12.6}"
+                );
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        let mut h = Histogram::new(vec![0.0, 1.0, 2.0]).unwrap();
+        assert!(h.record(0.0)); // exactly the first bound → bucket 0
+        assert!(h.record(-0.5)); // below every bound → bucket 0
+        assert!(h.record(1.0)); // exactly an interior bound → bucket 1
+        assert!(h.record(1.5)); // between bounds → bucket 2
+        assert!(h.record(2.0)); // exactly the last bound → bucket 2
+        assert!(h.record(3.0)); // past the last bound → overflow
+        assert!(h.record(f64::INFINITY)); // +inf → overflow
+        assert_eq!(h.counts(), &[2, 1, 2, 2]);
+        assert_eq!(h.total(), 7);
+        assert_eq!(h.min(), -0.5);
+        assert_eq!(h.max(), f64::INFINITY);
+    }
+
+    #[test]
+    fn nan_rejected() {
+        let mut h = Histogram::new(vec![1.0]).unwrap();
+        assert!(!h.record(f64::NAN));
+        assert_eq!(h.total(), 0);
+        assert_eq!(h.counts(), &[0, 0]);
+        assert!(h.record(0.5));
+        assert_eq!(h.total(), 1);
+        assert!(h.sum().is_finite());
+    }
+
+    #[test]
+    fn invalid_bounds_rejected() {
+        assert!(Histogram::new(vec![]).is_err());
+        assert!(Histogram::new(vec![1.0, 1.0]).is_err());
+        assert!(Histogram::new(vec![2.0, 1.0]).is_err());
+        assert!(Histogram::new(vec![1.0, f64::INFINITY]).is_err());
+        assert!(Histogram::new(vec![f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn quantiles_walk_buckets() {
+        let mut h = Histogram::new(vec![1.0, 2.0, 4.0]).unwrap();
+        assert_eq!(h.quantile(0.5), 0.0); // empty
+        for _ in 0..9 {
+            h.record(0.5);
+        }
+        h.record(10.0); // overflow
+        assert_eq!(h.quantile(0.5), 1.0);
+        assert_eq!(h.quantile(0.89), 1.0);
+        assert_eq!(h.quantile(0.95), 10.0); // overflow bucket reports max
+        assert_eq!(h.quantile(0.0), 1.0); // rank clamps to 1
+        assert_eq!(h.quantile(1.0), 10.0);
+    }
+
+    #[test]
+    fn exponential_bounds_shape() {
+        let b = exponential_bounds(1.0, 2.0, 4);
+        assert_eq!(b, vec![1.0, 2.0, 4.0, 8.0]);
+        assert!(Histogram::exponential(1e-3, 2.0, 26).is_ok());
+    }
+
+    #[test]
+    fn registry_snapshot_lines_parse() {
+        let mut m = MetricsRegistry::default();
+        m.inc("round.applied", 3);
+        m.gauge("train.loss", 0.25);
+        m.gauge("bad.gauge", f64::NAN); // must render as null, not NaN
+        m.observe("round.duration", 1.5);
+        m.observe("round.duration", f64::NAN); // dropped
+        m.snapshot(1, 0);
+        m.inc("round.applied", 2);
+        m.snapshot(2, 0);
+        assert_eq!(m.counter("round.applied"), 5);
+        assert_eq!(m.hist("round.duration").unwrap().total(), 1);
+        let jsonl = m.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let v = Json::parse(line).unwrap();
+            assert!(v.get("counters").is_some());
+        }
+        let v2 = Json::parse(lines[1]).unwrap();
+        assert_eq!(
+            v2.get("counters").unwrap().get("round.applied").unwrap().as_f64(),
+            Some(5.0)
+        );
+        assert_eq!(v2.get("gauges").unwrap().get("bad.gauge"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn merge_orders_by_period_then_cell() {
+        let mk = |period, cell| Snap {
+            period,
+            cell,
+            line: format!("{{\"cell\":{cell},\"period\":{period}}}"),
+        };
+        let a = vec![mk(1, 0), mk(2, 0)];
+        let b = vec![mk(1, 1), mk(2, 1)];
+        let merged = merge_snaps(&[&a, &b]);
+        let cells: Vec<&str> = merged.lines().collect();
+        assert_eq!(
+            cells,
+            vec![
+                "{\"cell\":0,\"period\":1}",
+                "{\"cell\":1,\"period\":1}",
+                "{\"cell\":0,\"period\":2}",
+                "{\"cell\":1,\"period\":2}",
+            ]
+        );
+    }
+
+    #[test]
+    fn report_summarizes_last_snapshot() {
+        let mut m = MetricsRegistry::default();
+        m.inc("agg.quarantined", 1);
+        m.observe("round.duration", 2.0);
+        m.gauge("train.loss", 1.5);
+        m.snapshot(1, 0);
+        m.inc("agg.quarantined", 4);
+        m.snapshot(2, 0);
+        let report = summarize_jsonl(&m.to_jsonl()).unwrap();
+        assert!(report.contains("2 snapshots"));
+        assert!(report.contains("agg.quarantined"));
+        assert!(report.contains("5")); // cumulative total from the last line
+        assert!(report.contains("round.duration"));
+        assert!(summarize_jsonl("").is_err());
+        assert!(summarize_jsonl("not json\n").is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! Observability: structured tracing + metrics, zero-cost when off.
+//!
+//! `ObsSink` is the handle threaded through the trainers and the round
+//! scheduler. Disabled (the default) it is a single `None` check per call
+//! and allocates nothing; enabling it never draws RNG, never touches
+//! numerics, and never reads the host wall clock on the trace path, so an
+//! instrumented run reproduces an uninstrumented run's `TrainLog` bitwise
+//! and the same seed yields byte-identical trace files at any thread count
+//! (both pinned in `tests/observability.rs`).
+//!
+//! - `trace`: spans/instants on the simulated clock, exported as Chrome
+//!   trace-event JSON (`--trace FILE`, open in chrome://tracing or
+//!   Perfetto). Cells map to pids (the hier cloud lane is pid = #cells),
+//!   devices to tids (coordinator = 0, device d = d + 1).
+//! - `metrics`: named counters/gauges/histograms snapshotted per period and
+//!   dumped as JSONL (`--metrics-out FILE`; summarize with `feel report`).
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{merge_snaps, summarize_jsonl, Histogram, MetricsRegistry, Snap};
+pub use trace::{chrome_trace, merge_traces, TraceEvent};
+
+/// Observability sink: disabled by default. Enabled, it records into one
+/// trace-event buffer and one metrics registry, stamping every event with
+/// the pid fixed at enable time (the owning trainer's cell id).
+#[derive(Debug, Default)]
+pub struct ObsSink {
+    inner: Option<Box<ObsInner>>,
+}
+
+#[derive(Debug)]
+struct ObsInner {
+    pid: usize,
+    events: Vec<TraceEvent>,
+    metrics: MetricsRegistry,
+}
+
+impl ObsSink {
+    pub fn disabled() -> ObsSink {
+        ObsSink { inner: None }
+    }
+
+    pub fn enabled(pid: usize) -> ObsSink {
+        ObsSink {
+            inner: Some(Box::new(ObsInner {
+                pid,
+                events: Vec::new(),
+                metrics: MetricsRegistry::default(),
+            })),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    // -- trace -------------------------------------------------------------
+
+    /// Record a complete span: `ts`/`dur` in simulated seconds, `tid` 0 for
+    /// the coordinator lane or `device + 1` for a device lane.
+    pub fn span(&mut self, name: &'static str, cat: &'static str, tid: usize, ts: f64, dur: f64) {
+        if let Some(inner) = &mut self.inner {
+            inner
+                .events
+                .push(TraceEvent::span(name, cat, inner.pid, tid, ts, dur));
+        }
+    }
+
+    pub fn span_arg(
+        &mut self,
+        name: &'static str,
+        cat: &'static str,
+        tid: usize,
+        ts: f64,
+        dur: f64,
+        args: &[(&'static str, f64)],
+    ) {
+        if let Some(inner) = &mut self.inner {
+            let mut e = TraceEvent::span(name, cat, inner.pid, tid, ts, dur);
+            e.args.extend_from_slice(args);
+            inner.events.push(e);
+        }
+    }
+
+    pub fn instant(&mut self, name: &'static str, cat: &'static str, tid: usize, ts: f64) {
+        if let Some(inner) = &mut self.inner {
+            inner
+                .events
+                .push(TraceEvent::instant(name, cat, inner.pid, tid, ts));
+        }
+    }
+
+    pub fn instant_arg(
+        &mut self,
+        name: &'static str,
+        cat: &'static str,
+        tid: usize,
+        ts: f64,
+        args: &[(&'static str, f64)],
+    ) {
+        if let Some(inner) = &mut self.inner {
+            let mut e = TraceEvent::instant(name, cat, inner.pid, tid, ts);
+            e.args.extend_from_slice(args);
+            inner.events.push(e);
+        }
+    }
+
+    /// Instant carrying one string arg (e.g. a quarantine verdict name).
+    pub fn instant_label(
+        &mut self,
+        name: &'static str,
+        cat: &'static str,
+        tid: usize,
+        ts: f64,
+        key: &'static str,
+        value: &'static str,
+    ) {
+        if let Some(inner) = &mut self.inner {
+            inner
+                .events
+                .push(TraceEvent::instant(name, cat, inner.pid, tid, ts).label(key, value));
+        }
+    }
+
+    /// The recorded event buffer (empty when disabled).
+    pub fn events(&self) -> &[TraceEvent] {
+        match &self.inner {
+            Some(inner) => &inner.events,
+            None => &[],
+        }
+    }
+
+    // -- metrics -----------------------------------------------------------
+
+    pub fn inc(&mut self, name: &'static str, by: u64) {
+        if let Some(inner) = &mut self.inner {
+            inner.metrics.inc(name, by);
+        }
+    }
+
+    pub fn gauge(&mut self, name: &'static str, v: f64) {
+        if let Some(inner) = &mut self.inner {
+            inner.metrics.gauge(name, v);
+        }
+    }
+
+    pub fn observe(&mut self, name: &'static str, v: f64) {
+        if let Some(inner) = &mut self.inner {
+            inner.metrics.observe(name, v);
+        }
+    }
+
+    /// Freeze the cumulative metrics into one JSONL snapshot line.
+    pub fn snapshot(&mut self, period: u64) {
+        if let Some(inner) = &mut self.inner {
+            let cell = inner.pid;
+            inner.metrics.snapshot(period, cell);
+        }
+    }
+
+    pub fn metrics(&self) -> Option<&MetricsRegistry> {
+        self.inner.as_deref().map(|inner| &inner.metrics)
+    }
+
+    pub fn snaps(&self) -> &[Snap] {
+        match &self.inner {
+            Some(inner) => inner.metrics.snaps(),
+            None => &[],
+        }
+    }
+
+    /// Metrics JSONL for this sink alone (empty when disabled).
+    pub fn to_jsonl(&self) -> String {
+        match &self.inner {
+            Some(inner) => inner.metrics.to_jsonl(),
+            None => String::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut sink = ObsSink::disabled();
+        sink.span("round", "device", 1, 0.0, 1.0);
+        sink.instant("crash", "fault", 2, 0.5);
+        sink.inc("round.applied", 1);
+        sink.observe("round.duration", 1.0);
+        sink.snapshot(1);
+        assert!(!sink.is_enabled());
+        assert!(sink.events().is_empty());
+        assert!(sink.snaps().is_empty());
+        assert!(sink.metrics().is_none());
+        assert_eq!(sink.to_jsonl(), "");
+    }
+
+    #[test]
+    fn enabled_stamps_pid_and_snapshots_cell() {
+        let mut sink = ObsSink::enabled(3);
+        sink.span("round", "device", 1, 0.0, 1.0);
+        sink.instant_label("quarantine", "guard", 2, 0.5, "verdict", "rejected");
+        sink.inc("agg.quarantined", 1);
+        sink.snapshot(7);
+        assert_eq!(sink.events().len(), 2);
+        assert!(sink.events().iter().all(|e| e.pid == 3));
+        assert_eq!(sink.snaps().len(), 1);
+        assert_eq!(sink.snaps()[0].cell, 3);
+        assert_eq!(sink.snaps()[0].period, 7);
+        assert_eq!(sink.metrics().unwrap().counter("agg.quarantined"), 1);
+    }
+}

@@ -1,0 +1,264 @@
+//! Event tracer on the simulated clock, exported as Chrome trace-event JSON.
+//!
+//! Events carry simulated-seconds timestamps (`SimClock` time — never the
+//! host wall clock), a pid (the cell id; the hier cloud lane is
+//! pid = #cells) and a tid (0 = the coordinator lane, device d = tid d+1).
+//! `chrome_trace` renders a buffer in the Trace Event Format that
+//! chrome://tracing and Perfetto load directly: `ph:"X"` complete spans,
+//! `ph:"i"` instants, plus `ph:"M"` metadata naming each process/thread
+//! lane.
+//!
+//! Byte-determinism: rendering walks events in buffer order and every JSON
+//! object keeps sorted key order (`util::json::Json::Obj` is a `BTreeMap`),
+//! so equal buffers render to equal bytes. Buffers themselves are only ever
+//! filled on the coordinator thread and merged in fixed cell order
+//! (`merge_traces` is a stable sort), so the same seed yields byte-identical
+//! trace files at any thread count.
+
+use std::collections::BTreeSet;
+
+use crate::util::json::{num, obj, s, Json};
+
+/// One trace event: a complete span (`dur = Some`) or an instant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Simulated seconds.
+    pub ts: f64,
+    /// Span duration in simulated seconds; `None` renders as an instant.
+    pub dur: Option<f64>,
+    /// Cell id (flat runs: 0); the hier cloud aggregator uses pid = #cells.
+    pub pid: usize,
+    /// 0 = coordinator lane; device d = tid d + 1.
+    pub tid: usize,
+    pub name: &'static str,
+    pub cat: &'static str,
+    /// Numeric `args` shown in the trace viewer's detail pane.
+    pub args: Vec<(&'static str, f64)>,
+    /// String `args` (e.g. a quarantine verdict name).
+    pub labels: Vec<(&'static str, &'static str)>,
+}
+
+impl TraceEvent {
+    pub fn span(
+        name: &'static str,
+        cat: &'static str,
+        pid: usize,
+        tid: usize,
+        ts: f64,
+        dur: f64,
+    ) -> TraceEvent {
+        TraceEvent {
+            ts,
+            dur: Some(dur),
+            pid,
+            tid,
+            name,
+            cat,
+            args: Vec::new(),
+            labels: Vec::new(),
+        }
+    }
+
+    pub fn instant(
+        name: &'static str,
+        cat: &'static str,
+        pid: usize,
+        tid: usize,
+        ts: f64,
+    ) -> TraceEvent {
+        TraceEvent {
+            ts,
+            dur: None,
+            pid,
+            tid,
+            name,
+            cat,
+            args: Vec::new(),
+            labels: Vec::new(),
+        }
+    }
+
+    pub fn arg(mut self, key: &'static str, value: f64) -> TraceEvent {
+        self.args.push((key, value));
+        self
+    }
+
+    pub fn label(mut self, key: &'static str, value: &'static str) -> TraceEvent {
+        self.labels.push((key, value));
+        self
+    }
+}
+
+/// Concatenate per-cell buffers (callers pass them in fixed cell order) and
+/// stable-sort by timestamp: ties keep the input order, so the merged buffer
+/// is a pure function of the inputs — never of thread scheduling.
+pub fn merge_traces(parts: Vec<Vec<TraceEvent>>) -> Vec<TraceEvent> {
+    let mut all: Vec<TraceEvent> = parts.into_iter().flatten().collect();
+    all.sort_by(|a, b| a.ts.total_cmp(&b.ts));
+    all
+}
+
+fn jnum(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Render a buffer as a Chrome trace-event JSON document (object form, with
+/// `displayTimeUnit`), timestamps in microseconds. `cloud_pid` names that
+/// process lane "cloud" instead of "cell N".
+pub fn chrome_trace(events: &[TraceEvent], cloud_pid: Option<usize>) -> String {
+    let mut pids = BTreeSet::new();
+    let mut lanes = BTreeSet::new();
+    for e in events {
+        pids.insert(e.pid);
+        lanes.insert((e.pid, e.tid));
+    }
+    let mut out = Vec::with_capacity(events.len() + pids.len() + lanes.len());
+    for p in &pids {
+        let pname = if cloud_pid == Some(*p) {
+            "cloud".to_string()
+        } else {
+            format!("cell {p}")
+        };
+        out.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("process_name")),
+            ("pid", num(*p as f64)),
+            ("tid", num(0.0)),
+            ("args", obj(vec![("name", Json::Str(pname))])),
+        ]));
+    }
+    for (p, t) in &lanes {
+        let tname = if *t == 0 {
+            "coordinator".to_string()
+        } else {
+            format!("device {}", t - 1)
+        };
+        out.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("thread_name")),
+            ("pid", num(*p as f64)),
+            ("tid", num(*t as f64)),
+            ("args", obj(vec![("name", Json::Str(tname))])),
+        ]));
+    }
+    for e in events {
+        let mut a: Vec<(&str, Json)> = Vec::new();
+        for (k, v) in &e.args {
+            a.push((k, jnum(*v)));
+        }
+        for (k, v) in &e.labels {
+            a.push((k, s(v)));
+        }
+        let mut fields = vec![
+            ("name", s(e.name)),
+            ("cat", s(e.cat)),
+            ("pid", num(e.pid as f64)),
+            ("tid", num(e.tid as f64)),
+            ("ts", jnum(e.ts * 1e6)),
+        ];
+        match e.dur {
+            Some(d) => {
+                fields.push(("ph", s("X")));
+                fields.push(("dur", jnum(d * 1e6)));
+            }
+            None => {
+                fields.push(("ph", s("i")));
+                fields.push(("s", s("t")));
+            }
+        }
+        if !a.is_empty() {
+            fields.push(("args", obj(a)));
+        }
+        out.push(obj(fields));
+    }
+    obj(vec![
+        ("displayTimeUnit", s("ms")),
+        ("traceEvents", Json::Arr(out)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_spans_and_instants() {
+        let events = vec![
+            TraceEvent::span("round", "device", 0, 3, 1.5, 0.25).arg("batch", 10.0),
+            TraceEvent::instant("drop", "straggler", 0, 4, 1.5).label("why", "dropout"),
+        ];
+        let text = chrome_trace(&events, None);
+        let v = Json::parse(&text).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process_name + 2 thread_name metadata events precede the payload.
+        assert_eq!(evs.len(), 5);
+        let span = &evs[3];
+        assert_eq!(span.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(span.get("ts").unwrap().as_f64(), Some(1.5e6));
+        assert_eq!(span.get("dur").unwrap().as_f64(), Some(0.25e6));
+        assert_eq!(
+            span.get("args").unwrap().get("batch").unwrap().as_f64(),
+            Some(10.0)
+        );
+        let inst = &evs[4];
+        assert_eq!(inst.get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(
+            inst.get("args").unwrap().get("why").unwrap().as_str(),
+            Some("dropout")
+        );
+    }
+
+    #[test]
+    fn lane_metadata_names_cells_devices_and_cloud() {
+        let events = vec![
+            TraceEvent::instant("a", "c", 0, 0, 0.0),
+            TraceEvent::instant("b", "c", 2, 1, 0.0),
+        ];
+        let text = chrome_trace(&events, Some(2));
+        assert!(text.contains("\"cell 0\""));
+        assert!(text.contains("\"cloud\""));
+        assert!(text.contains("\"coordinator\""));
+        assert!(text.contains("\"device 0\""));
+    }
+
+    #[test]
+    fn merge_is_stable_on_ties() {
+        let a = vec![
+            TraceEvent::instant("a0", "c", 0, 0, 1.0),
+            TraceEvent::instant("a1", "c", 0, 0, 3.0),
+        ];
+        let b = vec![TraceEvent::instant("b0", "c", 1, 0, 1.0)];
+        let merged = merge_traces(vec![a, b]);
+        let names: Vec<&str> = merged.iter().map(|e| e.name).collect();
+        // Equal timestamps keep cell order: a0 (cell 0) before b0 (cell 1).
+        assert_eq!(names, vec!["a0", "b0", "a1"]);
+    }
+
+    #[test]
+    fn rendering_is_deterministic_and_valid_json() {
+        let make = || {
+            vec![
+                TraceEvent::span("round", "device", 1, 2, 0.5, 1.0).arg("w", 2.0),
+                TraceEvent::instant("crash", "fault", 1, 3, 0.5),
+            ]
+        };
+        let t1 = chrome_trace(&make(), None);
+        let t2 = chrome_trace(&make(), None);
+        assert_eq!(t1, t2);
+        assert!(Json::parse(&t1).is_ok());
+    }
+
+    #[test]
+    fn non_finite_args_render_as_null_not_invalid_json() {
+        let events = vec![TraceEvent::instant("x", "c", 0, 0, 0.0).arg("bad", f64::NAN)];
+        let text = chrome_trace(&events, None);
+        let v = Json::parse(&text).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.last().unwrap().get("args").unwrap().get("bad"), Some(&Json::Null));
+    }
+}

@@ -29,6 +29,7 @@ use crate::device::StragglerModel;
 use crate::exec::{self, Engine};
 use crate::fault::FaultPlan;
 use crate::grad::{Aggregator, GradGuard};
+use crate::obs::ObsSink;
 use crate::opt::types::Instance;
 
 /// One buffered async contribution, computed at dispatch time against the
@@ -311,6 +312,7 @@ impl RoundScheduler {
         now: f64,
         participants: Option<&[usize]>,
         aggs: &mut [Aggregator],
+        obs: &mut ObsSink,
     ) -> Result<RoundReport> {
         debug_assert_eq!(workers.len(), self.busy.len(), "fleet size changed under scheduler");
         if aggs.len() != backends.family_count() {
@@ -336,8 +338,10 @@ impl RoundScheduler {
                 train,
                 plan,
                 period,
+                now,
                 participants,
                 aggs,
+                obs,
             ),
             RoundPolicy::Deadline { factor } => self.deadline_period(
                 factor,
@@ -348,8 +352,10 @@ impl RoundScheduler {
                 train,
                 plan,
                 period,
+                now,
                 participants,
                 aggs,
+                obs,
             ),
             RoundPolicy::Async { alpha, beta, quorum } => self.async_period(
                 alpha,
@@ -365,6 +371,7 @@ impl RoundScheduler {
                 now,
                 participants,
                 aggs,
+                obs,
             ),
         }
     }
@@ -386,8 +393,10 @@ impl RoundScheduler {
         train: &Dataset,
         plan: &Plan,
         period: u64,
+        now: f64,
         participants: Option<&[usize]>,
         aggs: &mut [Aggregator],
+        obs: &mut ObsSink,
     ) -> Result<RoundReport> {
         let k = workers.len();
         let m = participants.map_or(k, <[usize]>::len);
@@ -406,23 +415,36 @@ impl RoundScheduler {
         let fault = &self.fault;
         let straggler = &self.straggler;
         let seed = self.seed;
+        let obs = &mut *obs;
         for_each_participant(k, participants, |d| {
             if fault_on && fault.is_down(seed, period, d as u64) {
                 mask[d] = false;
                 crashed += 1;
+                obs.instant("crash", "fault", d + 1, now);
                 return;
             }
             let pert = straggler.sample(seed, period, d as u64);
             if pert.dropped {
                 mask[d] = false;
                 dropped += 1;
-            } else if fault_on && fault.corrupts(seed, period, d as u64).is_some() {
-                mask[d] = false;
-                corrupt_jobs.push((d, plan.batches[d].max(1)));
-                queue.push(plan.finish[d] * pert.slowdown, d, ());
-            } else {
-                mask[d] = true;
-                queue.push(plan.finish[d] * pert.slowdown, d, ());
+                obs.instant("drop", "straggler", d + 1, now);
+                return;
+            }
+            let dur = plan.finish[d] * pert.slowdown;
+            obs.span_arg("round", "device", d + 1, now, dur, &[("batch", plan.batches[d] as f64)]);
+            obs.observe("round.arrival_latency", dur);
+            let corrupt = if fault_on { fault.corrupts(seed, period, d as u64) } else { None };
+            match corrupt {
+                Some(kind) => {
+                    mask[d] = false;
+                    corrupt_jobs.push((d, plan.batches[d].max(1)));
+                    queue.push(dur, d, ());
+                    obs.instant_label("corrupt", "fault", d + 1, now + dur, "kind", kind.label());
+                }
+                None => {
+                    mask[d] = true;
+                    queue.push(dur, d, ());
+                }
             }
         });
         // the fold below is commutative, so the queue's total order buys
@@ -433,13 +455,15 @@ impl RoundScheduler {
         while let Some(e) = queue.pop() {
             barrier = barrier.max(e.time);
         }
+        obs.instant("barrier_close", "round", 0, now + barrier);
         let excluded = dropped + crashed + corrupt_jobs.len();
         let mask_opt = if participants.is_some() || excluded > 0 { Some(&mask[..]) } else { None };
         let (mut loss_acc, mut w_acc, reduce_secs) = self.run_masked(
             engine, backends, workers, params, train, plan, mask_opt, period, aggs,
         )?;
         let (c_loss, c_w, rejected) = self.apply_corrupt_jobs(
-            engine, backends, workers, params, train, &corrupt_jobs, period, aggs,
+            engine, backends, workers, params, train, &corrupt_jobs, period, aggs, now + barrier,
+            obs,
         )?;
         loss_acc += c_loss;
         w_acc += c_w;
@@ -478,8 +502,10 @@ impl RoundScheduler {
         train: &Dataset,
         plan: &Plan,
         period: u64,
+        now: f64,
         participants: Option<&[usize]>,
         aggs: &mut [Aggregator],
+        obs: &mut ObsSink,
     ) -> Result<RoundReport> {
         let k = workers.len();
         let m = participants.map_or(k, <[usize]>::len);
@@ -492,18 +518,23 @@ impl RoundScheduler {
         let fault = &self.fault;
         let straggler = &self.straggler;
         let seed = self.seed;
-        for_each_participant(k, participants, |d| {
-            if fault_on && fault.is_down(seed, period, d as u64) {
-                crashed += 1;
-                return;
-            }
-            let pert = straggler.sample(seed, period, d as u64);
-            if pert.dropped {
-                dropped += 1;
-            } else {
-                queue.push(plan.finish[d] * pert.slowdown, d, ());
-            }
-        });
+        {
+            let obs = &mut *obs;
+            for_each_participant(k, participants, |d| {
+                if fault_on && fault.is_down(seed, period, d as u64) {
+                    crashed += 1;
+                    obs.instant("crash", "fault", d + 1, now);
+                    return;
+                }
+                let pert = straggler.sample(seed, period, d as u64);
+                if pert.dropped {
+                    dropped += 1;
+                    obs.instant("drop", "straggler", d + 1, now);
+                } else {
+                    queue.push(plan.finish[d] * pert.slowdown, d, ());
+                }
+            });
+        }
         let mut late = 0usize;
         let mut arrived = 0usize;
         let mut t_close = 0f64;
@@ -512,17 +543,39 @@ impl RoundScheduler {
         // back to device order for the subset executor
         let mut corrupt_jobs: Vec<(usize, usize)> = Vec::new();
         while let Some(e) = queue.pop() {
+            let d = e.device;
+            obs.span_arg("round", "device", d + 1, now, e.time, &[("batch", plan.batches[d] as f64)]);
             if e.time <= deadline {
                 arrived += 1;
                 t_close = t_close.max(e.time);
-                if fault_on && fault.corrupts(seed, period, e.device as u64).is_some() {
-                    corrupt_jobs.push((e.device, plan.batches[e.device].max(1)));
-                } else {
-                    mask[e.device] = true;
+                obs.observe("round.arrival_latency", e.time);
+                let corrupt = if fault_on { fault.corrupts(seed, period, d as u64) } else { None };
+                match corrupt {
+                    Some(kind) => {
+                        corrupt_jobs.push((d, plan.batches[d].max(1)));
+                        obs.instant_label(
+                            "corrupt",
+                            "fault",
+                            d + 1,
+                            now + e.time,
+                            "kind",
+                            kind.label(),
+                        );
+                    }
+                    None => mask[d] = true,
                 }
             } else {
                 late += 1;
-                self.carry[e.device] += plan.batches[e.device].max(1);
+                let carried = plan.batches[d].max(1);
+                self.carry[d] += carried;
+                obs.instant_arg(
+                    "deadline_miss",
+                    "sched",
+                    d + 1,
+                    now + deadline,
+                    &[("arrival", e.time), ("carry_batches", carried as f64)],
+                );
+                obs.inc("sched.carry_batches", carried as u64);
             }
         }
         corrupt_jobs.sort_unstable();
@@ -532,13 +585,15 @@ impl RoundScheduler {
         if late > 0 {
             t_close = deadline;
         }
+        obs.instant("deadline_close", "round", 0, now + t_close);
         let all_in = participants.is_none() && arrived == k && corrupt_jobs.is_empty();
         let mask_opt = if all_in { None } else { Some(&mask[..]) };
         let (mut loss_acc, mut w_acc, reduce_secs) = self.run_masked(
             engine, backends, workers, params, train, plan, mask_opt, period, aggs,
         )?;
         let (c_loss, c_w, rejected) = self.apply_corrupt_jobs(
-            engine, backends, workers, params, train, &corrupt_jobs, period, aggs,
+            engine, backends, workers, params, train, &corrupt_jobs, period, aggs, now + t_close,
+            obs,
         )?;
         loss_acc += c_loss;
         w_acc += c_w;
@@ -579,6 +634,7 @@ impl RoundScheduler {
         now: f64,
         participants: Option<&[usize]>,
         aggs: &mut [Aggregator],
+        obs: &mut ObsSink,
     ) -> Result<RoundReport> {
         let k = workers.len();
         let m = participants.map_or(k, <[usize]>::len);
@@ -600,6 +656,8 @@ impl RoundScheduler {
             });
             for d in killed {
                 self.busy[d] = false;
+                obs.instant("inflight_lost", "fault", d + 1, now);
+                obs.inc("fault.inflight_lost", 1);
             }
         }
         // 1. dispatch idle devices (device order; a dropped device loses
@@ -614,22 +672,36 @@ impl RoundScheduler {
         let busy = &self.busy;
         let straggler = &self.straggler;
         let seed = self.seed;
-        for_each_participant(k, participants, |d| {
-            if fault_on && fault.is_down(seed, period, d as u64) {
-                crashed += 1;
-                return;
-            }
-            if busy[d] {
-                return;
-            }
-            let pert = straggler.sample(seed, period, d as u64);
-            if pert.dropped {
-                dropped += 1;
-                return;
-            }
-            jobs.push((d, plan.batches[d].max(1)));
-            arrivals.push(now + plan.finish[d] * pert.slowdown);
-        });
+        {
+            let obs = &mut *obs;
+            for_each_participant(k, participants, |d| {
+                if fault_on && fault.is_down(seed, period, d as u64) {
+                    crashed += 1;
+                    obs.instant("crash", "fault", d + 1, now);
+                    return;
+                }
+                if busy[d] {
+                    return;
+                }
+                let pert = straggler.sample(seed, period, d as u64);
+                if pert.dropped {
+                    dropped += 1;
+                    obs.instant("drop", "straggler", d + 1, now);
+                    return;
+                }
+                let dur = plan.finish[d] * pert.slowdown;
+                obs.span_arg(
+                    "round",
+                    "device",
+                    d + 1,
+                    now,
+                    dur,
+                    &[("batch", plan.batches[d] as f64)],
+                );
+                jobs.push((d, plan.batches[d].max(1)));
+                arrivals.push(now + dur);
+            });
+        }
         if !jobs.is_empty() {
             let outcomes = exec::gradient_round_subset(
                 engine, backends, workers, params, train, &jobs, self.seed, period,
@@ -641,6 +713,7 @@ impl RoundScheduler {
                 if fault_on {
                     if let Some(kind) = self.fault.corrupts(self.seed, period, dev as u64) {
                         self.fault.contaminate(self.seed, period, dev as u64, kind, &mut o.grad);
+                        obs.instant_label("corrupt", "fault", dev + 1, at, "kind", kind.label());
                     }
                 }
                 self.busy[dev] = true;
@@ -700,6 +773,13 @@ impl RoundScheduler {
                 ),
             }
         }
+        obs.instant_arg(
+            "quorum_close",
+            "round",
+            0,
+            t_close,
+            &[("quorum", need as f64), ("arrived", popped.len() as f64)],
+        );
         // 3. apply in arrival order with staleness-discounted weights,
         //    each gradient through the quarantine into its device's
         //    family accumulator
@@ -720,7 +800,26 @@ impl RoundScheduler {
                 beta,
                 &self.guard,
             )?;
+            if verdict.corrupt() {
+                obs.instant_label(
+                    "quarantine",
+                    "guard",
+                    e.device + 1,
+                    e.time,
+                    "verdict",
+                    verdict.label(),
+                );
+                obs.inc("agg.quarantine_verdicts", 1);
+            }
+            obs.observe("round.staleness", s as f64);
             if verdict.applied() {
+                obs.instant_arg(
+                    "apply",
+                    "round",
+                    e.device + 1,
+                    e.time,
+                    &[("staleness", s as f64), ("weight", w)],
+                );
                 loss_acc += e.payload.loss * w;
                 w_acc += w;
                 stale_acc += s as f64 * w;
@@ -754,7 +853,8 @@ impl RoundScheduler {
     /// ascending device order (the subset executor's contract). Returns
     /// the loss/weight mass of the contributions the guard let through and
     /// the count it rejected; detection counters land in the family
-    /// accumulators themselves.
+    /// accumulators themselves. `verdict_ts` is the simulated instant the
+    /// screen runs (the round close), stamped on the quarantine events.
     #[allow(clippy::too_many_arguments)]
     fn apply_corrupt_jobs(
         &self,
@@ -766,6 +866,8 @@ impl RoundScheduler {
         jobs: &[(usize, usize)],
         period: u64,
         aggs: &mut [Aggregator],
+        verdict_ts: f64,
+        obs: &mut ObsSink,
     ) -> Result<(f64, f64, usize)> {
         if jobs.is_empty() {
             return Ok((0.0, 0.0, 0));
@@ -782,6 +884,17 @@ impl RoundScheduler {
             }
             let w = batch as f64;
             let verdict = aggs[backends.family_of(d)].add_guarded(&o.grad, w, &self.guard)?;
+            if verdict.corrupt() {
+                obs.instant_label(
+                    "quarantine",
+                    "guard",
+                    d + 1,
+                    verdict_ts,
+                    "verdict",
+                    verdict.label(),
+                );
+                obs.inc("agg.quarantine_verdicts", 1);
+            }
             if verdict.applied() {
                 loss_acc += o.loss * w;
                 w_acc += w;
