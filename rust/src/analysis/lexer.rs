@@ -1,0 +1,445 @@
+//! Minimal Rust lexer for the contract linter.
+//!
+//! std-only (the offline build has no `syn`): produces a flat token
+//! stream — identifiers, single-character punctuation, opaque literals —
+//! with line numbers. Comments (line, doc, nested block), strings, raw
+//! strings, byte strings, char literals, and lifetimes are consumed as
+//! units, so rules downstream match *token shapes*, never raw text: a
+//! contract name inside a string or a comment can never false-positive.
+//!
+//! `// lint: ...` control comments are not discarded — they surface as
+//! [`Pragma`] records so the rule engine can honour suppressions.
+
+/// Token class; rules dispatch on kind + text.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// One punctuation character (multi-char operators arrive split, so
+    /// `::` is two `:` tokens) or a lifetime (`'a`, text kept verbatim).
+    Punct,
+    /// Any literal. Numbers keep their text verbatim (the tag registry
+    /// parses them); strings and chars are opaque placeholders.
+    Lit,
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// A `// lint: ...` control comment (doc-comment forms included).
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    pub line: u32,
+    /// Comment body after the `lint:` marker, trimmed.
+    pub body: String,
+}
+
+/// Lex `src` into tokens + lint pragmas. Never fails: unexpected bytes
+/// are skipped, unterminated literals run to end of input — a lint pass
+/// must degrade gracefully on code mid-edit.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<Pragma>) {
+    let b = src.as_bytes();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut pragmas: Vec<Pragma> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        // whitespace
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // line comment (also /// and //! doc forms); may carry a pragma
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let end = line_end(b, i);
+            let body = src[i..end].trim_start_matches('/').trim_start_matches('!').trim();
+            if let Some(rest) = body.strip_prefix("lint:") {
+                pragmas.push(Pragma { line, body: rest.trim().to_string() });
+            }
+            i = end;
+            continue;
+        }
+        // block comment, nested
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1usize;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw / byte-raw string: r"..", r#".."#, br".., br#".."#
+        if c == b'r' || c == b'b' {
+            if let Some((hashes, open)) = raw_string_start(b, i) {
+                let mut j = open; // first content byte
+                let closed = loop {
+                    if j >= b.len() {
+                        break b.len();
+                    }
+                    if b[j] == b'"' && b[j + 1..].iter().take(hashes).all(|&h| h == b'#') {
+                        break (j + 1 + hashes).min(b.len());
+                    }
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                };
+                toks.push(Token { kind: TokKind::Lit, text: "<rawstr>".into(), line });
+                i = closed;
+                continue;
+            }
+        }
+        // string / byte string
+        if c == b'"' || (c == b'b' && b.get(i + 1) == Some(&b'"')) {
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            while j < b.len() {
+                match b[j] {
+                    b'\\' => j += 2,
+                    b'"' => break,
+                    b'\n' => {
+                        line += 1;
+                        j += 1;
+                    }
+                    _ => j += 1,
+                }
+            }
+            toks.push(Token { kind: TokKind::Lit, text: "<str>".into(), line });
+            i = j + 1;
+            continue;
+        }
+        // char literal, byte char (b'x'), or lifetime ('a, 'static, '_)
+        if c == b'\'' || (c == b'b' && b.get(i + 1) == Some(&b'\'')) {
+            let q = i + if c == b'b' { 1 } else { 0 }; // position of '
+            let mut j = q + 1;
+            while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            if c != b'b' && j > q + 1 && b.get(j) != Some(&b'\'') {
+                // 'ident with no closing quote: a lifetime, not a char
+                toks.push(Token { kind: TokKind::Punct, text: src[i..j].into(), line });
+                i = j;
+                continue;
+            }
+            // char: consume escape-aware to the closing quote
+            let mut j = q + 1;
+            while j < b.len() {
+                match b[j] {
+                    b'\\' => j += 2,
+                    b'\'' => break,
+                    _ => j += 1,
+                }
+            }
+            toks.push(Token { kind: TokKind::Lit, text: "<char>".into(), line });
+            i = j + 1;
+            continue;
+        }
+        // identifier / keyword
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i + 1;
+            while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            toks.push(Token { kind: TokKind::Ident, text: src[i..j].into(), line });
+            i = j;
+            continue;
+        }
+        // number (verbatim text: the tag registry parses it back)
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < b.len() {
+                let d = b[j];
+                if d.is_ascii_alphanumeric() || d == b'_' {
+                    j += 1;
+                } else if d == b'.' && b.get(j + 1).is_some_and(|n| n.is_ascii_digit()) {
+                    j += 1;
+                } else if (d == b'+' || d == b'-')
+                    && matches!(b[j - 1], b'e' | b'E')
+                    && b.get(j + 1).is_some_and(|n| n.is_ascii_digit())
+                {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Token { kind: TokKind::Lit, text: src[i..j].into(), line });
+            i = j;
+            continue;
+        }
+        // single punctuation byte; non-ASCII outside literals is skipped
+        if c.is_ascii() {
+            toks.push(Token { kind: TokKind::Punct, text: (c as char).to_string(), line });
+        }
+        i += 1;
+    }
+    (toks, pragmas)
+}
+
+/// If `b[i..]` opens a raw string (`r`/`br` + hashes + quote), return
+/// (hash count, index of the first content byte).
+fn raw_string_start(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+fn line_end(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && b[i] != b'\n' {
+        i += 1;
+    }
+    i
+}
+
+/// Mark every token that lives in test-only code: an item (fn, mod, use,
+/// const, impl, ...) directly under a `#[test]`, `#[cfg(test)]`, or
+/// `#[cfg_attr(test, ...)]` attribute, the attribute itself included.
+/// An item ends at the close of its first top-level brace block, or at a
+/// top-level `;` for brace-less items. Out-of-line `#[cfg(test)] mod x;`
+/// file modules are *not* followed (the repo keeps all test mods inline).
+pub fn mask_test_code(toks: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].text == "#" && txt(toks, i + 1) == "[" {
+            // collect the attribute's tokens up to its closing bracket
+            let mut j = i + 2;
+            let mut depth = 1usize;
+            let mut attr = String::new();
+            while j < toks.len() && depth > 0 {
+                match toks[j].text.as_str() {
+                    "[" => depth += 1,
+                    "]" => depth -= 1,
+                    _ => {}
+                }
+                if depth > 0 {
+                    attr.push_str(&toks[j].text);
+                }
+                j += 1;
+            }
+            let is_test_attr = attr == "test"
+                || attr == "cfg(test)"
+                || attr.starts_with("cfg(test,")
+                || attr.starts_with("cfg_attr(test,");
+            if is_test_attr {
+                let end = item_end(toks, j);
+                for m in mask.iter_mut().take(end).skip(i) {
+                    *m = true;
+                }
+                i = end;
+                continue;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// Index one past the end of the item starting at `i`: the close of its
+/// first top-level `{ ... }` block, or a `;` outside any nesting.
+fn item_end(toks: &[Token], mut i: usize) -> usize {
+    let mut braces = 0usize;
+    let mut parens = 0isize;
+    let mut brackets = 0isize;
+    let mut seen_brace = false;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "{" => {
+                braces += 1;
+                seen_brace = true;
+            }
+            "}" => {
+                braces = braces.saturating_sub(1);
+                if seen_brace && braces == 0 {
+                    return i + 1;
+                }
+            }
+            "(" => parens += 1,
+            ")" => parens -= 1,
+            "[" => brackets += 1,
+            "]" => brackets -= 1,
+            ";" if !seen_brace && parens == 0 && brackets == 0 => return i + 1,
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+fn txt(toks: &[Token], i: usize) -> &str {
+    toks.get(i).map_or("", |t| t.text.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .0
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_tokens() {
+        let src = r##"
+            let a = "unwrap() partial_cmp"; // unwrap in a comment
+            /* block unwrap /* nested HashMap */ still comment */
+            let b = r#"raw "quoted" unwrap"#;
+            let c = 'u'; let d = b'x'; let e: &'static str = "s";
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"partial_cmp".to_string()));
+        assert!(!ids.contains(&"HashMap".to_string()));
+        // the real identifiers survive
+        for want in ["let", "a", "b", "c", "d", "e", "str"] {
+            assert!(ids.contains(&want.to_string()), "missing {want} in {ids:?}");
+        }
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        // a naive lexer treats `'a` as an unterminated char and swallows
+        // the rest of the file — everything after must still tokenize
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x.unwrap() }";
+        let ids = idents(src);
+        assert!(ids.contains(&"unwrap".to_string()), "{ids:?}");
+        // and real char literals (escaped quote included) stay opaque
+        let src = "let q = '\\''; let n = '\\n'; let z = 'z'; x.unwrap()";
+        let ids = idents(src);
+        assert_eq!(ids.iter().filter(|t| *t == "unwrap").count(), 1);
+        assert!(!ids.contains(&"n".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_literals() {
+        let src = "let a = \"one\ntwo\nthree\";\nlet tail = 1;";
+        let (toks, _) = lex(src);
+        let tail = toks.iter().find(|t| t.text == "tail").map(|t| t.line);
+        assert_eq!(tail, Some(4));
+    }
+
+    #[test]
+    fn pragmas_surface_with_lines() {
+        let src = "// lint: allow(panic-path): reason here\nlet x = 1;\n// plain comment\n";
+        let (_, pragmas) = lex(src);
+        assert_eq!(pragmas.len(), 1);
+        assert_eq!(pragmas[0].line, 1);
+        assert_eq!(pragmas[0].body, "allow(panic-path): reason here");
+    }
+
+    #[test]
+    fn numeric_literals_keep_text() {
+        let (toks, _) = lex("const A_TAG: u64 = 0xde_ad_be_ef; let f = 1.5e-3;");
+        let lits: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lit)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lits, vec!["0xde_ad_be_ef", "1.5e-3"]);
+    }
+
+    #[test]
+    fn range_expressions_do_not_merge() {
+        // `0..10` must not lex as one number token
+        let (toks, _) = lex("for i in 0..10 {}");
+        let lits: Vec<&str> =
+            toks.iter().filter(|t| t.kind == TokKind::Lit).map(|t| t.text.as_str()).collect();
+        assert_eq!(lits, vec!["0", "10"]);
+    }
+
+    #[test]
+    fn cfg_test_mask_covers_mod_and_fn() {
+        let src = "
+            fn live() { x.unwrap(); }
+            #[cfg(test)]
+            mod tests {
+                fn helper() { y.unwrap(); }
+            }
+            #[test]
+            fn t() { z.unwrap(); }
+            fn live2() { w.unwrap(); }
+        ";
+        let (toks, _) = lex(src);
+        let mask = mask_test_code(&toks);
+        let live: Vec<&str> = toks
+            .iter()
+            .zip(&mask)
+            .filter(|(t, &m)| !m && t.text == "unwrap")
+            .map(|(t, _)| t.text.as_str())
+            .collect();
+        assert_eq!(live.len(), 2, "only live() and live2() unwraps are unmasked");
+        let masked = toks.iter().zip(&mask).filter(|(t, &m)| m && t.text == "unwrap").count();
+        assert_eq!(masked, 2);
+    }
+
+    #[test]
+    fn cfg_test_mask_handles_braceless_items_and_stacked_attrs() {
+        let src = "
+            #[cfg(test)]
+            use std::collections::HashMap;
+            #[cfg(test)]
+            #[derive(Debug)]
+            struct Fix { a: u32 }
+            fn live() { x.unwrap(); }
+        ";
+        let (toks, _) = lex(src);
+        let mask = mask_test_code(&toks);
+        for (t, &m) in toks.iter().zip(&mask) {
+            match t.text.as_str() {
+                "HashMap" | "Fix" | "derive" => assert!(m, "{} must be masked", t.text),
+                "unwrap" => assert!(!m, "live code must stay unmasked"),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn non_test_cfg_attrs_do_not_mask() {
+        let src = "#[cfg_attr(miri, ignore)]\nfn heavy() { x.unwrap(); }";
+        let (toks, _) = lex(src);
+        let mask = mask_test_code(&toks);
+        let hidden = toks.iter().zip(&mask).any(|(t, &m)| t.text == "unwrap" && m);
+        assert!(!hidden, "cfg_attr(miri, ...) is not test code");
+    }
+}

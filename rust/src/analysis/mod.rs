@@ -1,0 +1,226 @@
+//! Contract-enforcing static analysis (`feel lint`).
+//!
+//! Every subsystem rests on hand-maintained invariants — tagged RNG
+//! streams, fixed-order `total_cmp` reductions, wall clock never touching
+//! simulated time. This module turns them into a machine-checked pass:
+//! a lightweight lexer ([`lexer`]) feeds a rule engine ([`rules`])
+//! enforcing six contracts:
+//!
+//! | rule | slug | contract |
+//! |------|------|----------|
+//! | R1 | `float-sort` | no `partial_cmp().unwrap()` — `total_cmp` only |
+//! | R2 | `tag-registry` | `*_TAG: u64` constants literal, nonzero, distinct |
+//! | R3 | `hash-iter` | no `HashMap`/`HashSet` in deterministic modules |
+//! | R4 | `wall-clock` | `Instant::now`/`SystemTime` on allowlist only |
+//! | R5 | `panic-path` | no `.unwrap()`/`.expect()` in library code |
+//! | R6 | `rng-source` | RNG construction lives in `util::rng` only |
+//!
+//! Suppression is per-site: `// lint: allow(<slug>): <reason>` on the
+//! finding's line or the line above, reason mandatory. The pass never
+//! runs in the training path — it reads source files, so enabling it
+//! cannot change a `TrainLog` bitwise.
+//!
+//! Shipped three ways: the `feel lint [--json]` subcommand, the tier-1
+//! test `tests/lint_contracts.rs` (pins the tree at zero findings), and
+//! a CI lint-job step.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{check_tags, lint_source, TagDef};
+
+/// The six contracts plus the meta-rule for malformed pragmas.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// R1: float sorts must use `total_cmp`, never `partial_cmp().unwrap()`.
+    FloatSort,
+    /// R2: RNG stream tags are literal u64, nonzero, pairwise distinct.
+    TagRegistry,
+    /// R3: no hash-order iteration inside deterministic modules.
+    HashIter,
+    /// R4: wall-clock reads confined to the allowlist.
+    WallClock,
+    /// R5: no `.unwrap()`/`.expect()` in library code without a pragma.
+    PanicPath,
+    /// R6: RNG construction outside `util::rng` is forbidden.
+    RngSource,
+    /// A `// lint:` comment that does not parse as a valid pragma.
+    Pragma,
+}
+
+impl Rule {
+    const ALL: [Rule; 7] = [
+        Rule::FloatSort,
+        Rule::TagRegistry,
+        Rule::HashIter,
+        Rule::WallClock,
+        Rule::PanicPath,
+        Rule::RngSource,
+        Rule::Pragma,
+    ];
+
+    /// Stable identifier used in pragmas, text output, and JSON.
+    pub fn slug(self) -> &'static str {
+        match self {
+            Rule::FloatSort => "float-sort",
+            Rule::TagRegistry => "tag-registry",
+            Rule::HashIter => "hash-iter",
+            Rule::WallClock => "wall-clock",
+            Rule::PanicPath => "panic-path",
+            Rule::RngSource => "rng-source",
+            Rule::Pragma => "pragma",
+        }
+    }
+
+    pub fn from_slug(slug: &str) -> Option<Rule> {
+        Rule::ALL.into_iter().find(|r| r.slug() == slug)
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.slug())
+    }
+}
+
+/// One contract violation at a source location.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: Rule,
+    /// Crate-relative path with `/` separators (`src/...`, `benches/...`).
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// Lint every `.rs` file under `<root>/src` and `<root>/benches`, then
+/// run the cross-file tag-registry check. Findings come back sorted by
+/// (file, line, rule) so output is deterministic across platforms.
+pub fn lint_tree(root: &Path) -> Result<Vec<Finding>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in ["src", "benches"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files).with_context(|| format!("walking {}", dir.display()))?;
+        }
+    }
+    if files.is_empty() {
+        bail!("no .rs files under {} — is this the crate root?", root.display());
+    }
+    files.sort();
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut tags: Vec<TagDef> = Vec::new();
+    for path in &files {
+        let src =
+            fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        let rel = rel_path(root, path);
+        let (found, file_tags) = rules::lint_source(&rel, &src);
+        findings.extend(found);
+        tags.extend(file_tags);
+    }
+    findings.extend(rules::check_tags(&tags));
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(findings)
+}
+
+/// Accept either the crate root (contains `src/`) or the repo root
+/// (contains `rust/src/`).
+pub fn resolve_root(arg: &Path) -> Result<PathBuf> {
+    for cand in [arg.to_path_buf(), arg.join("rust")] {
+        if cand.join("src").is_dir() {
+            return Ok(cand);
+        }
+    }
+    bail!("no src/ under {0} or {0}/rust — pass the crate or repo root", arg.display())
+}
+
+/// `file:line: [slug] message` lines, one per finding.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    out
+}
+
+/// Machine-readable report for `feel lint --json`.
+pub fn render_json(findings: &[Finding]) -> String {
+    let items: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            json::obj(vec![
+                ("file", json::s(&f.file)),
+                ("line", json::num(f.line as f64)),
+                ("rule", json::s(f.rule.slug())),
+                ("message", json::s(&f.message)),
+            ])
+        })
+        .collect();
+    let report = json::obj(vec![
+        ("count", json::num(findings.len() as f64)),
+        ("findings", Json::Arr(items)),
+    ]);
+    report.to_string()
+}
+
+/// Depth-first sorted walk collecting `.rs` files.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Crate-relative path with `/` separators regardless of platform.
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slugs_round_trip() {
+        for rule in Rule::ALL {
+            assert_eq!(Rule::from_slug(rule.slug()), Some(rule));
+        }
+        assert_eq!(Rule::from_slug("no-such"), None);
+    }
+
+    #[test]
+    fn renderers_are_deterministic() {
+        let f = Finding {
+            rule: Rule::PanicPath,
+            file: "src/x.rs".into(),
+            line: 7,
+            message: "msg".into(),
+        };
+        assert_eq!(render_text(&[f.clone()]), "src/x.rs:7: [panic-path] msg\n");
+        let js = render_json(&[f]);
+        assert!(js.contains("\"count\":1"), "{js}");
+        assert!(js.contains("\"rule\":\"panic-path\""), "{js}");
+    }
+}

@@ -1,0 +1,325 @@
+//! The contract rules (R1–R6) and the pragma engine.
+//!
+//! Each rule matches token shapes produced by [`super::lexer`], with the
+//! file's role (library / bench / test) and module deciding which rules
+//! apply. A finding on line `F` is suppressed by a
+//! `// lint: allow(<rule>): <reason>` pragma on line `F` or `F - 1`; the
+//! reason is mandatory — an allow without a written justification is
+//! itself a finding.
+
+use std::collections::BTreeMap;
+
+use super::lexer::{lex, mask_test_code, Pragma, TokKind, Token};
+use super::{Finding, Rule};
+
+/// Modules whose iteration/reduction order is part of the bitwise
+/// thread-invariance contract (R3 forbids hash collections here).
+pub const DET_MODULES: &[&str] =
+    &["grad", "sched", "exec", "hier", "fault", "device", "coordinator"];
+
+/// Files allowed to read the wall clock wholesale (R4). Everywhere else
+/// a wall read needs a per-site `allow(wall-clock)` pragma — the
+/// WallStats sites.
+pub const WALL_ALLOW_FILES: &[&str] = &["src/benchkit.rs", "src/runtime/client.rs"];
+
+/// The one module allowed to construct RNG state from scratch (R6).
+pub const RNG_HOME: &str = "src/util/rng.rs";
+
+/// Identifiers that smell like an RNG source other than `util::rng` —
+/// entropy escapes and hash-randomization handles (R6). The offline
+/// build has no `rand` crate, but the rule keeps one from sneaking in.
+pub const BANNED_RNG_IDENTS: &[&str] = &[
+    "thread_rng",
+    "ThreadRng",
+    "StdRng",
+    "SmallRng",
+    "OsRng",
+    "from_entropy",
+    "getrandom",
+    "RandomState",
+    "DefaultHasher",
+];
+
+const MSG_FLOAT_SORT: &str = "float comparison via partial_cmp().unwrap() — a NaN mid-run \
+                              panics the reduce; use total_cmp (NaN-total order)";
+const MSG_WALL_CLOCK: &str = "wall clock read outside the allowlist — simulated time flows \
+                              through SimClock only; wall-time accounting carries a pragma";
+const MSG_PCG_NEW: &str = "raw Pcg::new outside util::rng — derive streams via seeded / \
+                           for_device / fork / from_state so tags stay collision-checked";
+
+/// One `*_TAG: u64` constant definition, collected for the R2 registry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TagDef {
+    pub name: String,
+    pub value: u64,
+    pub file: String,
+    pub line: u32,
+}
+
+/// Lint one file's source. `rel` is the crate-relative path with `/`
+/// separators (`src/...`, `benches/...`, `tests/...`); it decides which
+/// rules apply. Returns per-file findings plus the file's tag constants
+/// for the cross-file registry check ([`check_tags`]).
+pub fn lint_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<TagDef>) {
+    if rel.starts_with("tests/") {
+        // integration tests construct adversarial scenarios on purpose;
+        // no contract rule applies there
+        return (Vec::new(), Vec::new());
+    }
+    let is_bench = rel.starts_with("benches/");
+    let (toks, pragmas) = lex(src);
+    let masked = mask_test_code(&toks);
+    let mut findings: Vec<Finding> = Vec::new();
+    let allow = collect_pragmas(rel, &pragmas, &mut findings);
+    let module = module_of(rel);
+    let in_det_module = module.is_some_and(|m| DET_MODULES.contains(&m));
+    let wall_exempt = is_bench || WALL_ALLOW_FILES.contains(&rel);
+
+    let push = |findings: &mut Vec<Finding>, rule: Rule, line: u32, message: String| {
+        let above = line > 0 && pragma_covers(&allow, line - 1, rule);
+        if !(pragma_covers(&allow, line, rule) || above) {
+            findings.push(Finding { rule, file: rel.to_string(), line, message });
+        }
+    };
+
+    let mut tags: Vec<TagDef> = Vec::new();
+    for i in 0..toks.len() {
+        if masked[i] || toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let t = toks[i].text.as_str();
+        let line = toks[i].line;
+
+        // R1 float-sort: partial_cmp(..).unwrap() / .expect(..)
+        if t == "partial_cmp" && txt(&toks, i + 1) == "(" {
+            let close = matching_paren(&toks, i + 1);
+            let chained = txt(&toks, close + 1) == ".";
+            if chained && matches!(txt(&toks, close + 2), "unwrap" | "expect") {
+                push(&mut findings, Rule::FloatSort, line, MSG_FLOAT_SORT.to_string());
+            }
+        }
+
+        // R2 tag registry: collect `const *_TAG: u64 = <literal>;`
+        let tag_def = t == "const"
+            && txt(&toks, i + 1).ends_with("_TAG")
+            && txt(&toks, i + 2) == ":"
+            && txt(&toks, i + 3) == "u64"
+            && txt(&toks, i + 4) == "=";
+        if tag_def {
+            let name = txt(&toks, i + 1).to_string();
+            let lit = toks.get(i + 5).filter(|v| v.kind == TokKind::Lit);
+            match lit.and_then(parse_u64_lit) {
+                Some(value) => tags.push(TagDef { name, value, file: rel.to_string(), line }),
+                None => {
+                    let msg = format!(
+                        "{name} must be a literal u64 so the stream-tag registry can \
+                         check it for collisions"
+                    );
+                    push(&mut findings, Rule::TagRegistry, line, msg);
+                }
+            }
+        }
+
+        // R3 hash-iter: HashMap/HashSet inside a deterministic module
+        if (t == "HashMap" || t == "HashSet") && !is_bench && in_det_module {
+            let msg = format!(
+                "{t} in deterministic module `{}` — iteration order varies per \
+                 process; use BTreeMap/BTreeSet or sort before iterating",
+                module.unwrap_or_default()
+            );
+            push(&mut findings, Rule::HashIter, line, msg);
+        }
+
+        // R4 wall-clock: Instant::now / SystemTime outside the allowlist
+        let is_instant_now = t == "Instant"
+            && txt(&toks, i + 1) == ":"
+            && txt(&toks, i + 2) == ":"
+            && txt(&toks, i + 3) == "now";
+        if (is_instant_now || t == "SystemTime") && !wall_exempt {
+            push(&mut findings, Rule::WallClock, line, MSG_WALL_CLOCK.to_string());
+        }
+
+        // R5 panic-path: .unwrap()/.expect() in library code
+        let panic_call = matches!(t, "unwrap" | "expect")
+            && txt(&toks, i + 1) == "("
+            && i > 0
+            && toks[i - 1].text == ".";
+        if panic_call && !is_bench {
+            let msg = format!(
+                ".{t}() in library code — return a structured error, or justify \
+                 with `// lint: allow(panic-path): <why infallible>`"
+            );
+            push(&mut findings, Rule::PanicPath, line, msg);
+        }
+
+        // R6 rng-source: RNG construction outside util::rng
+        if rel != RNG_HOME {
+            if BANNED_RNG_IDENTS.contains(&t) {
+                let msg = format!(
+                    "{t} is an RNG source outside util::rng — every stream must \
+                     come from the tagged Pcg API"
+                );
+                push(&mut findings, Rule::RngSource, line, msg);
+            }
+            let pcg_new = t == "Pcg"
+                && txt(&toks, i + 1) == ":"
+                && txt(&toks, i + 2) == ":"
+                && txt(&toks, i + 3) == "new";
+            if pcg_new {
+                push(&mut findings, Rule::RngSource, line, MSG_PCG_NEW.to_string());
+            }
+        }
+    }
+    (findings, tags)
+}
+
+/// The cross-file half of R2: every `*_TAG` constant crate-wide must be
+/// nonzero (a zero tag is the identity under `seed ^ TAG` — the stream
+/// would alias the untagged base stream) and pairwise distinct (a
+/// collision silently correlates two subsystems' draws).
+pub fn check_tags(tags: &[TagDef]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut seen: BTreeMap<u64, &TagDef> = BTreeMap::new();
+    for tag in tags {
+        if tag.value == 0 {
+            findings.push(Finding {
+                rule: Rule::TagRegistry,
+                file: tag.file.clone(),
+                line: tag.line,
+                message: format!(
+                    "{} is zero — `seed ^ 0` aliases the untagged base stream",
+                    tag.name
+                ),
+            });
+        }
+        if let Some(prev) = seen.get(&tag.value) {
+            findings.push(Finding {
+                rule: Rule::TagRegistry,
+                file: tag.file.clone(),
+                line: tag.line,
+                message: format!(
+                    "{} ({:#018x}) collides with {} ({}:{}) — the two subsystems' \
+                     draws would correlate",
+                    tag.name, tag.value, prev.name, prev.file, prev.line
+                ),
+            });
+        } else {
+            seen.insert(tag.value, tag);
+        }
+    }
+    findings
+}
+
+fn pragma_covers(allow: &BTreeMap<u32, Vec<Rule>>, line: u32, rule: Rule) -> bool {
+    allow.get(&line).is_some_and(|rs| rs.contains(&rule))
+}
+
+/// Parse `allow(<rule>): <reason>` pragma bodies into a line -> rules
+/// map; malformed bodies (unknown rule, missing reason) become findings.
+fn collect_pragmas(
+    rel: &str,
+    pragmas: &[Pragma],
+    findings: &mut Vec<Finding>,
+) -> BTreeMap<u32, Vec<Rule>> {
+    let mut allow: BTreeMap<u32, Vec<Rule>> = BTreeMap::new();
+    for p in pragmas {
+        match parse_allow(&p.body) {
+            Some(rule) => allow.entry(p.line).or_default().push(rule),
+            None => findings.push(Finding {
+                rule: Rule::Pragma,
+                file: rel.to_string(),
+                line: p.line,
+                message: format!(
+                    "malformed lint pragma {:?} — want `lint: allow(<rule>): <reason>` \
+                     with a non-empty reason",
+                    p.body
+                ),
+            }),
+        }
+    }
+    allow
+}
+
+fn parse_allow(body: &str) -> Option<Rule> {
+    let rest = body.strip_prefix("allow(")?;
+    let (slug, rest) = rest.split_once(')')?;
+    let rule = Rule::from_slug(slug.trim())?;
+    let reason = rest.trim().strip_prefix(':')?.trim();
+    if reason.is_empty() {
+        return None;
+    }
+    Some(rule)
+}
+
+/// Top-level module a `src/` file belongs to (`src/grad/aggregate.rs`
+/// and `src/grad.rs` are both module `grad`).
+fn module_of(rel: &str) -> Option<&str> {
+    let rest = rel.strip_prefix("src/")?;
+    match rest.split_once('/') {
+        Some((dir, _)) => Some(dir),
+        None => rest.strip_suffix(".rs"),
+    }
+}
+
+/// Index of the `)` closing the `(` at `open` (token index), or the last
+/// token if unbalanced.
+fn matching_paren(toks: &[Token], open: usize) -> usize {
+    let mut depth = 0isize;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        match t.text.as_str() {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+fn parse_u64_lit(tok: &Token) -> Option<u64> {
+    let t: String = tok.text.chars().filter(|&c| c != '_').collect();
+    let t = t.strip_suffix("u64").unwrap_or(&t);
+    match t.strip_prefix("0x") {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => t.parse().ok(),
+    }
+}
+
+fn txt(toks: &[Token], i: usize) -> &str {
+    toks.get(i).map_or("", |t| t.text.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_classification() {
+        assert_eq!(module_of("src/grad/aggregate.rs"), Some("grad"));
+        assert_eq!(module_of("src/cli.rs"), Some("cli"));
+        assert_eq!(module_of("benches/bench_gemm.rs"), None);
+        assert!(DET_MODULES.contains(&module_of("src/sched/queue.rs").unwrap_or("")));
+    }
+
+    #[test]
+    fn tag_literal_parsing() {
+        let tok = |s: &str| Token { kind: TokKind::Lit, text: s.into(), line: 1 };
+        assert_eq!(parse_u64_lit(&tok("0xc4a5_71fe_0bad_c0de")), Some(0xc4a5_71fe_0bad_c0de));
+        assert_eq!(parse_u64_lit(&tok("42")), Some(42));
+        assert_eq!(parse_u64_lit(&tok("7u64")), Some(7));
+        assert_eq!(parse_u64_lit(&tok("1.5")), None);
+    }
+
+    #[test]
+    fn pragma_grammar() {
+        assert_eq!(parse_allow("allow(panic-path): tape is never empty"), Some(Rule::PanicPath));
+        assert_eq!(parse_allow("allow(wall-clock): WallStats only"), Some(Rule::WallClock));
+        assert_eq!(parse_allow("allow(panic-path):"), None, "reason is mandatory");
+        assert_eq!(parse_allow("allow(no-such-rule): x"), None);
+        assert_eq!(parse_allow("disallow(panic-path): x"), None);
+    }
+}

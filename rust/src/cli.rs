@@ -7,6 +7,7 @@
 //!   fit-gpu      — profile + fit the GPU training function
 //!   experiment   — regenerate a paper table/figure: fig2 fig3 table2 fig4 fig5
 //!   report       — summarize a --metrics-out JSONL dump into a table
+//!   lint         — static-analysis pass for the determinism contracts R1–R6
 //!
 //! Common flags: --config <path>, --out <dir>, --backend host|pjrt,
 //! --periods N, --k N, --scheme NAME, --partition iid|noniid, --seed N,
@@ -56,9 +57,9 @@ impl Args {
         out.cmd = it.next().cloned().unwrap_or_else(|| "help".into());
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
-                let val = match it.peek() {
-                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
-                    _ => "true".to_string(),
+                let val = match it.next_if(|v| !v.starts_with("--")) {
+                    Some(v) => v.clone(),
+                    None => "true".to_string(),
                 };
                 out.flags.insert(name.to_string(), val);
             } else {
@@ -179,6 +180,13 @@ COMMANDS:
   report      summarize a --metrics-out JSONL dump: counter totals, last
               gauges, p50/p95/max per histogram
               feel report <metrics.jsonl>   (or --in <file>)
+  lint        check the determinism contracts (R1-R6): total_cmp-only float
+              sorts, literal/nonzero/distinct RNG stream tags, no hash-order
+              iteration in deterministic modules, wall clock on allowlist
+              only, no unwrap/expect in library code, RNG construction in
+              util::rng only. Exits nonzero if any finding survives its
+              pragmas. See README \"Determinism contract\"
+              feel lint [root] [--json]   (root: crate or repo root; default .)
   help        this text
 ";
 
@@ -197,6 +205,7 @@ pub fn run(args: Args) -> Result<()> {
         "fit-gpu" => cmd_fit_gpu(&args),
         "experiment" => cmd_experiment(&args),
         "report" => cmd_report(&args),
+        "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
             Ok(())
@@ -618,6 +627,25 @@ fn cmd_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run the determinism-contract linter (`analysis`) over the tree and
+/// exit nonzero on findings. Reads source files only — it can never touch
+/// a training run.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let arg = args.positional.first().map(PathBuf::from).unwrap_or_else(|| PathBuf::from("."));
+    let root = crate::analysis::resolve_root(&arg)?;
+    let findings = crate::analysis::lint_tree(&root)?;
+    if args.get("json") == Some("true") {
+        println!("{}", crate::analysis::render_json(&findings));
+    } else {
+        print!("{}", crate::analysis::render_text(&findings));
+        println!("feel lint: {} finding(s) in {}", findings.len(), root.display());
+    }
+    if !findings.is_empty() {
+        bail!("feel lint: {} contract violation(s)", findings.len());
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -867,6 +895,14 @@ mod tests {
         let a = Args::parse(&argv("train --partition dirichlet:bad")).unwrap();
         assert!(experiment_from_args(&a).is_err());
         crate::util::threads::set_global_threads(0);
+    }
+
+    #[test]
+    fn lint_command_is_wired() {
+        let a = Args::parse(&argv("lint /nonexistent/path")).unwrap();
+        let err = run(a).unwrap_err().to_string();
+        assert!(err.contains("no src/"), "{err}");
+        assert!(HELP.contains("feel lint [root] [--json]"));
     }
 
     #[test]

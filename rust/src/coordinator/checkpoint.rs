@@ -53,6 +53,15 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Fixed-width little-endian view of a slice. Callers bound-check their
+/// slices first, so a width miss is a reader bug — but it surfaces as a
+/// structured error naming both widths, never a panic mid-restore.
+fn le_array<const N: usize>(bytes: &[u8]) -> Result<[u8; N]> {
+    bytes.try_into().map_err(|_| {
+        anyhow::anyhow!("checkpoint frame slice is {} bytes, wanted {N}", bytes.len())
+    })
+}
+
 /// Frame `payload` and write it to `path` (atomic enough for our use: a
 /// partial write fails the checksum on read).
 pub fn write_file(path: &Path, kind: u8, payload: &[u8]) -> Result<()> {
@@ -86,7 +95,7 @@ pub fn read_file(path: &Path, expect_kind: u8) -> Result<Vec<u8>> {
     if raw[..8] != MAGIC {
         bail!("{} is not a FEEL checkpoint (bad magic)", path.display());
     }
-    let version = u32::from_le_bytes(raw[8..12].try_into().expect("4 bytes"));
+    let version = u32::from_le_bytes(le_array(&raw[8..12])?);
     if version != VERSION {
         bail!(
             "checkpoint {} is layout version {version}; this build reads version {VERSION}",
@@ -102,7 +111,7 @@ pub fn read_file(path: &Path, expect_kind: u8) -> Result<Vec<u8>> {
             kind_name(expect_kind)
         );
     }
-    let len = u64::from_le_bytes(raw[13..21].try_into().expect("8 bytes")) as usize;
+    let len = u64::from_le_bytes(le_array(&raw[13..21])?) as usize;
     if raw.len() != HEADER + len + 8 {
         bail!(
             "checkpoint {} is truncated or padded: header says {len}-byte payload, \
@@ -111,7 +120,7 @@ pub fn read_file(path: &Path, expect_kind: u8) -> Result<Vec<u8>> {
             raw.len().saturating_sub(HEADER + 8)
         );
     }
-    let stored = u64::from_le_bytes(raw[HEADER + len..].try_into().expect("8 bytes"));
+    let stored = u64::from_le_bytes(le_array(&raw[HEADER + len..])?);
     let computed = fnv1a64(&raw[..HEADER + len]);
     if stored != computed {
         bail!(
@@ -226,7 +235,7 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn get_u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+        Ok(u64::from_le_bytes(le_array(self.take(8)?)?))
     }
 
     pub fn get_usize(&mut self) -> Result<usize> {
@@ -257,9 +266,11 @@ impl<'a> ByteReader<'a> {
             );
         }
         let raw = self.take(n * 4)?;
+        // chunks_exact(4) guarantees the width, so the array build is
+        // infallible without a fallible conversion
         Ok(raw
             .chunks_exact(4)
-            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().expect("4 bytes"))))
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
             .collect())
     }
 

@@ -597,6 +597,7 @@ impl<'a> Trainer<'a> {
         (0..self.backends.family_count())
             .map(|f| self.backends.family_params(f))
             .max()
+            // lint: allow(panic-path): BackendSet construction rejects empty fleets
             .expect("backend set has at least one family")
     }
 
@@ -705,6 +706,7 @@ impl<'a> Trainer<'a> {
     /// effective duration and the clock advances by it — through
     /// [`SimClock`] only, so every policy shares one comparable time axis.
     pub fn step_period(&mut self) -> Result<()> {
+        // lint: allow(wall-clock): WallStats wall-time accounting — never enters SimClock
         let t_step = Instant::now();
         // draw this period's participants first (counter-derived stream —
         // consumes nothing from the trainer RNG, so the unsampled path is
@@ -904,6 +906,7 @@ impl<'a> Trainer<'a> {
         self.log.wall.reduce_secs += report.reduce_secs;
         let lr = self.lr_for_batch(report.b_effective);
         if report.updated {
+            // lint: allow(wall-clock): WallStats wall-time accounting — never enters SimClock
             let t0 = Instant::now();
             for f in 0..self.aggs.len() {
                 if self.aggs[f].contributions() == 0 {
@@ -943,6 +946,7 @@ impl<'a> Trainer<'a> {
             w_acc += o.weight;
             averaged.push((o.params, o.weight));
         }
+        // lint: allow(wall-clock): WallStats wall-time accounting — never enters SimClock
         let t0 = Instant::now();
         self.server.average_params(&averaged)?;
         self.log.wall.reduce_secs += t0.elapsed().as_secs_f64();

@@ -117,7 +117,9 @@ fn dirichlet_partition(ds: &Dataset, k: usize, alpha: f64, rng: &mut Pcg) -> Vec
             let donor = (0..k)
                 .filter(|&j| j != d && out[j].len() > 1)
                 .max_by_key(|&j| out[j].len())
+                // lint: allow(panic-path): ds.len() >= 2K (checked above) guarantees a donor
                 .expect("ds.len() >= 2K guarantees a donor shard");
+            // lint: allow(panic-path): donor filter requires len() > 1
             let s = out[donor].pop().expect("donor shard is non-empty");
             out[d].push(s);
         }

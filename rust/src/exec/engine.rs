@@ -97,7 +97,10 @@ impl Engine {
                 });
             }
         });
-        slots.into_iter().map(|o| o.expect("exec worker lost a slot")).collect()
+        slots
+            .into_iter()
+            .map(|o| o.unwrap_or_else(|| Err(anyhow::anyhow!("exec worker lost a slot"))))
+            .collect()
     }
 
     /// Run `f(k)` for `k in 0..n`, in parallel, returning results in index
@@ -127,7 +130,10 @@ impl Engine {
                 });
             }
         });
-        slots.into_iter().map(|o| o.expect("exec worker lost a slot")).collect()
+        slots
+            .into_iter()
+            .map(|o| o.unwrap_or_else(|| Err(anyhow::anyhow!("exec worker lost a slot"))))
+            .collect()
     }
 }
 

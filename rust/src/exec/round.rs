@@ -222,11 +222,14 @@ pub fn gradient_round_sharded_masked(
                 .train_step_ws(global, &x, &y, &mut w.scratch)
                 .with_context(|| format!("device {k} train_step"))?;
             let (grad, _bits) = w.compress(step.grads);
-            if aggs.iter().all(|(f, _)| *f != fam) {
-                aggs.push((fam, Aggregator::for_family(global.len(), fam as u32)));
-            }
-            let slot = aggs.iter_mut().find(|(f, _)| *f == fam).expect("just inserted");
-            slot.1.add(&grad, b as f64)?;
+            let slot = match aggs.iter().position(|(f, _)| *f == fam) {
+                Some(p) => p,
+                None => {
+                    aggs.push((fam, Aggregator::for_family(global.len(), fam as u32)));
+                    aggs.len() - 1
+                }
+            };
+            aggs[slot].1.add(&grad, b as f64)?;
             loss += step.loss as f64 * b as f64;
             weight += b as f64;
         }

@@ -93,6 +93,7 @@ impl FleetBackends {
 
     /// The borrowed view a `Trainer` resolves devices through.
     pub fn set(&self) -> BackendSet<'_> {
+        // lint: allow(panic-path): same construction validated when the FleetBackends was built
         self.build_set().expect("validated when the FleetBackends was built")
     }
 

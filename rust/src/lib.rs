@@ -17,6 +17,7 @@
 #![allow(clippy::field_reassign_with_default)]
 #![allow(clippy::too_many_arguments)]
 
+pub mod analysis;
 pub mod benchkit;
 pub mod cli;
 pub mod compress;

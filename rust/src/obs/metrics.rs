@@ -212,6 +212,7 @@ impl MetricsRegistry {
     pub fn observe(&mut self, name: &'static str, v: f64) {
         self.hists
             .entry(name)
+            // lint: allow(panic-path): default_bounds() is a fixed ascending literal
             .or_insert_with(|| Histogram::new(default_bounds()).expect("default bounds are valid"))
             .record(v);
     }

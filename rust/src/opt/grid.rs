@@ -4,7 +4,7 @@
 //! complexity claim (bench_ablation). Exponential in K — keep K and the
 //! grid resolution small.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::downlink::solve_downlink;
 use super::types::{Instance, Solution};
@@ -50,7 +50,8 @@ pub fn grid_search(inst: &Instance, n_steps: usize, eps: f64) -> Result<GridSol>
         let mut pos = 0;
         loop {
             if pos == k {
-                let (eff, batches, t_up, tau) = best.expect("grid found nothing");
+                let (eff, batches, t_up, tau) =
+                    best.context("grid search found no feasible batch vector")?;
                 let b_total = batches.iter().sum();
                 return Ok(GridSol {
                     solution: Solution {

@@ -105,7 +105,9 @@ impl Runtime {
             self.stats.compile_secs += t0.elapsed().as_secs_f64();
             self.cache.insert(art.name.clone(), exe);
         }
-        Ok(self.cache.get(&art.name).unwrap())
+        self.cache
+            .get(&art.name)
+            .with_context(|| format!("executable cache lost {} after insert", art.name))
     }
 
     /// Pre-compile every artifact a training run will need (optional warmup
@@ -130,7 +132,11 @@ impl Runtime {
         // compile (cached) first so execute timing is pure execution
         self.executable(model, kind, bucket)?;
         let t0 = Instant::now();
-        let exe = self.cache.get(&artifact_key(&self.manifest, model, kind, bucket)?).unwrap();
+        let key = artifact_key(&self.manifest, model, kind, bucket)?;
+        let exe = self
+            .cache
+            .get(&key)
+            .with_context(|| format!("executable cache lost {key} after warm compile"))?;
         let bufs = exe
             .execute::<xla::Literal>(args)
             .map_err(|e| anyhow::anyhow!("executing {model}/{kind:?}/b{bucket}: {e:?}"))?;

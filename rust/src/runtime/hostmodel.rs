@@ -292,7 +292,7 @@ impl HostModel {
                     match l {
                         Layer::Dense { w, b, din, dout, .. } => {
                             let mut h = bias_rows(&flat[*b..*b + *dout], n, ws);
-                            let x0 = tape.last().unwrap();
+                            let x0 = tape_top(&tape);
                             gemm(n, *din, *dout, x0, &flat[*w..*w + din * dout], &mut h);
                             relu_inplace(&mut h);
                             tape.push(h);
@@ -300,12 +300,12 @@ impl HostModel {
                         Layer::Res { aw, ab, bw, bb, width } => {
                             let wd = *width;
                             let mut inner = bias_rows(&flat[*ab..*ab + wd], n, ws);
-                            let h = tape.last().unwrap();
+                            let h = tape_top(&tape);
                             gemm(n, wd, wd, h, &flat[*aw..*aw + wd * wd], &mut inner);
                             relu_inplace(&mut inner);
                             let mut out = bias_rows(&flat[*bb..*bb + wd], n, ws);
                             gemm(n, wd, wd, &inner, &flat[*bw..*bw + wd * wd], &mut out);
-                            let h = tape.last().unwrap();
+                            let h = tape_top(&tape);
                             for (o, &hh) in out.iter_mut().zip(h) {
                                 *o += hh; // skip connection (pre-relu sum)
                             }
@@ -322,7 +322,7 @@ impl HostModel {
                     match l {
                         Layer::Dense { w, b, din, dout, .. } => {
                             let mut h = bias_rows(&flat[*b..*b + *dout], n, ws);
-                            let x0 = tape.last().unwrap();
+                            let x0 = tape_top(&tape);
                             gemm(n, *din, *dout, x0, &flat[*w..*w + din * dout], &mut h);
                             relu_inplace(&mut h);
                             tape.push(h);
@@ -331,7 +331,7 @@ impl HostModel {
                             let wd = *width;
                             let scale = &flat[*dw..*dw + wd];
                             let mut dwo = ws.take_zeroed(n * wd);
-                            let h = tape.last().unwrap();
+                            let h = tape_top(&tape);
                             for i in 0..n {
                                 for j in 0..wd {
                                     dwo[i * wd + j] = (h[i * wd + j] * scale[j]).max(0.0);
@@ -352,7 +352,7 @@ impl HostModel {
         let (hw, hb, hin) = self.head;
         let head_in = match self.family {
             Family::Dense => concat_rows(&tape, n, ws),
-            _ => ws.copy_of(tape.last().unwrap()),
+            _ => ws.copy_of(tape_top(&tape)),
         };
         debug_assert_eq!(head_in.len(), n * hin);
         let mut logits = bias_rows(&flat[hb..hb + self.classes], n, ws);
@@ -404,7 +404,7 @@ impl HostModel {
 
         // head backward (head input was stashed at the end of the tape)
         let (hw, hb, hin) = self.head;
-        let head_in = tape.pop().unwrap();
+        let head_in = tape_pop(&mut tape);
         gemm_at(n, hin, c, &head_in, &dlogits, &mut grads[hw..hw + hin * c]);
         col_sums(&dlogits, n, c, &mut grads[hb..hb + c]);
         let mut dhead_in = ws.take_zeroed(n * hin);
@@ -586,13 +586,28 @@ impl HostModel {
                 out.extend(std::iter::repeat(1f32).take(sz));
             } else {
                 let fan_in = shape[0] as f64;
-                let fan_out = *shape.last().unwrap() as f64;
+                let fan_out = shape.last().map_or(fan_in, |&v| v as f64);
                 let s = (2.0 / (fan_in + fan_out)).sqrt();
                 out.extend((0..sz).map(|_| (rng.normal() * s) as f32));
             }
         }
         out
     }
+}
+
+/// Top of the activation tape as a slice. `forward_tape` seeds the tape
+/// with the batch input before any layer reads it, so the tape is never
+/// empty while a forward pass is walking it.
+fn tape_top(tape: &[Vec<f32>]) -> &[f32] {
+    // lint: allow(panic-path): forward_tape pushes the input before any layer reads the tape
+    tape.last().expect("activation tape is never empty").as_slice()
+}
+
+/// Pop the stashed head input off the tape for the backward pass.
+/// `forward_tape` pushes it as its last act, so the pop always succeeds.
+fn tape_pop(tape: &mut Vec<Vec<f32>>) -> Vec<f32> {
+    // lint: allow(panic-path): forward_tape stashes the head input as its final push
+    tape.pop().expect("tape holds the stashed head input")
 }
 
 // -- shared numeric helpers --------------------------------------------------
@@ -733,11 +748,7 @@ fn row_lse(row: &[f32]) -> (f32, f32) {
 /// NaN-safe argmax: total_cmp orders NaN consistently instead of
 /// panicking mid-experiment when a run diverges.
 fn row_argmax(row: &[f32]) -> usize {
-    row.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.total_cmp(b.1))
-        .unwrap()
-        .0
+    row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map_or(0, |(i, _)| i)
 }
 
 #[cfg(test)]

@@ -184,7 +184,8 @@ impl Manifest {
 
     /// Largest configured bucket (the runtime's B_max).
     pub fn max_bucket(&self) -> usize {
-        *self.buckets.last().unwrap()
+        // lint: allow(panic-path): parse() rejects a manifest with an empty bucket list
+        *self.buckets.last().expect("manifest buckets validated non-empty")
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelMeta> {

@@ -783,6 +783,7 @@ impl RoundScheduler {
         // 3. apply in arrival order with staleness-discounted weights,
         //    each gradient through the quarantine into its device's
         //    family accumulator
+        // lint: allow(wall-clock): WallStats wall-time accounting — never enters SimClock
         let t0 = Instant::now();
         let mut loss_acc = 0f64;
         let mut w_acc = 0f64;
@@ -935,6 +936,7 @@ impl RoundScheduler {
             self.seed,
             period,
         )?;
+        // lint: allow(wall-clock): WallStats wall-time accounting — never enters SimClock
         let t0 = Instant::now();
         let mut loss_acc = 0f64;
         let mut w_acc = 0f64;

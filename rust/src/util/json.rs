@@ -290,7 +290,8 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let text = std::str::from_utf8(&self.s[start..self.i]).unwrap();
+        let text = std::str::from_utf8(&self.s[start..self.i])
+            .map_err(|_| self.err("bad number"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))

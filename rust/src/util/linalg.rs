@@ -496,6 +496,7 @@ mod tests {
     /// n deliberately not multiples of MR/NR/KC so every zero-padded edge
     /// path runs. Forced through the packed path regardless of size.
     #[test]
+    #[cfg_attr(miri, ignore)] // large GEMM sweep, far too slow under miri
     fn packed_matches_naive_ragged_shapes() {
         let shapes = [
             (1usize, 1usize, 1usize),
@@ -558,6 +559,7 @@ mod tests {
     /// the output rows into blocks must be bitwise identical to the
     /// one-shot call, for all three orientations, on the packed path.
     #[test]
+    #[cfg_attr(miri, ignore)] // large GEMM sweep, far too slow under miri
     fn packed_row_split_bitwise_equal_one_shot() {
         let (m, k, n) = (70, 90, 50);
         let a = filled(m * k, 7);
@@ -601,6 +603,7 @@ mod tests {
     /// A call big enough to cross the parallel threshold is bitwise equal
     /// under any thread budget (the public-API form of the invariant).
     #[test]
+    #[cfg_attr(miri, ignore)] // large GEMM sweep, far too slow under miri
     fn parallel_dispatch_bitwise_equal_serial() {
         let (m, k, n) = (512, 192, 256); // 25M madds > PAR_FLOP_THRESHOLD
         let a = filled(m * k, 11);

@@ -289,6 +289,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // statistical sweep, far too slow under miri
     fn below_unbiased_small() {
         let mut r = Pcg::seeded(5);
         let mut counts = [0usize; 7];
@@ -303,6 +304,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // statistical sweep, far too slow under miri
     fn normal_moments() {
         let mut r = Pcg::seeded(11);
         let n = 200_000;
@@ -319,6 +321,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // statistical sweep, far too slow under miri
     fn rayleigh_second_moment() {
         // E[X^2] = 2 sigma^2; with sigma = 1/sqrt(2), E[X^2] = 1 (unit power).
         let mut r = Pcg::seeded(13);
@@ -334,6 +337,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // statistical sweep, far too slow under miri
     fn gamma_moments_above_and_below_one() {
         // Gamma(shape, 1): mean = shape, var = shape — both branches of
         // the sampler (Marsaglia–Tsang >= 1, boosted < 1)
@@ -364,6 +368,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // statistical sweep, far too slow under miri
     fn exponential_mean() {
         let mut r = Pcg::seeded(17);
         let n = 200_000;

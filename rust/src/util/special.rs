@@ -113,6 +113,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // statistical sweep, far too slow under miri
     fn ergodic_rate_matches_monte_carlo() {
         let mut rng = crate::util::rng::Pcg::seeded(7);
         for &gamma in &[0.1, 1.0, 10.0, 100.0] {

@@ -160,7 +160,8 @@ pub fn fit_piecewise(bs: &[f64], ts: &[f64]) -> PiecewiseFit {
             best = Some(fit);
         }
     }
-    best.unwrap()
+    // lint: allow(panic-path): the len >= 4 assert above guarantees >= 2 loop passes
+    best.expect("split loop ran at least twice")
 }
 
 #[cfg(test)]

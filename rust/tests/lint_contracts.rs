@@ -1,0 +1,155 @@
+//! Tier-1 contract pin: `feel lint` must report zero findings on the
+//! tree, and every rule must be proven live by a planted violation.
+//!
+//! The tree walk covers `src/` + `benches/` (tests are exempt — this
+//! file plants violations on purpose, via in-memory fixtures only).
+
+use std::path::Path;
+
+use feel::analysis::{check_tags, lint_source, lint_tree, render_text, Rule};
+
+/// Findings for a fixture snippet placed at `rel`.
+fn lint(rel: &str, src: &str) -> Vec<Rule> {
+    lint_source(rel, src).0.into_iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn tree_has_zero_findings() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = lint_tree(root).expect("lint walk failed");
+    assert!(
+        findings.is_empty(),
+        "determinism contract violations — fix them or pragma with a reason:\n{}",
+        render_text(&findings)
+    );
+}
+
+#[test]
+fn r1_float_sort_fires() {
+    let src = r#"
+        pub fn pick(xs: &mut [f64]) {
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+    "#;
+    assert!(lint("src/grad/fix.rs", src).contains(&Rule::FloatSort));
+    // the sanctioned form is clean (and carries no R5 token either)
+    let ok = "pub fn pick(xs: &mut [f64]) { xs.sort_by(|a, b| a.total_cmp(b)); }";
+    assert!(lint("src/grad/fix.rs", ok).is_empty());
+}
+
+#[test]
+fn r2_tag_registry_catches_collisions_zero_and_nonliteral() {
+    let src = "pub const A_TAG: u64 = 0xdead; pub const B_TAG: u64 = 0xdead;\n\
+               pub const Z_TAG: u64 = 0;";
+    let (findings, tags) = lint_source("src/fault/fix.rs", src);
+    assert!(findings.is_empty(), "collection itself emits nothing");
+    assert_eq!(tags.len(), 3);
+    let probs = check_tags(&tags);
+    assert_eq!(probs.len(), 2, "one collision + one zero: {probs:?}");
+    assert!(probs.iter().all(|f| f.rule == Rule::TagRegistry));
+    // a tag the registry cannot parse is a finding at collection time
+    let (findings, tags) = lint_source("src/fault/fix.rs", "const C_TAG: u64 = derive();");
+    assert!(tags.is_empty());
+    assert_eq!(findings.iter().filter(|f| f.rule == Rule::TagRegistry).count(), 1);
+}
+
+#[test]
+fn r3_hash_iter_fires_in_deterministic_modules_only() {
+    let src = "use std::collections::HashMap;";
+    assert!(lint("src/sched/fix.rs", src).contains(&Rule::HashIter));
+    let rules = lint("src/grad/fix.rs", "fn f() -> HashSet<u32> { todo() }");
+    assert!(rules.contains(&Rule::HashIter));
+    // non-deterministic modules and benches may hash
+    assert!(lint("src/wireless/fix.rs", src).is_empty());
+    assert!(lint("benches/fix.rs", src).is_empty());
+}
+
+#[test]
+fn r4_wall_clock_confined_to_allowlist() {
+    let src = "fn f() { let t = Instant::now(); }";
+    assert!(lint("src/sched/fix.rs", src).contains(&Rule::WallClock));
+    let rules = lint("src/hier/fix.rs", "fn f() { let t = SystemTime::now(); }");
+    assert!(rules.contains(&Rule::WallClock));
+    assert!(lint("src/benchkit.rs", src).is_empty());
+    assert!(lint("src/runtime/client.rs", src).is_empty());
+    let pragmad = "fn f() {\n\
+                   // lint: allow(wall-clock): wall-time accounting only\n\
+                   let t = Instant::now();\n}";
+    assert!(lint("src/sched/fix.rs", pragmad).is_empty());
+}
+
+#[test]
+fn r5_panic_path_fires_and_pragmas_suppress() {
+    let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+    assert!(lint("src/obs/fix.rs", src).contains(&Rule::PanicPath));
+    let rules = lint("src/obs/fix.rs", "fn f(x: Option<u32>) -> u32 { x.expect(\"set\") }");
+    assert!(rules.contains(&Rule::PanicPath));
+    let pragmad = "fn f(x: Option<u32>) -> u32 {\n\
+                   // lint: allow(panic-path): caller always sets x\n\
+                   x.unwrap()\n}";
+    assert!(lint("src/obs/fix.rs", pragmad).is_empty());
+    // a pragma without a written reason suppresses nothing and is itself
+    // a finding
+    let bare = "fn f(x: Option<u32>) -> u32 {\n\
+                // lint: allow(panic-path):\n\
+                x.unwrap()\n}";
+    let rules = lint("src/obs/fix.rs", bare);
+    assert!(rules.contains(&Rule::Pragma), "{rules:?}");
+    assert!(rules.contains(&Rule::PanicPath), "{rules:?}");
+    // unwrap_or and friends are not panic paths
+    let rules = lint("src/obs/fix.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }");
+    assert!(rules.is_empty());
+}
+
+#[test]
+fn r6_rng_sources_outside_util_rng() {
+    let rules = lint("src/device/fix.rs", "let mut rng = rand::thread_rng();");
+    assert!(rules.contains(&Rule::RngSource));
+    assert!(lint("src/grad/fix.rs", "let h = RandomState::new();").contains(&Rule::RngSource));
+    assert!(lint("src/device/fix.rs", "let r = Pcg::new(1, 2);").contains(&Rule::RngSource));
+    // util::rng itself constructs freely; the sanctioned derivations are
+    // clean everywhere
+    assert!(lint("src/util/rng.rs", "let r = Pcg::new(1, 2);").is_empty());
+    assert!(lint("src/device/fix.rs", "let r = Pcg::for_device(seed, p, k);").is_empty());
+    // benches are NOT exempt from R6
+    let rules = lint("benches/fix.rs", "let mut rng = rand::thread_rng();");
+    assert!(rules.contains(&Rule::RngSource));
+}
+
+#[test]
+fn literals_and_comments_never_false_positive() {
+    let src = r##"
+        // unwrap() partial_cmp HashMap Instant::now in a comment
+        /* thread_rng /* nested SystemTime */ still a comment */
+        fn f() -> &'static str {
+            let s = "thread_rng unwrap() HashMap SystemTime";
+            let r = r#"Instant::now() . unwrap ( )"#;
+            let c = 'u';
+            let b = b'x';
+            s
+        }
+    "##;
+    assert!(lint("src/sched/fix.rs", src).is_empty());
+}
+
+#[test]
+fn test_code_is_exempt() {
+    let src = "
+        #[cfg(test)]
+        mod tests {
+            use std::collections::HashMap;
+            fn helper(x: Option<u32>) -> u32 { x.unwrap() }
+        }
+        #[test]
+        fn t() { y.unwrap(); }
+    ";
+    assert!(lint("src/grad/fix.rs", src).is_empty());
+    // and integration-test files are skipped wholesale
+    assert!(lint("tests/fix.rs", "fn f() { x.unwrap(); let t = Instant::now(); }").is_empty());
+}
+
+#[test]
+fn benches_are_exempt_from_panic_and_clock_rules() {
+    let src = "fn main() { let t = Instant::now(); run().unwrap(); }";
+    assert!(lint("benches/fix.rs", src).is_empty());
+}
