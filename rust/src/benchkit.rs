@@ -6,8 +6,10 @@
 //! report mean / p50 / p95 / throughput — enough to drive the §Perf loop
 //! and regenerate the paper-table harnesses.
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::quantile;
 
 /// One benchmark's measurements.
@@ -116,6 +118,141 @@ fn fmt_ns(ns: f64) -> String {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Perf-trajectory folding (`feel bench-merge`)
+// ---------------------------------------------------------------------------
+
+/// Classify a bench-JSON key as a score: `Some(true)` if higher is better
+/// (speedups, throughput), `Some(false)` if lower is better (timings), `None`
+/// for configuration fields that must never gate CI.
+fn metric_direction(key: &str) -> Option<bool> {
+    if key.starts_with("ms_per")
+        || key.starts_with("sim_secs")
+        || key.ends_with("_ms")
+        || key.ends_with("_ns")
+        || key.ends_with("_secs")
+    {
+        return Some(false);
+    }
+    if key.contains("speedup") || key.contains("gflops") || key.contains("per_sec") {
+        return Some(true);
+    }
+    None
+}
+
+/// One headline metric extracted from a `BENCH_*.json` document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Headline {
+    pub name: String,
+    pub value: f64,
+    pub higher_is_better: bool,
+}
+
+/// Extract headline metrics from one bench document: every top-level score
+/// key, plus the best value of each score key across the `results` rows
+/// (best = min for timings, max for speedups/throughput). Names are
+/// `"{bench}.{key}"` and `"{bench}.best.{key}"`.
+pub fn headline_metrics(doc: &Json) -> Vec<Headline> {
+    let bench = doc.get("bench").and_then(Json::as_str).unwrap_or("unknown");
+    let mut out = Vec::new();
+    if let Some(map) = doc.as_obj() {
+        for (k, v) in map {
+            if let (Some(higher), Some(x)) = (metric_direction(k), v.as_f64()) {
+                out.push(Headline {
+                    name: format!("{bench}.{k}"),
+                    value: x,
+                    higher_is_better: higher,
+                });
+            }
+        }
+    }
+    let mut best: BTreeMap<&str, (f64, bool)> = BTreeMap::new();
+    for row in doc.get("results").and_then(Json::as_arr).unwrap_or(&[]) {
+        let Some(map) = row.as_obj() else { continue };
+        for (k, v) in map {
+            if let (Some(higher), Some(x)) = (metric_direction(k), v.as_f64()) {
+                let e = best.entry(k.as_str()).or_insert((x, higher));
+                e.0 = if higher { e.0.max(x) } else { e.0.min(x) };
+            }
+        }
+    }
+    for (k, (x, higher)) in best {
+        out.push(Headline {
+            name: format!("{bench}.best.{k}"),
+            value: x,
+            higher_is_better: higher,
+        });
+    }
+    out
+}
+
+/// Fold parsed per-bench documents into one `BENCH_trajectory.json` value.
+/// `run` is a caller-supplied stamp (commit hash, CI run id) — never wall
+/// clock — so the same inputs always fold to the same bytes.
+pub fn merge_bench_artifacts(parts: &[Json], run: &str) -> Json {
+    let mut benches = BTreeMap::new();
+    let mut headline = BTreeMap::new();
+    for doc in parts {
+        let name = doc.get("bench").and_then(Json::as_str).unwrap_or("unknown");
+        for h in headline_metrics(doc) {
+            headline.insert(h.name, Json::Num(h.value));
+        }
+        benches.insert(name.to_string(), doc.clone());
+    }
+    let mut top = BTreeMap::new();
+    top.insert("run".to_string(), Json::Str(run.to_string()));
+    top.insert("benches".to_string(), Json::Obj(benches));
+    top.insert("headline".to_string(), Json::Obj(headline));
+    Json::Obj(top)
+}
+
+/// Outcome of comparing a trajectory against a committed baseline.
+#[derive(Clone, Debug, Default)]
+pub struct RegressionReport {
+    /// >tolerance regressions — these should fail CI.
+    pub failures: Vec<String>,
+    /// Metrics present on only one side, or not comparable — informational.
+    pub notes: Vec<String>,
+}
+
+/// Compare the `headline` maps of two trajectory documents. A metric
+/// regresses when it moves more than `tolerance` (fraction, e.g. 0.25) in
+/// its bad direction. Metrics missing from either side only produce notes —
+/// the committed baseline may lag newly added benches.
+pub fn check_regressions(baseline: &Json, current: &Json, tolerance: f64) -> RegressionReport {
+    let empty = BTreeMap::new();
+    let base = baseline.get("headline").and_then(Json::as_obj).unwrap_or(&empty);
+    let cur = current.get("headline").and_then(Json::as_obj).unwrap_or(&empty);
+    let mut rep = RegressionReport::default();
+    for (name, bv) in base {
+        let Some(b) = bv.as_f64() else { continue };
+        let Some(c) = cur.get(name).and_then(Json::as_f64) else {
+            rep.notes.push(format!("note: baseline metric {name} missing from current run"));
+            continue;
+        };
+        let key = name.rsplit('.').next().unwrap_or(name);
+        let Some(higher) = metric_direction(key) else { continue };
+        if b <= 0.0 || !b.is_finite() || !c.is_finite() {
+            rep.notes.push(format!("note: {name} not comparable (baseline {b}, current {c})"));
+            continue;
+        }
+        let regressed = if higher { c < b * (1.0 - tolerance) } else { c > b * (1.0 + tolerance) };
+        if regressed {
+            rep.failures.push(format!(
+                "regression: {name} = {c:.4} vs baseline {b:.4} ({} is better, tolerance {:.0}%)",
+                if higher { "higher" } else { "lower" },
+                tolerance * 100.0,
+            ));
+        }
+    }
+    for name in cur.keys() {
+        if !base.contains_key(name) {
+            rep.notes.push(format!("note: new metric {name} not in baseline"));
+        }
+    }
+    rep
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,5 +281,74 @@ mod tests {
         assert!(fmt_ns(5e4).ends_with("µs"));
         assert!(fmt_ns(5e7).ends_with("ms"));
         assert!(fmt_ns(5e9).ends_with("s"));
+    }
+
+    fn doc(src: &str) -> Json {
+        Json::parse(src).unwrap()
+    }
+
+    #[test]
+    fn headline_extraction_picks_scores_not_config() {
+        let d = doc(
+            r#"{"bench":"gemm","cores":8,"speedup_256_vs_ref":3.5,
+                "results":[{"op":"a","k":256,"packed_ms":4.0,"gflops_serial":9.0},
+                           {"op":"b","k":512,"packed_ms":2.0,"gflops_serial":7.0}]}"#,
+        );
+        let hs = headline_metrics(&d);
+        let get = |n: &str| hs.iter().find(|h| h.name == n).cloned();
+        let top = get("gemm.speedup_256_vs_ref").unwrap();
+        assert!(top.higher_is_better);
+        assert_eq!(top.value, 3.5);
+        // best across rows: min for timings, max for throughput
+        assert_eq!(get("gemm.best.packed_ms").unwrap().value, 2.0);
+        assert_eq!(get("gemm.best.gflops_serial").unwrap().value, 9.0);
+        // config fields (cores, k) never become headlines
+        assert!(get("gemm.cores").is_none());
+        assert!(get("gemm.best.k").is_none());
+    }
+
+    #[test]
+    fn merge_is_deterministic_and_run_stamped() {
+        let a = doc(r#"{"bench":"gemm","speedup_256_vs_ref":3.5,"results":[]}"#);
+        let b = doc(r#"{"bench":"scale","results":[{"ms_per_round":5.0}]}"#);
+        let t1 = merge_bench_artifacts(&[a.clone(), b.clone()], "run-1");
+        let t2 = merge_bench_artifacts(&[a, b], "run-1");
+        assert_eq!(t1.to_string(), t2.to_string());
+        assert_eq!(t1.get("run").and_then(Json::as_str), Some("run-1"));
+        let head = t1.get("headline").and_then(Json::as_obj).unwrap();
+        assert!(head.contains_key("gemm.speedup_256_vs_ref"));
+        assert!(head.contains_key("scale.best.ms_per_round"));
+        assert!(t1.get("benches").and_then(|b| b.get("gemm")).is_some());
+    }
+
+    #[test]
+    fn regression_check_respects_direction_and_tolerance() {
+        let base = doc(
+            r#"{"headline":{"gemm.best.packed_ms":4.0,"gemm.speedup_256_vs_ref":4.0,
+                            "old.best.ms_per_round":1.0}}"#,
+        );
+        // 24% slower timing + 24% lower speedup: both inside 25% tolerance
+        let ok = doc(
+            r#"{"headline":{"gemm.best.packed_ms":4.96,"gemm.speedup_256_vs_ref":3.04,
+                            "fresh.best.ms_per_round":2.0}}"#,
+        );
+        let rep = check_regressions(&base, &ok, 0.25);
+        assert!(rep.failures.is_empty(), "{:?}", rep.failures);
+        // missing + new metrics are notes, not failures
+        assert_eq!(rep.notes.len(), 2, "{:?}", rep.notes);
+        // 30% worse in each bad direction: both fail
+        let bad = doc(
+            r#"{"headline":{"gemm.best.packed_ms":5.2,"gemm.speedup_256_vs_ref":2.8,
+                            "old.best.ms_per_round":1.0}}"#,
+        );
+        let rep = check_regressions(&base, &bad, 0.25);
+        assert_eq!(rep.failures.len(), 2, "{:?}", rep.failures);
+        assert!(rep.failures[0].contains("packed_ms"), "{:?}", rep.failures);
+        // improvements never fail
+        let better = doc(
+            r#"{"headline":{"gemm.best.packed_ms":1.0,"gemm.speedup_256_vs_ref":9.0,
+                            "old.best.ms_per_round":0.5}}"#,
+        );
+        assert!(check_regressions(&base, &better, 0.25).failures.is_empty());
     }
 }

@@ -7,6 +7,10 @@
 //!   fit-gpu      — profile + fit the GPU training function
 //!   experiment   — regenerate a paper table/figure: fig2 fig3 table2 fig4 fig5
 //!   report       — summarize a --metrics-out JSONL dump into a table
+//!   audit        — summarize an --audit JSONL ledger: learning efficiency,
+//!                  predicted-vs-realized regret, bandwidth utilization
+//!   bench-merge  — fold per-bench BENCH_*.json files into BENCH_trajectory.json
+//!                  and (optionally) gate on a committed baseline
 //!   lint         — static-analysis pass for the determinism contracts R1–R6
 //!
 //! Common flags: --config <path>, --out <dir>, --backend host|pjrt,
@@ -165,6 +169,15 @@ COMMANDS:
               --metrics-out FILE   write per-period counter/gauge/
                          histogram snapshots as JSONL; summarize with
                          `feel report <file>`
+              --audit FILE   write the predicted-vs-realized audit
+                         ledger as JSONL: per period and device, the
+                         optimizer's predicted batchsize / compute /
+                         TDMA slot share / finish time next to what the
+                         round scheduler realized (arrival, outcome,
+                         staleness, carry), plus per-period learning
+                         efficiency. Simulated time only — identical
+                         across thread counts. Summarize with
+                         `feel audit <file>`
               --k N  --partition iid|noniid|dirichlet:alpha  --seed N
               --out results/
               --threads N (0 = all cores; results identical at any value)
@@ -180,6 +193,18 @@ COMMANDS:
   report      summarize a --metrics-out JSONL dump: counter totals, last
               gauges, p50/p95/max per histogram
               feel report <metrics.jsonl>   (or --in <file>)
+  audit       summarize an --audit JSONL ledger: per-period learning
+              efficiency (loss decrement / simulated second), predicted
+              vs realized period time, straggler regret (realized /
+              predicted finish), bandwidth utilization, outcome tallies
+              feel audit <audit.jsonl>   (or --in <file>)
+  bench-merge fold per-bench BENCH_*.json artifacts into one
+              BENCH_trajectory.json keyed by headline metrics; with
+              --baseline, exit nonzero when a headline metric regresses
+              more than --tolerance (default 0.25) in its bad direction
+              feel bench-merge BENCH_a.json ...  --run STAMP
+                [--out BENCH_trajectory.json] [--baseline FILE]
+                [--tolerance F]
   lint        check the determinism contracts (R1-R6): total_cmp-only float
               sorts, literal/nonzero/distinct RNG stream tags, no hash-order
               iteration in deterministic modules, wall clock on allowlist
@@ -205,6 +230,8 @@ pub fn run(args: Args) -> Result<()> {
         "fit-gpu" => cmd_fit_gpu(&args),
         "experiment" => cmd_experiment(&args),
         "report" => cmd_report(&args),
+        "audit" => cmd_audit(&args),
+        "bench-merge" => cmd_bench_merge(&args),
         "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
@@ -346,9 +373,14 @@ fn checkpoint_flags(args: &Args) -> Result<(usize, Option<PathBuf>, Option<PathB
 }
 
 /// Resolve the observability flags shared by the flat and hierarchical
-/// train paths: (trace path, metrics path). Either one turns tracing on.
-fn obs_flags(args: &Args) -> (Option<PathBuf>, Option<PathBuf>) {
-    (args.get("trace").map(PathBuf::from), args.get("metrics-out").map(PathBuf::from))
+/// train paths: (trace path, metrics path, audit path). Any one of them
+/// turns the observability sink on.
+fn obs_flags(args: &Args) -> (Option<PathBuf>, Option<PathBuf>, Option<PathBuf>) {
+    (
+        args.get("trace").map(PathBuf::from),
+        args.get("metrics-out").map(PathBuf::from),
+        args.get("audit").map(PathBuf::from),
+    )
 }
 
 /// Write an observability artifact (trace JSON / metrics JSONL) to disk.
@@ -396,8 +428,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         set,
     )?;
     let (every, ckpt, resume) = checkpoint_flags(args)?;
-    let (trace, metrics_out) = obs_flags(args);
-    if trace.is_some() || metrics_out.is_some() {
+    let (trace, metrics_out, audit) = obs_flags(args);
+    if trace.is_some() || metrics_out.is_some() || audit.is_some() {
         tr.enable_obs();
     }
     let warm = args.usize_or("warm", 0)?;
@@ -424,6 +456,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(path) = &metrics_out {
         write_obs_file(path, &tr.export_metrics(), "metrics")?;
+    }
+    if let Some(path) = &audit {
+        write_obs_file(path, &tr.export_audit(), "audit")?;
     }
     let log = &tr.log;
     rec.csv("train_log", &log.to_csv())?;
@@ -469,7 +504,7 @@ fn cmd_train_hier(
     );
     let warm = args.usize_or("warm", 0)?;
     let (every, ckpt, resume) = checkpoint_flags(args)?;
-    let (trace, metrics_out) = obs_flags(args);
+    let (trace, metrics_out, audit) = obs_flags(args);
     let run = run_hier_scheme_traced(
         exp,
         exp.trainer.scheme,
@@ -479,13 +514,16 @@ fn cmd_train_hier(
         every,
         ckpt.as_deref(),
         resume.as_deref(),
-        trace.is_some() || metrics_out.is_some(),
+        trace.is_some() || metrics_out.is_some() || audit.is_some(),
     )?;
     if let (Some(path), Some(content)) = (&trace, &run.trace) {
         write_obs_file(path, content, "trace")?;
     }
     if let (Some(path), Some(content)) = (&metrics_out, &run.metrics) {
         write_obs_file(path, content, "metrics")?;
+    }
+    if let (Some(path), Some(content)) = (&audit, &run.audit) {
+        write_obs_file(path, content, "audit")?;
     }
     rec.csv("train_log", &run.log.to_csv())?;
     println!(
@@ -624,6 +662,66 @@ fn cmd_report(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("report wants a metrics JSONL path (or --in <file>)"))?;
     let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     print!("{}", crate::obs::summarize_jsonl(&src)?);
+    Ok(())
+}
+
+/// Summarize an `--audit` JSONL ledger: per-period learning efficiency,
+/// predicted-vs-realized regret, bandwidth utilization, outcome tallies.
+fn cmd_audit(args: &Args) -> Result<()> {
+    let path = args
+        .get("in")
+        .or_else(|| args.positional.first().map(|s| s.as_str()))
+        .ok_or_else(|| anyhow::anyhow!("audit wants an audit JSONL path (or --in <file>)"))?;
+    let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    print!("{}", crate::obs::summarize_audit_jsonl(&src)?);
+    Ok(())
+}
+
+/// Fold per-bench `BENCH_*.json` artifacts into one `BENCH_trajectory.json`
+/// and, when `--baseline` is given, gate on headline-metric regressions.
+/// The run stamp comes from `--run` — never from the wall clock — so the
+/// trajectory is a pure function of its inputs.
+fn cmd_bench_merge(args: &Args) -> Result<()> {
+    use crate::benchkit::{check_regressions, merge_bench_artifacts};
+    use crate::util::json::Json;
+    if args.positional.is_empty() {
+        bail!("bench-merge wants one or more BENCH_*.json paths");
+    }
+    let mut parts = Vec::new();
+    for path in &args.positional {
+        let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let doc = Json::parse(&src)
+            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        parts.push(doc);
+    }
+    let run = args.get("run").unwrap_or("unstamped");
+    let trajectory = merge_bench_artifacts(&parts, run);
+    let out = PathBuf::from(args.get("out").unwrap_or("BENCH_trajectory.json"));
+    std::fs::write(&out, format!("{trajectory}\n"))
+        .with_context(|| format!("writing {}", out.display()))?;
+    println!("trajectory ({} bench file(s), run {run:?}) -> {}", parts.len(), out.display());
+    if let Some(base_path) = args.get("baseline") {
+        let src = std::fs::read_to_string(base_path)
+            .with_context(|| format!("reading baseline {base_path}"))?;
+        let baseline = Json::parse(&src)
+            .map_err(|e| anyhow::anyhow!("parsing baseline {base_path}: {e}"))?;
+        let tolerance = args.f64_or("tolerance", 0.25)?;
+        let rep = check_regressions(&baseline, &trajectory, tolerance);
+        for note in &rep.notes {
+            println!("{note}");
+        }
+        for failure in &rep.failures {
+            println!("{failure}");
+        }
+        if !rep.failures.is_empty() {
+            bail!(
+                "bench-merge: {} headline metric(s) regressed past {:.0}% vs {base_path}",
+                rep.failures.len(),
+                tolerance * 100.0
+            );
+        }
+        println!("bench-merge: no headline regression vs {base_path}");
+    }
     Ok(())
 }
 
@@ -851,16 +949,22 @@ mod tests {
 
     #[test]
     fn obs_flags_resolve_and_are_documented() {
-        let a = Args::parse(&argv("train --trace /tmp/t.json --metrics-out /tmp/m.jsonl"))
-            .unwrap();
-        let (trace, metrics) = obs_flags(&a);
+        let a = Args::parse(&argv(
+            "train --trace /tmp/t.json --metrics-out /tmp/m.jsonl --audit /tmp/a.jsonl",
+        ))
+        .unwrap();
+        let (trace, metrics, audit) = obs_flags(&a);
         assert_eq!(trace.as_deref(), Some(Path::new("/tmp/t.json")));
         assert_eq!(metrics.as_deref(), Some(Path::new("/tmp/m.jsonl")));
-        let (trace, metrics) = obs_flags(&Args::parse(&argv("train")).unwrap());
-        assert!(trace.is_none() && metrics.is_none());
+        assert_eq!(audit.as_deref(), Some(Path::new("/tmp/a.jsonl")));
+        let (trace, metrics, audit) = obs_flags(&Args::parse(&argv("train")).unwrap());
+        assert!(trace.is_none() && metrics.is_none() && audit.is_none());
         assert!(HELP.contains("--trace FILE"));
         assert!(HELP.contains("--metrics-out FILE"));
+        assert!(HELP.contains("--audit FILE"));
         assert!(HELP.contains("report"));
+        assert!(HELP.contains("feel audit <audit.jsonl>"));
+        assert!(HELP.contains("bench-merge"));
     }
 
     #[test]
@@ -885,6 +989,97 @@ mod tests {
         let a = Args::parse(&argv(&format!("report --in {}", path.display()))).unwrap();
         run(a).unwrap();
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn audit_command_validates_input() {
+        // no path at all
+        let a = Args::parse(&argv("audit")).unwrap();
+        let err = run(a).unwrap_err().to_string();
+        assert!(err.contains("audit JSONL"), "{err}");
+        // missing file
+        let a = Args::parse(&argv("audit /nonexistent/audit.jsonl")).unwrap();
+        assert!(run(a).is_err());
+        // a real ledger summarizes (both positional and --in forms)
+        let mut led = crate::obs::AuditLedger::new(0);
+        let plan = crate::coordinator::scheme::Plan {
+            batches: vec![16, 16],
+            t_period: 1.2,
+            t_up: 1.0,
+            t_down: 0.2,
+            finish: vec![0.9, 0.9],
+            predicted: vec![
+                crate::opt::types::PredictedTiming { compute: 0.5, comm: 0.4, slot_share: 0.5 };
+                2
+            ],
+            predicted_efficiency: Some(0.05),
+        };
+        led.begin(1, 0.0, &plan);
+        led.barrier_fill();
+        led.end(1.2, 0.01, 32, 2);
+        let path = std::env::temp_dir().join(format!("feel_audit_{}.jsonl", std::process::id()));
+        std::fs::write(&path, led.to_jsonl()).unwrap();
+        let a = Args::parse(&argv(&format!("audit {}", path.display()))).unwrap();
+        run(a).unwrap();
+        let a = Args::parse(&argv(&format!("audit --in {}", path.display()))).unwrap();
+        run(a).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bench_merge_command_merges_and_gates() {
+        // no inputs is an error
+        let a = Args::parse(&argv("bench-merge")).unwrap();
+        let err = run(a).unwrap_err().to_string();
+        assert!(err.contains("BENCH_"), "{err}");
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let bench = dir.join(format!("feel_bm_bench_{pid}.json"));
+        let traj = dir.join(format!("feel_bm_traj_{pid}.json"));
+        let base = dir.join(format!("feel_bm_base_{pid}.json"));
+        std::fs::write(
+            &bench,
+            r#"{"bench":"gemm","speedup_256_vs_ref":4.0,"results":[{"packed_ms":2.0}]}"#,
+        )
+        .unwrap();
+        // merge alone succeeds and stamps the run from the flag
+        let a = Args::parse(&argv(&format!(
+            "bench-merge {} --run abc123 --out {}",
+            bench.display(),
+            traj.display()
+        )))
+        .unwrap();
+        run(a).unwrap();
+        let traj_doc =
+            crate::util::json::Json::parse(&std::fs::read_to_string(&traj).unwrap()).unwrap();
+        assert_eq!(traj_doc.get("run").and_then(|v| v.as_str()), Some("abc123"));
+        // a matching baseline passes the gate; a 2x-better baseline fails it
+        std::fs::write(&base, std::fs::read_to_string(&traj).unwrap()).unwrap();
+        let a = Args::parse(&argv(&format!(
+            "bench-merge {} --run abc123 --out {} --baseline {}",
+            bench.display(),
+            traj.display(),
+            base.display()
+        )))
+        .unwrap();
+        run(a).unwrap();
+        std::fs::write(
+            &base,
+            r#"{"headline":{"gemm.best.packed_ms":0.5,"gemm.speedup_256_vs_ref":16.0}}"#,
+        )
+        .unwrap();
+        let a = Args::parse(&argv(&format!(
+            "bench-merge {} --run abc123 --out {} --baseline {}",
+            bench.display(),
+            traj.display(),
+            base.display()
+        )))
+        .unwrap();
+        let err = run(a).unwrap_err().to_string();
+        assert!(err.contains("regressed"), "{err}");
+        for p in [&bench, &traj, &base] {
+            std::fs::remove_file(p).ok();
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::opt;
 use crate::opt::baselines::{batches_for, solve_equal_slots, solve_fixed_batches, BatchPolicy};
-use crate::opt::types::{quantize, Instance};
+use crate::opt::types::{predicted_timings, quantize, Instance, PredictedTiming};
 use crate::util::rng::Pcg;
 
 /// Which scheme drives the training loop.
@@ -67,6 +67,11 @@ pub struct Plan {
     /// Invariant: `finish.len() == K` and `max_k finish[k] <= t_up`, so a
     /// jitter-free barrier lands exactly on the plan's uplink makespan.
     pub finish: Vec<f64>,
+    /// per-device predicted timing decomposition (compute / comm / slot
+    /// share) — the audit ledger's "what the optimizer expected" side.
+    /// Invariant: `predicted.len() == K` and for every device
+    /// `(compute + comm).min(t_up)` reproduces `finish[k]` bitwise.
+    pub predicted: Vec<PredictedTiming>,
     /// the optimizer's predicted learning efficiency (if it ran)
     pub predicted_efficiency: Option<f64>,
 }
@@ -120,12 +125,15 @@ pub fn plan_period(
                 inst.s_bits,
                 g.solution.t_up,
             );
+            let predicted =
+                predicted_timings(inst, &g.solution.batches, &g.solution.tau_ul, inst.s_bits);
             Ok(Plan {
                 batches,
                 t_period: g.solution.period_latency(),
                 t_up: g.solution.t_up,
                 t_down: g.solution.t_down,
                 finish,
+                predicted,
                 predicted_efficiency: Some(g.efficiency),
             })
         }
@@ -134,12 +142,14 @@ pub fn plan_period(
             let batches: Vec<f64> = shard_sizes.iter().map(|&n| n as f64).collect();
             let sol = solve_equal_slots(inst, &batches);
             let finish = uplink_finish_times(inst, &batches, &sol.tau_ul, inst.s_bits, sol.t_up);
+            let predicted = predicted_timings(inst, &batches, &sol.tau_ul, inst.s_bits);
             Ok(Plan {
                 batches: shard_sizes.to_vec(),
                 t_period: sol.period_latency(),
                 t_up: sol.t_up,
                 t_down: sol.t_down,
                 finish,
+                predicted,
                 predicted_efficiency: None,
             })
         }
@@ -169,12 +179,14 @@ pub fn plan_period(
             let batches_f: Vec<f64> = shard_sizes.iter().map(|&n| n as f64).collect();
             let tau = vec![tau_ul; k];
             let finish = uplink_finish_times(inst, &batches_f, &tau, param_bits, t_up);
+            let predicted = predicted_timings(inst, &batches_f, &tau, param_bits);
             Ok(Plan {
                 batches: shard_sizes.to_vec(), // one epoch touches the shard
                 t_period: t_compute + t_ul + t_dl,
                 t_up,
                 t_down: t_dl,
                 finish,
+                predicted,
                 predicted_efficiency: None,
             })
         }
@@ -196,12 +208,25 @@ pub fn plan_period(
                 .zip(&batches)
                 .map(|(d, &b)| (d.offset + b as f64 / d.speed + d.update_lat).min(t))
                 .collect();
+            // no communication: compute carries the update latency so it
+            // matches the finish expression; zero comm, zero slot share
+            let predicted = inst
+                .devices
+                .iter()
+                .zip(&batches)
+                .map(|(d, &b)| PredictedTiming {
+                    compute: d.offset + b as f64 / d.speed + d.update_lat,
+                    comm: 0.0,
+                    slot_share: 0.0,
+                })
+                .collect();
             Ok(Plan {
                 batches,
                 t_period: t,
                 t_up: t,
                 t_down: 0.0,
                 finish,
+                predicted,
                 predicted_efficiency: None,
             })
         }
@@ -214,12 +239,14 @@ pub fn plan_period(
             };
             let batches = quantize(&batches_f, inst);
             let finish = uplink_finish_times(inst, &batches_f, &sol.tau_ul, inst.s_bits, sol.t_up);
+            let predicted = predicted_timings(inst, &batches_f, &sol.tau_ul, inst.s_bits);
             Ok(Plan {
                 batches,
                 t_period: sol.period_latency(),
                 t_up: sol.t_up,
                 t_down: sol.t_down,
                 finish,
+                predicted,
                 predicted_efficiency: None,
             })
         }
@@ -329,12 +356,22 @@ mod tests {
             let p = plan_period(scheme, &inst, &shards(6), 32.0 * 570_000.0, EPS, &mut rng)
                 .unwrap();
             assert_eq!(p.finish.len(), 6, "{scheme:?}");
+            assert_eq!(p.predicted.len(), 6, "{scheme:?}");
             for (k, &f) in p.finish.iter().enumerate() {
                 assert!(
                     f.is_finite() && f >= 0.0 && f <= p.t_up,
                     "{scheme:?} device {k}: finish {f} outside [0, {}]",
                     p.t_up
                 );
+                // the predicted decomposition re-folds into the nominal
+                // arrival time bitwise — the audit ledger relies on this
+                let pt = &p.predicted[k];
+                assert_eq!(
+                    (pt.compute + pt.comm).min(p.t_up).to_bits(),
+                    f.to_bits(),
+                    "{scheme:?} device {k}"
+                );
+                assert!((0.0..=1.0).contains(&pt.slot_share), "{scheme:?} device {k}");
             }
         }
         let gfl = plan_period(Scheme::GradientFl, &inst, &shards(6), 0.0, EPS, &mut rng).unwrap();

@@ -532,6 +532,12 @@ impl<'a> Trainer<'a> {
         self.obs.to_jsonl()
     }
 
+    /// Predicted-vs-realized audit ledger as JSONL (empty when disabled;
+    /// summarize with `feel audit`).
+    pub fn export_audit(&self) -> String {
+        self.obs.audit_jsonl()
+    }
+
     /// The per-device backend registry this trainer resolves through —
     /// the cloud aggregator walks it to pair up model families across
     /// cells by name.
@@ -757,6 +763,11 @@ impl<'a> Trainer<'a> {
         }
         self.log.wall.solver_secs += t_step.elapsed().as_secs_f64();
         let b_total: usize = plan.batches.iter().sum();
+        // audit: open this period's predicted-vs-realized row from the
+        // post-carry plan (1-based display period, matching the record
+        // pushed below). No-op when observability is off.
+        self.obs
+            .audit_begin(self.server.period as u64 + 1, self.clock.now(), &plan);
 
         let (report, lr) = match self.cfg.scheme {
             // gradient schemes compute their step size *after* the round
@@ -771,11 +782,15 @@ impl<'a> Trainer<'a> {
                 let local_lr = self.cfg.base_lr
                     * (local_batch as f64 / self.cfg.b_max as f64).sqrt().min(1.0);
                 let loss = self.model_fl_period(local_batch, local_lr as f32)?;
+                // comm-free barrier schemes bypass the round scheduler:
+                // every device realizes its prediction exactly
+                self.obs.audit_barrier_fill();
                 (barrier_report(loss, &plan, self.fleet.len(), b_total), self.lr_for_batch(b_total))
             }
             Scheme::Individual { .. } => {
                 let lr = self.lr_for_batch(b_total);
                 let loss = self.individual_period(&plan, lr as f32)?;
+                self.obs.audit_barrier_fill();
                 (barrier_report(loss, &plan, self.fleet.len(), b_total), lr)
             }
         };
@@ -864,6 +879,8 @@ impl<'a> Trainer<'a> {
             self.obs.observe("round.duration", report.duration);
             self.obs.gauge("train.loss", train_loss);
             self.obs.gauge("sim.time", t_end);
+            self.obs
+                .audit_end(report.duration, dl, b_total as u64, report.applied as u64);
             self.obs.snapshot(period as u64);
         }
         self.log.wall.total_secs += t_step.elapsed().as_secs_f64();
@@ -1376,9 +1393,12 @@ impl<'a> Trainer<'a> {
         self.restore_payload(&payload)
             .with_context(|| format!("restoring checkpoint {}", path.display()))?;
         // stamped at the restored clock: the trace shows where in
-        // simulated time the run picked back up
+        // simulated time the run picked back up, and the resume-period
+        // gauge lets a metrics reader split pre/post-resume snapshots
         self.obs.instant("ckpt_restore", "ckpt", 0, self.clock.now());
+        self.obs.instant("run.resumed", "ckpt", 0, self.clock.now());
         self.obs.inc("ckpt.restores", 1);
+        self.obs.gauge("ckpt.resume_period", self.server.period as f64);
         Ok(())
     }
 
@@ -1414,9 +1434,11 @@ fn scatter_plan(splan: Plan, ids: &[usize], k: usize) -> Plan {
     debug_assert_eq!(splan.batches.len(), ids.len());
     let mut batches = vec![0usize; k];
     let mut finish = vec![0f64; k];
+    let mut predicted = vec![crate::opt::types::PredictedTiming::default(); k];
     for (i, &g) in ids.iter().enumerate() {
         batches[g] = splan.batches[i];
         finish[g] = splan.finish[i];
+        predicted[g] = splan.predicted.get(i).copied().unwrap_or_default();
     }
     Plan {
         batches,
@@ -1424,6 +1446,7 @@ fn scatter_plan(splan: Plan, ids: &[usize], k: usize) -> Plan {
         t_up: splan.t_up,
         t_down: splan.t_down,
         finish,
+        predicted,
         predicted_efficiency: splan.predicted_efficiency,
     }
 }
@@ -1665,6 +1688,18 @@ mod tests {
         assert_eq!(m.counter("round.applied"), 16);
         assert_eq!(m.counter("round.dropped"), 0);
         assert_eq!(m.hist("round.duration").unwrap().total(), 4);
+        // the audit ledger closed one row per period, everyone applied
+        let audit = tr.obs().audit().unwrap();
+        assert_eq!(audit.rows().len(), 4);
+        for (i, row) in audit.rows().iter().enumerate() {
+            assert_eq!(row.period, i as u64 + 1);
+            assert_eq!(row.devices.len(), 4);
+            assert!(row
+                .devices
+                .iter()
+                .all(|d| d.outcome == crate::obs::Outcome::Applied));
+        }
+        assert_eq!(tr.export_audit().lines().count(), 4);
     }
 
     #[test]

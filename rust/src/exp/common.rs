@@ -265,6 +265,8 @@ pub struct HierRun {
     pub trace: Option<String>,
     /// per-period metrics snapshots as JSONL (only when traced)
     pub metrics: Option<String>,
+    /// predicted-vs-realized audit ledger as JSONL (only when traced)
+    pub audit: Option<String>,
 }
 
 /// Run one scheme through the hierarchical topology the experiment
@@ -352,6 +354,7 @@ pub fn run_hier_scheme_traced(
         sim_time: tr.sim_time(),
         trace: obs.then(|| tr.export_trace()),
         metrics: obs.then(|| tr.export_metrics()),
+        audit: obs.then(|| tr.export_audit()),
     })
 }
 

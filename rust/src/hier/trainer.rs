@@ -220,6 +220,19 @@ impl<'a> HierTrainer<'a> {
         obs::merge_snaps(&parts)
     }
 
+    /// Every cell's predicted-vs-realized audit ledger plus the cloud
+    /// tier's merge rows, as one JSONL stream ordered by (period, cell) —
+    /// cloud rows key their tau-block as the period coordinate, matching
+    /// the cloud metrics snapshots.
+    pub fn export_audit(&self) -> String {
+        let mut parts: Vec<&obs::AuditLedger> =
+            self.cells.iter().filter_map(|c| c.obs().audit()).collect();
+        if let Some(led) = self.obs.audit() {
+            parts.push(led);
+        }
+        obs::merge_audit(&parts)
+    }
+
     /// The cloud tier's observability sink.
     pub fn obs(&self) -> &ObsSink {
         &self.obs
@@ -380,6 +393,7 @@ impl<'a> HierTrainer<'a> {
             );
             self.obs.inc("cloud.merges", 1);
             self.obs.gauge("sim.time", t_cloud);
+            self.obs.audit_cloud(self.blocks, t_cloud, merged);
             self.obs.snapshot(self.blocks);
         }
         Ok(())
@@ -470,7 +484,9 @@ impl<'a> HierTrainer<'a> {
             .with_context(|| format!("restoring checkpoint {}", path.display()))?;
         let t = self.sim_time();
         self.obs.instant("ckpt_restore", "ckpt", 0, t);
+        self.obs.instant("run.resumed", "ckpt", 0, t);
         self.obs.inc("ckpt.restores", 1);
+        self.obs.gauge("ckpt.resume_period", self.blocks as f64);
         Ok(())
     }
 

@@ -1,0 +1,474 @@
+//! The audit ledger: predicted-vs-realized round accounting.
+//!
+//! The optimizer predicts where every device's simulated seconds go
+//! (compute, slotted upload, TDMA share — captured on the `Plan` as
+//! [`PredictedTiming`](crate::opt::PredictedTiming) rows); the round
+//! scheduler then realizes perturbed arrivals and outcomes. The ledger
+//! records both sides, per period and per device, so `feel audit` can
+//! derive learning efficiency (loss decrement ÷ simulated seconds, the
+//! paper's eq. 15 measured instead of predicted), compute/comm/wait
+//! decomposition, bandwidth utilization, and straggler regret
+//! (realized ÷ predicted).
+//!
+//! Discipline matches the rest of `obs`: the ledger lives inside
+//! `ObsSink`'s `Option`, records simulated time only, never draws RNG,
+//! and never touches numerics — so collection is bitwise invisible in the
+//! `TrainLog` and its JSONL export is byte-identical at any thread count
+//! (pinned in `tests/observability.rs`).
+
+use crate::coordinator::scheme::Plan;
+use crate::util::json::{num, obj, s, Json};
+
+/// How one device's planned contribution resolved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// planned (or dispatched) but not resolved by the period close —
+    /// async in-flight work resolves into its *source* period's row later
+    Pending,
+    /// gradient entered the aggregate
+    Applied,
+    /// payload arrived corrupt and the quarantine kept it out
+    Quarantined,
+    /// lost to straggler dropout
+    Dropped,
+    /// unreachable in a fault-injected crash window
+    Crashed,
+    /// missed the deadline; batch carried into the device's next period
+    Late,
+}
+
+impl Outcome {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Outcome::Pending => "pending",
+            Outcome::Applied => "applied",
+            Outcome::Quarantined => "quarantined",
+            Outcome::Dropped => "dropped",
+            Outcome::Crashed => "crashed",
+            Outcome::Late => "late",
+        }
+    }
+}
+
+/// One device's predicted and realized accounting for one period.
+#[derive(Clone, Debug)]
+pub struct DeviceAudit {
+    pub device: usize,
+    /// planned batch (post-carry — what the scheduler executed against)
+    pub batch: usize,
+    /// predicted local compute seconds (post-carry)
+    pub p_compute: f64,
+    /// predicted slotted upload seconds (+inf = no slot)
+    pub p_comm: f64,
+    /// predicted TDMA slot share in [0, 1]
+    pub p_slot: f64,
+    /// predicted arrival, seconds from period start (the plan's clamped
+    /// nominal finish time)
+    pub p_finish: f64,
+    /// realized arrival, seconds from period start (None: never arrived)
+    pub r_finish: Option<f64>,
+    pub outcome: Outcome,
+    /// rounds the gradient waited before application (async only)
+    pub staleness: Option<u64>,
+    /// batch deferred into the next period by a deadline miss
+    pub carry: usize,
+}
+
+/// One period's full predicted-vs-realized row.
+#[derive(Clone, Debug)]
+pub struct PeriodAudit {
+    /// 1-based period number (matches `PeriodRecord.period`)
+    pub period: u64,
+    pub cell: usize,
+    /// simulated time at period start
+    pub t_start: f64,
+    /// predicted uplink makespan
+    pub p_t_up: f64,
+    /// predicted downlink makespan
+    pub p_t_down: f64,
+    /// predicted end-to-end period latency
+    pub p_t_period: f64,
+    /// the optimizer's predicted learning efficiency (if it ran)
+    pub p_efficiency: Option<f64>,
+    /// realized period duration (simulated seconds)
+    pub r_duration: f64,
+    pub b_total: u64,
+    pub applied: u64,
+    /// realized loss decrement this period
+    pub loss_dec: f64,
+    pub devices: Vec<DeviceAudit>,
+}
+
+/// One cloud-merge event in the hier trainer's cloud lane.
+#[derive(Clone, Copy, Debug)]
+pub struct CloudAudit {
+    /// 1-based tau-block number (matches the cloud metrics snapshot)
+    pub block: u64,
+    /// barrier time of the merge (slowest cell's clock)
+    pub t_cloud: f64,
+    /// cells that contributed to the merge
+    pub cells: usize,
+}
+
+/// One rendered JSONL line with its merge key, mirroring
+/// [`Snap`](crate::obs::metrics::Snap).
+#[derive(Clone, Debug)]
+pub struct AuditLine {
+    pub period: u64,
+    pub cell: usize,
+    pub line: String,
+}
+
+/// Per-run audit ledger: one [`PeriodAudit`] row per training period plus
+/// (on the hier cloud sink) one [`CloudAudit`] row per tau-block.
+#[derive(Clone, Debug, Default)]
+pub struct AuditLedger {
+    cell: usize,
+    rows: Vec<PeriodAudit>,
+    cloud: Vec<CloudAudit>,
+}
+
+fn jnum(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+impl AuditLedger {
+    pub fn new(cell: usize) -> AuditLedger {
+        AuditLedger { cell, rows: Vec::new(), cloud: Vec::new() }
+    }
+
+    /// Open a period row from the plan: one device entry per planned
+    /// participant (`batches[d] > 0`; a sampled-out device holds no row).
+    /// Call after the carry ledger was folded in, so the predicted side is
+    /// what the scheduler actually executes against.
+    pub fn begin(&mut self, period: u64, t_start: f64, plan: &Plan) {
+        let devices = plan
+            .batches
+            .iter()
+            .enumerate()
+            .filter(|&(_, &b)| b > 0)
+            .map(|(d, &b)| DeviceAudit {
+                device: d,
+                batch: b,
+                p_compute: plan.predicted.get(d).map_or(0.0, |p| p.compute),
+                p_comm: plan.predicted.get(d).map_or(0.0, |p| p.comm),
+                p_slot: plan.predicted.get(d).map_or(0.0, |p| p.slot_share),
+                p_finish: plan.finish.get(d).copied().unwrap_or(0.0),
+                r_finish: None,
+                outcome: Outcome::Pending,
+                staleness: None,
+                carry: 0,
+            })
+            .collect();
+        self.rows.push(PeriodAudit {
+            period,
+            cell: self.cell,
+            t_start,
+            p_t_up: plan.t_up,
+            p_t_down: plan.t_down,
+            p_t_period: plan.t_period,
+            p_efficiency: plan.predicted_efficiency,
+            r_duration: 0.0,
+            b_total: 0,
+            applied: 0,
+            loss_dec: 0.0,
+            devices,
+        })
+    }
+
+    fn open_device(&mut self, d: usize) -> Option<&mut DeviceAudit> {
+        self.rows
+            .last_mut()
+            .and_then(|row| row.devices.iter_mut().find(|da| da.device == d))
+    }
+
+    /// Realized arrival of device `d` in the open period, seconds from
+    /// period start.
+    pub fn arrival(&mut self, d: usize, t_rel: f64) {
+        if let Some(da) = self.open_device(d) {
+            da.r_finish = Some(t_rel);
+        }
+    }
+
+    /// Resolve device `d`'s outcome in the open period.
+    pub fn outcome(&mut self, d: usize, outcome: Outcome) {
+        if let Some(da) = self.open_device(d) {
+            da.outcome = outcome;
+        }
+    }
+
+    /// Record a deadline-miss carry for device `d` in the open period.
+    pub fn carry(&mut self, d: usize, batches: usize) {
+        if let Some(da) = self.open_device(d) {
+            da.carry = batches;
+        }
+    }
+
+    /// Resolve an async contribution into its *source* period's row.
+    /// `src_round` is the scheduler's round coordinate (the trainer's
+    /// pre-increment period counter — row number minus one). A source row
+    /// from before the ledger existed (resume, obs enabled mid-run) is
+    /// silently absent.
+    pub fn resolve(&mut self, d: usize, src_round: u64, outcome: Outcome, staleness: Option<u64>) {
+        let period = src_round + 1;
+        if let Some(row) = self.rows.iter_mut().rev().find(|r| r.period == period) {
+            if let Some(da) = row.devices.iter_mut().find(|da| da.device == d) {
+                da.outcome = outcome;
+                da.staleness = staleness;
+            }
+        }
+    }
+
+    /// Barrier-scheme fill (ModelFl / Individual bypass the round
+    /// scheduler): every unresolved device arrived exactly on its nominal
+    /// finish and was applied.
+    pub fn barrier_fill(&mut self) {
+        if let Some(row) = self.rows.last_mut() {
+            for da in &mut row.devices {
+                if da.outcome == Outcome::Pending && da.r_finish.is_none() {
+                    da.r_finish = Some(da.p_finish);
+                    da.outcome = Outcome::Applied;
+                }
+            }
+        }
+    }
+
+    /// Close the open period row with the realized round totals.
+    pub fn end(&mut self, duration: f64, loss_dec: f64, b_total: u64, applied: u64) {
+        if let Some(row) = self.rows.last_mut() {
+            row.r_duration = duration;
+            row.loss_dec = loss_dec;
+            row.b_total = b_total;
+            row.applied = applied;
+        }
+    }
+
+    /// Record one cloud merge (hier cloud lane; `block` is 1-based).
+    pub fn cloud_merge(&mut self, block: u64, t_cloud: f64, cells: usize) {
+        self.cloud.push(CloudAudit { block, t_cloud, cells });
+    }
+
+    pub fn rows(&self) -> &[PeriodAudit] {
+        &self.rows
+    }
+
+    pub fn cloud(&self) -> &[CloudAudit] {
+        &self.cloud
+    }
+
+    /// Render every row as a JSONL line with its `(period, cell)` merge
+    /// key. Cloud rows key on their block number (the cloud snapshot
+    /// convention), so a merged stream interleaves them deterministically.
+    pub fn lines(&self) -> Vec<AuditLine> {
+        let mut out = Vec::with_capacity(self.rows.len() + self.cloud.len());
+        for row in &self.rows {
+            out.push(AuditLine {
+                period: row.period,
+                cell: row.cell,
+                line: period_json(row).to_string(),
+            });
+        }
+        for c in &self.cloud {
+            out.push(AuditLine {
+                period: c.block,
+                cell: self.cell,
+                line: cloud_json(c, self.cell).to_string(),
+            });
+        }
+        out
+    }
+
+    /// This ledger's rows alone as one JSONL document.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for l in self.lines() {
+            out.push_str(&l.line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn device_json(da: &DeviceAudit) -> Json {
+    obj(vec![
+        ("batch", num(da.batch as f64)),
+        ("carry", num(da.carry as f64)),
+        ("device", num(da.device as f64)),
+        ("outcome", s(da.outcome.label())),
+        ("p_comm", jnum(da.p_comm)),
+        ("p_compute", jnum(da.p_compute)),
+        ("p_finish", jnum(da.p_finish)),
+        ("p_slot", jnum(da.p_slot)),
+        ("r_finish", da.r_finish.map_or(Json::Null, jnum)),
+        ("staleness", da.staleness.map_or(Json::Null, |v| num(v as f64))),
+    ])
+}
+
+fn period_json(row: &PeriodAudit) -> Json {
+    obj(vec![
+        ("applied", num(row.applied as f64)),
+        ("b_total", num(row.b_total as f64)),
+        ("cell", num(row.cell as f64)),
+        ("devices", Json::Arr(row.devices.iter().map(device_json).collect())),
+        ("kind", s("period")),
+        ("loss_dec", jnum(row.loss_dec)),
+        ("p_efficiency", row.p_efficiency.map_or(Json::Null, jnum)),
+        ("p_t_down", jnum(row.p_t_down)),
+        ("p_t_period", jnum(row.p_t_period)),
+        ("p_t_up", jnum(row.p_t_up)),
+        ("period", num(row.period as f64)),
+        ("r_duration", jnum(row.r_duration)),
+        ("t_start", jnum(row.t_start)),
+    ])
+}
+
+fn cloud_json(c: &CloudAudit, cell: usize) -> Json {
+    obj(vec![
+        ("block", num(c.block as f64)),
+        ("cell", num(cell as f64)),
+        ("cells", num(c.cells as f64)),
+        ("kind", s("cloud")),
+        ("t_cloud", jnum(c.t_cloud)),
+    ])
+}
+
+/// Merge per-cell ledgers (plus the hier cloud ledger) into one JSONL
+/// document ordered by `(period, cell)` — the same stable-sort convention
+/// as [`merge_snaps`](crate::obs::metrics::merge_snaps).
+pub fn merge_audit(parts: &[&AuditLedger]) -> String {
+    let mut all: Vec<AuditLine> = parts.iter().flat_map(|p| p.lines()).collect();
+    all.sort_by_key(|l| (l.period, l.cell));
+    let mut out = String::new();
+    for l in all {
+        out.push_str(&l.line);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::types::PredictedTiming;
+
+    fn plan(k: usize) -> Plan {
+        Plan {
+            batches: vec![10; k],
+            t_period: 1.2,
+            t_up: 1.0,
+            t_down: 0.2,
+            finish: vec![0.9; k],
+            predicted: vec![
+                PredictedTiming { compute: 0.5, comm: 0.4, slot_share: 1.0 / k as f64 };
+                k
+            ],
+            predicted_efficiency: Some(0.05),
+        }
+    }
+
+    #[test]
+    fn ledger_records_a_full_period_roundtrip() {
+        let mut led = AuditLedger::new(0);
+        led.begin(1, 0.0, &plan(3));
+        led.arrival(0, 0.9);
+        led.outcome(0, Outcome::Applied);
+        led.outcome(1, Outcome::Dropped);
+        led.arrival(2, 1.3);
+        led.outcome(2, Outcome::Late);
+        led.carry(2, 10);
+        led.end(1.45, 0.02, 20, 1);
+        let row = &led.rows()[0];
+        assert_eq!(row.period, 1);
+        assert_eq!(row.devices.len(), 3);
+        assert_eq!(row.devices[0].r_finish, Some(0.9));
+        assert_eq!(row.devices[0].outcome, Outcome::Applied);
+        assert_eq!(row.devices[1].r_finish, None);
+        assert_eq!(row.devices[1].outcome, Outcome::Dropped);
+        assert_eq!(row.devices[2].carry, 10);
+        assert_eq!(row.r_duration, 1.45);
+        assert_eq!(row.applied, 1);
+        // hooks on a device outside the row are silent no-ops
+        led.arrival(9, 1.0);
+        led.outcome(9, Outcome::Applied);
+    }
+
+    #[test]
+    fn resolve_lands_in_the_source_period_row() {
+        let mut led = AuditLedger::new(0);
+        led.begin(1, 0.0, &plan(2));
+        led.arrival(1, 0.9);
+        led.end(1.2, 0.01, 20, 1);
+        led.begin(2, 1.2, &plan(2));
+        // device 1's round-0 dispatch applies two rounds later, stale
+        led.resolve(1, 0, Outcome::Applied, Some(2));
+        assert_eq!(led.rows()[0].devices[1].outcome, Outcome::Applied);
+        assert_eq!(led.rows()[0].devices[1].staleness, Some(2));
+        assert_eq!(led.rows()[1].devices[1].outcome, Outcome::Pending);
+        // a source round before the ledger existed is silently absent
+        led.resolve(0, 99, Outcome::Applied, Some(1));
+    }
+
+    #[test]
+    fn barrier_fill_realizes_the_prediction_exactly() {
+        let mut led = AuditLedger::new(0);
+        led.begin(1, 0.0, &plan(2));
+        led.barrier_fill();
+        led.end(1.2, 0.01, 20, 2);
+        for da in &led.rows()[0].devices {
+            assert_eq!(da.r_finish, Some(da.p_finish));
+            assert_eq!(da.outcome, Outcome::Applied);
+        }
+    }
+
+    #[test]
+    fn zero_batch_devices_hold_no_row() {
+        let mut p = plan(3);
+        p.batches[1] = 0;
+        let mut led = AuditLedger::new(0);
+        led.begin(1, 0.0, &p);
+        let ids: Vec<usize> = led.rows()[0].devices.iter().map(|d| d.device).collect();
+        assert_eq!(ids, vec![0, 2]);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_merge_orders_by_period_then_cell() {
+        let mut a = AuditLedger::new(0);
+        a.begin(1, 0.0, &plan(1));
+        a.end(1.2, 0.01, 10, 1);
+        a.begin(2, 1.2, &plan(1));
+        a.end(1.2, 0.01, 10, 1);
+        let mut b = AuditLedger::new(1);
+        b.begin(1, 0.0, &plan(1));
+        b.end(1.3, 0.02, 10, 1);
+        let mut cloud = AuditLedger::new(2);
+        cloud.cloud_merge(1, 1.3, 2);
+        let merged = merge_audit(&[&a, &b, &cloud]);
+        let lines: Vec<&str> = merged.lines().collect();
+        assert_eq!(lines.len(), 4);
+        for line in &lines {
+            Json::parse(line).unwrap();
+        }
+        // (1, cell 0), (1, cell 1), (1, cloud on lane 2), (2, cell 0)
+        let key = |l: &str| {
+            let v = Json::parse(l).unwrap();
+            let p = v.get("period").or_else(|| v.get("block")).and_then(Json::as_usize);
+            (p, v.get("cell").and_then(Json::as_usize))
+        };
+        assert_eq!(key(lines[0]), (Some(1), Some(0)));
+        assert_eq!(key(lines[1]), (Some(1), Some(1)));
+        assert_eq!(key(lines[2]), (Some(1), Some(2)));
+        assert_eq!(key(lines[3]), (Some(2), Some(0)));
+        // non-finite predictions render as null, not bare inf
+        let mut p = plan(1);
+        p.predicted[0].comm = f64::INFINITY;
+        let mut led = AuditLedger::new(0);
+        led.begin(1, 0.0, &p);
+        let line = led.to_jsonl();
+        assert!(line.contains("\"p_comm\":null"), "{line}");
+        Json::parse(line.trim()).unwrap();
+    }
+}

@@ -1,0 +1,288 @@
+//! Learning-efficiency derivations over an audit JSONL dump — the
+//! `feel audit` backend.
+//!
+//! Consumes the ledger rows `obs/audit.rs` exports and derives, per
+//! period: realized learning efficiency (loss decrement ÷ simulated
+//! seconds, the paper's eq. 15 measured), the predicted compute/comm/wait
+//! decomposition of the uplink subperiod, bandwidth utilization (sum of
+//! TDMA slot shares), and straggler regret (realized ÷ predicted period
+//! time). The run-level summary aggregates these plus outcome tallies.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// One period row's derived quantities.
+#[derive(Clone, Debug)]
+pub struct PeriodEfficiency {
+    pub period: u64,
+    pub cell: usize,
+    pub b_total: f64,
+    pub applied: f64,
+    /// realized learning efficiency: loss decrement / realized seconds
+    pub efficiency: f64,
+    /// predicted end-to-end period latency
+    pub t_pred: f64,
+    /// realized period duration
+    pub t_real: f64,
+    /// straggler regret: realized / predicted period time (1.0 = the
+    /// clean barrier case; 0.0 when the prediction is degenerate)
+    pub regret: f64,
+    /// sum of participants' TDMA slot shares (1.0 = full frame used)
+    pub bw_util: f64,
+    /// participant-summed predicted uplink seconds, decomposed
+    pub compute_secs: f64,
+    pub comm_secs: f64,
+    pub wait_secs: f64,
+}
+
+/// Outcome tallies across every device row.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OutcomeTally {
+    pub applied: u64,
+    pub quarantined: u64,
+    pub dropped: u64,
+    pub crashed: u64,
+    pub late: u64,
+    pub pending: u64,
+}
+
+fn f(v: &Json, key: &str) -> f64 {
+    v.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+/// Derive one period row. The decomposition charges each participant its
+/// predicted compute and upload seconds (upload capped at the makespan
+/// headroom, so a slotless +inf renders as "the rest of the subperiod")
+/// and books the remainder of the uplink makespan as wait.
+fn derive_period(v: &Json) -> PeriodEfficiency {
+    let t_pred = f(v, "p_t_period");
+    let t_real = f(v, "r_duration");
+    let loss_dec = f(v, "loss_dec");
+    let t_up = f(v, "p_t_up");
+    let mut bw_util = 0.0;
+    let mut compute_secs = 0.0;
+    let mut comm_secs = 0.0;
+    let mut wait_secs = 0.0;
+    if let Some(devices) = v.get("devices").and_then(Json::as_arr) {
+        for d in devices {
+            bw_util += f(d, "p_slot");
+            let compute = f(d, "p_compute").min(t_up);
+            // null p_comm (no slot) reads as 0.0 and is then capped into
+            // the headroom — an infinite upload never arrives, so its
+            // whole remaining subperiod is communication stall
+            let comm = match d.get("p_comm").and_then(Json::as_f64) {
+                Some(c) => c.min((t_up - compute).max(0.0)),
+                None => (t_up - compute).max(0.0),
+            };
+            compute_secs += compute;
+            comm_secs += comm;
+            wait_secs += (t_up - compute - comm).max(0.0);
+        }
+    }
+    PeriodEfficiency {
+        period: f(v, "period") as u64,
+        cell: f(v, "cell") as usize,
+        b_total: f(v, "b_total"),
+        applied: f(v, "applied"),
+        efficiency: if t_real > 0.0 { loss_dec / t_real } else { 0.0 },
+        t_pred,
+        t_real,
+        regret: if t_pred > 0.0 { t_real / t_pred } else { 0.0 },
+        bw_util,
+        compute_secs,
+        comm_secs,
+        wait_secs,
+    }
+}
+
+fn tally_outcomes(v: &Json, tally: &mut OutcomeTally, stale: &mut (f64, u64)) {
+    if let Some(devices) = v.get("devices").and_then(Json::as_arr) {
+        for d in devices {
+            match d.get("outcome").and_then(Json::as_str) {
+                Some("applied") => tally.applied += 1,
+                Some("quarantined") => tally.quarantined += 1,
+                Some("dropped") => tally.dropped += 1,
+                Some("crashed") => tally.crashed += 1,
+                Some("late") => tally.late += 1,
+                _ => tally.pending += 1,
+            }
+            if let Some(s) = d.get("staleness").and_then(Json::as_f64) {
+                stale.0 += s;
+                stale.1 += 1;
+            }
+        }
+    }
+}
+
+/// `feel audit` backend: parse an audit JSONL dump into a per-period table
+/// plus a run-level efficiency summary (the `feel report` rendering
+/// style).
+pub fn summarize_audit_jsonl(src: &str) -> Result<String> {
+    let mut periods: Vec<PeriodEfficiency> = Vec::new();
+    let mut tally = OutcomeTally::default();
+    let mut stale = (0.0f64, 0u64);
+    let mut cells: BTreeMap<usize, ()> = BTreeMap::new();
+    let mut cloud_merges = 0usize;
+    for (i, line) in src.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| anyhow!("audit line {}: {e}", i + 1))?;
+        match v.get("kind").and_then(Json::as_str) {
+            Some("period") => {
+                let p = derive_period(&v);
+                cells.insert(p.cell, ());
+                tally_outcomes(&v, &mut tally, &mut stale);
+                periods.push(p);
+            }
+            Some("cloud") => cloud_merges += 1,
+            _ => bail!("audit line {}: missing kind", i + 1),
+        }
+    }
+    if periods.is_empty() {
+        bail!("no audit period rows found");
+    }
+
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "audit report — {} period(s), {} cell(s), {cloud_merges} cloud merge(s)",
+        periods.len(),
+        cells.len(),
+    );
+    let _ = writeln!(
+        out,
+        "\n  {:>6} {:>5} {:>8} {:>8} {:>12} {:>11} {:>11} {:>8} {:>8}",
+        "period", "cell", "b_total", "applied", "efficiency", "t_pred", "t_real", "regret",
+        "bw_util"
+    );
+    for p in &periods {
+        let _ = writeln!(
+            out,
+            "  {:>6} {:>5} {:>8.0} {:>8.0} {:>12.6} {:>11.6} {:>11.6} {:>8.3} {:>8.3}",
+            p.period, p.cell, p.b_total, p.applied, p.efficiency, p.t_pred, p.t_real, p.regret,
+            p.bw_util
+        );
+    }
+
+    let n = periods.len() as f64;
+    let eff_mean = periods.iter().map(|p| p.efficiency).sum::<f64>() / n;
+    let regret_mean = periods.iter().map(|p| p.regret).sum::<f64>() / n;
+    let regret_max = periods.iter().map(|p| p.regret).fold(0.0f64, f64::max);
+    let bw_mean = periods.iter().map(|p| p.bw_util).sum::<f64>() / n;
+    let compute: f64 = periods.iter().map(|p| p.compute_secs).sum();
+    let comm: f64 = periods.iter().map(|p| p.comm_secs).sum();
+    let wait: f64 = periods.iter().map(|p| p.wait_secs).sum();
+    let up_total = (compute + comm + wait).max(f64::MIN_POSITIVE);
+    let _ = writeln!(out, "\nrun summary:");
+    let _ = writeln!(
+        out,
+        "  {:<24} {eff_mean:>12.6}   (loss decrement / simulated second)",
+        "efficiency (mean)"
+    );
+    let _ = writeln!(
+        out,
+        "  {:<24} compute {:>5.1}%  comm {:>5.1}%  wait {:>5.1}%   (predicted uplink budget)",
+        "time decomposition",
+        100.0 * compute / up_total,
+        100.0 * comm / up_total,
+        100.0 * wait / up_total,
+    );
+    let _ = writeln!(
+        out,
+        "  {:<24} mean {regret_mean:>8.3}  max {regret_max:>8.3}   (realized / predicted period)",
+        "straggler regret"
+    );
+    let _ = writeln!(
+        out,
+        "  {:<24} {bw_mean:>12.3}   (mean sum of TDMA slot shares)",
+        "bandwidth utilization"
+    );
+    let _ = writeln!(
+        out,
+        "  {:<24} applied {}  quarantined {}  dropped {}  crashed {}  late {}  pending {}",
+        "outcomes",
+        tally.applied,
+        tally.quarantined,
+        tally.dropped,
+        tally.crashed,
+        tally.late,
+        tally.pending,
+    );
+    if stale.1 > 0 {
+        let _ = writeln!(
+            out,
+            "  {:<24} {:>12.3}   (over {} stale appl{})",
+            "staleness (mean)",
+            stale.0 / stale.1 as f64,
+            stale.1,
+            if stale.1 == 1 { "ication" } else { "ications" },
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheme::Plan;
+    use crate::obs::audit::{AuditLedger, Outcome};
+    use crate::opt::types::PredictedTiming;
+
+    fn ledger() -> AuditLedger {
+        let plan = Plan {
+            batches: vec![10, 20],
+            t_period: 1.2,
+            t_up: 1.0,
+            t_down: 0.2,
+            finish: vec![0.9, 1.0],
+            predicted: vec![
+                PredictedTiming { compute: 0.5, comm: 0.4, slot_share: 0.5 },
+                PredictedTiming { compute: 0.7, comm: 0.3, slot_share: 0.5 },
+            ],
+            predicted_efficiency: Some(0.05),
+        };
+        let mut led = AuditLedger::new(0);
+        led.begin(1, 0.0, &plan);
+        led.arrival(0, 0.9);
+        led.outcome(0, Outcome::Applied);
+        led.arrival(1, 1.0);
+        led.outcome(1, Outcome::Applied);
+        led.end(1.2, 0.012, 30, 2);
+        led
+    }
+
+    #[test]
+    fn derives_efficiency_regret_and_decomposition() {
+        let report = summarize_audit_jsonl(&ledger().to_jsonl()).unwrap();
+        assert!(report.contains("1 period(s), 1 cell(s), 0 cloud merge(s)"), "{report}");
+        // efficiency = 0.012 / 1.2 = 0.01; zero regret case = ratio 1.000
+        assert!(report.contains("0.010000"), "{report}");
+        assert!(report.contains("1.000"), "{report}");
+        // full frame: both devices hold half the slots
+        assert!(report.contains("bandwidth utilization"), "{report}");
+        assert!(report.contains("applied 2"), "{report}");
+        // decomposition covers the whole predicted uplink budget:
+        // compute 0.5 + 0.7, comm 0.4 + 0.3, wait 0.1 + 0.0 over 2 s
+        assert!(report.contains("compute  60.0%"), "{report}");
+        assert!(report.contains("comm  35.0%"), "{report}");
+        assert!(report.contains("wait   5.0%"), "{report}");
+    }
+
+    #[test]
+    fn counts_cloud_rows_and_rejects_garbage() {
+        let mut led = ledger();
+        led.cloud_merge(1, 1.2, 3);
+        let report = summarize_audit_jsonl(&led.to_jsonl()).unwrap();
+        assert!(report.contains("1 cloud merge(s)"), "{report}");
+        assert!(summarize_audit_jsonl("").is_err());
+        assert!(summarize_audit_jsonl("not json\n").is_err());
+        assert!(summarize_audit_jsonl("{\"kind\":\"cloud\"}\n").is_err()); // no periods
+        assert!(summarize_audit_jsonl("{\"period\":1}\n").is_err()); // no kind
+    }
+}

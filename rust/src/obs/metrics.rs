@@ -209,12 +209,22 @@ impl MetricsRegistry {
 
     /// Record into `name`'s histogram, creating it with the default
     /// exponential buckets on first touch. NaN observations are dropped.
+    /// An observation past the last bound still records (into the +inf
+    /// overflow bucket) but also bumps the `obs.hist_overflow` counter, so
+    /// a silently saturated histogram is diagnosable from `feel report`.
     pub fn observe(&mut self, name: &'static str, v: f64) {
-        self.hists
+        let h = self
+            .hists
             .entry(name)
             // lint: allow(panic-path): default_bounds() is a fixed ascending literal
-            .or_insert_with(|| Histogram::new(default_bounds()).expect("default bounds are valid"))
-            .record(v);
+            .or_insert_with(|| Histogram::new(default_bounds()).expect("default bounds are valid"));
+        let overflowed = match h.bounds().last() {
+            Some(&top) => v > top, // false for NaN, true for +inf
+            None => false,
+        };
+        if h.record(v) && overflowed {
+            self.inc("obs.hist_overflow", 1);
+        }
     }
 
     /// Pre-register `name` with custom buckets (before any `observe`).
@@ -336,6 +346,15 @@ pub fn summarize_jsonl(src: &str) -> Result<String> {
         let _ = writeln!(out, "\ncounters (totals):");
         for (k, v) in &totals {
             let _ = writeln!(out, "  {k:<32} {v:>12.0}");
+        }
+    }
+    if let Some(&n) = totals.get("obs.hist_overflow") {
+        if n > 0.0 {
+            let _ = writeln!(
+                out,
+                "\nwarning: {n:.0} observation(s) landed in a +inf overflow bucket — \
+                 histogram bounds may be saturated"
+            );
         }
     }
 
@@ -493,6 +512,30 @@ mod tests {
                 "{\"cell\":1,\"period\":2}",
             ]
         );
+    }
+
+    #[test]
+    fn observe_counts_overflow_and_report_warns() {
+        let mut m = MetricsRegistry::default();
+        m.register_hist("lat", Histogram::new(vec![1.0, 2.0]).unwrap());
+        m.observe("lat", 0.5); // in range
+        m.observe("lat", 2.0); // exactly the last bound: not overflow
+        assert_eq!(m.counter("obs.hist_overflow"), 0);
+        m.observe("lat", 3.0); // past the last bound
+        m.observe("lat", f64::INFINITY); // +inf overflows too
+        m.observe("lat", f64::NAN); // dropped, never counted
+        assert_eq!(m.counter("obs.hist_overflow"), 2);
+        assert_eq!(m.hist("lat").unwrap().total(), 4);
+        m.snapshot(1, 0);
+        let report = summarize_jsonl(&m.to_jsonl()).unwrap();
+        assert!(report.contains("obs.hist_overflow"), "{report}");
+        assert!(report.contains("warning: 2 observation(s)"), "{report}");
+        // a clean run carries no warning
+        let mut clean = MetricsRegistry::default();
+        clean.observe("lat", 0.5);
+        clean.snapshot(1, 0);
+        let report = summarize_jsonl(&clean.to_jsonl()).unwrap();
+        assert!(!report.contains("warning"), "{report}");
     }
 
     #[test]

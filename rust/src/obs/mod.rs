@@ -14,12 +14,20 @@
 //!   devices to tids (coordinator = 0, device d = d + 1).
 //! - `metrics`: named counters/gauges/histograms snapshotted per period and
 //!   dumped as JSONL (`--metrics-out FILE`; summarize with `feel report`).
+//! - `audit`: the predicted-vs-realized round ledger, dumped as JSONL
+//!   (`--audit FILE`; summarize with `feel audit` via `efficiency`).
 
+pub mod audit;
+pub mod efficiency;
 pub mod metrics;
 pub mod trace;
 
+pub use audit::{merge_audit, AuditLedger, Outcome};
+pub use efficiency::summarize_audit_jsonl;
 pub use metrics::{merge_snaps, summarize_jsonl, Histogram, MetricsRegistry, Snap};
 pub use trace::{chrome_trace, merge_traces, TraceEvent};
+
+use crate::coordinator::scheme::Plan;
 
 /// Observability sink: disabled by default. Enabled, it records into one
 /// trace-event buffer and one metrics registry, stamping every event with
@@ -34,6 +42,7 @@ struct ObsInner {
     pid: usize,
     events: Vec<TraceEvent>,
     metrics: MetricsRegistry,
+    audit: AuditLedger,
 }
 
 impl ObsSink {
@@ -47,6 +56,7 @@ impl ObsSink {
                 pid,
                 events: Vec::new(),
                 metrics: MetricsRegistry::default(),
+                audit: AuditLedger::new(pid),
             })),
         }
     }
@@ -177,6 +187,87 @@ impl ObsSink {
             None => String::new(),
         }
     }
+
+    // -- audit -------------------------------------------------------------
+
+    /// Open a period's audit row from its (post-carry) plan. `period` is
+    /// the 1-based period number the row will report as.
+    pub fn audit_begin(&mut self, period: u64, t_start: f64, plan: &Plan) {
+        if let Some(inner) = &mut self.inner {
+            inner.audit.begin(period, t_start, plan);
+        }
+    }
+
+    /// Realized arrival of `device` in the open period row, seconds from
+    /// period start.
+    pub fn audit_arrival(&mut self, device: usize, t_rel: f64) {
+        if let Some(inner) = &mut self.inner {
+            inner.audit.arrival(device, t_rel);
+        }
+    }
+
+    /// Resolve `device`'s outcome in the open period row.
+    pub fn audit_outcome(&mut self, device: usize, outcome: Outcome) {
+        if let Some(inner) = &mut self.inner {
+            inner.audit.outcome(device, outcome);
+        }
+    }
+
+    /// Record a deadline-miss carry in the open period row.
+    pub fn audit_carry(&mut self, device: usize, batches: usize) {
+        if let Some(inner) = &mut self.inner {
+            inner.audit.carry(device, batches);
+        }
+    }
+
+    /// Resolve an async contribution into its source period's row;
+    /// `src_round` is the scheduler's round coordinate (pre-increment
+    /// period counter).
+    pub fn audit_resolve(
+        &mut self,
+        device: usize,
+        src_round: u64,
+        outcome: Outcome,
+        staleness: Option<u64>,
+    ) {
+        if let Some(inner) = &mut self.inner {
+            inner.audit.resolve(device, src_round, outcome, staleness);
+        }
+    }
+
+    /// Barrier-scheme fill: unresolved devices realized their prediction
+    /// exactly (ModelFl / Individual bypass the round scheduler).
+    pub fn audit_barrier_fill(&mut self) {
+        if let Some(inner) = &mut self.inner {
+            inner.audit.barrier_fill();
+        }
+    }
+
+    /// Close the open period row with the realized round totals.
+    pub fn audit_end(&mut self, duration: f64, loss_dec: f64, b_total: u64, applied: u64) {
+        if let Some(inner) = &mut self.inner {
+            inner.audit.end(duration, loss_dec, b_total, applied);
+        }
+    }
+
+    /// Record one cloud merge on the hier cloud lane (1-based block).
+    pub fn audit_cloud(&mut self, block: u64, t_cloud: f64, cells: usize) {
+        if let Some(inner) = &mut self.inner {
+            inner.audit.cloud_merge(block, t_cloud, cells);
+        }
+    }
+
+    pub fn audit(&self) -> Option<&AuditLedger> {
+        self.inner.as_deref().map(|inner| &inner.audit)
+    }
+
+    /// Audit JSONL for this sink alone (empty when disabled).
+    pub fn audit_jsonl(&self) -> String {
+        match &self.inner {
+            Some(inner) => inner.audit.to_jsonl(),
+            None => String::new(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -191,11 +282,17 @@ mod tests {
         sink.inc("round.applied", 1);
         sink.observe("round.duration", 1.0);
         sink.snapshot(1);
+        sink.audit_arrival(0, 1.0);
+        sink.audit_outcome(0, Outcome::Applied);
+        sink.audit_end(1.0, 0.1, 10, 1);
+        sink.audit_cloud(1, 2.0, 3);
         assert!(!sink.is_enabled());
         assert!(sink.events().is_empty());
         assert!(sink.snaps().is_empty());
         assert!(sink.metrics().is_none());
+        assert!(sink.audit().is_none());
         assert_eq!(sink.to_jsonl(), "");
+        assert_eq!(sink.audit_jsonl(), "");
     }
 
     #[test]
@@ -211,5 +308,10 @@ mod tests {
         assert_eq!(sink.snaps()[0].cell, 3);
         assert_eq!(sink.snaps()[0].period, 7);
         assert_eq!(sink.metrics().unwrap().counter("agg.quarantined"), 1);
+        // the audit ledger snapshots the sink's cell id too
+        sink.audit_cloud(1, 0.5, 2);
+        let audit = sink.audit().unwrap();
+        assert_eq!(audit.cloud().len(), 1);
+        assert!(sink.audit_jsonl().contains("\"cell\":3"));
     }
 }

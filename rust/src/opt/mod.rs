@@ -22,5 +22,5 @@ pub mod uplink;
 pub use baselines::BatchPolicy;
 pub use downlink::{solve_downlink, DownlinkSol};
 pub use global::{solve, solve_fixed_batch, GlobalSol};
-pub use types::{DeviceInst, Instance, Solution};
+pub use types::{predicted_timings, DeviceInst, Instance, PredictedTiming, Solution};
 pub use uplink::{solve_uplink, UplinkSol};

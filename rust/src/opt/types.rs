@@ -175,6 +175,50 @@ impl Instance {
     }
 }
 
+/// The optimizer's per-device timing prediction for one period: where the
+/// plan expects each device's simulated seconds to go. Captured on the
+/// `Plan` so the audit ledger can hold predicted values against the
+/// scheduler's realized ones (`obs/audit.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PredictedTiming {
+    /// local gradient-computation time `offset + B/V` (s)
+    pub compute: f64,
+    /// slotted upload time `bits * T_f / (tau * R)` (s); +inf when the
+    /// device holds no slot (mirrors the finish-time convention), 0 for
+    /// communication-free schemes
+    pub comm: f64,
+    /// TDMA slot share `tau / T_f` in [0, 1]; 0 when the device holds no
+    /// slot
+    pub slot_share: f64,
+}
+
+/// Predicted per-device timings under the slot vector `tau_ul` for an
+/// upload of `bits` per device — the same affine-compute + slotted-upload
+/// terms [`uplink_finish_times`](crate::coordinator::scheme) folds into
+/// arrival times, kept separate here so the audit ledger can decompose a
+/// period into compute vs communication.
+pub fn predicted_timings(
+    inst: &Instance,
+    batches: &[f64],
+    tau_ul: &[f64],
+    bits: f64,
+) -> Vec<PredictedTiming> {
+    inst.devices
+        .iter()
+        .zip(batches)
+        .zip(tau_ul)
+        .map(|((d, &b), &tk)| PredictedTiming {
+            compute: d.offset + b / d.speed,
+            comm: if tk > 0.0 {
+                bits * inst.frame_ul / (tk * d.rate_ul)
+            } else {
+                f64::INFINITY
+            },
+            slot_share: if tk > 0.0 { tk / inst.frame_ul } else { 0.0 },
+        })
+        .collect()
+}
+
 /// Joint solution of one period's allocation problem.
 #[derive(Clone, Debug)]
 pub struct Solution {
@@ -354,6 +398,32 @@ mod tests {
         let inst = test_instance(3);
         let q = quantize(&[0.2, 0.9, 1.9], &inst);
         assert!(q.iter().all(|&b| b >= 1));
+    }
+
+    #[test]
+    fn predicted_timings_decompose_compute_and_comm() {
+        let inst = test_instance(3);
+        let batches = vec![20.0, 40.0, 60.0];
+        let tau = vec![0.004, 0.003, 0.0];
+        let pts = predicted_timings(&inst, &batches, &tau, 1e5);
+        assert_eq!(pts.len(), 3);
+        // compute is the affine latency, bitwise
+        for (k, pt) in pts.iter().enumerate() {
+            assert_eq!(pt.compute.to_bits(), inst.grad_latency(k, batches[k]).to_bits());
+        }
+        // a positive slot prices the upload; slot share is tau / frame
+        assert!((pts[0].comm - 1e5 * 0.01 / (0.004 * inst.devices[0].rate_ul)).abs() < 1e-12);
+        assert!((pts[0].slot_share - 0.4).abs() < 1e-12);
+        // a zero slot never uploads: +inf comm, zero share
+        assert_eq!(pts[2].comm, f64::INFINITY);
+        assert_eq!(pts[2].slot_share, 0.0);
+        // the default is the all-zero row (scatter filler for unsampled
+        // devices)
+        assert_eq!(PredictedTiming::default(), PredictedTiming {
+            compute: 0.0,
+            comm: 0.0,
+            slot_share: 0.0
+        });
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::device::StragglerModel;
 use crate::exec::{self, Engine};
 use crate::fault::FaultPlan;
 use crate::grad::{Aggregator, GradGuard};
-use crate::obs::ObsSink;
+use crate::obs::{ObsSink, Outcome};
 use crate::opt::types::Instance;
 
 /// One buffered async contribution, computed at dispatch time against the
@@ -224,7 +224,9 @@ impl RoundScheduler {
     /// period and the device would livelock out of the training run).
     /// Carry beyond the caps is forfeited. A crashed device's carry stays
     /// in the ledger until it rejoins (wiped if the rejoin is cold).
-    /// No-op for non-deadline policies.
+    /// No-op for non-deadline policies. The plan's predicted compute grows
+    /// with the finish time so the audit row still reflects what was
+    /// actually scheduled.
     pub fn apply_carry(&mut self, plan: &mut Plan, inst: &Instance, period: u64) {
         self.wipe_cold_rejoin_carry(period);
         let RoundPolicy::Deadline { factor } = self.policy else {
@@ -247,6 +249,9 @@ impl RoundScheduler {
             if added > 0 {
                 plan.batches[k] = grown;
                 plan.finish[k] += added as f64 / d.speed;
+                if let Some(pt) = plan.predicted.get_mut(k) {
+                    pt.compute += added as f64 / d.speed;
+                }
             }
             *c = 0; // a re-miss re-adds the (grown) batch
         }
@@ -285,6 +290,9 @@ impl RoundScheduler {
             if added > 0 {
                 plan.batches[g] = grown;
                 plan.finish[g] += added as f64 / d.speed;
+                if let Some(pt) = plan.predicted.get_mut(g) {
+                    pt.compute += added as f64 / d.speed;
+                }
             }
             *c = 0;
         }
@@ -421,6 +429,7 @@ impl RoundScheduler {
                 mask[d] = false;
                 crashed += 1;
                 obs.instant("crash", "fault", d + 1, now);
+                obs.audit_outcome(d, Outcome::Crashed);
                 return;
             }
             let pert = straggler.sample(seed, period, d as u64);
@@ -428,11 +437,13 @@ impl RoundScheduler {
                 mask[d] = false;
                 dropped += 1;
                 obs.instant("drop", "straggler", d + 1, now);
+                obs.audit_outcome(d, Outcome::Dropped);
                 return;
             }
             let dur = plan.finish[d] * pert.slowdown;
             obs.span_arg("round", "device", d + 1, now, dur, &[("batch", plan.batches[d] as f64)]);
             obs.observe("round.arrival_latency", dur);
+            obs.audit_arrival(d, dur);
             let corrupt = if fault_on { fault.corrupts(seed, period, d as u64) } else { None };
             match corrupt {
                 Some(kind) => {
@@ -444,6 +455,7 @@ impl RoundScheduler {
                 None => {
                     mask[d] = true;
                     queue.push(dur, d, ());
+                    obs.audit_outcome(d, Outcome::Applied);
                 }
             }
         });
@@ -524,12 +536,14 @@ impl RoundScheduler {
                 if fault_on && fault.is_down(seed, period, d as u64) {
                     crashed += 1;
                     obs.instant("crash", "fault", d + 1, now);
+                    obs.audit_outcome(d, Outcome::Crashed);
                     return;
                 }
                 let pert = straggler.sample(seed, period, d as u64);
                 if pert.dropped {
                     dropped += 1;
                     obs.instant("drop", "straggler", d + 1, now);
+                    obs.audit_outcome(d, Outcome::Dropped);
                 } else {
                     queue.push(plan.finish[d] * pert.slowdown, d, ());
                 }
@@ -549,6 +563,7 @@ impl RoundScheduler {
                 arrived += 1;
                 t_close = t_close.max(e.time);
                 obs.observe("round.arrival_latency", e.time);
+                obs.audit_arrival(d, e.time);
                 let corrupt = if fault_on { fault.corrupts(seed, period, d as u64) } else { None };
                 match corrupt {
                     Some(kind) => {
@@ -562,12 +577,18 @@ impl RoundScheduler {
                             kind.label(),
                         );
                     }
-                    None => mask[d] = true,
+                    None => {
+                        mask[d] = true;
+                        obs.audit_outcome(d, Outcome::Applied);
+                    }
                 }
             } else {
                 late += 1;
                 let carried = plan.batches[d].max(1);
                 self.carry[d] += carried;
+                obs.audit_arrival(d, e.time);
+                obs.audit_outcome(d, Outcome::Late);
+                obs.audit_carry(d, carried);
                 obs.instant_arg(
                     "deadline_miss",
                     "sched",
@@ -645,19 +666,20 @@ impl RoundScheduler {
         if self.fault.crash_rate > 0.0 {
             let fault = &self.fault;
             let seed = self.seed;
-            let mut killed: Vec<usize> = Vec::new();
+            let mut killed: Vec<(usize, u64)> = Vec::new();
             self.inflight.retain(|e| {
                 if fault.is_down(seed, period, e.device as u64) {
-                    killed.push(e.device);
+                    killed.push((e.device, e.payload.period));
                     false
                 } else {
                     true
                 }
             });
-            for d in killed {
+            for (d, src) in killed {
                 self.busy[d] = false;
                 obs.instant("inflight_lost", "fault", d + 1, now);
                 obs.inc("fault.inflight_lost", 1);
+                obs.audit_resolve(d, src, Outcome::Crashed, None);
             }
         }
         // 1. dispatch idle devices (device order; a dropped device loses
@@ -678,6 +700,7 @@ impl RoundScheduler {
                 if fault_on && fault.is_down(seed, period, d as u64) {
                     crashed += 1;
                     obs.instant("crash", "fault", d + 1, now);
+                    obs.audit_outcome(d, Outcome::Crashed);
                     return;
                 }
                 if busy[d] {
@@ -687,6 +710,7 @@ impl RoundScheduler {
                 if pert.dropped {
                     dropped += 1;
                     obs.instant("drop", "straggler", d + 1, now);
+                    obs.audit_outcome(d, Outcome::Dropped);
                     return;
                 }
                 let dur = plan.finish[d] * pert.slowdown;
@@ -698,6 +722,9 @@ impl RoundScheduler {
                     dur,
                     &[("batch", plan.batches[d] as f64)],
                 );
+                // outcome stays Pending until the upload lands in a later
+                // round's quorum (resolved there against this source row)
+                obs.audit_arrival(d, dur);
                 jobs.push((d, plan.batches[d].max(1)));
                 arrivals.push(now + dur);
             });
@@ -813,6 +840,12 @@ impl RoundScheduler {
                 obs.inc("agg.quarantine_verdicts", 1);
             }
             obs.observe("round.staleness", s as f64);
+            obs.audit_resolve(
+                e.device,
+                e.payload.period,
+                if verdict.applied() { Outcome::Applied } else { Outcome::Quarantined },
+                Some(s),
+            );
             if verdict.applied() {
                 obs.instant_arg(
                     "apply",
@@ -896,6 +929,10 @@ impl RoundScheduler {
                 );
                 obs.inc("agg.quarantine_verdicts", 1);
             }
+            obs.audit_outcome(
+                d,
+                if verdict.applied() { Outcome::Applied } else { Outcome::Quarantined },
+            );
             if verdict.applied() {
                 loss_acc += o.loss * w;
                 w_acc += w;
@@ -964,6 +1001,7 @@ mod tests {
             t_up: 1.0,
             t_down: 0.2,
             finish: vec![0.9; k],
+            predicted: vec![crate::opt::types::PredictedTiming::default(); k],
             predicted_efficiency: None,
         }
     }
@@ -993,6 +1031,9 @@ mod tests {
         let extra = 6.0 / inst.devices[1].speed;
         assert_eq!(plan.finish[1], 0.9 + extra);
         assert_eq!(plan.finish[0], 0.9);
+        // the audit's predicted compute tracks the grown schedule
+        assert_eq!(plan.predicted[1].compute, extra);
+        assert_eq!(plan.predicted[0].compute, 0.0);
         // the ledger is consumed
         assert_eq!(sched.carried(), &[0, 0, 0]);
     }

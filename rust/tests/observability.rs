@@ -38,9 +38,25 @@ struct Run {
     log: TrainLog,
     trace: String,
     metrics: String,
+    audit: String,
 }
 
 fn run_flat(
+    k: usize,
+    policy: RoundPolicy,
+    fault: FaultPlan,
+    guard: GradGuard,
+    threads: usize,
+    obs: bool,
+    periods: usize,
+) -> Run {
+    let straggler = StragglerModel::new(0.5, 0.1).unwrap();
+    run_flat_with(straggler, k, policy, fault, guard, threads, obs, periods)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_flat_with(
+    straggler: StragglerModel,
     k: usize,
     policy: RoundPolicy,
     fault: FaultPlan,
@@ -57,7 +73,7 @@ fn run_flat(
     let be = HostBackend::for_model("mini_res", 12, 10, 3).unwrap();
     let tc = TrainerConfig {
         policy,
-        straggler: StragglerModel::new(0.5, 0.1).unwrap(),
+        straggler,
         fault,
         guard,
         threads,
@@ -70,7 +86,12 @@ fn run_flat(
         tr.enable_obs();
     }
     tr.run(periods).unwrap();
-    Run { log: tr.log.clone(), trace: tr.export_trace(), metrics: tr.export_metrics() }
+    Run {
+        log: tr.log.clone(),
+        trace: tr.export_trace(),
+        metrics: tr.export_metrics(),
+        audit: tr.export_audit(),
+    }
 }
 
 /// Full-record bitwise equality, including the policy and fault columns.
@@ -129,6 +150,8 @@ fn enabling_obs_never_changes_numerics_flat() {
         // so the equality is not comparing two no-op runs
         assert!(off.metrics.is_empty(), "{policy:?}");
         assert!(!on.metrics.is_empty(), "{policy:?}");
+        assert!(off.audit.is_empty(), "{policy:?}");
+        assert!(!on.audit.is_empty(), "{policy:?}");
         assert!(on.trace.contains("\"round\""), "{policy:?}: no round spans");
     }
 }
@@ -151,12 +174,16 @@ fn trace_and_metrics_byte_identical_at_1_2_8_threads() {
             let par = run_flat(4, policy, FaultPlan::none(), GradGuard::off(), t, true, 8);
             assert_eq!(base.trace, par.trace, "{policy:?} t={t}: trace drifted");
             assert_eq!(base.metrics, par.metrics, "{policy:?} t={t}: metrics drifted");
+            assert_eq!(base.audit, par.audit, "{policy:?} t={t}: audit drifted");
         }
         // the artifact is well-formed JSON with the Chrome trace shape
         let v = Json::parse(&base.trace).unwrap();
         let events = v.get("traceEvents").and_then(Json::as_arr).unwrap();
         assert!(!events.is_empty(), "{policy:?}");
         for line in base.metrics.lines() {
+            Json::parse(line).unwrap();
+        }
+        for line in base.audit.lines() {
             Json::parse(line).unwrap();
         }
     }
@@ -222,7 +249,12 @@ fn run_hier(outage: f64, threads: usize, obs: bool, periods: usize) -> Run {
         hier.enable_obs();
     }
     hier.run(periods).unwrap();
-    Run { log: hier.merged_log(), trace: hier.export_trace(), metrics: hier.export_metrics() }
+    Run {
+        log: hier.merged_log(),
+        trace: hier.export_trace(),
+        metrics: hier.export_metrics(),
+        audit: hier.export_audit(),
+    }
 }
 
 #[test]
@@ -241,6 +273,26 @@ fn hier_trace_byte_identical_at_1_2_8_threads() {
         let par = run_hier(0.0, t, true, 4);
         assert_eq!(base.trace, par.trace, "t={t}: hier trace drifted");
         assert_eq!(base.metrics, par.metrics, "t={t}: hier metrics drifted");
+        assert_eq!(base.audit, par.audit, "t={t}: hier audit drifted");
+    }
+    // the merged audit carries all three cell lanes plus cloud-merge rows
+    // (4 periods / tau 2 = 2 blocks)
+    let cloud_rows = base
+        .audit
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .filter(|v| v.get("kind").and_then(Json::as_str) == Some("cloud"))
+        .count();
+    assert_eq!(cloud_rows, 2);
+    for c in 0..3usize {
+        assert!(
+            base.audit
+                .lines()
+                .map(|l| Json::parse(l).unwrap())
+                .any(|v| v.get("cell").and_then(Json::as_usize) == Some(c)
+                    && v.get("kind").and_then(Json::as_str) == Some("period")),
+            "cell {c} missing from merged audit"
+        );
     }
     // three cell lanes plus the cloud lane made it into the artifact
     let v = Json::parse(&base.trace).unwrap();
@@ -262,6 +314,130 @@ fn last_cloud_snapshot(metrics: &str, cloud_lane: usize) -> Json {
         .map(|l| Json::parse(l).unwrap())
         .rfind(|v| v.get("cell").and_then(Json::as_usize) == Some(cloud_lane))
         .expect("no cloud-lane snapshot in the metrics JSONL")
+}
+
+#[test]
+fn zero_jitter_sync_realizes_the_prediction_exactly() {
+    // with no jitter and no dropout, the sync scheduler's realized
+    // arrivals are the plan's clamped nominal finish times bitwise —
+    // predicted == realized, straggler regret exactly 1
+    let quiet = StragglerModel::new(0.0, 0.0).unwrap();
+    let run = run_flat_with(
+        quiet,
+        4,
+        RoundPolicy::Sync,
+        FaultPlan::none(),
+        GradGuard::off(),
+        1,
+        true,
+        6,
+    );
+    let mut devices = 0usize;
+    for line in run.audit.lines() {
+        let v = Json::parse(line).unwrap();
+        for d in v.get("devices").and_then(Json::as_arr).unwrap() {
+            devices += 1;
+            assert_eq!(d.get("outcome").and_then(Json::as_str), Some("applied"), "{line}");
+            let p = d.get("p_finish").and_then(Json::as_f64).unwrap();
+            let r = d.get("r_finish").and_then(Json::as_f64).unwrap();
+            assert_eq!(p.to_bits(), r.to_bits(), "predicted != realized in {line}");
+            assert_eq!(d.get("staleness"), Some(&Json::Null), "{line}");
+            assert_eq!(d.get("carry").and_then(Json::as_usize), Some(0), "{line}");
+        }
+    }
+    assert_eq!(devices, 4 * 6, "every device holds a row every period");
+    // and the report derives from it without complaint
+    let report = feel::obs::summarize_audit_jsonl(&run.audit).unwrap();
+    assert!(report.contains("regret"), "{report}");
+}
+
+#[test]
+fn audit_jsonl_field_set_is_pinned() {
+    // golden field-set pin: downstream tooling parses these exact keys —
+    // adding or renaming one is a deliberate, test-visible change
+    let run = run_flat(4, RoundPolicy::Sync, FaultPlan::none(), GradGuard::off(), 1, true, 2);
+    let first = Json::parse(run.audit.lines().next().unwrap()).unwrap();
+    let keys: Vec<&str> = first.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
+    assert_eq!(
+        keys,
+        vec![
+            "applied",
+            "b_total",
+            "cell",
+            "devices",
+            "kind",
+            "loss_dec",
+            "p_efficiency",
+            "p_t_down",
+            "p_t_period",
+            "p_t_up",
+            "period",
+            "r_duration",
+            "t_start",
+        ]
+    );
+    let device = first.get("devices").and_then(Json::as_arr).unwrap()[0].as_obj().unwrap();
+    let dkeys: Vec<&str> = device.keys().map(|k| k.as_str()).collect();
+    assert_eq!(
+        dkeys,
+        vec![
+            "batch",
+            "carry",
+            "device",
+            "outcome",
+            "p_comm",
+            "p_compute",
+            "p_finish",
+            "p_slot",
+            "r_finish",
+            "staleness",
+        ]
+    );
+}
+
+#[test]
+fn resumed_run_marks_resume_and_never_duplicates_snapshots() {
+    let cfg = SynthConfig { dim: 12, ..Default::default() };
+    let train = generate(&cfg, 80, 1);
+    let test = generate(&cfg, 100, 1);
+    let be = HostBackend::for_model("mini_res", 12, 10, 3).unwrap();
+    let tc = TrainerConfig { b_max: 8, eval_every: 0, ..Default::default() };
+    let path = std::env::temp_dir().join(format!("feel_obs_resume_{}.ckpt", std::process::id()));
+    let mut rng = Pcg::seeded(2);
+    let fleet = paper_cpu_fleet(4, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+    let mut a = Trainer::new(tc.clone(), fleet, &train, &test, Partition::Iid, &be).unwrap();
+    a.run(3).unwrap();
+    a.save_checkpoint(&path).unwrap();
+    let mut rng = Pcg::seeded(2);
+    let fleet = paper_cpu_fleet(4, 7e7, 1e8, CellConfig::default(), 4.0, 0.5, &mut rng);
+    let mut b = Trainer::new(tc, fleet, &train, &test, Partition::Iid, &be).unwrap();
+    b.enable_obs();
+    b.resume_from(&path).unwrap();
+    b.run(3).unwrap();
+    std::fs::remove_file(&path).ok();
+    // the resumed run announces itself on the trace and the gauge
+    assert!(b.export_trace().contains("run.resumed"));
+    let mut seen = std::collections::BTreeSet::new();
+    let mut resume_gauge = None;
+    for line in b.export_metrics().lines() {
+        let v = Json::parse(line).unwrap();
+        let p = v.get("period").and_then(Json::as_usize).unwrap();
+        assert!(seen.insert(p), "duplicated metrics snapshot for period {p}");
+        if resume_gauge.is_none() {
+            resume_gauge = v
+                .get("gauges")
+                .and_then(|g| g.get("ckpt.resume_period"))
+                .and_then(Json::as_f64);
+        }
+    }
+    assert_eq!(resume_gauge, Some(3.0));
+    // snapshots cover only the post-resume periods, each exactly once
+    assert_eq!(seen.into_iter().collect::<Vec<_>>(), vec![4, 5, 6]);
+    // the audit ledger restarts at the resumed period too
+    let audit = b.export_audit();
+    let first = Json::parse(audit.lines().next().unwrap()).unwrap();
+    assert_eq!(first.get("period").and_then(Json::as_usize), Some(4));
+    assert_eq!(audit.lines().count(), 3);
 }
 
 #[test]
